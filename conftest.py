@@ -1,0 +1,8 @@
+"""Repo-root pytest hook: make `python/` importable so the suites can be
+run either as `pytest python/tests/` (from the repo root) or `pytest
+tests/` (from `python/`)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,58 @@
+//! Scale sweep (§6.4-6.5 "scalability"): party counts 10 → 10 000 across
+//! all four paper strategies in simulated time, printing how mean
+//! aggregation latency and container-seconds grow with the fleet.
+//!
+//! Run: `cargo run --release --example scale_sweep`
+//! Flags: --workload cifar100|rvlcdip|inat --fleet active-hetero|...
+//!        --rounds N --seed S
+
+use fljit::coordinator::job::FlJobSpec;
+use fljit::coordinator::platform::run_scenario;
+use fljit::coordinator::strategies::paper_strategies;
+use fljit::party::FleetKind;
+use fljit::util::table::Table;
+use fljit::workloads::Workload;
+
+fn main() {
+    let args = fljit::util::cli::Args::from_env();
+    let workload = Workload::by_name(args.get_or("workload", "cifar100-effnet"))
+        .expect("unknown workload");
+    let fleet =
+        FleetKind::parse(args.get_or("fleet", "active-hetero")).expect("unknown fleet kind");
+    let rounds = args.get_u64("rounds", 20) as u32;
+    let seed = args.get_u64("seed", 7);
+
+    println!(
+        "scale sweep: {} / {} / {} rounds per cell\n",
+        workload.name,
+        fleet.name(),
+        rounds
+    );
+    let mut lat = Table::new(
+        "mean aggregation latency (s) vs fleet size",
+        &["# parties", "JIT", "Batch λ", "Eager λ", "Eager AO"],
+    );
+    let mut cost = Table::new(
+        "container-seconds vs fleet size",
+        &["# parties", "JIT", "Batch λ", "Eager λ", "Eager AO"],
+    );
+    for n in [10usize, 100, 1000, 10000] {
+        let spec = FlJobSpec::new(workload.clone(), fleet, n, rounds);
+        let mut lrow = vec![n.to_string()];
+        let mut crow = vec![n.to_string()];
+        for s in paper_strategies() {
+            let r = run_scenario(&spec, s, seed);
+            lrow.push(format!("{:.2}", r.mean_latency_secs()));
+            crow.push(format!("{:.0}", r.total_container_seconds()));
+        }
+        lat.row(lrow);
+        cost.row(crow);
+    }
+    lat.print();
+    println!();
+    cost.print();
+    println!(
+        "\nreading: JIT tracks eager latency at every scale while its cost\n\
+         column grows like lazy's — the paper's central claim (§6.4-6.5)."
+    );
+}

@@ -1,0 +1,147 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts + manifest.json.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``). The HLO *text* parser reassigns ids, so text
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once at build time (``make artifacts``); Python never runs on the
+request path. The manifest lists, for every artifact, the entry name, file,
+input shapes/dtypes, output arity and the lowering parameters, so the Rust
+runtime (rust/src/runtime) can validate call sites at load time.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*dims):
+    return jax.ShapeDtypeStruct(tuple(dims), F32)
+
+
+class Builder:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name: str, fn, arg_specs, n_outputs: int, meta: dict):
+        """Lower ``fn`` at ``arg_specs`` and write ``<name>.hlo.txt``."""
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        self.entries.append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [
+                    {"dtype": "f32", "dims": list(s.shape)} for s in arg_specs
+                ],
+                "n_outputs": n_outputs,
+                "meta": meta,
+            }
+        )
+        print(f"  {name}: {len(text)} chars, {len(arg_specs)} inputs")
+
+    def write_manifest(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump({"version": 1, "artifacts": self.entries}, f, indent=1)
+        print(f"wrote {path} ({len(self.entries)} artifacts)")
+
+
+def build_all(out_dir: str) -> None:
+    b = Builder(out_dir)
+    i, h, c = model.IN_DIM, model.HIDDEN, model.CLASSES
+    pshapes = [s for (_, s) in model.param_shapes()]
+
+    # --- fusion graphs -----------------------------------------------------
+    for d in (65536, 1048576):
+        b.emit(
+            f"pair_merge_d{d}",
+            model.fuse_pair,
+            [spec(d), spec(d), spec(1), spec(1)],
+            1,
+            {"kind": "pair_merge", "d": d},
+        )
+    for k, d in ((8, 65536), (16, 65536), (8, 262144)):
+        b.emit(
+            f"fuse_k{k}_d{d}",
+            model.fuse_k,
+            [spec(k, d), spec(k)],
+            1,
+            {"kind": "fuse_k", "k": k, "d": d},
+        )
+    for k, d in ((8, 65536),):
+        b.emit(
+            f"fedprox_k{k}_d{d}",
+            model.fedprox_fuse,
+            [spec(k, d), spec(k), spec(d), spec(1)],
+            1,
+            {"kind": "fedprox", "k": k, "d": d},
+        )
+
+    # --- training graphs ---------------------------------------------------
+    params = [spec(*s) for s in pshapes]
+    for bsz in (16, 32, 64, 128):
+        b.emit(
+            f"train_step_b{bsz}",
+            model.train_step,
+            params + [spec(bsz, i), spec(bsz, c), spec(1)],
+            7,
+            {"kind": "train_step", "b": bsz, "i": i, "h": h, "c": c},
+        )
+    for n in (2, 4, 8, 16, 32):
+        bsz = 32
+        b.emit(
+            f"train_epoch_n{n}_b{bsz}",
+            model.train_epoch,
+            params + [spec(n, bsz, i), spec(n, bsz, c), spec(1)],
+            7,
+            {"kind": "train_epoch", "n": n, "b": bsz, "i": i, "h": h, "c": c},
+        )
+    b.emit(
+        "eval_b256",
+        model.eval_step,
+        params + [spec(256, i), spec(256, c)],
+        2,
+        {"kind": "eval", "b": 256, "i": i, "h": h, "c": c},
+    )
+
+    b.write_manifest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    build_all(args.out)
+
+
+if __name__ == "__main__":
+    main()

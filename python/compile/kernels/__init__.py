@@ -1,0 +1,3 @@
+"""Layer-1 Pallas kernels (fused_agg) and their pure-jnp oracles (ref)."""
+
+from . import fused_agg, ref  # noqa: F401

@@ -1,0 +1,186 @@
+"""Layer-1 Pallas kernels: the FL aggregation hot spot.
+
+The paper (§2.1) defines aggregation of flattened model updates as a
+coordinate-wise function over layer vectors:
+
+    M1 ⊕ M2 = [f(M1[i], M2[i]) for i in 1..n]
+
+These kernels implement the three fused forms the platform needs:
+
+  * ``pair_merge``          — running weighted mean of a pair of updates;
+                              this is the unit whose cost is the paper's
+                              ``t_pair`` (§5.4, calibrated offline).
+  * ``fused_weighted_sum``  — K-way weighted sum over a (K, D) block of
+                              updates; the data-parallel inner step of
+                              FedAvg / FedSGD aggregation.
+  * ``fedprox_merge``       — K-way weighted mean pulled toward the current
+                              global model with proximal coefficient ``mu``
+                              (server-side merge used for FedProx jobs).
+
+Hardware adaptation (DESIGN.md §4): the computation is element-wise
+streaming arithmetic (VPU work, no MXU).  Updates are flattened to
+``D``-vectors and the grid tiles ``D`` into ``TILE``-sized blocks so that a
+(K, TILE) slab of updates streams through VMEM per grid step — the TPU
+analogue of the paper's "how many updates fit into accelerator memory" term
+in the C_agg estimate.  Accumulation is always f32.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode is the correctness (and the
+only runnable) path on this image.  Real-TPU performance is *estimated*
+from the BlockSpec footprint in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile of the flattened-update axis. 8 KiB of f32 per update row —
+# small enough that K=8 rows + accumulator stay well under a 4 MiB VMEM
+# budget, large enough to amortize grid overhead. Must divide D.
+DEFAULT_TILE = 2048
+
+# All artifacts use interpret mode (see module docstring).
+INTERPRET = True
+
+
+def _resolve_tile(d: int, tile: int) -> int:
+    """Pick the effective tile: D must be a multiple of it.
+
+    Updates smaller than the requested tile run as a single grid step
+    (tile = D); larger updates must be tile-aligned — the AOT shapes and the
+    Rust chunker only ever produce aligned sizes.
+    """
+    if d % tile == 0:
+        return tile
+    if d < tile:
+        return d
+    raise ValueError(f"flattened size D={d} must be a multiple of tile={tile}")
+
+
+# ---------------------------------------------------------------------------
+# pair_merge: out = (wa * a + wb * b) / (wa + wb)
+# ---------------------------------------------------------------------------
+
+
+def _pair_merge_kernel(wa_ref, wb_ref, a_ref, b_ref, out_ref):
+    """Running weighted mean of two update tiles.
+
+    ``wa``/``wb`` are (1,)-shaped weights replicated across the grid. The
+    merge keeps a running weighted mean rather than a weighted sum so that a
+    chain of pair-merges (the sequential aggregation of §2.1) is numerically
+    a single weighted average regardless of arrival order.
+    """
+    wa = wa_ref[0]
+    wb = wb_ref[0]
+    inv = 1.0 / (wa + wb)
+    out_ref[...] = (a_ref[...] * wa + b_ref[...] * wb) * inv
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def pair_merge(a: jax.Array, b: jax.Array, wa: jax.Array, wb: jax.Array, *, tile: int = DEFAULT_TILE) -> jax.Array:
+    """Weighted mean of updates ``a`` and ``b`` with weights ``wa``, ``wb``.
+
+    a, b: f32[D]; wa, wb: f32[1]. Returns f32[D].
+    """
+    (d,) = a.shape
+    tile = _resolve_tile(d, tile)
+    grid = (d // tile,)
+    return pl.pallas_call(
+        _pair_merge_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=INTERPRET,
+    )(wa, wb, a, b)
+
+
+# ---------------------------------------------------------------------------
+# fused_weighted_sum: out = sum_k w[k] * U[k, :]
+# ---------------------------------------------------------------------------
+
+
+def _weighted_sum_kernel(w_ref, u_ref, out_ref):
+    """K-way weighted sum over a (K, TILE) slab.
+
+    One pass over the slab: arithmetic intensity 2·K flop per 4·K bytes —
+    memory-bound, so the schedule is a single HBM→VMEM stream per tile.
+    """
+    u = u_ref[...]  # (K, TILE)
+    w = w_ref[...]  # (K,)
+    out_ref[...] = jnp.sum(u * w[:, None], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def fused_weighted_sum(u: jax.Array, w: jax.Array, *, tile: int = DEFAULT_TILE) -> jax.Array:
+    """``sum_k w[k] * u[k, :]`` for u: f32[K, D], w: f32[K] → f32[D]."""
+    k, d = u.shape
+    tile = _resolve_tile(d, tile)
+    grid = (d // tile,)
+    return pl.pallas_call(
+        _weighted_sum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k, tile), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=INTERPRET,
+    )(w, u)
+
+
+# ---------------------------------------------------------------------------
+# fedprox_merge: out = (1 - mu) * weighted_mean(U, w) + mu * g
+# ---------------------------------------------------------------------------
+
+
+def _fedprox_kernel(w_ref, mu_ref, u_ref, g_ref, out_ref):
+    """Weighted mean of K updates with a proximal pull toward the global model."""
+    u = u_ref[...]  # (K, TILE)
+    w = w_ref[...]  # (K,)
+    mu = mu_ref[0]
+    inv = 1.0 / jnp.sum(w)
+    mean = jnp.sum(u * w[:, None], axis=0) * inv
+    out_ref[...] = (1.0 - mu) * mean + mu * g_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def fedprox_merge(
+    u: jax.Array, w: jax.Array, g: jax.Array, mu: jax.Array, *, tile: int = DEFAULT_TILE
+) -> jax.Array:
+    """FedProx server merge. u: f32[K,D], w: f32[K], g: f32[D], mu: f32[1]."""
+    k, d = u.shape
+    tile = _resolve_tile(d, tile)
+    grid = (d // tile,)
+    return pl.pallas_call(
+        _fedprox_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((k, tile), lambda i: (0, i)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=INTERPRET,
+    )(w, mu, u, g)
+
+
+def vmem_footprint_bytes(k: int, tile: int = DEFAULT_TILE) -> int:
+    """Estimated VMEM bytes resident per grid step of the K-way kernels.
+
+    (K input rows + 1 global row + 1 output row) × tile × 4B + weights.
+    Used by DESIGN.md §Perf to check the ≤4 MiB budget.
+    """
+    return (k + 2) * tile * 4 + (k + 1) * 4

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Layer-1 Pallas kernels.
+
+Each function here is the mathematical definition of the corresponding
+kernel in ``fused_agg.py``; pytest/hypothesis assert allclose between the
+two across shapes, weights and magnitudes (python/tests/test_kernel.py).
+These oracles are also the ground truth mirrored by the pure-Rust fusion
+path (rust/src/fusion), giving a three-way consistency check:
+pallas == jnp == rust.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pair_merge(a, b, wa, wb):
+    """Weighted mean of a pair: (wa*a + wb*b) / (wa + wb)."""
+    wa = jnp.asarray(wa).reshape(())
+    wb = jnp.asarray(wb).reshape(())
+    return (a * wa + b * wb) / (wa + wb)
+
+
+def fused_weighted_sum(u, w):
+    """sum_k w[k] * u[k, :]."""
+    return jnp.einsum("kd,k->d", u, w)
+
+
+def weighted_mean(u, w):
+    """Weighted mean over K updates (FedAvg fusion)."""
+    return fused_weighted_sum(u, w) / jnp.sum(w)
+
+
+def fedprox_merge(u, w, g, mu):
+    """(1 - mu) * weighted_mean(U, w) + mu * g."""
+    mu = jnp.asarray(mu).reshape(())
+    return (1.0 - mu) * weighted_mean(u, w) + mu * g

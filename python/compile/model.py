@@ -1,0 +1,142 @@
+"""Layer-2 JAX graphs: fusion entry points + party-side local training.
+
+Two families of build-time graphs, both AOT-lowered to HLO text by
+``aot.py`` and executed from Rust via PJRT (rust/src/runtime):
+
+Fusion graphs (the aggregator's compute, calling the L1 Pallas kernels):
+  * ``fuse_pair``     — running weighted mean of two updates (t_pair unit).
+  * ``fuse_k``        — FedAvg/FedSGD K-way weighted mean.
+  * ``fedprox_fuse``  — FedProx server merge with proximal coefficient mu.
+
+Training graphs (the *party-side substrate*: real local training for the
+end-to-end example and for the periodicity/linearity measurements of
+Figs 3-4):
+  * ``train_step``    — one SGD minibatch step of an MLP classifier.
+  * ``train_epoch``   — lax.scan over the minibatches of one local epoch.
+  * ``eval_step``     — loss + #correct on a held-out batch.
+
+The MLP is I -> H -> H -> C with ReLU and softmax cross-entropy. All
+functions return flat tuples of arrays (return_tuple=True at lowering), so
+the Rust side can decompose results without pytree knowledge.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_agg
+
+# Default MLP architecture for the end-to-end example. ~85k parameters:
+# small enough that 8 parties x 100+ federated rounds of *real* training
+# run in CPU-minutes (DESIGN.md §3 records the scale substitution), large
+# enough to exercise multi-layer flatten/unflatten on the Rust side.
+IN_DIM = 64
+HIDDEN = 256
+CLASSES = 10
+
+
+def param_shapes(i: int = IN_DIM, h: int = HIDDEN, c: int = CLASSES):
+    """(name, shape) table for the MLP parameters, in flattened order.
+
+    Rust mirrors this ordering in workloads::mlp_layout.
+    """
+    return [
+        ("w1", (i, h)),
+        ("b1", (h,)),
+        ("w2", (h, h)),
+        ("b2", (h,)),
+        ("w3", (h, c)),
+        ("b3", (c,)),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Fusion graphs (call the Pallas kernels)
+# ---------------------------------------------------------------------------
+
+
+def fuse_pair(a, b, wa, wb):
+    """Weighted mean of two flattened updates. a,b: f32[D]; wa,wb: f32[1]."""
+    return (fused_agg.pair_merge(a, b, wa, wb),)
+
+
+def fuse_k(u, w):
+    """FedAvg/FedSGD K-way fusion: weighted mean over u: f32[K,D], w: f32[K]."""
+    s = fused_agg.fused_weighted_sum(u, w)
+    return (s / jnp.sum(w),)
+
+
+def fedprox_fuse(u, w, g, mu):
+    """FedProx server merge: (1-mu)*weighted_mean(u,w) + mu*g."""
+    return (fused_agg.fedprox_merge(u, w, g, mu),)
+
+
+# ---------------------------------------------------------------------------
+# MLP forward / loss
+# ---------------------------------------------------------------------------
+
+
+def _forward(params, x):
+    w1, b1, w2, b2, w3, b3 = params
+    h1 = jax.nn.relu(x @ w1 + b1)
+    h2 = jax.nn.relu(h1 @ w2 + b2)
+    return h2 @ w3 + b3
+
+
+def _loss(params, x, y):
+    """Stable softmax cross-entropy. y is one-hot f32[B, C]."""
+    logits = _forward(params, x)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1, keepdims=True)
+    logprob = logits - logz
+    return -jnp.mean(jnp.sum(y * logprob, axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# Training graphs
+# ---------------------------------------------------------------------------
+
+
+def train_step(w1, b1, w2, b2, w3, b3, x, y, lr):
+    """One SGD minibatch step.
+
+    x: f32[B, I]; y: one-hot f32[B, C]; lr: f32[1].
+    Returns (w1', b1', w2', b2', w3', b3', loss[1]).
+    """
+    params = (w1, b1, w2, b2, w3, b3)
+    loss, grads = jax.value_and_grad(_loss)(params, x, y)
+    step = lr[0]
+    new = tuple(p - step * g for p, g in zip(params, grads))
+    return (*new, loss.reshape((1,)))
+
+
+def train_epoch(w1, b1, w2, b2, w3, b3, xs, ys, lr):
+    """One local epoch: scan train_step over N minibatches.
+
+    xs: f32[N, B, I]; ys: f32[N, B, C]. Returns updated params + mean loss.
+    Using lax.scan (not a Python loop) keeps the lowered HLO size O(1) in N
+    and lets XLA pipeline the minibatches (DESIGN.md §Perf L2).
+    """
+    params = (w1, b1, w2, b2, w3, b3)
+
+    def body(p, xy):
+        x, y = xy
+        loss, grads = jax.value_and_grad(_loss)(p, x, y)
+        step = lr[0]
+        return tuple(pi - step * gi for pi, gi in zip(p, grads)), loss
+
+    new, losses = jax.lax.scan(body, params, (xs, ys))
+    return (*new, jnp.mean(losses).reshape((1,)))
+
+
+def eval_step(w1, b1, w2, b2, w3, b3, x, y):
+    """Evaluation: (loss[1], n_correct[1]) on a batch."""
+    params = (w1, b1, w2, b2, w3, b3)
+    logits = _forward(params, x)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1, keepdims=True)
+    logprob = logits - logz
+    loss = -jnp.mean(jnp.sum(y * logprob, axis=-1))
+    correct = jnp.sum(
+        (jnp.argmax(logits, axis=-1) == jnp.argmax(y, axis=-1)).astype(jnp.float32)
+    )
+    return (loss.reshape((1,)), correct.reshape((1,)))

@@ -1,0 +1,63 @@
+"""AOT pipeline: lowering produces parseable HLO text and a sound manifest."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+
+
+def test_to_hlo_text_contains_entry():
+    lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+        jax.ShapeDtypeStruct((8,), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "f32[8]" in text
+
+
+def test_emit_single_artifact(tmp_path):
+    b = aot.Builder(str(tmp_path))
+    b.emit(
+        "fuse_pair_tiny",
+        model.fuse_pair,
+        [aot.spec(2048), aot.spec(2048), aot.spec(1), aot.spec(1)],
+        1,
+        {"kind": "pair_merge", "d": 2048},
+    )
+    b.write_manifest()
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    [e] = manifest["artifacts"]
+    assert e["name"] == "fuse_pair_tiny"
+    assert e["n_outputs"] == 1
+    assert e["inputs"][0]["dims"] == [2048]
+    hlo = (tmp_path / e["file"]).read_text()
+    assert "ENTRY" in hlo
+
+
+def test_repo_manifest_if_built():
+    """If `make artifacts` has run, validate the real manifest."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest_path = os.path.join(art, "manifest.json")
+    if not os.path.exists(manifest_path):
+        import pytest
+
+        pytest.skip("artifacts not built")
+    manifest = json.loads(open(manifest_path).read())
+    names = {e["name"] for e in manifest["artifacts"]}
+    # the Rust runtime hard-depends on these entry points
+    for required in (
+        "pair_merge_d65536",
+        "fuse_k8_d65536",
+        "fedprox_k8_d65536",
+        "train_step_b32",
+        "train_epoch_n8_b32",
+        "eval_b256",
+    ):
+        assert required in names, f"missing artifact {required}"
+    for e in manifest["artifacts"]:
+        assert os.path.exists(os.path.join(art, e["file"])), e["file"]
+        assert e["n_outputs"] >= 1

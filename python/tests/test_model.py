@@ -1,0 +1,132 @@
+"""L2 correctness: fusion graphs and the MLP training substrate."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+TILE = 128
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def init_params(seed=0, i=model.IN_DIM, h=model.HIDDEN, c=model.CLASSES):
+    r = np.random.default_rng(seed)
+    out = []
+    for name, shape in model.param_shapes(i, h, c):
+        if name.startswith("w"):
+            fan_in = shape[0]
+            out.append((r.standard_normal(shape) / np.sqrt(fan_in)).astype(np.float32))
+        else:
+            out.append(np.zeros(shape, dtype=np.float32))
+    return [jnp.array(p) for p in out]
+
+
+def synth_batch(seed, b, i=model.IN_DIM, c=model.CLASSES):
+    """Linearly-separable-ish synthetic classification batch."""
+    r = np.random.default_rng(seed)
+    proto = r.standard_normal((c, i)).astype(np.float32)
+    labels = r.integers(0, c, size=b)
+    x = proto[labels] + 0.3 * r.standard_normal((b, i)).astype(np.float32)
+    y = np.zeros((b, c), dtype=np.float32)
+    y[np.arange(b), labels] = 1.0
+    return jnp.array(x), jnp.array(y)
+
+
+# --- fusion graphs ----------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(k=st.integers(2, 8), seed=SEEDS)
+def test_fuse_k_is_weighted_mean(k, seed):
+    r = np.random.default_rng(seed)
+    u = r.standard_normal((k, 2 * TILE)).astype(np.float32)
+    w = r.uniform(0.5, 4.0, size=k).astype(np.float32)
+    (got,) = model.fuse_k(jnp.array(u), jnp.array(w))
+    want = ref.weighted_mean(jnp.array(u), jnp.array(w))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_fuse_pair_weighted_mean_of_pair():
+    r = np.random.default_rng(3)
+    a = r.standard_normal(4 * TILE).astype(np.float32)
+    b = r.standard_normal(4 * TILE).astype(np.float32)
+    (got,) = model.fuse_pair(
+        jnp.array(a), jnp.array(b),
+        jnp.array([3.0], dtype=np.float32), jnp.array([1.0], dtype=np.float32),
+    )
+    np.testing.assert_allclose(np.asarray(got), (3 * a + b) / 4, rtol=1e-5, atol=1e-5)
+
+
+def test_fedprox_fuse_interpolates():
+    r = np.random.default_rng(4)
+    u = r.standard_normal((4, TILE)).astype(np.float32)
+    w = np.ones(4, dtype=np.float32)
+    g = r.standard_normal(TILE).astype(np.float32)
+    (half,) = model.fedprox_fuse(
+        jnp.array(u), jnp.array(w), jnp.array(g), jnp.array([0.5], dtype=np.float32)
+    )
+    mean = u.mean(axis=0)
+    np.testing.assert_allclose(np.asarray(half), 0.5 * mean + 0.5 * g, rtol=1e-4, atol=1e-4)
+
+
+# --- training substrate -----------------------------------------------------
+
+
+def test_train_step_decreases_loss():
+    params = init_params(0)
+    x, y = synth_batch(1, 64)
+    lr = jnp.array([0.1], dtype=jnp.float32)
+    losses = []
+    for _ in range(30):
+        *params, loss = model.train_step(*params, x, y, lr)
+        losses.append(float(loss[0]))
+    assert losses[-1] < losses[0] * 0.7, f"loss did not decrease: {losses[0]} -> {losses[-1]}"
+
+
+def test_train_epoch_matches_repeated_train_step():
+    params = init_params(5)
+    n, b = 4, 32
+    xs, ys = [], []
+    for j in range(n):
+        x, y = synth_batch(100 + j, b)
+        xs.append(x)
+        ys.append(y)
+    xs_stacked = jnp.stack(xs)
+    ys_stacked = jnp.stack(ys)
+    lr = jnp.array([0.05], dtype=jnp.float32)
+
+    *epoch_params, epoch_loss = model.train_epoch(*params, xs_stacked, ys_stacked, lr)
+
+    step_params = list(params)
+    step_losses = []
+    for j in range(n):
+        *step_params, loss = model.train_step(*step_params, xs[j], ys[j], lr)
+        step_losses.append(float(loss[0]))
+
+    for a, bp in zip(epoch_params, step_params):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(bp), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(epoch_loss[0]), np.mean(step_losses), rtol=1e-5)
+
+
+def test_eval_step_counts_correct():
+    params = init_params(0)
+    x, y = synth_batch(2, 256)
+    lr = jnp.array([0.1], dtype=jnp.float32)
+    loss0, correct0 = model.eval_step(*params, x, y)
+    for _ in range(40):
+        *params, _ = model.train_step(*params, x, y, lr)
+    loss1, correct1 = model.eval_step(*params, x, y)
+    assert float(loss1[0]) < float(loss0[0])
+    assert float(correct1[0]) >= float(correct0[0])
+    assert 0.0 <= float(correct1[0]) <= 256.0
+
+
+def test_param_shapes_flattened_size():
+    total = sum(int(np.prod(s)) for _, s in model.param_shapes())
+    # i*h + h + h*h + h + h*c + c with defaults 64/256/10
+    i, h, c = model.IN_DIM, model.HIDDEN, model.CLASSES
+    assert total == i * h + h + h * h + h + h * c + c

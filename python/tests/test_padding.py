@@ -1,0 +1,65 @@
+"""Kernel behaviours the Rust runtime's chunker relies on.
+
+rust/src/runtime XlaFusion pads the last D-chunk with zeros and pads the
+K-row slab with zero-*weight* rows. Both conventions must be exactly
+neutral in the kernels.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import fused_agg, ref
+
+TILE = 128
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k_real=st.integers(1, 7),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_zero_weight_row_padding_is_neutral(k_real, seed):
+    """fuse over k_real rows == fuse over 8 rows where the extra rows have
+    weight 0 (and arbitrary garbage content)."""
+    r = np.random.default_rng(seed)
+    k_pad = 8
+    u_real = r.standard_normal((k_real, TILE)).astype(np.float32)
+    w_real = r.uniform(0.5, 4.0, size=k_real).astype(np.float32)
+    garbage = r.standard_normal((k_pad - k_real, TILE)).astype(np.float32) * 1e3
+    u_pad = np.concatenate([u_real, garbage])
+    w_pad = np.concatenate([w_real, np.zeros(k_pad - k_real, dtype=np.float32)])
+
+    got = fused_agg.fused_weighted_sum(jnp.array(u_pad), jnp.array(w_pad), tile=TILE)
+    want = ref.fused_weighted_sum(jnp.array(u_real), jnp.array(w_real))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_real=st.integers(1, TILE - 1), seed=st.integers(0, 2**31 - 1))
+def test_zero_tail_padding_passes_through_pair_merge(n_real, seed):
+    """pair_merge on zero-padded tails returns the weighted mean on the
+    real prefix and zeros on the tail (the Rust chunker slices the prefix
+    back out)."""
+    r = np.random.default_rng(seed)
+    a = np.zeros(TILE, dtype=np.float32)
+    b = np.zeros(TILE, dtype=np.float32)
+    a[:n_real] = r.standard_normal(n_real).astype(np.float32)
+    b[:n_real] = r.standard_normal(n_real).astype(np.float32)
+    wa = np.array([2.0], dtype=np.float32)
+    wb = np.array([3.0], dtype=np.float32)
+    got = np.asarray(
+        fused_agg.pair_merge(jnp.array(a), jnp.array(b), jnp.array(wa), jnp.array(wb), tile=TILE)
+    )
+    want = (2.0 * a[:n_real] + 3.0 * b[:n_real]) / 5.0
+    np.testing.assert_allclose(got[:n_real], want, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got[n_real:], 0.0, atol=1e-7)
+
+
+def test_k1_single_update_is_identity_mean():
+    r = np.random.default_rng(0)
+    u = r.standard_normal((1, TILE)).astype(np.float32)
+    w = np.array([4.2], dtype=np.float32)
+    s = fused_agg.fused_weighted_sum(jnp.array(u), jnp.array(w), tile=TILE)
+    np.testing.assert_allclose(np.asarray(s) / w[0], u[0], rtol=1e-5, atol=1e-5)

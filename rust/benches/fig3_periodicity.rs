@@ -1,0 +1,28 @@
+//! Regenerates **Fig 3**: minibatch and epoch times are ~constant across
+//! repetitions — measured on *real* training through the AOT train
+//! artifacts (L2 `train_step`/`train_epoch` on the PJRT CPU client). The
+//! periodicity claim (§4.1) is a small coefficient of variation.
+//!
+//! Requires `make artifacts`. Run: cargo bench --bench fig3_periodicity
+
+fn main() {
+    let reps = std::env::var("FLJIT_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(30);
+    match fljit::bench::figs::fig3(reps, 42) {
+        Ok((table, json)) => {
+            table.print();
+            fljit::bench::dump("fig3", &json);
+            println!(
+                "\nexpected shape (paper Fig 3): CV ≪ 1 — per-epoch and\n\
+                 per-minibatch times are stable when data and hardware are\n\
+                 fixed, which is what makes update arrivals predictable."
+            );
+        }
+        Err(e) => {
+            eprintln!("fig3 requires artifacts (`make artifacts`): {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! Regenerates **Fig 4**: minibatch time ∝ batch size and epoch time ∝
+//! dataset size — real training sweeps over the `train_step_b{16..128}`
+//! and `train_epoch_n{2..32}` artifacts, with OLS fits whose R² should be
+//! ≈1 (the linearity claim of §4.2 that powers the §5.3 regression
+//! fallback).
+//!
+//! Requires `make artifacts`. Run: cargo bench --bench fig4_linearity
+
+fn main() {
+    let reps = std::env::var("FLJIT_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(15);
+    match fljit::bench::figs::fig4(reps, 42) {
+        Ok((table, json)) => {
+            table.print();
+            fljit::bench::dump("fig4", &json);
+            println!(
+                "\nexpected shape (paper Fig 4): both sweeps are straight\n\
+                 lines — R² close to 1 validates predicting unseen epoch\n\
+                 times by linear regression (§4.2, §5.3)."
+            );
+        }
+        Err(e) => {
+            eprintln!("fig4 requires artifacts (`make artifacts`): {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

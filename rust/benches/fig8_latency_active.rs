@@ -1,0 +1,35 @@
+//! Regenerates **Fig 8**: mean aggregation latency with active
+//! heterogeneous parties — the grid where training-time *prediction* does
+//! the work (periodicity + linearity, §4): JIT must match eager latency
+//! despite deploying just in time.
+//!
+//! Run: cargo bench --bench fig8_latency_active
+//! Env: FLJIT_BENCH_ROUNDS, FLJIT_BENCH_MAX_PARTIES to shrink the grid.
+
+use fljit::bench::figs::LatencyGrid;
+use fljit::party::FleetKind;
+
+fn env_usize(k: &str, d: usize) -> usize {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+fn main() {
+    let grid = LatencyGrid {
+        fleet: FleetKind::ActiveHeterogeneous,
+        rounds: env_usize("FLJIT_BENCH_ROUNDS", 50) as u32,
+        seed: 0xF19,
+        max_parties: env_usize("FLJIT_BENCH_MAX_PARTIES", 10000),
+    };
+    let t0 = std::time::Instant::now();
+    let (tables, json) = grid.run();
+    for t in tables {
+        t.print();
+        println!();
+    }
+    fljit::bench::dump("fig8", &json);
+    println!("fig8 grid regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    println!(
+        "expected shape (paper §6.4): JIT ≈ Eager (validation of the\n\
+         training-time estimation thesis); Batch λ worst."
+    );
+}

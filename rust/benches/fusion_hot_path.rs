@@ -1,0 +1,102 @@
+//! Bench: the aggregation hot path — `t_pair` calibration (§5.4) across
+//! the model zoo on the pure-Rust fusion engine, plus K-way weighted means
+//! and the tree reduction. Prints achieved GB/s against the streaming
+//! roofline (pair merge touches 3 vectors: 2 reads + 1 write).
+//!
+//! Run: cargo bench --bench fusion_hot_path
+
+use fljit::bench::time_median;
+use fljit::fusion;
+use fljit::model::{zoo, ModelUpdate};
+use fljit::util::rng::Rng;
+use fljit::util::table::Table;
+
+fn main() {
+    let reps = 7;
+    let mut rng = Rng::new(42);
+
+    let mut t = Table::new(
+        "fusion hot path — pair merge (t_pair, §5.4)",
+        &["model", "MB", "median t_pair (ms)", "best (ms)", "GB/s (median)"],
+    );
+    for name in zoo::all_names() {
+        let spec = zoo::by_name(name).unwrap();
+        let a = ModelUpdate::random(&spec, &mut rng, 1.0);
+        let b = ModelUpdate::random(&spec, &mut rng, 1.0);
+        let mut acc = a.data.clone();
+        fusion::pair_merge_into(&mut acc, 1.0, &b.data, 1.0); // warm
+        let (med, best) = time_median(reps, || {
+            fusion::pair_merge_into(&mut acc, 2.0, &b.data, 1.0);
+        });
+        let mb = spec.size_bytes() as f64 / 1e6;
+        t.row(vec![
+            name.to_string(),
+            format!("{:.1}", mb),
+            format!("{:.2}", med * 1e3),
+            format!("{:.2}", best * 1e3),
+            format!("{:.2}", 3.0 * mb / 1e3 / med),
+        ]);
+    }
+    t.print();
+
+    // K-way fold: the §Perf L3 optimization — pair-merge chain (3 vectors
+    // of DRAM traffic per update) vs the cache-blocked weighted sum
+    // (~(K+1)/K vectors per update). Buffers preallocated so the bench
+    // measures fusion math, not page faults.
+    let mut t2 = Table::new(
+        "K-way fusion (EfficientNet-B7 updates, preallocated buffers)",
+        &["K", "pair-chain (ms)", "blocked fold (ms)", "speedup", "fold GB/s"],
+    );
+    let spec = zoo::efficientnet_b7();
+    let dim = spec.total_params();
+    let mut out = vec![0.0f32; dim];
+    for k in [2usize, 4, 8, 16] {
+        let updates: Vec<ModelUpdate> = (0..k)
+            .map(|i| ModelUpdate::random(&spec, &mut rng, 1.0 + i as f32))
+            .collect();
+        let views: Vec<&[f32]> = updates.iter().map(|u| u.data.as_slice()).collect();
+        let ws: Vec<f32> = updates.iter().map(|u| u.weight).collect();
+        // before: sequential pair merges (eager-style chain)
+        let (chain_med, _) = time_median(5, || {
+            out.copy_from_slice(&updates[0].data);
+            let mut w_acc = ws[0];
+            for (u, &w) in views[1..].iter().zip(&ws[1..]) {
+                fusion::pair_merge_into(&mut out, w_acc, u, w);
+                w_acc += w;
+            }
+            std::hint::black_box(out[0]);
+        });
+        // after: one cache-blocked pass
+        let (fold_med, _) = time_median(5, || {
+            fusion::wsum_blocked_into(&mut out, &views, &ws);
+            std::hint::black_box(out[0]);
+        });
+        let gb = (k + 1) as f64 * spec.size_bytes() as f64 / 1e9;
+        t2.row(vec![
+            k.to_string(),
+            format!("{:.1}", chain_med * 1e3),
+            format!("{:.1}", fold_med * 1e3),
+            format!("{:.2}x", chain_med / fold_med),
+            format!("{:.2}", gb / fold_med),
+        ]);
+    }
+    t2.print();
+
+    // tree reduction wall time (threads share DRAM bandwidth)
+    let mut t3 = Table::new(
+        "tree_reduce wall time (K=16, EfficientNet-B7)",
+        &["shards", "median (ms)"],
+    );
+    let updates: Vec<ModelUpdate> = (0..16)
+        .map(|i| ModelUpdate::random(&spec, &mut rng, 1.0 + i as f32))
+        .collect();
+    for shards in [1usize, 2, 4, 8] {
+        let (med, _) = time_median(3, || {
+            let agg = fusion::tree_reduce(&updates, shards);
+            std::hint::black_box(agg.weight);
+        });
+        t3.row(vec![shards.to_string(), format!("{:.1}", med * 1e3)]);
+    }
+    t3.print();
+    println!("note: fusion is memory-bound; GB/s ≈ sustained stream bandwidth is the roofline.");
+}

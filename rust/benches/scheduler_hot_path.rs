@@ -1,0 +1,92 @@
+//! Bench: L3 coordinator hot paths — the discrete-event engine, the
+//! cluster's indexed δ-tick scheduler, and a full 10k-party scenario.
+//! Targets (DESIGN.md §Perf L3): ≥1M events/s through the engine; the
+//! whole Fig 9 worst cell in low single-digit seconds.
+//!
+//! Run: cargo bench --bench scheduler_hot_path
+
+use fljit::bench::time_median;
+use fljit::cluster::{Cluster, ClusterConfig, TaskSpec};
+use fljit::coordinator::job::FlJobSpec;
+use fljit::coordinator::platform::run_scenario;
+use fljit::party::FleetKind;
+use fljit::sim::{secs, EventKind, EventQueue};
+use fljit::util::table::Table;
+use fljit::workloads::Workload;
+
+fn main() {
+    let mut t = Table::new(
+        "L3 scheduler hot paths",
+        &["case", "median", "throughput"],
+    );
+
+    // 1) raw event engine
+    let n_events = 1_000_000u64;
+    let (med, _) = time_median(3, || {
+        let mut q = EventQueue::new();
+        for i in 0..n_events {
+            q.schedule_at((i * 7) % 10_000_000, EventKind::Custom { tag: i });
+        }
+        while q.next().is_some() {}
+    });
+    t.row(vec![
+        format!("event engine ({n_events} sched+pop)"),
+        format!("{:.1} ms", med * 1e3),
+        format!("{:.2} M ev/s", n_events as f64 / med / 1e6),
+    ]);
+
+    // 2) cluster tick with a deep pending queue (indexed scheduler)
+    let (med, _) = time_median(3, || {
+        let mut q = EventQueue::new();
+        let mut c = Cluster::new(ClusterConfig {
+            capacity: 64,
+            ..Default::default()
+        });
+        for i in 0..10_000usize {
+            let task = c.submit(TaskSpec {
+                job: i % 16,
+                round: 0,
+                priority: (i as i64 * 37) % 100_000,
+                cold_start: secs(0.1),
+                state_load: secs(0.1),
+                checkpoint: secs(0.1),
+                keep_alive: false,
+            });
+            c.push_work(&mut q, task, &[secs(0.5)]);
+            c.request_finish(&mut q, task);
+        }
+        let mut ticks = 0u64;
+        while ticks < 20_000 {
+            c.on_tick(&mut q);
+            ticks += 1;
+            if q.next().is_none() {
+                break;
+            }
+        }
+    });
+    t.row(vec![
+        "cluster: 10k tasks through 64 slots".into(),
+        format!("{:.1} ms", med * 1e3),
+        "-".into(),
+    ]);
+
+    // 3) full worst-case Fig 9 cell: 10k intermittent parties × 50 rounds
+    let spec = FlJobSpec::new(
+        Workload::rvlcdip_vgg16(),
+        FleetKind::IntermittentHeterogeneous,
+        10_000,
+        50,
+    );
+    for strat in ["jit", "eager-serverless", "eager-ao"] {
+        let (med, _) = time_median(1, || {
+            let r = run_scenario(&spec, strat, 7);
+            std::hint::black_box(r.updates_fused);
+        });
+        t.row(vec![
+            format!("10k-party × 50-round cell ({strat})"),
+            format!("{:.2} s", med),
+            format!("{:.0}k updates/s", 500.0 / med),
+        ]);
+    }
+    t.print();
+}

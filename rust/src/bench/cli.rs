@@ -1,0 +1,332 @@
+//! `fljit` CLI dispatch — the leader entrypoint's subcommands.
+
+use crate::bench::figs::{self, LatencyGrid, ResourceGrid};
+use crate::coordinator::job::FlJobSpec;
+use crate::coordinator::platform::run_scenario;
+use crate::coordinator::timeline;
+use crate::model::zoo;
+use crate::party::FleetKind;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::table::Table;
+use crate::workloads::Workload;
+
+const USAGE: &str = "\
+fljit — Just-in-Time Aggregation for Federated Learning
+
+USAGE: fljit <subcommand> [--flags]
+
+SUBCOMMANDS:
+  timeline                         Fig 2 scenario (6 parties, 4+1 options)
+  simulate   --workload cifar100 --fleet active-homog --parties 100
+             --strategy jit --rounds 50 --seed 7
+  bench-table <fig3|fig4|fig7|fig8|fig9>  regenerate a paper figure/table
+             [--rounds N] [--max-parties N] [--reps N] [--workload W]
+  calibrate  [--reps 5]            offline t_pair per zoo model (§5.4)
+  run        --spec job.json       run a JSON job spec end to end (sim)
+  live       [--parties 4 --rounds 10]  real training + real XLA fusion
+  zoo                              list zoo models
+";
+
+pub fn dispatch(args: &Args) -> i32 {
+    match args.subcommand() {
+        Some("timeline") => cmd_timeline(args),
+        Some("simulate") => cmd_simulate(args),
+        Some("bench-table") => cmd_bench_table(args),
+        Some("calibrate") => cmd_calibrate(args),
+        Some("run") => cmd_run(args),
+        Some("live") => cmd_live(args),
+        Some("zoo") => cmd_zoo(),
+        _ => {
+            print!("{USAGE}");
+            if args.subcommand().is_some() {
+                eprintln!("unknown subcommand {:?}", args.subcommand());
+                return 2;
+            }
+            0
+        }
+    }
+}
+
+fn cmd_timeline(args: &Args) -> i32 {
+    let reports = timeline::run_fig2(args.get_u64("seed", 7));
+    print!("{}", timeline::render(&reports));
+    println!(
+        "eager-AO §3 arithmetic: busy 6s of a 21s round -> idle {:.1}%",
+        timeline::eager_ao_idle_fraction(6.0, 21.0) * 100.0
+    );
+    0
+}
+
+fn cmd_simulate(args: &Args) -> i32 {
+    let Some(workload) = Workload::by_name(args.get_or("workload", "cifar100-effnet")) else {
+        eprintln!("unknown workload; see `fljit zoo`");
+        return 2;
+    };
+    let Some(fleet) = FleetKind::parse(args.get_or("fleet", "active-homog")) else {
+        eprintln!("unknown fleet kind (active-homog | active-hetero | intermittent)");
+        return 2;
+    };
+    let strategy = args.get_or("strategy", "jit").to_string();
+    let parties = args.get_usize("parties", 100);
+    let rounds = args.get_u64("rounds", 50) as u32;
+    let mut spec = FlJobSpec::new(workload, fleet, parties, rounds);
+    spec.t_wait_secs = args.get_f64("twait", crate::workloads::T_WAIT_SECS);
+    spec.report_prob = args.get_f64("report-prob", 1.0);
+    let r = run_scenario(&spec, &strategy, args.get_u64("seed", 7));
+    let mut t = Table::new(
+        &format!("simulate {} / {} / {}p / {}", r.workload, r.fleet, parties, strategy),
+        &["metric", "value"],
+    );
+    t.row(vec!["rounds".into(), r.rounds.len().to_string()]);
+    t.row(vec![
+        "mean agg latency (s)".into(),
+        format!("{:.3}", r.mean_latency_secs()),
+    ]);
+    t.row(vec![
+        "p95 agg latency (s)".into(),
+        format!("{:.3}", r.latency_p95()),
+    ]);
+    t.row(vec![
+        "container-seconds".into(),
+        format!("{:.1}", r.total_container_seconds()),
+    ]);
+    t.row(vec!["projected cost (USD)".into(), format!("{:.4}", r.cost_usd())]);
+    t.row(vec!["deployments".into(), r.deployments.to_string()]);
+    t.row(vec!["updates fused".into(), r.updates_fused.to_string()]);
+    t.row(vec!["makespan (s)".into(), format!("{:.1}", r.makespan_secs)]);
+    t.print();
+    crate::bench::dump("simulate", &r.to_json());
+    0
+}
+
+fn cmd_bench_table(args: &Args) -> i32 {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("");
+    let rounds = args.get_u64("rounds", 50) as u32;
+    let max_parties = args.get_usize("max-parties", 10000);
+    let seed = args.get_u64("seed", 0xF19);
+    let reps = args.get_usize("reps", 20);
+    match which {
+        "fig3" => match figs::fig3(reps, seed) {
+            Ok((t, j)) => {
+                t.print();
+                crate::bench::dump("fig3", &j);
+                0
+            }
+            Err(e) => {
+                eprintln!("fig3 failed (artifacts built?): {e:#}");
+                1
+            }
+        },
+        "fig4" => match figs::fig4(reps, seed) {
+            Ok((t, j)) => {
+                t.print();
+                crate::bench::dump("fig4", &j);
+                0
+            }
+            Err(e) => {
+                eprintln!("fig4 failed (artifacts built?): {e:#}");
+                1
+            }
+        },
+        "fig7" | "fig8" => {
+            let fleet = if which == "fig7" {
+                FleetKind::IntermittentHeterogeneous
+            } else {
+                FleetKind::ActiveHeterogeneous
+            };
+            let (tables, j) = LatencyGrid {
+                fleet,
+                rounds,
+                seed,
+                max_parties,
+            }
+            .run();
+            for t in tables {
+                t.print();
+            }
+            crate::bench::dump(which, &j);
+            0
+        }
+        "fig9" => {
+            let (tables, j) = ResourceGrid {
+                rounds,
+                seed,
+                max_parties,
+                only_workload: args.get("workload").map(|s| {
+                    Workload::by_name(s).map(|w| w.name.to_string()).unwrap_or_else(|| s.to_string())
+                }),
+                ..Default::default()
+            }
+            .run();
+            for t in tables {
+                t.print();
+            }
+            crate::bench::dump("fig9", &j);
+            0
+        }
+        _ => {
+            eprintln!("expected one of fig3|fig4|fig7|fig8|fig9");
+            2
+        }
+    }
+}
+
+fn cmd_calibrate(args: &Args) -> i32 {
+    let reps = args.get_usize("reps", 5);
+    let seed = args.get_u64("seed", 42);
+    let mut t = Table::new(
+        "t_pair calibration (§5.4) — pure-Rust fusion hot path",
+        &["model", "params", "MB", "t_pair (ms)", "GB/s"],
+    );
+    for name in zoo::all_names() {
+        let spec = zoo::by_name(name).unwrap();
+        let t_pair = crate::fusion::calibrate_t_pair(&spec, reps, seed);
+        let mb = spec.size_bytes() as f64 / 1e6;
+        t.row(vec![
+            name.to_string(),
+            spec.total_params().to_string(),
+            format!("{:.1}", mb),
+            format!("{:.2}", t_pair * 1e3),
+            // pair merge streams 2 reads + 1 write of the update
+            format!("{:.2}", 3.0 * mb / 1e3 / t_pair),
+        ]);
+    }
+    t.print();
+    0
+}
+
+fn cmd_run(args: &Args) -> i32 {
+    let Some(path) = args.get("spec") else {
+        eprintln!("run requires --spec job.json");
+        return 2;
+    };
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("cannot read {path}: {e}");
+            return 1;
+        }
+    };
+    let Ok(v) = Json::parse(&text) else {
+        eprintln!("invalid JSON in {path}");
+        return 1;
+    };
+    let Some(spec) = FlJobSpec::from_json(&v) else {
+        eprintln!("invalid job spec in {path}");
+        return 1;
+    };
+    let strategy = args.get_or("strategy", "jit").to_string();
+    let r = run_scenario(&spec, &strategy, args.get_u64("seed", 7));
+    println!("{}", r.to_json().pretty());
+    0
+}
+
+fn cmd_live(args: &Args) -> i32 {
+    use crate::coordinator::live::{run_live, LiveConfig, LiveStrategy};
+    let cfg = LiveConfig {
+        n_parties: args.get_usize("parties", 4),
+        rounds: args.get_u64("rounds", 10) as u32,
+        minibatches: args.get_usize("minibatches", 4),
+        lr: args.get_f64("lr", 0.08) as f32,
+        strategy: if args.get_or("strategy", "jit") == "jit" {
+            LiveStrategy::Jit { margin: 0.15 }
+        } else {
+            LiveStrategy::EagerAlwaysOn
+        },
+        alpha: args.get_f64("alpha", 0.5),
+        seed: args.get_u64("seed", 42),
+        mu: args.get_f64("mu", 0.0) as f32,
+        extra_epoch_ms: args.get_u64("extra-epoch-ms", 0),
+    };
+    match run_live(&cfg) {
+        Ok(report) => {
+            let mut t = Table::new(
+                &format!("live federated training ({} strategy)", report.strategy),
+                &["round", "train loss", "eval loss", "eval acc", "agg lat (ms)", "defer (ms)"],
+            );
+            for r in &report.rounds {
+                t.row(vec![
+                    r.round.to_string(),
+                    format!("{:.4}", r.train_loss),
+                    format!("{:.4}", r.eval_loss),
+                    format!("{:.3}", r.eval_acc),
+                    format!("{:.1}", r.agg_latency_secs * 1e3),
+                    format!("{:.1}", r.defer_secs * 1e3),
+                ]);
+            }
+            t.print();
+            println!(
+                "t_pair={:.3}ms  busy={:.2}s of {:.2}s total  final_acc={:.3}",
+                report.t_pair_secs * 1e3,
+                report.total_busy_secs,
+                report.total_secs,
+                report.final_acc
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("live run failed (run `make artifacts` first): {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_zoo() -> i32 {
+    let mut t = Table::new("model zoo", &["name", "params", "update MB", "layers"]);
+    for name in zoo::all_names() {
+        let m = zoo::by_name(name).unwrap();
+        t.row(vec![
+            name.to_string(),
+            m.total_params().to_string(),
+            format!("{:.1}", m.size_bytes() as f64 / 1e6),
+            m.layers.len().to_string(),
+        ]);
+    }
+    t.print();
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn usage_and_unknown() {
+        assert_eq!(dispatch(&args("")), 0);
+        assert_eq!(dispatch(&args("frobnicate")), 2);
+    }
+
+    #[test]
+    fn zoo_and_calibrate_run() {
+        assert_eq!(dispatch(&args("zoo")), 0);
+        assert_eq!(dispatch(&args("calibrate --reps 1")), 0);
+    }
+
+    #[test]
+    fn simulate_small() {
+        assert_eq!(
+            dispatch(&args(
+                "simulate --parties 10 --rounds 2 --strategy jit --seed 3"
+            )),
+            0
+        );
+        assert_eq!(dispatch(&args("simulate --workload nope")), 2);
+        assert_eq!(dispatch(&args("simulate --fleet nope")), 2);
+    }
+
+    #[test]
+    fn timeline_runs() {
+        assert_eq!(dispatch(&args("timeline")), 0);
+    }
+
+    #[test]
+    fn bench_table_validation() {
+        assert_eq!(dispatch(&args("bench-table")), 2);
+        assert_eq!(dispatch(&args("bench-table fig99")), 2);
+    }
+}

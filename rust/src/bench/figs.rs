@@ -1,0 +1,331 @@
+//! Figure/table regeneration (§6): Fig 3 (periodicity), Fig 4 (linearity),
+//! Fig 7/8 (aggregation latency), Fig 9 (container-seconds + cost).
+
+use crate::coordinator::job::FlJobSpec;
+use crate::coordinator::platform::run_scenario;
+use crate::coordinator::strategies::paper_strategies;
+use crate::metrics::{savings_pct, JobReport};
+use crate::party::FleetKind;
+use crate::util::json::Json;
+use crate::util::table::Table;
+use crate::workloads::Workload;
+
+/// Party-count axis of the paper's grids.
+pub const PARTY_GRID: [usize; 4] = [10, 100, 1000, 10000];
+
+/// Latency grid (Fig 7 intermittent / Fig 8 active heterogeneous).
+pub struct LatencyGrid {
+    pub fleet: FleetKind,
+    pub rounds: u32,
+    pub seed: u64,
+    pub max_parties: usize,
+}
+
+impl LatencyGrid {
+    pub fn run(&self) -> (Vec<Table>, Json) {
+        let mut tables = Vec::new();
+        let mut json_rows = Vec::new();
+        for workload in Workload::all_paper() {
+            let mut t = Table::new(
+                &format!(
+                    "{} on {} — mean aggregation latency (s), {} parties",
+                    workload.name,
+                    self.fleet.name(),
+                    "10..10000"
+                ),
+                &["# parties", "JIT", "Batch λ", "Eager λ", "Eager AO"],
+            );
+            for &n in PARTY_GRID.iter().filter(|&&n| n <= self.max_parties) {
+                let mut row = vec![n.to_string()];
+                for strat in paper_strategies() {
+                    let spec = self.spec(&workload, n);
+                    let r = run_scenario(&spec, strat, self.seed);
+                    row.push(format!("{:.2}", r.mean_latency_secs()));
+                    json_rows.push(report_json(&r));
+                }
+                t.row(row);
+            }
+            tables.push(t);
+        }
+        (tables, Json::Arr(json_rows))
+    }
+
+    fn spec(&self, w: &Workload, n: usize) -> FlJobSpec {
+        FlJobSpec::new(w.clone(), self.fleet, n, self.rounds)
+    }
+}
+
+/// The Fig 9 grid: container-seconds, projected cost, savings — per
+/// workload × fleet kind × party count × strategy.
+pub struct ResourceGrid {
+    pub rounds: u32,
+    pub seed: u64,
+    pub max_parties: usize,
+    /// Restrict to one workload (CLI filter); None = all three.
+    pub only_workload: Option<String>,
+    pub fleets: Vec<FleetKind>,
+}
+
+impl Default for ResourceGrid {
+    fn default() -> Self {
+        ResourceGrid {
+            rounds: 50,
+            seed: 0xF19,
+            max_parties: 10000,
+            only_workload: None,
+            fleets: vec![
+                FleetKind::ActiveHomogeneous,
+                FleetKind::ActiveHeterogeneous,
+                FleetKind::IntermittentHeterogeneous,
+            ],
+        }
+    }
+}
+
+impl ResourceGrid {
+    pub fn run(&self) -> (Vec<Table>, Json) {
+        let mut tables = Vec::new();
+        let mut json_rows = Vec::new();
+        for workload in Workload::all_paper() {
+            if let Some(only) = &self.only_workload {
+                if workload.name != only {
+                    continue;
+                }
+            }
+            for &fleet in &self.fleets {
+                // the paper's intermittent block skips homogeneous fleets
+                let mut t = Table::new(
+                    &format!(
+                        "Fig 9 — {} ({} aggregation) — {} parties",
+                        workload.name,
+                        workload.algorithm.name(),
+                        fleet.name()
+                    ),
+                    &[
+                        "# parties",
+                        "JIT cs",
+                        "Batchλ cs",
+                        "Eagerλ cs",
+                        "EagerAO cs",
+                        "JIT $",
+                        "AO $",
+                        "JIT vs Batchλ",
+                        "JIT vs Eagerλ",
+                        "JIT vs AO",
+                    ],
+                );
+                for &n in PARTY_GRID.iter().filter(|&&n| n <= self.max_parties) {
+                    let spec = FlJobSpec::new(workload.clone(), fleet, n, self.rounds);
+                    let reports: Vec<JobReport> = paper_strategies()
+                        .iter()
+                        .map(|s| run_scenario(&spec, s, self.seed))
+                        .collect();
+                    let (jit, batch, eager, ao) =
+                        (&reports[0], &reports[1], &reports[2], &reports[3]);
+                    t.row(vec![
+                        n.to_string(),
+                        format!("{:.0}", jit.total_container_seconds()),
+                        format!("{:.0}", batch.total_container_seconds()),
+                        format!("{:.0}", eager.total_container_seconds()),
+                        format!("{:.0}", ao.total_container_seconds()),
+                        format!("{:.2}", jit.cost_usd()),
+                        format!("{:.2}", ao.cost_usd()),
+                        format!("{:.1}%", savings_pct(jit, batch)),
+                        format!("{:.1}%", savings_pct(jit, eager)),
+                        format!("{:.1}%", savings_pct(jit, ao)),
+                    ]);
+                    for r in &reports {
+                        json_rows.push(report_json(r));
+                    }
+                }
+                tables.push(t);
+            }
+        }
+        (tables, Json::Arr(json_rows))
+    }
+}
+
+fn report_json(r: &JobReport) -> Json {
+    r.to_json()
+}
+
+// ---------------------------------------------------------------------------
+// Fig 3 / Fig 4: real-training periodicity and linearity via the runtime
+// ---------------------------------------------------------------------------
+
+/// Measure `reps` local epochs at fixed shape; returns per-epoch seconds.
+/// Requires `make artifacts`.
+pub fn measure_epochs(n_minibatches: usize, reps: usize, seed: u64) -> anyhow::Result<Vec<f64>> {
+    use crate::party::synth_party_dataset;
+    use crate::runtime::{Runtime, Trainer, MLP_CLASSES, MLP_IN};
+    let rt = Runtime::with_default_dir()?;
+    let (xs, ys) = synth_party_dataset(0, n_minibatches * 32, MLP_IN, MLP_CLASSES, 10.0, seed);
+    let mut trainer = Trainer::init(&rt, seed);
+    // warm-up compiles the executable
+    trainer.epoch(n_minibatches, &xs, &ys, 0.05)?;
+    let mut out = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        trainer.epoch(n_minibatches, &xs, &ys, 0.05)?;
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    Ok(out)
+}
+
+/// Measure one minibatch step at batch size `b` (must match an artifact).
+pub fn measure_minibatch(b: usize, reps: usize, seed: u64) -> anyhow::Result<Vec<f64>> {
+    use crate::party::synth_party_dataset;
+    use crate::runtime::{Runtime, Trainer, MLP_CLASSES, MLP_IN};
+    let rt = Runtime::with_default_dir()?;
+    let (xs, ys) = synth_party_dataset(1, b, MLP_IN, MLP_CLASSES, 10.0, seed);
+    let mut trainer = Trainer::init(&rt, seed);
+    trainer.step(b, &xs, &ys, 0.05)?;
+    let mut out = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        trainer.step(b, &xs, &ys, 0.05)?;
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    Ok(out)
+}
+
+/// Fig 3: epoch & minibatch times across repetitions — the periodicity
+/// claim is CV ≪ 1.
+pub fn fig3(reps: usize, seed: u64) -> anyhow::Result<(Table, Json)> {
+    let mut t = Table::new(
+        "Fig 3 — periodicity: per-epoch / per-minibatch time across repetitions",
+        &["measure", "shape", "mean (ms)", "std (ms)", "CV"],
+    );
+    let mut rows = Vec::new();
+    for n in [8usize, 16] {
+        let xs = measure_epochs(n, reps, seed)?;
+        let s = crate::util::stats::Summary::of(&xs);
+        t.row(vec![
+            "epoch".into(),
+            format!("{n}x32"),
+            format!("{:.2}", s.mean * 1e3),
+            format!("{:.2}", s.std * 1e3),
+            format!("{:.3}", s.cv()),
+        ]);
+        rows.push(Json::obj(vec![
+            ("measure", Json::str("epoch")),
+            ("minibatches", Json::num(n as f64)),
+            ("mean_secs", Json::num(s.mean)),
+            ("cv", Json::num(s.cv())),
+        ]));
+    }
+    for b in [32usize, 64] {
+        let xs = measure_minibatch(b, reps, seed)?;
+        let s = crate::util::stats::Summary::of(&xs);
+        t.row(vec![
+            "minibatch".into(),
+            format!("b={b}"),
+            format!("{:.2}", s.mean * 1e3),
+            format!("{:.2}", s.std * 1e3),
+            format!("{:.3}", s.cv()),
+        ]);
+        rows.push(Json::obj(vec![
+            ("measure", Json::str("minibatch")),
+            ("batch", Json::num(b as f64)),
+            ("mean_secs", Json::num(s.mean)),
+            ("cv", Json::num(s.cv())),
+        ]));
+    }
+    Ok((t, Json::Arr(rows)))
+}
+
+/// Fig 4: minibatch time vs batch size; epoch time vs dataset size — the
+/// linearity claim is R² ≈ 1 on the OLS fit.
+pub fn fig4(reps: usize, seed: u64) -> anyhow::Result<(Table, Json)> {
+    let mut t = Table::new(
+        "Fig 4 — linearity: minibatch time vs batch size; epoch time vs dataset size",
+        &["sweep", "x", "mean time (ms)"],
+    );
+    let mut mb_x = Vec::new();
+    let mut mb_y = Vec::new();
+    for b in [16usize, 32, 64, 128] {
+        let xs = measure_minibatch(b, reps, seed)?;
+        let mean = crate::util::stats::Summary::of(&xs).mean;
+        mb_x.push(b as f64);
+        mb_y.push(mean);
+        t.row(vec![
+            "minibatch-vs-batch".into(),
+            b.to_string(),
+            format!("{:.3}", mean * 1e3),
+        ]);
+    }
+    let mut ep_x = Vec::new();
+    let mut ep_y = Vec::new();
+    for n in [2usize, 4, 8, 16, 32] {
+        let xs = measure_epochs(n, reps, seed)?;
+        let mean = crate::util::stats::Summary::of(&xs).mean;
+        ep_x.push((n * 32) as f64);
+        ep_y.push(mean);
+        t.row(vec![
+            "epoch-vs-datasize".into(),
+            (n * 32).to_string(),
+            format!("{:.3}", mean * 1e3),
+        ]);
+    }
+    let mb_fit = crate::util::stats::LinearFit::fit(&mb_x, &mb_y)
+        .ok_or_else(|| anyhow::anyhow!("minibatch fit failed"))?;
+    let ep_fit = crate::util::stats::LinearFit::fit(&ep_x, &ep_y)
+        .ok_or_else(|| anyhow::anyhow!("epoch fit failed"))?;
+    t.row(vec![
+        "OLS R² (minibatch)".into(),
+        "-".into(),
+        format!("{:.4}", mb_fit.r2),
+    ]);
+    t.row(vec![
+        "OLS R² (epoch)".into(),
+        "-".into(),
+        format!("{:.4}", ep_fit.r2),
+    ]);
+    let j = Json::obj(vec![
+        ("minibatch_r2", Json::num(mb_fit.r2)),
+        ("minibatch_slope", Json::num(mb_fit.slope)),
+        ("epoch_r2", Json::num(ep_fit.r2)),
+        ("epoch_slope", Json::num(ep_fit.slope)),
+    ]);
+    Ok((t, j))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_grid_small_scale() {
+        let grid = LatencyGrid {
+            fleet: FleetKind::ActiveHeterogeneous,
+            rounds: 2,
+            seed: 5,
+            max_parties: 10,
+        };
+        let (tables, json) = grid.run();
+        assert_eq!(tables.len(), 3, "one table per workload");
+        assert_eq!(json.as_arr().unwrap().len(), 3 * 4, "3 workloads × 4 strategies");
+        for t in &tables {
+            assert_eq!(t.rows.len(), 1, "only the 10-party row at this cap");
+        }
+    }
+
+    #[test]
+    fn resource_grid_small_scale_orders_strategies() {
+        let grid = ResourceGrid {
+            rounds: 3,
+            seed: 5,
+            max_parties: 10,
+            only_workload: Some("cifar100-effnet".into()),
+            fleets: vec![FleetKind::ActiveHomogeneous],
+        };
+        let (tables, json) = grid.run();
+        assert_eq!(tables.len(), 1);
+        let rows = json.as_arr().unwrap();
+        assert_eq!(rows.len(), 4);
+        let cs = |i: usize| rows[i].get("total_container_seconds").as_f64().unwrap();
+        // order: jit, batched, eager-serverless, eager-ao
+        assert!(cs(0) < cs(2), "jit < eager λ");
+        assert!(cs(2) < cs(3), "eager λ < AO");
+    }
+}

@@ -1,0 +1,59 @@
+//! Benchmark/figure harnesses: every table and figure of the paper's
+//! evaluation regenerates through this module (used by the `fljit` CLI and
+//! the `cargo bench` binaries). Results print as aligned tables mirroring
+//! the paper's rows, and are dumped as JSON under `target/repro/`.
+
+pub mod cli;
+pub mod figs;
+
+use crate::util::json::Json;
+use std::path::PathBuf;
+
+/// Where JSON result dumps go.
+pub fn repro_dir() -> PathBuf {
+    let p = PathBuf::from("target/repro");
+    let _ = std::fs::create_dir_all(&p);
+    p
+}
+
+/// Write a result JSON (best effort; benches still print to stdout).
+pub fn dump(name: &str, v: &Json) {
+    let path = repro_dir().join(format!("{name}.json"));
+    if let Err(e) = std::fs::write(&path, v.pretty()) {
+        eprintln!("warn: could not write {path:?}: {e}");
+    } else {
+        eprintln!("[results written to {path:?}]");
+    }
+}
+
+/// Wall-clock measurement helper for the perf benches: median + min over
+/// `reps` runs of `f` (returns seconds).
+pub fn time_median<F: FnMut()>(reps: usize, mut f: F) -> (f64, f64) {
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (samples[samples.len() / 2], samples[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_median_orders() {
+        let (med, min) = time_median(5, || std::thread::sleep(std::time::Duration::from_micros(200)));
+        assert!(min <= med);
+        assert!(min >= 0.0001);
+    }
+
+    #[test]
+    fn dump_writes_json() {
+        dump("selftest", &Json::obj(vec![("ok", Json::Bool(true))]));
+        let text = std::fs::read_to_string(repro_dir().join("selftest.json")).unwrap();
+        assert!(Json::parse(&text).unwrap().get("ok").as_bool().unwrap());
+    }
+}

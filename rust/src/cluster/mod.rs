@@ -1,0 +1,707 @@
+//! Serverless cluster substrate: containers, cold starts, priorities,
+//! preemption, and the container-seconds ledger.
+//!
+//! Models the paper's execution environment (§3, §5.5, §6.1-6.2): Ray
+//! serverless executors in Docker containers on Kubernetes. What the
+//! evaluation measures — *container seconds* and *aggregation latency* —
+//! depends only on when containers are alive and what they are doing, which
+//! is exactly what this module tracks:
+//!
+//! * **Deployment overheads** (orange in Fig 2): cold start (scheduling +
+//!   boot) and state load (pull model/partial aggregate from the MQ /
+//!   object store); **checkpoint** cost on exit or preemption.
+//! * **Priority scheduling every δ** (§5.5): pending aggregation tasks are
+//!   started in priority order (smaller value = more urgent = earlier
+//!   deadline `t_rnd − t_agg`) whenever capacity allows, at tick
+//!   granularity; `force_start` models the JIT deadline timer's
+//!   FORCE_TRIGGER which bypasses the tick.
+//! * **Preemption with work conservation**: a preempted task checkpoints
+//!   its partial aggregate (completed merges are conserved at work-item
+//!   granularity; the in-flight merge is redone on resume) and re-enters
+//!   the pending queue with its priority retained.
+//! * **Ledger**: every container incarnation's [start, end) interval with
+//!   job attribution — container-seconds, the paper's §6.2 metric.
+//!
+//! A task with `keep_alive` set models the Eager Always-On aggregator: its
+//! container idles between updates instead of exiting, accruing the idle
+//! container-seconds Fig 2 shades in light grey.
+
+use std::collections::{BTreeSet, VecDeque};
+
+use crate::sim::{EventKind, EventQueue, Time};
+
+pub type TaskId = usize;
+
+/// Scheduling priority: smaller = higher priority. JIT sets this to the
+/// aggregation deadline `t_rnd − t_agg` in micros (§5.5).
+pub type Priority = i64;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Waiting for capacity / a scheduling tick.
+    Pending,
+    /// Cold start + state load in progress.
+    Starting,
+    /// Processing a work item.
+    Running,
+    /// Alive with an empty work queue (always-on aggregators).
+    Idle,
+    /// Writing the (partial) aggregate back before exit/preemption.
+    Checkpointing,
+    Done,
+}
+
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    pub job: usize,
+    pub round: u32,
+    pub priority: Priority,
+    /// Cold-start (scheduler + boot) time for each deployment.
+    pub cold_start: Time,
+    /// State-load time for each deployment (model / checkpoint pull).
+    pub state_load: Time,
+    /// Checkpoint time on exit or preemption.
+    pub checkpoint: Time,
+    /// Keep the container alive when the work queue drains (Eager AO).
+    pub keep_alive: bool,
+}
+
+#[derive(Debug)]
+struct Task {
+    spec: TaskSpec,
+    phase: Phase,
+    work: VecDeque<Time>,
+    /// Token guarding scheduled phase-end events (stale events are ignored).
+    token: u64,
+    finish_requested: bool,
+    /// Set while checkpointing because of preemption (→ Pending after).
+    preempting: bool,
+    deployments: u32,
+    /// Ledger index of the live deployment.
+    live_deployment: Option<usize>,
+    work_done: u64,
+    /// Index keys currently held in the scheduler sets (hot-path index).
+    pending_key: Option<(Priority, TaskId)>,
+    active_key: Option<(Priority, TaskId)>,
+}
+
+/// One container incarnation's lifetime.
+#[derive(Clone, Debug)]
+pub struct Deployment {
+    pub job: usize,
+    pub task: TaskId,
+    pub start: Time,
+    pub end: Option<Time>,
+}
+
+/// What `advance` tells the platform/strategy.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Notification {
+    /// Cold start + state load finished; container now live.
+    Deployed { task: TaskId },
+    /// One work item (one update merge) completed.
+    WorkItemDone { task: TaskId },
+    /// Work queue drained (and container stays alive: keep_alive or
+    /// awaiting finish request).
+    WorkDrained { task: TaskId },
+    /// Task exited cleanly (after checkpoint).
+    TaskExited { task: TaskId },
+    /// Task was preempted; it is pending again with work conserved.
+    TaskPreempted { task: TaskId },
+}
+
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Max concurrently deployed containers.
+    pub capacity: usize,
+    /// δ — scheduling decision interval (§5.5).
+    pub delta_tick: Time,
+    /// Only start pending tasks that have queued work (JIT defers empty
+    /// aggregators "while retaining their priority").
+    pub start_only_with_work: bool,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            capacity: 64,
+            delta_tick: crate::sim::secs(0.5),
+            start_only_with_work: true,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct Cluster {
+    pub cfg: ClusterConfig,
+    tasks: Vec<Task>,
+    ledger: Vec<Deployment>,
+    next_token: u64,
+    /// token -> task resolution for in-flight phase-end events.
+    token_owner: Vec<TaskId>,
+    /// Startable pending tasks ordered by (priority, id) — O(log n) ticks
+    /// instead of scanning every task ever submitted (DESIGN.md §Perf L3).
+    pending_idx: BTreeSet<(Priority, TaskId)>,
+    /// Preemptible (Running/Idle) tasks by (priority, id).
+    active_idx: BTreeSet<(Priority, TaskId)>,
+    /// Live container count (capacity checks without scanning).
+    deployed: usize,
+}
+
+impl Cluster {
+    pub fn new(cfg: ClusterConfig) -> Self {
+        Cluster {
+            cfg,
+            tasks: Vec::new(),
+            ledger: Vec::new(),
+            next_token: 0,
+            token_owner: Vec::new(),
+            pending_idx: BTreeSet::new(),
+            active_idx: BTreeSet::new(),
+            deployed: 0,
+        }
+    }
+
+    /// Recompute a task's membership in the scheduler indices after any
+    /// phase/work/priority mutation.
+    fn reindex(&mut self, task: TaskId) {
+        let t = &self.tasks[task];
+        let want_pending = t.phase == Phase::Pending
+            && (!self.cfg.start_only_with_work || !t.work.is_empty());
+        let want_active = matches!(t.phase, Phase::Running | Phase::Idle);
+        let key = (t.spec.priority, task);
+        let old_p = self.tasks[task].pending_key;
+        if old_p != want_pending.then_some(key) {
+            if let Some(k) = old_p {
+                self.pending_idx.remove(&k);
+            }
+            if want_pending {
+                self.pending_idx.insert(key);
+            }
+            self.tasks[task].pending_key = want_pending.then_some(key);
+        }
+        let old_a = self.tasks[task].active_key;
+        if old_a != want_active.then_some(key) {
+            if let Some(k) = old_a {
+                self.active_idx.remove(&k);
+            }
+            if want_active {
+                self.active_idx.insert(key);
+            }
+            self.tasks[task].active_key = want_active.then_some(key);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // queries
+    // ------------------------------------------------------------------
+
+    pub fn phase(&self, task: TaskId) -> Phase {
+        self.tasks[task].phase
+    }
+
+    pub fn pending_work(&self, task: TaskId) -> usize {
+        self.tasks[task].work.len()
+    }
+
+    pub fn deployments_of(&self, task: TaskId) -> u32 {
+        self.tasks[task].deployments
+    }
+
+    pub fn deployed_count(&self) -> usize {
+        self.deployed
+    }
+
+    pub fn has_capacity(&self) -> bool {
+        self.deployed_count() < self.cfg.capacity
+    }
+
+    pub fn ledger(&self) -> &[Deployment] {
+        &self.ledger
+    }
+
+    /// Total container-seconds attributed to `job` (§6.2). Open deployments
+    /// are charged up to `now`.
+    pub fn container_seconds(&self, job: usize, now: Time) -> f64 {
+        self.ledger
+            .iter()
+            .filter(|d| d.job == job)
+            .map(|d| crate::sim::to_secs(d.end.unwrap_or(now).saturating_sub(d.start)))
+            .sum()
+    }
+
+    /// Container-seconds across all jobs.
+    pub fn total_container_seconds(&self, now: Time) -> f64 {
+        self.ledger
+            .iter()
+            .map(|d| crate::sim::to_secs(d.end.unwrap_or(now).saturating_sub(d.start)))
+            .sum()
+    }
+
+    // ------------------------------------------------------------------
+    // task lifecycle
+    // ------------------------------------------------------------------
+
+    /// Register a task (Pending). It will start at a tick, or immediately
+    /// via `force_start`.
+    pub fn submit(&mut self, spec: TaskSpec) -> TaskId {
+        let id = self.tasks.len();
+        self.tasks.push(Task {
+            spec,
+            phase: Phase::Pending,
+            work: VecDeque::new(),
+            token: u64::MAX,
+            finish_requested: false,
+            preempting: false,
+            deployments: 0,
+            live_deployment: None,
+            work_done: 0,
+            pending_key: None,
+            active_key: None,
+        });
+        self.reindex(id);
+        id
+    }
+
+    /// Append work items (one per update merge; duration = t_pair / C_agg).
+    pub fn push_work(&mut self, q: &mut EventQueue, task: TaskId, items: &[Time]) {
+        self.tasks[task].work.extend(items.iter().copied());
+        // An idle (kept-alive) container picks work up immediately.
+        if self.tasks[task].phase == Phase::Idle && !items.is_empty() {
+            self.begin_next_work(q, task);
+        }
+        self.reindex(task);
+    }
+
+    /// Ask the task to checkpoint + exit once its queue drains.
+    pub fn request_finish(&mut self, q: &mut EventQueue, task: TaskId) {
+        let t = &mut self.tasks[task];
+        t.finish_requested = true;
+        if t.phase == Phase::Idle {
+            self.begin_checkpoint(q, task, false);
+        }
+        self.reindex(task);
+    }
+
+    /// Adjust priority (JIT re-estimates as updates arrive).
+    pub fn set_priority(&mut self, task: TaskId, priority: Priority) {
+        self.tasks[task].spec.priority = priority;
+        self.reindex(task);
+    }
+
+    /// δ-tick: start pending tasks in priority order while capacity lasts;
+    /// then, if a pending task outranks a running one, preempt the victim.
+    pub fn on_tick(&mut self, q: &mut EventQueue) {
+        loop {
+            let Some(best) = self.best_pending() else { break };
+            if self.has_capacity() {
+                self.deploy(q, best);
+                continue;
+            }
+            // Preempt the worst-priority preemptible task if strictly worse.
+            let Some(victim) = self.worst_running() else { break };
+            if self.tasks[victim].spec.priority <= self.tasks[best].spec.priority {
+                break;
+            }
+            self.begin_checkpoint(q, victim, true);
+            // Capacity frees only when the victim's checkpoint completes;
+            // the pending task starts on a later tick.
+            break;
+        }
+    }
+
+    /// FORCE_TRIGGER (Fig 6 line 21): deadline reached — deploy now,
+    /// preempting if necessary.
+    pub fn force_start(&mut self, q: &mut EventQueue, task: TaskId) {
+        if self.tasks[task].phase != Phase::Pending {
+            return;
+        }
+        if !self.has_capacity() {
+            if let Some(victim) = self.worst_running() {
+                if victim != task {
+                    self.begin_checkpoint(q, victim, true);
+                }
+            }
+        }
+        // Deploy regardless — force means the deadline is *now*; momentary
+        // over-capacity while the victim checkpoints is accepted (matches
+        // Kubernetes behaviour of starting a pod while another terminates).
+        self.deploy(q, task);
+    }
+
+    fn best_pending(&self) -> Option<TaskId> {
+        self.pending_idx.iter().next().map(|&(_, t)| t)
+    }
+
+    fn worst_running(&self) -> Option<TaskId> {
+        self.active_idx.iter().next_back().map(|&(_, t)| t)
+    }
+
+    fn new_token(&mut self, task: TaskId) -> u64 {
+        let tok = self.next_token;
+        self.next_token += 1;
+        self.token_owner.push(task);
+        tok
+    }
+
+    fn schedule_phase_end(&mut self, q: &mut EventQueue, task: TaskId, dur: Time) {
+        let tok = self.new_token(task);
+        self.tasks[task].token = tok;
+        q.schedule_in(
+            dur,
+            EventKind::ContainerDone {
+                container: tok as usize,
+            },
+        );
+    }
+
+    fn deploy(&mut self, q: &mut EventQueue, task: TaskId) {
+        let now = q.now();
+        let t = &mut self.tasks[task];
+        debug_assert_eq!(t.phase, Phase::Pending);
+        t.phase = Phase::Starting;
+        t.deployments += 1;
+        t.preempting = false;
+        let dep = Deployment {
+            job: t.spec.job,
+            task,
+            start: now,
+            end: None,
+        };
+        let dur = t.spec.cold_start + t.spec.state_load;
+        self.ledger.push(dep);
+        self.deployed += 1;
+        self.tasks[task].live_deployment = Some(self.ledger.len() - 1);
+        self.schedule_phase_end(q, task, dur);
+        self.reindex(task);
+    }
+
+    fn begin_next_work(&mut self, q: &mut EventQueue, task: TaskId) {
+        let t = &mut self.tasks[task];
+        debug_assert!(!t.work.is_empty());
+        t.phase = Phase::Running;
+        let dur = t.work[0];
+        self.schedule_phase_end(q, task, dur);
+        self.reindex(task);
+    }
+
+    fn begin_checkpoint(&mut self, q: &mut EventQueue, task: TaskId, preempting: bool) {
+        let dur = self.tasks[task].spec.checkpoint;
+        let t = &mut self.tasks[task];
+        t.phase = Phase::Checkpointing;
+        t.preempting = preempting;
+        self.schedule_phase_end(q, task, dur);
+        self.reindex(task);
+    }
+
+    fn end_deployment(&mut self, now: Time, task: TaskId) {
+        if let Some(di) = self.tasks[task].live_deployment.take() {
+            self.ledger[di].end = Some(now);
+            self.deployed -= 1;
+        }
+    }
+
+    /// Advance the task owning `token` past its completed phase.
+    /// Returns None for stale tokens (preempted/rescheduled phases).
+    pub fn advance(&mut self, q: &mut EventQueue, token: usize) -> Option<Notification> {
+        let task = *self.token_owner.get(token)?;
+        if self.tasks[task].token != token as u64 {
+            return None; // stale
+        }
+        let now = q.now();
+        let note = match self.tasks[task].phase {
+            Phase::Starting => {
+                if !self.tasks[task].work.is_empty() {
+                    self.begin_next_work(q, task);
+                } else if self.tasks[task].finish_requested && !self.tasks[task].spec.keep_alive {
+                    self.begin_checkpoint(q, task, false);
+                } else {
+                    self.tasks[task].phase = Phase::Idle;
+                }
+                Some(Notification::Deployed { task })
+            }
+            Phase::Running => {
+                self.tasks[task].work.pop_front();
+                self.tasks[task].work_done += 1;
+                if !self.tasks[task].work.is_empty() {
+                    self.begin_next_work(q, task);
+                    Some(Notification::WorkItemDone { task })
+                } else if self.tasks[task].finish_requested && !self.tasks[task].spec.keep_alive {
+                    self.begin_checkpoint(q, task, false);
+                    Some(Notification::WorkItemDone { task })
+                } else {
+                    self.tasks[task].phase = Phase::Idle;
+                    Some(Notification::WorkDrained { task })
+                }
+            }
+            Phase::Checkpointing => {
+                self.end_deployment(now, task);
+                if self.tasks[task].preempting {
+                    self.tasks[task].phase = Phase::Pending;
+                    self.tasks[task].preempting = false;
+                    Some(Notification::TaskPreempted { task })
+                } else {
+                    self.tasks[task].phase = Phase::Done;
+                    Some(Notification::TaskExited { task })
+                }
+            }
+            _ => None,
+        };
+        self.reindex(task);
+        note
+    }
+
+    /// Work items completed by a task (monotone; conserved across preemption).
+    pub fn work_done(&self, task: TaskId) -> u64 {
+        self.tasks[task].work_done
+    }
+
+    /// Owning job of a task (event routing in the multi-job platform).
+    pub fn job_of(&self, task: TaskId) -> usize {
+        self.tasks[task].spec.job
+    }
+
+    /// Cancel a still-Pending task (JIT shard that never received work).
+    /// No deployment, no cost. Returns false if the task already started.
+    pub fn cancel(&mut self, task: TaskId) -> bool {
+        if self.tasks[task].phase == Phase::Pending {
+            self.tasks[task].phase = Phase::Done;
+            self.reindex(task);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Total merges completed by all of a job's tasks.
+    pub fn job_work_done(&self, job: usize) -> u64 {
+        self.tasks
+            .iter()
+            .filter(|t| t.spec.job == job)
+            .map(|t| t.work_done)
+            .sum()
+    }
+
+    /// Deployments (container incarnations) attributed to a job.
+    pub fn job_deployments(&self, job: usize) -> u64 {
+        self.ledger.iter().filter(|d| d.job == job).count() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{secs, to_secs};
+
+    fn spec(job: usize, priority: Priority) -> TaskSpec {
+        TaskSpec {
+            job,
+            round: 0,
+            priority,
+            cold_start: secs(0.3),
+            state_load: secs(0.2),
+            checkpoint: secs(0.2),
+            keep_alive: false,
+        }
+    }
+
+    /// Drive all events, collecting notifications. Ticks the scheduler
+    /// after every event so pending tasks get started as capacity frees.
+    fn drain(c: &mut Cluster, q: &mut EventQueue) -> Vec<Notification> {
+        let mut notes = Vec::new();
+        while let Some((_, ev)) = q.next() {
+            match ev {
+                EventKind::ContainerDone { container } => {
+                    if let Some(n) = c.advance(q, container) {
+                        notes.push(n);
+                    }
+                }
+                EventKind::SchedTick => {
+                    c.on_tick(q);
+                }
+                _ => {}
+            }
+            c.on_tick(q);
+        }
+        notes
+    }
+
+    #[test]
+    fn lifecycle_and_ledger() {
+        let mut q = EventQueue::new();
+        let mut c = Cluster::new(ClusterConfig::default());
+        let t = c.submit(spec(0, 100));
+        c.push_work(&mut q, t, &[secs(1.0), secs(1.0)]);
+        c.request_finish(&mut q, t);
+        c.force_start(&mut q, t);
+        let notes = drain(&mut c, &mut q);
+        assert!(notes.contains(&Notification::Deployed { task: t }));
+        assert!(notes.contains(&Notification::TaskExited { task: t }));
+        assert_eq!(c.phase(t), Phase::Done);
+        assert_eq!(c.work_done(t), 2);
+        // 0.5 start + 2.0 work + 0.2 checkpoint
+        let cs = c.container_seconds(0, q.now());
+        assert!((cs - 2.7).abs() < 1e-6, "cs={cs}");
+        assert_eq!(c.ledger().len(), 1);
+        assert!(c.ledger()[0].end.is_some());
+    }
+
+    #[test]
+    fn keep_alive_idles_instead_of_exiting() {
+        let mut q = EventQueue::new();
+        let mut c = Cluster::new(ClusterConfig::default());
+        let mut s = spec(0, 10);
+        s.keep_alive = true;
+        let t = c.submit(s);
+        c.push_work(&mut q, t, &[secs(1.0)]);
+        c.force_start(&mut q, t);
+        drain(&mut c, &mut q);
+        assert_eq!(c.phase(t), Phase::Idle);
+        // still accruing container time
+        let cs_now = c.container_seconds(0, q.now() + secs(10.0));
+        assert!(cs_now > to_secs(secs(11.0)) - 1e-6, "cs={cs_now}");
+        // new work wakes it without a new deployment
+        c.push_work(&mut q, t, &[secs(0.5)]);
+        drain(&mut c, &mut q);
+        assert_eq!(c.deployments_of(t), 1);
+        assert_eq!(c.work_done(t), 2);
+    }
+
+    #[test]
+    fn tick_starts_by_priority_under_capacity() {
+        let mut q = EventQueue::new();
+        let mut c = Cluster::new(ClusterConfig {
+            capacity: 1,
+            ..Default::default()
+        });
+        let lo = c.submit(spec(0, 1000));
+        let hi = c.submit(spec(1, 10));
+        c.push_work(&mut q, lo, &[secs(1.0)]);
+        c.push_work(&mut q, hi, &[secs(1.0)]);
+        c.on_tick(&mut q);
+        assert_eq!(c.phase(hi), Phase::Starting);
+        assert_eq!(c.phase(lo), Phase::Pending);
+    }
+
+    #[test]
+    fn start_only_with_work_defers_empty_tasks() {
+        let mut q = EventQueue::new();
+        let mut c = Cluster::new(ClusterConfig::default());
+        let t = c.submit(spec(0, 1));
+        c.on_tick(&mut q);
+        assert_eq!(c.phase(t), Phase::Pending, "empty task must stay deferred");
+        c.push_work(&mut q, t, &[secs(1.0)]);
+        c.on_tick(&mut q);
+        assert_eq!(c.phase(t), Phase::Starting);
+    }
+
+    #[test]
+    fn preemption_conserves_work() {
+        let mut q = EventQueue::new();
+        let mut c = Cluster::new(ClusterConfig {
+            capacity: 1,
+            ..Default::default()
+        });
+        let lo = c.submit(spec(0, 1000));
+        c.push_work(&mut q, lo, &[secs(5.0), secs(5.0), secs(5.0)]);
+        c.on_tick(&mut q);
+        // run until the low-priority task starts its first item
+        for _ in 0..2 {
+            if let Some((_, EventKind::ContainerDone { container })) = q.next() {
+                c.advance(&mut q, container);
+            }
+        }
+        assert_eq!(c.phase(lo), Phase::Running);
+        // a high-priority task arrives and forces in
+        let hi = c.submit(spec(1, 1));
+        c.push_work(&mut q, hi, &[secs(1.0)]);
+        c.request_finish(&mut q, hi);
+        c.on_tick(&mut q); // preempts lo (begins checkpoint)
+        assert_eq!(c.phase(lo), Phase::Checkpointing);
+        let notes = drain(&mut c, &mut q);
+        assert!(notes.contains(&Notification::TaskPreempted { task: lo }));
+        assert!(notes.contains(&Notification::TaskExited { task: hi }));
+        // lo conserved: the ticking drain redeployed it after hi freed
+        // capacity and it completed all 3 items (the interrupted one redone)
+        assert_eq!(c.phase(lo), Phase::Idle);
+        assert_eq!(c.work_done(lo), 3);
+        c.request_finish(&mut q, lo);
+        drain(&mut c, &mut q);
+        assert_eq!(c.phase(lo), Phase::Done);
+        assert_eq!(c.deployments_of(lo), 2);
+    }
+
+    #[test]
+    fn force_start_preempts_worst() {
+        let mut q = EventQueue::new();
+        let mut c = Cluster::new(ClusterConfig {
+            capacity: 1,
+            ..Default::default()
+        });
+        let lo = c.submit(spec(0, 1000));
+        c.push_work(&mut q, lo, &[secs(50.0)]);
+        c.on_tick(&mut q);
+        while c.phase(lo) != Phase::Running {
+            if let Some((_, EventKind::ContainerDone { container })) = q.next() {
+                c.advance(&mut q, container);
+            } else {
+                break;
+            }
+        }
+        let hi = c.submit(spec(1, 1));
+        c.push_work(&mut q, hi, &[secs(1.0)]);
+        c.force_start(&mut q, hi);
+        assert_eq!(c.phase(hi), Phase::Starting);
+        assert_eq!(c.phase(lo), Phase::Checkpointing);
+    }
+
+    #[test]
+    fn ledger_conservation_property() {
+        // Σ per-job container-seconds == total, and every closed deployment
+        // has end >= start.
+        crate::util::prop::check("ledger-conservation", 32, |g| {
+            let mut q = EventQueue::new();
+            let mut c = Cluster::new(ClusterConfig {
+                capacity: g.usize(1, 4),
+                ..Default::default()
+            });
+            let njobs = g.usize(1, 5);
+            let ntasks = g.usize(1, 10);
+            for i in 0..ntasks {
+                let job = i % njobs;
+                let t = c.submit(spec(job, g.int(0, 1000) as Priority));
+                let items: Vec<Time> =
+                    (0..g.usize(1, 5)).map(|_| crate::sim::secs(g.f64(0.1, 2.0))).collect();
+                c.push_work(&mut q, t, &items);
+                c.request_finish(&mut q, t);
+            }
+            for _ in 0..200 {
+                c.on_tick(&mut q);
+                let Some((_, ev)) = q.next() else { break };
+                if let EventKind::ContainerDone { container } = ev {
+                    c.advance(&mut q, container);
+                }
+            }
+            // drive to completion
+            while let Some((_, ev)) = q.next() {
+                if let EventKind::ContainerDone { container } = ev {
+                    c.advance(&mut q, container);
+                }
+                c.on_tick(&mut q);
+            }
+            let now = q.now();
+            let total = c.total_container_seconds(now);
+            let per_job: f64 = (0..njobs).map(|j| c.container_seconds(j, now)).sum();
+            crate::prop_assert!(
+                crate::util::prop::close(total, per_job, 1e-9),
+                "total {total} != sum {per_job}"
+            );
+            for d in c.ledger() {
+                if let Some(e) = d.end {
+                    crate::prop_assert!(e >= d.start, "deployment ends before start");
+                }
+            }
+            Ok(())
+        });
+    }
+}

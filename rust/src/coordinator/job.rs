@@ -1,0 +1,230 @@
+//! FL job specification (§5.1) and the derived per-job parameters the
+//! strategies operate on.
+
+use crate::estimator::AggFrequency;
+use crate::fusion::Algorithm;
+use crate::party::FleetKind;
+use crate::sim::{secs, Time};
+use crate::util::json::Json;
+use crate::workloads::Workload;
+
+/// The "FL Job Specification" parties agree on and send to the aggregation
+/// service (§5.1): model, fusion algorithm, hyperparameters, quorum,
+/// t_wait, plus the per-party inputs of §5.2 (collected separately).
+#[derive(Clone, Debug)]
+pub struct FlJobSpec {
+    pub name: String,
+    pub workload: Workload,
+    pub fleet_kind: FleetKind,
+    pub n_parties: usize,
+    pub rounds: u32,
+    pub agg_frequency: AggFrequency,
+    /// Minimum updates needed for a round to succeed (§5.1). Defaults to
+    /// all parties.
+    pub quorum: usize,
+    /// Round window for intermittent parties (seconds, §4.3).
+    pub t_wait_secs: f64,
+    /// Probability a party shares its timing measurements (§5.2); below
+    /// 1.0 exercises the regression fallback of §5.3.
+    pub report_prob: f64,
+}
+
+impl FlJobSpec {
+    pub fn new(workload: Workload, fleet_kind: FleetKind, n_parties: usize, rounds: u32) -> Self {
+        FlJobSpec {
+            name: format!("{}-{}-{}p", workload.name, fleet_kind.name(), n_parties),
+            workload,
+            fleet_kind,
+            n_parties,
+            rounds,
+            agg_frequency: AggFrequency::PerEpoch,
+            quorum: n_parties,
+            t_wait_secs: crate::workloads::T_WAIT_SECS,
+            report_prob: 1.0,
+        }
+    }
+
+    pub fn algorithm(&self) -> Algorithm {
+        self.workload.algorithm
+    }
+
+    /// Parse a job spec from JSON (CLI `run --spec job.json`).
+    pub fn from_json(v: &Json) -> Option<FlJobSpec> {
+        let workload = Workload::by_name(v.get("workload").as_str()?)?;
+        let fleet_kind = FleetKind::parse(v.get("fleet").as_str().unwrap_or("active-homog"))?;
+        let n_parties = v.get("parties").as_usize().unwrap_or(10);
+        let rounds = v.get("rounds").as_u64().unwrap_or(50) as u32;
+        let mut spec = FlJobSpec::new(workload, fleet_kind, n_parties, rounds);
+        if let Some(q) = v.get("quorum").as_usize() {
+            spec.quorum = q.min(n_parties);
+        }
+        if let Some(t) = v.get("t_wait_secs").as_f64() {
+            spec.t_wait_secs = t;
+        }
+        if let Some(p) = v.get("report_prob").as_f64() {
+            spec.report_prob = p.clamp(0.0, 1.0);
+        }
+        if let Some(name) = v.get("name").as_str() {
+            spec.name = name.to_string();
+        }
+        Some(spec)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("workload", Json::str(self.workload.name)),
+            ("fleet", Json::str(self.fleet_kind.name())),
+            ("parties", Json::num(self.n_parties as f64)),
+            ("rounds", Json::num(self.rounds as f64)),
+            ("quorum", Json::num(self.quorum as f64)),
+            ("t_wait_secs", Json::num(self.t_wait_secs)),
+            ("report_prob", Json::num(self.report_prob)),
+        ])
+    }
+}
+
+/// Derived per-job constants the strategies consume every event — all in
+/// sim Time units, precomputed once at job admission.
+#[derive(Clone, Debug)]
+pub struct JobParams {
+    pub job: usize,
+    pub n_parties: usize,
+    pub quorum: usize,
+    pub rounds: u32,
+    /// Serverless per-update merge duration: t_pair / C_agg (update fetch
+    /// from the MQ is pipelined with compute; DESIGN.md §3).
+    pub item: Time,
+    /// Always-on per-update service: serial ingest (M / B_ingest) + merge —
+    /// always-on servers receive updates themselves rather than through the
+    /// distributed MQ (one ingest stream per AO container).
+    pub ao_item: Time,
+    pub cold_start: Time,
+    pub state_load: Time,
+    pub checkpoint: Time,
+    /// Keep-warm linger after a serverless container drains its queue.
+    pub linger: Time,
+    /// Parallel aggregator containers (N_agg, §5.4).
+    pub n_agg: usize,
+    /// Batched-serverless trigger size (§6.3).
+    pub batch: usize,
+    pub t_wait: Time,
+    /// Safety margin on the JIT defer point: start at
+    /// t_rnd − t_agg·(1+margin).
+    pub jit_margin: f64,
+    /// Allow opportunistic early starts when a full shard of work is
+    /// already buffered (§5.5 priorities; the deadline timer is always on).
+    pub opportunistic: bool,
+}
+
+/// Always-on ingress bandwidth per aggregator server (bytes/s). The AO
+/// deployment receives its shard's updates itself (no MQ in front), so at
+/// scale serial ingest stretches its rounds — one of the effects that
+/// balloons Eager AO's container-seconds in Fig 9 (the other being that
+/// its whole fleet idles through every round window).
+pub const AO_INGRESS_BPS: f64 = 1.25e9; // 10 Gbps
+
+impl JobParams {
+    pub fn derive(job: usize, spec: &FlJobSpec) -> JobParams {
+        let w = &spec.workload;
+        let cost = w.cost_model(spec.n_parties);
+        let m = w.model.size_bytes() as f64;
+        // Serverless state load: partial aggregates / model state come from
+        // the co-located object store with cache locality — charged at a
+        // discounted effective transfer (DESIGN.md §3 calibration).
+        let state_load = 0.02 + m / (5.0 * w.b_dc);
+        JobParams {
+            job,
+            n_parties: spec.n_parties,
+            quorum: spec.quorum,
+            rounds: spec.rounds,
+            item: secs(cost.item_secs()),
+            ao_item: secs(cost.item_secs() + m / AO_INGRESS_BPS),
+            cold_start: secs(w.cold_start_secs),
+            state_load: secs(state_load),
+            checkpoint: secs(w.checkpoint_secs),
+            linger: secs(0.5),
+            n_agg: cost.n_agg as usize,
+            batch: crate::workloads::batch_trigger(spec.n_parties),
+            t_wait: secs(spec.t_wait_secs),
+            jit_margin: 0.10,
+            opportunistic: true,
+        }
+    }
+
+    /// Work shard sizes for splitting N updates over n_agg tasks.
+    pub fn shard_sizes(&self) -> Vec<usize> {
+        let n = self.n_parties;
+        let k = self.n_agg.max(1).min(n.max(1));
+        let base = n / k;
+        let rem = n % k;
+        (0..k).map(|i| base + usize::from(i < rem)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::party::FleetKind;
+
+    fn spec() -> FlJobSpec {
+        FlJobSpec::new(
+            Workload::cifar100_effnet(),
+            FleetKind::ActiveHomogeneous,
+            100,
+            50,
+        )
+    }
+
+    #[test]
+    fn params_derive_consistently() {
+        let p = JobParams::derive(3, &spec());
+        assert_eq!(p.job, 3);
+        assert_eq!(p.n_parties, 100);
+        assert_eq!(p.batch, 10);
+        assert_eq!(p.n_agg, 2);
+        assert!(p.ao_item > p.item, "AO ingest must dominate serverless item");
+        // item = t_pair / 2 cores
+        let want = crate::sim::secs(Workload::cifar100_effnet().t_pair / 2.0);
+        assert_eq!(p.item, want);
+    }
+
+    #[test]
+    fn shards_partition_parties() {
+        let mut p = JobParams::derive(0, &spec());
+        p.n_agg = 3;
+        let shards = p.shard_sizes();
+        assert_eq!(shards.len(), 3);
+        assert_eq!(shards.iter().sum::<usize>(), 100);
+        assert!(shards.iter().all(|&s| s == 33 || s == 34));
+        // more shards than parties
+        p.n_agg = 7;
+        p.n_parties = 3;
+        let shards = p.shard_sizes();
+        assert_eq!(shards.iter().sum::<usize>(), 3);
+        assert_eq!(shards.len(), 3);
+    }
+
+    #[test]
+    fn spec_json_roundtrip() {
+        let s = spec();
+        let j = s.to_json();
+        let s2 = FlJobSpec::from_json(&j).unwrap();
+        assert_eq!(s2.name, s.name);
+        assert_eq!(s2.n_parties, 100);
+        assert_eq!(s2.rounds, 50);
+        assert_eq!(s2.workload.name, "cifar100-effnet");
+        assert_eq!(s2.fleet_kind, FleetKind::ActiveHomogeneous);
+    }
+
+    #[test]
+    fn spec_json_defaults_and_validation() {
+        let v = Json::parse(r#"{"workload":"rvlcdip","fleet":"intermittent","quorum":9999}"#)
+            .unwrap();
+        let s = FlJobSpec::from_json(&v).unwrap();
+        assert_eq!(s.n_parties, 10);
+        assert_eq!(s.quorum, 10, "quorum clamped to fleet size");
+        assert_eq!(s.fleet_kind, FleetKind::IntermittentHeterogeneous);
+        assert!(FlJobSpec::from_json(&Json::parse(r#"{"workload":"nope"}"#).unwrap()).is_none());
+    }
+}

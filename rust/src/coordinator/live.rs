@@ -1,0 +1,385 @@
+//! The live platform: wall-clock federated training with **real** local
+//! training (L2 `train_epoch` artifacts) and **real** XLA aggregation (the
+//! L1 Pallas-kernel artifacts), scheduled by the same JIT policy as the
+//! simulator. Python never runs here — only the AOT artifacts.
+//!
+//! Shape of a round (JIT mode):
+//! 1. broadcast the global model to every party thread;
+//! 2. parties run one local epoch each (`runtime::Trainer::epoch`) on
+//!    their non-IID shard and send (update, weight, measured epoch time);
+//! 3. the aggregator *sleeps* until `t_rnd − t_agg` — `t_rnd` predicted
+//!    from each party's previously-measured epoch times (periodicity,
+//!    §4.1), `t_agg` from the offline `t_pair` calibration (§5.4);
+//! 4. it then "deploys" (starts its busy clock), folds the buffered
+//!    updates with `XlaFusion::pair_merge`, waits for stragglers, fuses
+//!    them on arrival, publishes, and stops its busy clock.
+//!
+//! `EagerAlwaysOn` mode keeps the aggregator's busy clock running for the
+//! entire round — the baseline the container-second savings are measured
+//! against. The end-to-end example (`examples/federated_train.rs`) logs
+//! the loss curve this produces; EXPERIMENTS.md records it.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::estimator::PeriodicityTracker;
+use crate::fusion::Aggregator;
+use crate::party::synth_party_dataset;
+use crate::runtime::{Runtime, Trainer, XlaFusion, MLP_CLASSES, MLP_IN};
+use crate::util::rng::Rng;
+
+/// Accounting mode for the live aggregator.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LiveStrategy {
+    /// Defer deployment to `t_rnd − t_agg·(1+margin)`.
+    Jit { margin: f64 },
+    /// Busy from round start to publish (always-on baseline).
+    EagerAlwaysOn,
+}
+
+#[derive(Clone, Debug)]
+pub struct LiveConfig {
+    pub n_parties: usize,
+    pub rounds: u32,
+    /// Minibatches per local epoch — must match a `train_epoch_n{n}_b32`
+    /// artifact (2, 4, 8, 16 or 32).
+    pub minibatches: usize,
+    pub lr: f32,
+    pub strategy: LiveStrategy,
+    /// Dirichlet alpha for non-IID label skew.
+    pub alpha: f64,
+    pub seed: u64,
+    /// FedProx server pull (0 = plain FedAvg).
+    pub mu: f32,
+    /// Extra per-epoch delay (ms) — emulates heavier local datasets than
+    /// the MLP can express on this box (keeps epoch time >> t_agg so the
+    /// JIT deferral window is meaningful, as in the paper's workloads).
+    pub extra_epoch_ms: u64,
+}
+
+impl Default for LiveConfig {
+    fn default() -> Self {
+        LiveConfig {
+            n_parties: 8,
+            rounds: 30,
+            minibatches: 8,
+            lr: 0.08,
+            strategy: LiveStrategy::Jit { margin: 0.15 },
+            alpha: 0.5,
+            seed: 42,
+            mu: 0.0,
+            extra_epoch_ms: 0,
+        }
+    }
+}
+
+/// One round's log line.
+#[derive(Clone, Debug)]
+pub struct LiveRound {
+    pub round: u32,
+    /// Mean local training loss across parties.
+    pub train_loss: f32,
+    /// Global-model loss/accuracy on the held-out batch.
+    pub eval_loss: f32,
+    pub eval_acc: f32,
+    /// §6.2 latency: publish − last update arrival.
+    pub agg_latency_secs: f64,
+    /// Aggregator busy (container) seconds this round.
+    pub agg_busy_secs: f64,
+    pub round_secs: f64,
+    /// How long aggregation was deferred (JIT) this round.
+    pub defer_secs: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct LiveReport {
+    pub strategy: &'static str,
+    pub rounds: Vec<LiveRound>,
+    pub total_busy_secs: f64,
+    pub total_secs: f64,
+    pub t_pair_secs: f64,
+    pub final_acc: f32,
+}
+
+impl LiveReport {
+    pub fn mean_latency_secs(&self) -> f64 {
+        if self.rounds.is_empty() {
+            return 0.0;
+        }
+        self.rounds.iter().map(|r| r.agg_latency_secs).sum::<f64>() / self.rounds.len() as f64
+    }
+}
+
+struct PartyMsg {
+    party: usize,
+    update: Vec<f32>,
+    weight: f32,
+    epoch_secs: f64,
+    train_loss: f32,
+    sent_at: Instant,
+}
+
+/// Run a live federated training job. Blocking; spawns one thread per
+/// party (each with its own PJRT client).
+pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
+    let dir = crate::runtime::default_artifact_dir();
+    let rt = Runtime::new(&dir).context("aggregator runtime")?;
+    let fusion = XlaFusion::new(&rt);
+
+    // Offline t_pair calibration on the actual fusion path (§5.4).
+    let spec = crate::model::zoo::mlp_default();
+    let t_pair = {
+        let mut rng = Rng::new(cfg.seed ^ 0xCA11B);
+        let a = crate::model::ModelUpdate::random(&spec, &mut rng, 1.0);
+        let b = crate::model::ModelUpdate::random(&spec, &mut rng, 1.0);
+        let mut acc = a.data.clone();
+        fusion.pair_merge(&mut acc, 1.0, &b.data, 1.0)?; // warm-up/compile
+        let t0 = Instant::now();
+        for _ in 0..3 {
+            fusion.pair_merge(&mut acc, 1.0, &b.data, 1.0)?;
+        }
+        t0.elapsed().as_secs_f64() / 3.0
+    };
+
+    // Global init + held-out eval batch (near-uniform labels).
+    let init = Trainer::init(&rt, cfg.seed);
+    let global0 = init.flatten();
+    let (eval_x, eval_y) = synth_party_dataset(usize::MAX - 1, 256, MLP_IN, MLP_CLASSES, 50.0, cfg.seed);
+
+    let items = cfg.minibatches * 32;
+    let (update_tx, update_rx) = mpsc::channel::<PartyMsg>();
+    let mut model_txs = Vec::new();
+    let mut handles = Vec::new();
+    for party in 0..cfg.n_parties {
+        let (mtx, mrx) = mpsc::channel::<Option<Vec<f32>>>();
+        model_txs.push(mtx);
+        let utx = update_tx.clone();
+        let cfgc = cfg.clone();
+        let dirc = dir.clone();
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let rt = Runtime::new(&dirc).context("party runtime")?;
+            let (xs, ys) =
+                synth_party_dataset(party, items, MLP_IN, MLP_CLASSES, cfgc.alpha, cfgc.seed);
+            let mut trainer = Trainer::init(&rt, cfgc.seed);
+            while let Ok(Some(global)) = mrx.recv() {
+                trainer.unflatten(&global);
+                let t0 = Instant::now();
+                let loss = trainer.epoch(cfgc.minibatches, &xs, &ys, cfgc.lr)?;
+                if cfgc.extra_epoch_ms > 0 {
+                    std::thread::sleep(Duration::from_millis(cfgc.extra_epoch_ms));
+                }
+                let epoch_secs = t0.elapsed().as_secs_f64();
+                utx.send(PartyMsg {
+                    party,
+                    update: trainer.flatten(),
+                    weight: items as f32,
+                    epoch_secs,
+                    train_loss: loss,
+                    sent_at: Instant::now(),
+                })
+                .map_err(|_| anyhow!("aggregator hung up"))?;
+            }
+            Ok(())
+        }));
+    }
+    drop(update_tx);
+
+    let mut histories = vec![PeriodicityTracker::new(6); cfg.n_parties];
+    let mut global = global0;
+    let mut rounds = Vec::new();
+    let job_start = Instant::now();
+    let mut total_busy = 0.0;
+
+    for round in 0..cfg.rounds {
+        let round_start = Instant::now();
+        for tx in &model_txs {
+            tx.send(Some(global.clone()))
+                .map_err(|_| anyhow!("party hung up"))?;
+        }
+
+        // Fig 6: predict t_rnd from per-party histories, t_agg from t_pair.
+        let t_upd_max = histories
+            .iter()
+            .map(|h| h.predict().unwrap_or(0.0))
+            .fold(0.0f64, f64::max);
+        let t_agg = cfg.n_parties as f64 * t_pair * 1.5 + 0.002;
+        let defer = match cfg.strategy {
+            LiveStrategy::Jit { margin } => (t_upd_max - t_agg * (1.0 + margin)).max(0.0),
+            LiveStrategy::EagerAlwaysOn => 0.0,
+        };
+
+        // Collect updates; only *deploy* (busy clock) after the defer point.
+        let mut buffered: Vec<PartyMsg> = Vec::new();
+        let deadline = round_start + Duration::from_secs_f64(defer);
+        loop {
+            let now = Instant::now();
+            if now >= deadline || buffered.len() == cfg.n_parties {
+                break;
+            }
+            match update_rx.recv_timeout(deadline - now) {
+                Ok(m) => buffered.push(m),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(e) => return Err(anyhow!("update channel: {e}")),
+            }
+        }
+
+        // "Deployment": aggregation busy period starts here.
+        let busy_start = match cfg.strategy {
+            LiveStrategy::Jit { .. } => Instant::now(),
+            LiveStrategy::EagerAlwaysOn => round_start,
+        };
+        let mut agg = Aggregator::new(global.len());
+        let mut last_arrival = round_start;
+        let mut train_loss_sum = 0.0f32;
+        let mut fused = 0usize;
+        let fold = |m: PartyMsg,
+                        agg: &mut Aggregator,
+                        histories: &mut Vec<PeriodicityTracker>|
+         -> Result<()> {
+            histories[m.party].observe(m.epoch_secs);
+            if agg.n_merged == 0 {
+                agg.acc.copy_from_slice(&m.update);
+                agg.weight = m.weight;
+                agg.n_merged = 1;
+            } else {
+                let w_acc = agg.weight;
+                fusion.pair_merge(&mut agg.acc, w_acc, &m.update, m.weight)?;
+                agg.weight += m.weight;
+                agg.n_merged += 1;
+            }
+            Ok(())
+        };
+        for m in buffered {
+            last_arrival = last_arrival.max(m.sent_at);
+            train_loss_sum += m.train_loss;
+            fused += 1;
+            fold(m, &mut agg, &mut histories)?;
+        }
+        while fused < cfg.n_parties {
+            let m = update_rx
+                .recv()
+                .map_err(|e| anyhow!("update channel: {e}"))?;
+            last_arrival = last_arrival.max(m.sent_at);
+            train_loss_sum += m.train_loss;
+            fused += 1;
+            fold(m, &mut agg, &mut histories)?;
+        }
+        // FedProx-style pull toward the previous global, if configured.
+        let fused_model = if cfg.mu > 0.0 {
+            let views = [agg.acc.as_slice()];
+            fusion.fedprox(&views, &[1.0], &global, cfg.mu)?
+        } else {
+            agg.acc.clone()
+        };
+        global = fused_model;
+        let publish = Instant::now();
+        let busy = (publish - busy_start).as_secs_f64();
+        total_busy += busy;
+
+        // Evaluate the global model.
+        let mut eval_trainer = Trainer::init(&rt, cfg.seed);
+        eval_trainer.unflatten(&global);
+        let (eval_loss, eval_acc) = eval_trainer.eval(&eval_x, &eval_y)?;
+
+        rounds.push(LiveRound {
+            round,
+            train_loss: train_loss_sum / cfg.n_parties as f32,
+            eval_loss,
+            eval_acc,
+            agg_latency_secs: (publish - last_arrival).as_secs_f64().max(0.0),
+            agg_busy_secs: busy,
+            round_secs: (publish - round_start).as_secs_f64(),
+            defer_secs: defer,
+        });
+    }
+
+    for tx in &model_txs {
+        let _ = tx.send(None);
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow!("party thread panicked"))??;
+    }
+
+    let final_acc = rounds.last().map(|r| r.eval_acc).unwrap_or(0.0);
+    Ok(LiveReport {
+        strategy: match cfg.strategy {
+            LiveStrategy::Jit { .. } => "jit",
+            LiveStrategy::EagerAlwaysOn => "eager-ao",
+        },
+        rounds,
+        total_busy_secs: total_busy,
+        total_secs: job_start.elapsed().as_secs_f64(),
+        t_pair_secs: t_pair,
+        final_acc,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        crate::runtime::default_artifact_dir()
+            .join("manifest.json")
+            .exists()
+    }
+
+    #[test]
+    fn live_jit_trains_and_defers() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let cfg = LiveConfig {
+            n_parties: 3,
+            rounds: 4,
+            minibatches: 2,
+            extra_epoch_ms: 400,
+            ..Default::default()
+        };
+        let report = run_live(&cfg).expect("live run");
+        assert_eq!(report.rounds.len(), 4);
+        assert!(report.t_pair_secs > 0.0);
+        // loss decreases over rounds (real learning through all 3 layers)
+        let first = report.rounds.first().unwrap().eval_loss;
+        let last = report.rounds.last().unwrap().eval_loss;
+        assert!(
+            last < first,
+            "eval loss should drop: {first} -> {last}"
+        );
+        // rounds after the first have history -> nonzero deferral
+        assert!(
+            report.rounds[1..].iter().any(|r| r.defer_secs > 0.0),
+            "JIT should defer once epoch times are known"
+        );
+    }
+
+    #[test]
+    fn live_jit_cheaper_than_always_on() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let base = LiveConfig {
+            n_parties: 3,
+            rounds: 4,
+            minibatches: 2,
+            extra_epoch_ms: 400,
+            ..Default::default()
+        };
+        let jit = run_live(&base).unwrap();
+        let ao = run_live(&LiveConfig {
+            strategy: LiveStrategy::EagerAlwaysOn,
+            ..base
+        })
+        .unwrap();
+        assert!(
+            jit.total_busy_secs < ao.total_busy_secs,
+            "jit busy {} !< ao busy {}",
+            jit.total_busy_secs,
+            ao.total_busy_secs
+        );
+    }
+}

@@ -1,0 +1,9 @@
+//! The coordinator: FL jobs, aggregation strategies, the JIT scheduler and
+//! the platform drivers (simulated + live). This is the paper's system
+//! contribution (§3, §5) — everything else in the crate is substrate.
+
+pub mod job;
+pub mod live;
+pub mod platform;
+pub mod strategies;
+pub mod timeline;

@@ -1,0 +1,485 @@
+//! The multi-tenant simulation platform: drives FL jobs, parties, the
+//! cluster, the MQ and the strategies through the discrete-event engine.
+//!
+//! This is the "JIT scheduler" box of Fig 5 plus the experiment driver of
+//! §6: admits one or more [`FlJobSpec`]s, generates party fleets, runs
+//! every round (arrival events → strategy → cluster), feeds the estimator
+//! with observed timings (periodicity histories + the cross-party
+//! linearity regressors), and produces a [`JobReport`] per job.
+//!
+//! Identical strategy code runs here (virtual time) and in
+//! `coordinator::live` (wall time + real XLA fusion).
+
+use crate::cluster::{Cluster, ClusterConfig};
+use crate::coordinator::job::{FlJobSpec, JobParams};
+use crate::coordinator::strategies::{self, Ctx, Strategy};
+use crate::estimator::{
+    estimate_round, LinearityModel, PeriodicityTracker, RoundEstimate,
+};
+use crate::metrics::{JobReport, RoundRecord};
+use crate::mq::{self, MessageQueue, Message, Payload};
+use crate::party::Fleet;
+use crate::sim::{secs, to_secs, EventKind, EventQueue, Time};
+use crate::util::rng::Rng;
+
+/// One admitted job's runtime state.
+struct JobState {
+    spec: FlJobSpec,
+    params: JobParams,
+    fleet: Fleet,
+    strategy: Box<dyn Strategy>,
+    rng: Rng,
+    round: u32,
+    round_start: Time,
+    arrived: usize,
+    /// Periodicity histories per party (fed with observed timings).
+    histories: Vec<PeriodicityTracker>,
+    linearity: LinearityModel,
+    records: Vec<RoundRecord>,
+    done: bool,
+    finished_at: Time,
+}
+
+/// Platform configuration.
+#[derive(Clone, Debug)]
+pub struct PlatformConfig {
+    pub cluster: ClusterConfig,
+    pub seed: u64,
+    /// Disable JIT opportunism (pure deadline-timer JIT).
+    pub opportunistic: bool,
+    /// Override the JIT safety margin on t_agg (default 0.10) — ablation.
+    pub jit_margin: Option<f64>,
+    /// Override the batched-serverless trigger size — ablation.
+    pub batch_override: Option<usize>,
+}
+
+impl Default for PlatformConfig {
+    fn default() -> Self {
+        PlatformConfig {
+            cluster: ClusterConfig {
+                capacity: 4096,
+                ..Default::default()
+            },
+            seed: 0xF17A,
+            opportunistic: true,
+            jit_margin: None,
+            batch_override: None,
+        }
+    }
+}
+
+pub struct Platform {
+    cfg: PlatformConfig,
+    q: EventQueue,
+    cluster: Cluster,
+    mq: MessageQueue,
+    jobs: Vec<JobState>,
+    tick_scheduled: bool,
+}
+
+impl Platform {
+    pub fn new(cfg: PlatformConfig) -> Platform {
+        Platform {
+            cluster: Cluster::new(cfg.cluster.clone()),
+            q: EventQueue::new(),
+            mq: MessageQueue::new(),
+            jobs: Vec::new(),
+            tick_scheduled: false,
+            cfg,
+        }
+    }
+
+    /// Admit a job with the given strategy. Returns the job id.
+    pub fn admit(&mut self, spec: FlJobSpec, strategy_name: &str) -> usize {
+        let job = self.jobs.len();
+        let mut params = JobParams::derive(job, &spec);
+        params.opportunistic = self.cfg.opportunistic;
+        if let Some(m) = self.cfg.jit_margin {
+            params.jit_margin = m;
+        }
+        if let Some(b) = self.cfg.batch_override {
+            params.batch = b.max(1);
+        }
+        let mut rng = Rng::new(self.cfg.seed ^ (job as u64).wrapping_mul(0x9E3779B9));
+        let fleet = Fleet::generate(
+            spec.fleet_kind,
+            spec.n_parties,
+            spec.workload.fleet_params(),
+            &mut rng,
+        );
+        let strategy = strategies::by_name(strategy_name)
+            .unwrap_or_else(|| panic!("unknown strategy '{strategy_name}'"));
+        let histories = vec![PeriodicityTracker::new(8); spec.n_parties];
+        self.jobs.push(JobState {
+            spec,
+            params,
+            fleet,
+            strategy,
+            rng,
+            round: 0,
+            round_start: 0,
+            arrived: 0,
+            histories,
+            linearity: LinearityModel::default(),
+            records: Vec::new(),
+            done: false,
+            finished_at: 0,
+        });
+        job
+    }
+
+    fn estimate_for(&mut self, job: usize) -> RoundEstimate {
+        let j = &mut self.jobs[job];
+        let infos = j.fleet.infos(j.spec.report_prob, &mut j.rng);
+        let cost = j.spec.workload.cost_model(j.spec.n_parties);
+        estimate_round(
+            &infos,
+            j.spec.agg_frequency,
+            j.spec.t_wait_secs,
+            &cost,
+            Some(&j.histories),
+            &j.linearity,
+        )
+    }
+
+    fn start_round(&mut self, job: usize) {
+        let now = self.q.now();
+        let est = self.estimate_for(job);
+        let j = &mut self.jobs[job];
+        let round = j.round;
+        j.round_start = now;
+        j.arrived = 0;
+        // draw and schedule the actual arrivals
+        let model_bytes = j.spec.workload.model.size_bytes();
+        let offsets = j
+            .fleet
+            .arrival_offsets(model_bytes, j.spec.t_wait_secs, &mut j.rng);
+        for (party, &off) in offsets.iter().enumerate() {
+            self.q.schedule_at(
+                now + off,
+                EventKind::UpdateArrival { job, round, party },
+            );
+        }
+        let params = j.params.clone();
+        let mut ctx = Ctx {
+            q: &mut self.q,
+            cluster: &mut self.cluster,
+            mq: &self.mq,
+            params: &params,
+        };
+        if round == 0 {
+            self.jobs[job].strategy.on_job_start(&mut ctx);
+        }
+        self.jobs[job].strategy.on_round_start(&mut ctx, round, &est);
+        self.ensure_tick();
+    }
+
+    fn ensure_tick(&mut self) {
+        if !self.tick_scheduled {
+            self.tick_scheduled = true;
+            self.q
+                .schedule_in(self.cluster.cfg.delta_tick, EventKind::SchedTick);
+        }
+    }
+
+    fn handle_update(&mut self, job: usize, round: u32, party: usize) {
+        let now = self.q.now();
+        let j = &mut self.jobs[job];
+        if j.done || round != j.round {
+            return; // stale arrival from a quorum-completed round
+        }
+        j.arrived += 1;
+        let arrived = j.arrived;
+        // feed the estimator with the *observed* timing (active parties):
+        // train_time ≈ arrival_offset − estimated transfer time (§5.3)
+        let p = &j.fleet.parties[party];
+        if p.mode == crate::estimator::Mode::Active {
+            let off = to_secs(now - j.round_start);
+            let observed_train = (off - p.comm_secs(j.spec.workload.model.size_bytes())).max(0.0);
+            j.histories[party].observe(observed_train);
+            j.linearity.observe_epoch(p.dataset_items, observed_train);
+            let mb = observed_train / (p.dataset_items / 32.0).max(1.0);
+            j.linearity.observe_minibatch(p.hardware.score(), mb);
+        }
+        // buffer in the MQ (sim payload: size only)
+        self.mq.produce(
+            &mq::update_topic(job, round),
+            Message {
+                party,
+                round,
+                weight: p.dataset_items as f32,
+                enqueued_at: now,
+                payload: Payload::Sim {
+                    size_bytes: j.spec.workload.model.size_bytes(),
+                },
+            },
+        );
+        let params = j.params.clone();
+        let mut ctx = Ctx {
+            q: &mut self.q,
+            cluster: &mut self.cluster,
+            mq: &self.mq,
+            params: &params,
+        };
+        self.jobs[job].strategy.on_update(&mut ctx, round, party, arrived);
+    }
+
+    fn poll_round_completion(&mut self, job: usize) {
+        let Some(rec) = self.jobs[job].strategy.take_completed() else {
+            return;
+        };
+        let now = self.q.now();
+        let j = &mut self.jobs[job];
+        let round = rec.round;
+        j.records.push(rec);
+        // GC the round's MQ topic
+        self.mq.drop_topic(&mq::update_topic(job, round));
+        if round + 1 >= j.spec.rounds {
+            j.done = true;
+            j.finished_at = now;
+            let params = j.params.clone();
+            let mut ctx = Ctx {
+                q: &mut self.q,
+                cluster: &mut self.cluster,
+                mq: &self.mq,
+                params: &params,
+            };
+            self.jobs[job].strategy.on_job_end(&mut ctx);
+            return;
+        }
+        j.round = round + 1;
+        // pacing: active jobs start the next round as soon as the fused
+        // model is out; intermittent jobs run fixed t_wait windows (§4.3)
+        let next_at = match j.spec.fleet_kind {
+            crate::party::FleetKind::IntermittentHeterogeneous => {
+                (j.round_start + j.params.t_wait).max(now)
+            }
+            _ => now,
+        };
+        self.q
+            .schedule_at(next_at, EventKind::RoundStart { job, round: round + 1 });
+    }
+
+    fn all_done(&self) -> bool {
+        self.jobs.iter().all(|j| j.done)
+    }
+
+    /// Run every admitted job to completion; returns one report per job.
+    pub fn run(mut self) -> Vec<JobReport> {
+        // kick off round 0 of every job
+        for job in 0..self.jobs.len() {
+            self.q.schedule_at(0, EventKind::RoundStart { job, round: 0 });
+        }
+        let mut safety: u64 = 0;
+        while let Some((_, ev)) = self.q.next() {
+            safety += 1;
+            debug_assert!(safety < 500_000_000, "runaway simulation");
+            match ev {
+                EventKind::RoundStart { job, round } => {
+                    if !self.jobs[job].done && self.jobs[job].round == round {
+                        self.start_round(job);
+                    }
+                }
+                EventKind::UpdateArrival { job, round, party } => {
+                    self.handle_update(job, round, party);
+                    self.poll_round_completion(job);
+                }
+                EventKind::TimerAlert { job, round } => {
+                    if !self.jobs[job].done {
+                        let params = self.jobs[job].params.clone();
+                        let mut ctx = Ctx {
+                            q: &mut self.q,
+                            cluster: &mut self.cluster,
+                            mq: &self.mq,
+                            params: &params,
+                        };
+                        self.jobs[job].strategy.on_timer(&mut ctx, round);
+                        self.poll_round_completion(job);
+                    }
+                }
+                EventKind::ContainerDone { container } => {
+                    if let Some(note) = self.cluster.advance(&mut self.q, container) {
+                        let task = match &note {
+                            crate::cluster::Notification::Deployed { task }
+                            | crate::cluster::Notification::WorkItemDone { task }
+                            | crate::cluster::Notification::WorkDrained { task }
+                            | crate::cluster::Notification::TaskExited { task }
+                            | crate::cluster::Notification::TaskPreempted { task } => *task,
+                        };
+                        let job = self.cluster.job_of(task);
+                        let params = self.jobs[job].params.clone();
+                        let mut ctx = Ctx {
+                            q: &mut self.q,
+                            cluster: &mut self.cluster,
+                            mq: &self.mq,
+                            params: &params,
+                        };
+                        self.jobs[job].strategy.on_note(&mut ctx, &note);
+                        self.poll_round_completion(job);
+                    }
+                }
+                EventKind::Custom { tag } => {
+                    // linger timer: tag = task id
+                    let task = tag as usize;
+                    let job = self.cluster.job_of(task);
+                    if !self.jobs[job].done {
+                        let params = self.jobs[job].params.clone();
+                        let mut ctx = Ctx {
+                            q: &mut self.q,
+                            cluster: &mut self.cluster,
+                            mq: &self.mq,
+                            params: &params,
+                        };
+                        self.jobs[job].strategy.on_linger(&mut ctx, task);
+                        self.poll_round_completion(job);
+                    }
+                }
+                EventKind::SchedTick => {
+                    self.cluster.on_tick(&mut self.q);
+                    self.tick_scheduled = false;
+                    if !self.all_done() {
+                        self.ensure_tick();
+                    }
+                }
+                EventKind::RoundTimeout { .. } => {}
+            }
+        }
+        let now = self.q.now();
+        self.jobs
+            .iter()
+            .enumerate()
+            .map(|(job, j)| JobReport {
+                strategy: j.strategy.name().to_string(),
+                workload: j.spec.workload.name.to_string(),
+                fleet: j.spec.fleet_kind.name().to_string(),
+                parties: j.spec.n_parties,
+                rounds: j.records.clone(),
+                container_seconds: self.cluster.container_seconds(job, now),
+                ancillary_seconds: j.spec.workload.ancillary_cs_per_round
+                    * j.records.len() as f64,
+                deployments: self.cluster.job_deployments(job),
+                updates_fused: self.cluster.job_work_done(job),
+                makespan_secs: to_secs(j.finished_at),
+            })
+            .collect()
+    }
+}
+
+/// One-call scenario runner used by benches, examples and the CLI: one job,
+/// one strategy, simulated fleet.
+pub fn run_scenario(
+    spec: &FlJobSpec,
+    strategy: &str,
+    seed: u64,
+) -> JobReport {
+    let mut cfg = PlatformConfig {
+        seed,
+        ..Default::default()
+    };
+    // capacity: always-on fleets + serverless shards for this job, plus slack
+    cfg.cluster.capacity = (spec.workload.n_agg(spec.n_parties) as usize * 4).max(64);
+    let mut p = Platform::new(cfg);
+    p.admit(spec.clone(), strategy);
+    p.run().remove(0)
+}
+
+/// δ for scheduling decisions (§5.5) — re-exported for tests.
+pub fn default_delta() -> Time {
+    secs(0.5)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::party::FleetKind;
+    use crate::workloads::Workload;
+
+    fn spec(kind: FleetKind, n: usize, rounds: u32) -> FlJobSpec {
+        FlJobSpec::new(Workload::cifar100_effnet(), kind, n, rounds)
+    }
+
+    #[test]
+    fn jit_runs_all_rounds_with_low_latency() {
+        let r = run_scenario(&spec(FleetKind::ActiveHomogeneous, 10, 5), "jit", 1);
+        assert_eq!(r.rounds.len(), 5);
+        assert!(r.mean_latency_secs() < 3.0, "latency {}", r.mean_latency_secs());
+        assert_eq!(r.updates_fused, 50);
+        assert!(r.container_seconds > 0.0);
+    }
+
+    #[test]
+    fn strategies_complete_and_rank_by_cost() {
+        let s = spec(FleetKind::ActiveHomogeneous, 10, 5);
+        let jit = run_scenario(&s, "jit", 1);
+        let batch = run_scenario(&s, "batched", 1);
+        let eager = run_scenario(&s, "eager-serverless", 1);
+        let ao = run_scenario(&s, "eager-ao", 1);
+        for r in [&jit, &batch, &eager, &ao] {
+            assert_eq!(r.rounds.len(), 5, "{} rounds", r.strategy);
+            assert_eq!(r.updates_fused, 50, "{} fused", r.strategy);
+        }
+        // Fig 9 ordering
+        assert!(
+            jit.total_container_seconds() < eager.total_container_seconds(),
+            "jit {} !< eager {}",
+            jit.total_container_seconds(),
+            eager.total_container_seconds()
+        );
+        assert!(
+            eager.total_container_seconds() < ao.total_container_seconds(),
+            "eager {} !< ao {}",
+            eager.total_container_seconds(),
+            ao.total_container_seconds()
+        );
+        assert!(
+            jit.total_container_seconds() <= batch.total_container_seconds() * 1.05,
+            "jit {} !<= batch {}",
+            jit.total_container_seconds(),
+            batch.total_container_seconds()
+        );
+    }
+
+    #[test]
+    fn intermittent_ao_pays_the_window() {
+        let s = {
+            let mut s = spec(FleetKind::IntermittentHeterogeneous, 10, 3);
+            s.t_wait_secs = 120.0;
+            s
+        };
+        let ao = run_scenario(&s, "eager-ao", 2);
+        let jit = run_scenario(&s, "jit", 2);
+        assert_eq!(ao.rounds.len(), 3);
+        assert_eq!(jit.rounds.len(), 3);
+        // AO holds containers through each 120s window
+        assert!(
+            ao.container_seconds > 3.0 * 100.0,
+            "ao cs {}",
+            ao.container_seconds
+        );
+        let sav = crate::metrics::savings_pct(&jit, &ao);
+        assert!(sav > 90.0, "JIT vs AO savings {sav}%");
+        assert!(jit.mean_latency_secs() < 5.0, "{}", jit.mean_latency_secs());
+    }
+
+    #[test]
+    fn multi_job_sharing_one_cluster() {
+        let mut p = Platform::new(PlatformConfig::default());
+        p.admit(spec(FleetKind::ActiveHomogeneous, 8, 3), "jit");
+        p.admit(spec(FleetKind::ActiveHomogeneous, 8, 3), "jit");
+        let reports = p.run();
+        assert_eq!(reports.len(), 2);
+        for r in reports {
+            assert_eq!(r.rounds.len(), 3);
+            assert_eq!(r.updates_fused, 24);
+        }
+    }
+
+    #[test]
+    fn heterogeneous_estimates_still_accurate() {
+        let r = run_scenario(&spec(FleetKind::ActiveHeterogeneous, 20, 5), "jit", 3);
+        assert_eq!(r.rounds.len(), 5);
+        // the paper's thesis: JIT latency stays eager-like even under
+        // heterogeneity because training time is predictable
+        assert!(r.mean_latency_secs() < 5.0, "latency {}", r.mean_latency_secs());
+    }
+}

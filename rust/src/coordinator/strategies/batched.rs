@@ -1,0 +1,188 @@
+//! Batched Serverless (§3, "Batch λ"): trigger a deployment only when a
+//! batch of updates is waiting in the MQ (batch sizes per §6.3:
+//! 2/10/100/100 for 10/100/1000/10000 parties), plus a flush once the
+//! round's final update arrives.
+//!
+//! Batching amortizes deployment overheads ("ensures at least a batch of
+//! updates to process") at the cost of latency: the paper observes Batch λ
+//! latency is generally the worst of the dynamic strategies because the
+//! tail updates wait for a batch to fill or for the end-of-round flush.
+//!
+//! Each trigger is its own serverless invocation (no warm reuse): the
+//! deployment loads the current partial aggregate, folds its batch, and
+//! checkpoints the partial back — so every batch pays cold start + state
+//! in/out, which is exactly the amortization-vs-cost trade the paper
+//! describes.
+
+use super::{Ctx, RoundTracker, Strategy};
+use crate::cluster::{Notification, TaskId, TaskSpec};
+use crate::metrics::RoundRecord;
+
+#[derive(Default)]
+pub struct BatchedServerless {
+    tracker: RoundTracker,
+    /// Updates waiting for a batch trigger.
+    buffered: usize,
+    pool: Vec<TaskId>,
+}
+
+impl BatchedServerless {
+    fn dispatch(&mut self, ctx: &mut Ctx, n_items: usize) {
+        if n_items == 0 {
+            return;
+        }
+        let items = vec![ctx.params.item; n_items];
+        // One fresh serverless invocation per batch trigger: load the
+        // partial aggregate, fold the batch, checkpoint the partial back.
+        let task = ctx.cluster.submit(TaskSpec {
+            job: ctx.params.job,
+            round: self.tracker.round,
+            priority: 0,
+            cold_start: ctx.params.cold_start,
+            state_load: ctx.params.state_load,
+            checkpoint: ctx.params.checkpoint,
+            keep_alive: false,
+        });
+        ctx.cluster.push_work(ctx.q, task, &items);
+        ctx.cluster.request_finish(ctx.q, task);
+        ctx.cluster.force_start(ctx.q, task);
+        self.pool.push(task);
+        self.tracker.open_tasks.push(task);
+    }
+}
+
+impl Strategy for BatchedServerless {
+    fn name(&self) -> &'static str {
+        "batched"
+    }
+
+    fn on_round_start(&mut self, ctx: &mut Ctx, round: u32, _est: &crate::estimator::RoundEstimate) {
+        self.tracker.begin(round, ctx.q.now());
+        self.buffered = 0;
+        self.pool.clear();
+    }
+
+    fn on_update(&mut self, ctx: &mut Ctx, _round: u32, _party: usize, arrived: usize) {
+        self.tracker.note_arrival(ctx.q.now());
+        self.buffered += 1;
+        let flush = arrived >= ctx.params.quorum; // end-of-round flush
+        if self.buffered >= ctx.params.batch || flush {
+            let n = self.buffered;
+            self.buffered = 0;
+            self.dispatch(ctx, n);
+        }
+    }
+
+    fn on_note(&mut self, ctx: &mut Ctx, note: &Notification) {
+        match note {
+            Notification::WorkItemDone { .. } => self.tracker.note_fused(),
+            Notification::TaskExited { task } => {
+                self.tracker.close_task(*task);
+                self.tracker.maybe_complete(ctx.params.quorum, ctx.q.now());
+            }
+            _ => {}
+        }
+    }
+
+    fn take_completed(&mut self) -> Option<RoundRecord> {
+        self.tracker.completed.take()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, ClusterConfig};
+    use crate::coordinator::job::{FlJobSpec, JobParams};
+    use crate::coordinator::strategies::testutil::pump;
+    use crate::mq::MessageQueue;
+    use crate::party::FleetKind;
+    use crate::sim::EventQueue;
+    use crate::workloads::Workload;
+
+    #[test]
+    fn batches_amortize_deployments() {
+        let spec = FlJobSpec::new(
+            Workload::cifar100_effnet(),
+            FleetKind::ActiveHomogeneous,
+            10,
+            1,
+        );
+        let params = JobParams::derive(0, &spec); // batch trigger = 2
+        assert_eq!(params.batch, 2);
+        let mut q = EventQueue::new();
+        let mut cluster = Cluster::new(ClusterConfig::default());
+        let mq = MessageQueue::new();
+        let mut s = BatchedServerless::default();
+        let est = crate::estimator::RoundEstimate {
+            t_upd: vec![],
+            t_rnd: 0.0,
+            t_agg: 0.0,
+        };
+        {
+            let mut ctx = Ctx {
+                q: &mut q,
+                cluster: &mut cluster,
+                mq: &mq,
+                params: &params,
+            };
+            s.on_round_start(&mut ctx, 0, &est);
+            for i in 0..10 {
+                s.on_update(&mut ctx, 0, i, i + 1);
+            }
+        }
+        let mut records = Vec::new();
+        pump(&mut q, &mut cluster, &mq, &params, &mut s, &mut records);
+        assert_eq!(records.len(), 1);
+        assert_eq!(cluster.job_work_done(0), 10, "all updates fused");
+        assert_eq!(
+            cluster.job_deployments(0),
+            5,
+            "one invocation per batch of 2"
+        );
+    }
+
+    #[test]
+    fn incomplete_batch_waits_until_flush() {
+        let spec = FlJobSpec::new(
+            Workload::cifar100_effnet(),
+            FleetKind::ActiveHomogeneous,
+            10,
+            1,
+        );
+        let mut params = JobParams::derive(0, &spec);
+        params.batch = 4;
+        let mut q = EventQueue::new();
+        let mut cluster = Cluster::new(ClusterConfig::default());
+        let mq = MessageQueue::new();
+        let mut s = BatchedServerless::default();
+        let est = crate::estimator::RoundEstimate {
+            t_upd: vec![],
+            t_rnd: 0.0,
+            t_agg: 0.0,
+        };
+        let mut ctx = Ctx {
+            q: &mut q,
+            cluster: &mut cluster,
+            mq: &mq,
+            params: &params,
+        };
+        s.on_round_start(&mut ctx, 0, &est);
+        // 3 updates < batch of 4: nothing deploys
+        for i in 0..3 {
+            s.on_update(&mut ctx, 0, i, i + 1);
+        }
+        assert_eq!(s.buffered, 3);
+        assert_eq!(ctx.cluster.job_deployments(0), 0);
+        // updates 4..10 trigger batches; the 10th (quorum) flushes the rest
+        for i in 3..10 {
+            s.on_update(&mut ctx, 0, i, i + 1);
+        }
+        assert_eq!(s.buffered, 0, "flush drains the buffer");
+        drop(ctx);
+        let mut records = Vec::new();
+        pump(&mut q, &mut cluster, &mq, &params, &mut s, &mut records);
+        assert_eq!(records.len(), 1);
+        assert_eq!(cluster.job_work_done(0), 10);
+    }
+}

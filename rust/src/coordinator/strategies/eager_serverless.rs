@@ -1,0 +1,260 @@
+//! Eager Serverless (§3, "Eager λ"): deploy an aggregator dynamically for
+//! every update (or contiguous backlog of updates).
+//!
+//! Updates buffer in the MQ; each arrival either joins a live container's
+//! queue or triggers a fresh deployment (cold start + state load). Drained
+//! containers keep warm for a short linger, then checkpoint and exit —
+//! at high arrival rates updates bunch onto live containers, which is how
+//! the real Ray-based implementation amortizes deployments too. Up to
+//! `n_agg` containers run concurrently.
+
+use super::{Ctx, RoundTracker, Strategy};
+use crate::cluster::{Notification, Phase, TaskId, TaskSpec};
+use crate::metrics::RoundRecord;
+use crate::sim::EventKind;
+
+#[derive(Default)]
+pub struct EagerServerless {
+    tracker: RoundTracker,
+    /// Live (or starting) containers, newest last.
+    pool: Vec<TaskId>,
+    rr: usize,
+}
+
+impl EagerServerless {
+    fn live_target(&mut self, ctx: &mut Ctx) -> TaskId {
+        // Prune exited containers so the pool stays O(n_agg) even when a
+        // round sees thousands of deployments (10k-party grids).
+        {
+            let cluster = &*ctx.cluster;
+            self.pool.retain(|&t| {
+                !matches!(cluster.phase(t), Phase::Done | Phase::Checkpointing)
+            });
+        }
+        // Prefer a container that is already up; round-robin for balance.
+        let live: Vec<TaskId> = self
+            .pool
+            .iter()
+            .copied()
+            .filter(|&t| {
+                matches!(
+                    ctx.cluster.phase(t),
+                    Phase::Pending | Phase::Starting | Phase::Running | Phase::Idle
+                )
+            })
+            .collect();
+        if !live.is_empty() && (live.len() >= ctx.params.n_agg || !ctx.cluster.has_capacity()) {
+            self.rr = (self.rr + 1) % live.len();
+            return live[self.rr];
+        }
+        if let Some(&t) = live.iter().find(|&&t| ctx.cluster.pending_work(t) == 0) {
+            // an idle container takes the update without a new deployment
+            return t;
+        }
+        if live.len() >= ctx.params.n_agg {
+            self.rr = (self.rr + 1) % live.len();
+            return live[self.rr];
+        }
+        // fresh deployment
+        let task = ctx.cluster.submit(TaskSpec {
+            job: ctx.params.job,
+            round: self.tracker.round,
+            priority: 0,
+            cold_start: ctx.params.cold_start,
+            state_load: ctx.params.state_load,
+            checkpoint: ctx.params.checkpoint,
+            keep_alive: false,
+        });
+        ctx.cluster.force_start(ctx.q, task);
+        self.pool.push(task);
+        self.tracker.open_tasks.push(task);
+        task
+    }
+}
+
+impl Strategy for EagerServerless {
+    fn name(&self) -> &'static str {
+        "eager-serverless"
+    }
+
+    fn on_round_start(&mut self, ctx: &mut Ctx, round: u32, _est: &crate::estimator::RoundEstimate) {
+        self.tracker.begin(round, ctx.q.now());
+        self.pool.clear();
+    }
+
+    fn on_update(&mut self, ctx: &mut Ctx, _round: u32, _party: usize, _arrived: usize) {
+        self.tracker.note_arrival(ctx.q.now());
+        let task = self.live_target(ctx);
+        ctx.cluster.push_work(ctx.q, task, &[ctx.params.item]);
+    }
+
+    fn on_note(&mut self, ctx: &mut Ctx, note: &Notification) {
+        match note {
+            Notification::WorkItemDone { .. } => {
+                self.tracker.note_fused();
+            }
+            Notification::WorkDrained { task } => {
+                self.tracker.note_fused();
+                // keep warm for `linger`, then exit if still idle
+                ctx.q.schedule_in(
+                    ctx.params.linger,
+                    EventKind::Custom { tag: *task as u64 },
+                );
+            }
+            Notification::TaskExited { task } => {
+                self.tracker.close_task(*task);
+                self.tracker.maybe_complete(ctx.params.quorum, ctx.q.now());
+            }
+            _ => {}
+        }
+    }
+
+    fn on_linger(&mut self, ctx: &mut Ctx, task: TaskId) {
+        if ctx.cluster.phase(task) == Phase::Idle && ctx.cluster.pending_work(task) == 0 {
+            ctx.cluster.request_finish(ctx.q, task);
+        }
+    }
+
+    fn take_completed(&mut self) -> Option<RoundRecord> {
+        self.tracker.completed.take()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, ClusterConfig};
+    use crate::coordinator::job::{FlJobSpec, JobParams};
+    use crate::mq::MessageQueue;
+    use crate::party::FleetKind;
+    use crate::sim::{secs, EventQueue};
+    use crate::workloads::Workload;
+    use crate::coordinator::strategies::testutil::pump;
+
+    #[test]
+    fn bunched_updates_share_deployments() {
+        let spec = FlJobSpec::new(
+            Workload::cifar100_effnet(),
+            FleetKind::ActiveHomogeneous,
+            8,
+            1,
+        );
+        let params = JobParams::derive(0, &spec);
+        let mut q = EventQueue::new();
+        let mut cluster = Cluster::new(ClusterConfig::default());
+        let mq = MessageQueue::new();
+        let mut s = EagerServerless::default();
+        {
+            let mut ctx = Ctx {
+                q: &mut q,
+                cluster: &mut cluster,
+                mq: &mq,
+                params: &params,
+            };
+            let est = crate::estimator::RoundEstimate {
+                t_upd: vec![],
+                t_rnd: 0.0,
+                t_agg: 0.0,
+            };
+            s.on_round_start(&mut ctx, 0, &est);
+            // all 8 updates arrive at once: they should share far fewer
+            // than 8 deployments (n_agg=1 here)
+            for i in 0..8 {
+                s.on_update(&mut ctx, 0, i, i + 1);
+            }
+        }
+        let mut records = Vec::new();
+        pump(&mut q, &mut cluster, &mq, &params, &mut s, &mut records);
+        assert_eq!(records.len(), 1, "round completes");
+        assert!(
+            cluster.job_deployments(0) <= 2,
+            "bunched arrivals reuse containers: {} deployments",
+            cluster.job_deployments(0)
+        );
+        // all 8 fused
+        assert_eq!(cluster.job_work_done(0), 8);
+        // latency small: last update merges soon after arrival
+        assert!(records[0].latency_secs < 3.0, "{}", records[0].latency_secs);
+    }
+
+    #[test]
+    fn spread_updates_cause_multiple_deployments() {
+        let spec = FlJobSpec::new(
+            Workload::cifar100_effnet(),
+            FleetKind::ActiveHomogeneous,
+            6,
+            1,
+        );
+        let params = JobParams::derive(0, &spec);
+        let mut q = EventQueue::new();
+        let mut cluster = Cluster::new(ClusterConfig::default());
+        let mq = MessageQueue::new();
+        let mut s = EagerServerless::default();
+        let est = crate::estimator::RoundEstimate {
+            t_upd: vec![],
+            t_rnd: 0.0,
+            t_agg: 0.0,
+        };
+        {
+            let mut ctx = Ctx {
+                q: &mut q,
+                cluster: &mut cluster,
+                mq: &mq,
+                params: &params,
+            };
+            s.on_round_start(&mut ctx, 0, &est);
+        }
+        let mut records = Vec::new();
+        // arrivals 10s apart — far beyond the linger window
+        for i in 0..6 {
+            q.schedule_at(secs(10.0 * (i + 1) as f64), crate::sim::EventKind::UpdateArrival {
+                job: 0,
+                round: 0,
+                party: i,
+            });
+        }
+        while let Some((_, ev)) = q.next() {
+            match ev {
+                crate::sim::EventKind::UpdateArrival { party, .. } => {
+                    let mut ctx = Ctx {
+                        q: &mut q,
+                        cluster: &mut cluster,
+                        mq: &mq,
+                        params: &params,
+                    };
+                    s.on_update(&mut ctx, 0, party, party + 1);
+                }
+                crate::sim::EventKind::ContainerDone { container } => {
+                    if let Some(n) = cluster.advance(&mut q, container) {
+                        let mut ctx = Ctx {
+                            q: &mut q,
+                            cluster: &mut cluster,
+                            mq: &mq,
+                            params: &params,
+                        };
+                        s.on_note(&mut ctx, &n);
+                    }
+                }
+                crate::sim::EventKind::Custom { tag } => {
+                    let mut ctx = Ctx {
+                        q: &mut q,
+                        cluster: &mut cluster,
+                        mq: &mq,
+                        params: &params,
+                    };
+                    s.on_linger(&mut ctx, tag as usize);
+                }
+                _ => {}
+            }
+            if let Some(r) = s.take_completed() {
+                records.push(r);
+            }
+        }
+        assert_eq!(records.len(), 1);
+        assert_eq!(
+            cluster.job_deployments(0),
+            6,
+            "spread arrivals each need a deployment"
+        );
+    }
+}

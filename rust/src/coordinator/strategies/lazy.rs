@@ -1,0 +1,202 @@
+//! Lazy Dynamic/Serverless (§3): schedule the aggregator for *all* updates
+//! only after the last one arrives.
+//!
+//! Optimal cluster utilization, worst aggregation latency — the whole
+//! N-update fusion (plus deployment overhead) happens after `t_rnd`, so
+//! latency grows linearly with the fleet ("aggregation latency grows
+//! quickly as the number of parties increases"; for some jobs aggregation
+//! can dominate training). Included for the Fig 2 timeline and the
+//! ablation bench; the paper's Fig 7-9 grids compare the other four.
+
+use super::{Ctx, RoundTracker, Strategy};
+use crate::cluster::{Notification, TaskSpec};
+use crate::metrics::RoundRecord;
+
+#[derive(Default)]
+pub struct Lazy {
+    tracker: RoundTracker,
+}
+
+impl Strategy for Lazy {
+    fn name(&self) -> &'static str {
+        "lazy"
+    }
+
+    fn on_round_start(&mut self, ctx: &mut Ctx, round: u32, _est: &crate::estimator::RoundEstimate) {
+        self.tracker.begin(round, ctx.q.now());
+    }
+
+    fn on_update(&mut self, ctx: &mut Ctx, _round: u32, _party: usize, arrived: usize) {
+        self.tracker.note_arrival(ctx.q.now());
+        if arrived < ctx.params.quorum {
+            return;
+        }
+        // Last update in: deploy n_agg containers over sharded work.
+        for shard in ctx.params.shard_sizes() {
+            if shard == 0 {
+                continue;
+            }
+            let task = ctx.cluster.submit(TaskSpec {
+                job: ctx.params.job,
+                round: self.tracker.round,
+                priority: 0,
+                cold_start: ctx.params.cold_start,
+                state_load: ctx.params.state_load,
+                checkpoint: ctx.params.checkpoint,
+                keep_alive: false,
+            });
+            ctx.cluster.push_work(ctx.q, task, &vec![ctx.params.item; shard]);
+            ctx.cluster.request_finish(ctx.q, task);
+            ctx.cluster.force_start(ctx.q, task);
+            self.tracker.open_tasks.push(task);
+        }
+    }
+
+    fn on_note(&mut self, ctx: &mut Ctx, note: &Notification) {
+        match note {
+            Notification::WorkItemDone { .. } => self.tracker.note_fused(),
+            Notification::TaskExited { task } => {
+                self.tracker.close_task(*task);
+                self.tracker.maybe_complete(ctx.params.quorum, ctx.q.now());
+            }
+            _ => {}
+        }
+    }
+
+    fn take_completed(&mut self) -> Option<RoundRecord> {
+        self.tracker.completed.take()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, ClusterConfig};
+    use crate::coordinator::job::{FlJobSpec, JobParams};
+    use crate::coordinator::strategies::testutil::pump;
+    use crate::mq::MessageQueue;
+    use crate::party::FleetKind;
+    use crate::sim::{secs, to_secs, EventQueue};
+    use crate::workloads::Workload;
+
+    #[test]
+    fn deploys_only_after_last_update_and_latency_scales() {
+        let spec = FlJobSpec::new(
+            Workload::cifar100_effnet(),
+            FleetKind::ActiveHomogeneous,
+            20,
+            1,
+        );
+        let mut params = JobParams::derive(0, &spec);
+        params.n_agg = 1;
+        let mut q = EventQueue::new();
+        let mut cluster = Cluster::new(ClusterConfig::default());
+        let mq = MessageQueue::new();
+        let mut s = Lazy::default();
+        let est = crate::estimator::RoundEstimate {
+            t_upd: vec![],
+            t_rnd: 0.0,
+            t_agg: 0.0,
+        };
+        {
+            let mut ctx = Ctx {
+                q: &mut q,
+                cluster: &mut cluster,
+                mq: &mq,
+                params: &params,
+            };
+            s.on_round_start(&mut ctx, 0, &est);
+        }
+        for i in 0..20 {
+            q.schedule_at(
+                secs(i as f64),
+                crate::sim::EventKind::UpdateArrival {
+                    job: 0,
+                    round: 0,
+                    party: i,
+                },
+            );
+        }
+        let mut arrived = 0;
+        let mut records = Vec::new();
+        while let Some((_, ev)) = q.next() {
+            match ev {
+                crate::sim::EventKind::UpdateArrival { party, .. } => {
+                    arrived += 1;
+                    assert_eq!(cluster.job_deployments(0), 0, "nothing before last update");
+                    let mut ctx = Ctx {
+                        q: &mut q,
+                        cluster: &mut cluster,
+                        mq: &mq,
+                        params: &params,
+                    };
+                    s.on_update(&mut ctx, 0, party, arrived);
+                }
+                crate::sim::EventKind::ContainerDone { container } => {
+                    if let Some(n) = cluster.advance(&mut q, container) {
+                        let mut ctx = Ctx {
+                            q: &mut q,
+                            cluster: &mut cluster,
+                            mq: &mq,
+                            params: &params,
+                        };
+                        s.on_note(&mut ctx, &n);
+                    }
+                }
+                _ => {}
+            }
+            if let Some(r) = s.take_completed() {
+                records.push(r);
+            }
+        }
+        assert_eq!(records.len(), 1);
+        assert_eq!(cluster.job_deployments(0), 1);
+        // latency = overheads + 20 merges + checkpoint, all after t_rnd
+        let expect = to_secs(params.cold_start + params.state_load + params.checkpoint)
+            + 20.0 * to_secs(params.item);
+        assert!(
+            (records[0].latency_secs - expect).abs() < 0.01,
+            "latency {} vs expected {}",
+            records[0].latency_secs,
+            expect
+        );
+    }
+
+    #[test]
+    fn shards_across_n_agg() {
+        let spec = FlJobSpec::new(
+            Workload::cifar100_effnet(),
+            FleetKind::ActiveHomogeneous,
+            12,
+            1,
+        );
+        let mut params = JobParams::derive(0, &spec);
+        params.n_agg = 4;
+        let mut q = EventQueue::new();
+        let mut cluster = Cluster::new(ClusterConfig::default());
+        let mq = MessageQueue::new();
+        let mut s = Lazy::default();
+        let est = crate::estimator::RoundEstimate {
+            t_upd: vec![],
+            t_rnd: 0.0,
+            t_agg: 0.0,
+        };
+        {
+            let mut ctx = Ctx {
+                q: &mut q,
+                cluster: &mut cluster,
+                mq: &mq,
+                params: &params,
+            };
+            s.on_round_start(&mut ctx, 0, &est);
+            for i in 0..12 {
+                s.on_update(&mut ctx, 0, i, i + 1);
+            }
+        }
+        let mut records = Vec::new();
+        pump(&mut q, &mut cluster, &mq, &params, &mut s, &mut records);
+        assert_eq!(records.len(), 1);
+        assert_eq!(cluster.job_deployments(0), 4, "one per shard");
+        assert_eq!(cluster.job_work_done(0), 12);
+    }
+}

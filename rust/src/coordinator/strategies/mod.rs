@@ -1,0 +1,229 @@
+//! The aggregation design options of §3, all implemented against the same
+//! cluster/MQ substrates so their measured differences are *strategy*
+//! differences, not implementation artifacts:
+//!
+//! * [`eager_ao::EagerAlwaysOn`] — IBM-FL-style long-lived aggregator.
+//! * [`eager_serverless::EagerServerless`] — deploy per update/backlog.
+//! * [`batched::BatchedServerless`] — deploy per batch of updates.
+//! * [`lazy::Lazy`] — deploy once, after the last update.
+//! * [`jit::Jit`] — the paper's contribution: deadline timer at
+//!   `t_rnd − t_agg` + opportunistic priorities (§5.5, Fig 6).
+
+pub mod batched;
+pub mod eager_ao;
+pub mod eager_serverless;
+pub mod jit;
+pub mod lazy;
+
+use crate::cluster::{Cluster, Notification, TaskId};
+use crate::coordinator::job::JobParams;
+use crate::estimator::RoundEstimate;
+use crate::metrics::RoundRecord;
+use crate::mq::MessageQueue;
+use crate::sim::{to_secs, EventQueue, Time};
+
+/// Everything a strategy may touch while handling an event.
+pub struct Ctx<'a> {
+    pub q: &'a mut EventQueue,
+    pub cluster: &'a mut Cluster,
+    pub mq: &'a MessageQueue,
+    pub params: &'a JobParams,
+}
+
+/// The strategy interface — the platform routes events here.
+pub trait Strategy {
+    fn name(&self) -> &'static str;
+
+    /// Job admitted (before round 0). AO deploys its long-lived container.
+    fn on_job_start(&mut self, _ctx: &mut Ctx) {}
+
+    /// A round began; `est` is the Fig 6 prediction for it.
+    fn on_round_start(&mut self, ctx: &mut Ctx, round: u32, est: &RoundEstimate);
+
+    /// A model update reached the MQ. `arrived` counts this round so far.
+    fn on_update(&mut self, ctx: &mut Ctx, round: u32, party: usize, arrived: usize);
+
+    /// JIT deadline timer (Fig 6 TIMER_ALERT). Others ignore it.
+    fn on_timer(&mut self, _ctx: &mut Ctx, _round: u32) {}
+
+    /// Keep-warm linger expired for `task`.
+    fn on_linger(&mut self, _ctx: &mut Ctx, _task: TaskId) {}
+
+    /// Cluster notification for one of this job's tasks.
+    fn on_note(&mut self, ctx: &mut Ctx, note: &Notification);
+
+    /// All rounds done — release long-lived resources.
+    fn on_job_end(&mut self, _ctx: &mut Ctx) {}
+
+    /// Completed-round record, if one finished since the last poll.
+    fn take_completed(&mut self) -> Option<RoundRecord>;
+}
+
+/// Construct a strategy by name.
+pub fn by_name(name: &str) -> Option<Box<dyn Strategy>> {
+    match name {
+        "jit" => Some(Box::new(jit::Jit::default())),
+        "batched" | "batch" => Some(Box::new(batched::BatchedServerless::default())),
+        "eager-serverless" | "eager" => {
+            Some(Box::new(eager_serverless::EagerServerless::default()))
+        }
+        "eager-ao" | "ao" => Some(Box::new(eager_ao::EagerAlwaysOn::default())),
+        "lazy" => Some(Box::new(lazy::Lazy::default())),
+        _ => None,
+    }
+}
+
+/// The strategy names of the Fig 7/8/9 comparison, paper order.
+pub fn paper_strategies() -> &'static [&'static str] {
+    &["jit", "batched", "eager-serverless", "eager-ao"]
+}
+
+/// Shared per-round bookkeeping for the serverless strategies.
+#[derive(Clone, Debug, Default)]
+pub struct RoundTracker {
+    pub round: u32,
+    pub round_start: Time,
+    pub arrived: usize,
+    pub last_arrival: Time,
+    pub fused: usize,
+    /// Tasks opened for this round that have not exited yet.
+    pub open_tasks: Vec<TaskId>,
+    pub completed: Option<RoundRecord>,
+    /// Set once the round has produced its record (guards duplicates from
+    /// late notifications after `take_completed`).
+    pub done: bool,
+}
+
+impl RoundTracker {
+    pub fn begin(&mut self, round: u32, now: Time) {
+        *self = RoundTracker {
+            round,
+            round_start: now,
+            ..Default::default()
+        };
+    }
+
+    pub fn note_arrival(&mut self, now: Time) {
+        self.arrived += 1;
+        self.last_arrival = now;
+    }
+
+    pub fn all_arrived(&mut self, quorum: usize) -> bool {
+        self.arrived >= quorum
+    }
+
+    pub fn note_fused(&mut self) {
+        self.fused += 1;
+    }
+
+    pub fn close_task(&mut self, task: TaskId) {
+        self.open_tasks.retain(|&t| t != task);
+    }
+
+    /// Serverless completion: every expected update fused and every task
+    /// exited (the final checkpoint published the fused model).
+    pub fn maybe_complete(&mut self, quorum: usize, now: Time) {
+        if !self.done && self.fused >= quorum && self.open_tasks.is_empty() {
+            self.done = true;
+            self.completed = Some(RoundRecord {
+                round: self.round,
+                latency_secs: to_secs(now.saturating_sub(self.last_arrival)),
+                last_arrival_secs: to_secs(self.last_arrival),
+                complete_secs: to_secs(now),
+            });
+        }
+    }
+}
+
+/// Shared event pump for strategy unit tests.
+#[cfg(test)]
+pub mod testutil {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::metrics::RoundRecord;
+
+    pub fn pump(
+        q: &mut EventQueue,
+        cluster: &mut Cluster,
+        mq: &MessageQueue,
+        params: &JobParams,
+        s: &mut dyn Strategy,
+        records: &mut Vec<RoundRecord>,
+    ) {
+        while let Some((_, ev)) = q.next() {
+            match ev {
+                crate::sim::EventKind::ContainerDone { container } => {
+                    if let Some(n) = cluster.advance(q, container) {
+                        let mut ctx = Ctx {
+                            q,
+                            cluster,
+                            mq,
+                            params,
+                        };
+                        s.on_note(&mut ctx, &n);
+                    }
+                }
+                crate::sim::EventKind::Custom { tag } => {
+                    let mut ctx = Ctx {
+                        q,
+                        cluster,
+                        mq,
+                        params,
+                    };
+                    s.on_linger(&mut ctx, tag as usize);
+                }
+                crate::sim::EventKind::SchedTick => {
+                    cluster.on_tick(q);
+                }
+                crate::sim::EventKind::TimerAlert { round, .. } => {
+                    let mut ctx = Ctx {
+                        q,
+                        cluster,
+                        mq,
+                        params,
+                    };
+                    s.on_timer(&mut ctx, round);
+                }
+                _ => {}
+            }
+            if let Some(r) = s.take_completed() {
+                records.push(r);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_covers_paper_strategies() {
+        for n in paper_strategies() {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+        assert!(by_name("lazy").is_some());
+        assert!(by_name("nope").is_none());
+        assert_eq!(by_name("jit").unwrap().name(), "jit");
+    }
+
+    #[test]
+    fn tracker_lifecycle() {
+        let mut t = RoundTracker::default();
+        t.begin(3, 100);
+        t.note_arrival(200);
+        t.note_arrival(500);
+        assert!(t.all_arrived(2));
+        assert!(!t.all_arrived(3));
+        t.open_tasks.push(7);
+        t.note_fused();
+        t.note_fused();
+        t.maybe_complete(2, 900);
+        assert!(t.completed.is_none(), "task still open");
+        t.close_task(7);
+        t.maybe_complete(2, 900);
+        let rec = t.completed.clone().unwrap();
+        assert_eq!(rec.round, 3);
+        assert!((rec.latency_secs - crate::sim::to_secs(400)).abs() < 1e-9);
+    }
+}

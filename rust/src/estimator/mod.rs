@@ -1,0 +1,433 @@
+//! Training-time estimation — the paper's core enabler (§4, §5.3, §5.4).
+//!
+//! * **Periodicity** (§4.1, Fig 3): epoch/minibatch times at a party are
+//!   ~constant absent data/hardware changes → [`PeriodicityTracker`] keeps a
+//!   windowed history per party and predicts the next epoch time as the
+//!   mean, exposing the CV as a confidence signal.
+//! * **Linearity** (§4.2, Fig 4): epoch time ∝ dataset size, minibatch time
+//!   ∝ batch size → [`OnlineOls`]-backed regressors predict times for
+//!   parties that only report hardware/data-size (§5.3 fallback).
+//! * **t_comm** (§5.3): model_size/B_d + model_size/B_u with EWMA-tracked
+//!   bandwidths (§5.2's periodic measurements).
+//! * **t_agg** (§5.4): N·t_pair/(C_agg·N_agg) + M/B_dc, with t_pair from
+//!   offline calibration (`fusion::calibrate_t_pair`).
+//! * [`estimate_round`] = Fig 6 lines 6–13: per-party `t_upd`, round bound
+//!   `t_rnd = max t_upd`, and the JIT start time `t_rnd − t_agg`.
+
+use crate::sim::{secs, Time};
+use crate::util::stats::{Ewma, OnlineOls, Summary};
+
+/// How a party participates (§2.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    Active,
+    Intermittent,
+}
+
+/// What a party reports at job setup (§5.2 "Additional Input Needed From
+/// Parties"). All optional except `mode`; the estimator uses the best
+/// available source per Fig 6 line 7.
+#[derive(Clone, Debug)]
+pub struct PartyInfo {
+    pub mode: Mode,
+    /// Measured epoch time, if the party shares it (seconds).
+    pub t_epoch: Option<f64>,
+    /// Measured minibatch time, if shared (seconds).
+    pub t_minibatch: Option<f64>,
+    /// Dataset size in items (for the linearity regressor).
+    pub dataset_items: Option<f64>,
+    /// Hardware capability score (vcpus × clock; regression feature).
+    pub hw_score: Option<f64>,
+    /// party → aggregator bandwidth, bytes/s.
+    pub bw_up: f64,
+    /// aggregator → party bandwidth, bytes/s.
+    pub bw_down: f64,
+}
+
+/// Aggregation frequency for a job (§5.1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AggFrequency {
+    /// Fuse once per local epoch (the common case).
+    PerEpoch,
+    /// Fuse every N minibatches.
+    PerMinibatches(u32),
+}
+
+/// Periodicity tracker: windowed epoch-time history per party.
+#[derive(Clone, Debug, Default)]
+pub struct PeriodicityTracker {
+    window: Vec<f64>,
+    cap: usize,
+}
+
+impl PeriodicityTracker {
+    pub fn new(cap: usize) -> Self {
+        PeriodicityTracker {
+            window: Vec::new(),
+            cap: cap.max(2),
+        }
+    }
+
+    pub fn observe(&mut self, epoch_secs: f64) {
+        if self.window.len() == self.cap {
+            self.window.remove(0);
+        }
+        self.window.push(epoch_secs);
+    }
+
+    /// Predicted next epoch time (mean of the window).
+    pub fn predict(&self) -> Option<f64> {
+        if self.window.is_empty() {
+            None
+        } else {
+            Some(self.window.iter().sum::<f64>() / self.window.len() as f64)
+        }
+    }
+
+    /// Coefficient of variation — small CV validates the periodicity
+    /// assumption (Fig 3).
+    pub fn cv(&self) -> f64 {
+        Summary::of(&self.window).cv()
+    }
+
+    pub fn len(&self) -> usize {
+        self.window.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.window.is_empty()
+    }
+}
+
+/// Cross-party linearity regressors (§4.2): predict a party's epoch time
+/// from dataset size, or minibatch time from a hardware score, using
+/// observations from *other* parties/rounds.
+#[derive(Clone, Debug, Default)]
+pub struct LinearityModel {
+    /// epoch_time ~ dataset_items
+    pub epoch_vs_data: OnlineOls,
+    /// minibatch_time ~ 1/hw_score (heavier hardware → faster)
+    pub mb_vs_inv_hw: OnlineOls,
+}
+
+impl LinearityModel {
+    pub fn observe_epoch(&mut self, dataset_items: f64, epoch_secs: f64) {
+        self.epoch_vs_data.add(dataset_items, epoch_secs);
+    }
+
+    pub fn observe_minibatch(&mut self, hw_score: f64, mb_secs: f64) {
+        if hw_score > 0.0 {
+            self.mb_vs_inv_hw.add(1.0 / hw_score, mb_secs);
+        }
+    }
+
+    pub fn predict_epoch(&self, dataset_items: f64) -> Option<f64> {
+        self.epoch_vs_data.predict(dataset_items).map(|t| t.max(0.0))
+    }
+
+    pub fn predict_minibatch(&self, hw_score: f64) -> Option<f64> {
+        if hw_score <= 0.0 {
+            return None;
+        }
+        self.mb_vs_inv_hw.predict(1.0 / hw_score).map(|t| t.max(0.0))
+    }
+}
+
+/// Bandwidth tracker per party (§5.2).
+#[derive(Clone, Debug)]
+pub struct BandwidthTracker {
+    pub up: Ewma,
+    pub down: Ewma,
+}
+
+impl Default for BandwidthTracker {
+    fn default() -> Self {
+        BandwidthTracker {
+            up: Ewma::new(0.3),
+            down: Ewma::new(0.3),
+        }
+    }
+}
+
+/// Job-level aggregation-cost parameters (§5.4).
+#[derive(Clone, Copy, Debug)]
+pub struct AggCostModel {
+    /// Offline-calibrated pair-fusion time on one core (seconds).
+    pub t_pair: f64,
+    /// Usable cores per aggregator container.
+    pub c_agg: u32,
+    /// Parallel aggregator containers.
+    pub n_agg: u32,
+    /// Intra-datacenter bandwidth (bytes/s) for state load.
+    pub b_dc: f64,
+    /// Model size in bytes (M).
+    pub model_bytes: u64,
+}
+
+impl AggCostModel {
+    /// t_agg = N·t_pair/(C_agg·N_agg) + M/B_dc  (Fig 6 line 13).
+    pub fn t_agg(&self, n_parties: usize) -> f64 {
+        let compute = n_parties as f64 * self.t_pair / (self.c_agg as f64 * self.n_agg as f64);
+        compute + self.model_bytes as f64 / self.b_dc
+    }
+
+    /// Per-update service time inside one container (work-item duration).
+    pub fn item_secs(&self) -> f64 {
+        self.t_pair / self.c_agg as f64
+    }
+}
+
+/// The per-round prediction (Fig 6 lines 6–13).
+#[derive(Clone, Debug)]
+pub struct RoundEstimate {
+    /// Estimated update arrival offset per party (from round start).
+    pub t_upd: Vec<f64>,
+    /// max_i t_upd — estimated end of the round's update stream.
+    pub t_rnd: f64,
+    /// Estimated aggregation duration.
+    pub t_agg: f64,
+}
+
+impl RoundEstimate {
+    /// The JIT defer point: aggregation "can be safely deferred … until
+    /// t_rnd − t_agg" (§5.5). Clamped at 0 (aggregate immediately if the
+    /// round is shorter than aggregation).
+    pub fn start_offset(&self) -> f64 {
+        (self.t_rnd - self.t_agg).max(0.0)
+    }
+
+    pub fn start_offset_time(&self) -> Time {
+        secs(self.start_offset())
+    }
+}
+
+/// Per-party t_train per Fig 6 line 7.
+pub fn estimate_t_train(
+    info: &PartyInfo,
+    freq: AggFrequency,
+    t_wait: f64,
+    history: Option<&PeriodicityTracker>,
+    linearity: &LinearityModel,
+) -> f64 {
+    if info.mode == Mode::Intermittent {
+        return t_wait;
+    }
+    // Periodicity first: observed history beats static reports.
+    if let Some(h) = history {
+        if let Some(p) = h.predict() {
+            return scale_for_freq(p, info, freq);
+        }
+    }
+    match freq {
+        AggFrequency::PerEpoch => {
+            if let Some(t) = info.t_epoch {
+                return t;
+            }
+            if let Some(tmb) = info.t_minibatch {
+                // epochs = items / batch; approximate with dataset if known
+                if let (Some(items), Some(_)) = (info.dataset_items, info.hw_score) {
+                    // assume batch 32 when unreported — documented default
+                    return tmb * (items / 32.0).max(1.0);
+                }
+                return tmb;
+            }
+            if let Some(items) = info.dataset_items {
+                if let Some(t) = linearity.predict_epoch(items) {
+                    return t;
+                }
+            }
+            if let Some(hw) = info.hw_score {
+                if let Some(tmb) = linearity.predict_minibatch(hw) {
+                    let items = info.dataset_items.unwrap_or(320.0);
+                    return tmb * (items / 32.0).max(1.0);
+                }
+            }
+            // last resort: t_wait bound
+            t_wait
+        }
+        AggFrequency::PerMinibatches(n) => {
+            let tmb = info
+                .t_minibatch
+                .or_else(|| info.hw_score.and_then(|h| linearity.predict_minibatch(h)))
+                .unwrap_or(t_wait / n as f64);
+            tmb * n as f64
+        }
+    }
+}
+
+fn scale_for_freq(epoch_pred: f64, info: &PartyInfo, freq: AggFrequency) -> f64 {
+    match freq {
+        AggFrequency::PerEpoch => epoch_pred,
+        AggFrequency::PerMinibatches(n) => {
+            let items = info.dataset_items.unwrap_or(320.0);
+            let mb_per_epoch = (items / 32.0).max(1.0);
+            epoch_pred * n as f64 / mb_per_epoch
+        }
+    }
+}
+
+/// t_comm = M/B_d + M/B_u (§5.3).
+pub fn t_comm(model_bytes: u64, info: &PartyInfo) -> f64 {
+    let m = model_bytes as f64;
+    m / info.bw_down.max(1.0) + m / info.bw_up.max(1.0)
+}
+
+/// Fig 6 lines 6–13 for a whole job round.
+pub fn estimate_round(
+    parties: &[PartyInfo],
+    freq: AggFrequency,
+    t_wait: f64,
+    cost: &AggCostModel,
+    histories: Option<&[PeriodicityTracker]>,
+    linearity: &LinearityModel,
+) -> RoundEstimate {
+    let t_upd: Vec<f64> = parties
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let h = histories.and_then(|hs| hs.get(i));
+            estimate_t_train(p, freq, t_wait, h, linearity) + t_comm(cost.model_bytes, p)
+        })
+        .collect();
+    let t_rnd = t_upd.iter().cloned().fold(0.0, f64::max);
+    RoundEstimate {
+        t_rnd,
+        t_agg: cost.t_agg(parties.len()),
+        t_upd,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn active(t_epoch: f64) -> PartyInfo {
+        PartyInfo {
+            mode: Mode::Active,
+            t_epoch: Some(t_epoch),
+            t_minibatch: None,
+            dataset_items: Some(320.0),
+            hw_score: Some(2.0),
+            bw_up: 100e6,
+            bw_down: 100e6,
+        }
+    }
+
+    #[test]
+    fn periodicity_tracker_mean_and_cv() {
+        let mut t = PeriodicityTracker::new(5);
+        assert!(t.predict().is_none());
+        for x in [10.0, 10.2, 9.8, 10.1, 9.9] {
+            t.observe(x);
+        }
+        let p = t.predict().unwrap();
+        assert!((p - 10.0).abs() < 0.01);
+        assert!(t.cv() < 0.02);
+        // window slides
+        for _ in 0..5 {
+            t.observe(20.0);
+        }
+        assert!((t.predict().unwrap() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linearity_predicts_epoch_from_data() {
+        let mut m = LinearityModel::default();
+        // epoch = 0.1 * items
+        for items in [100.0, 200.0, 400.0, 800.0] {
+            m.observe_epoch(items, 0.1 * items);
+        }
+        let p = m.predict_epoch(600.0).unwrap();
+        assert!((p - 60.0).abs() < 1e-6, "p={p}");
+    }
+
+    #[test]
+    fn linearity_predicts_minibatch_from_hw() {
+        let mut m = LinearityModel::default();
+        // mb = 2 / hw
+        for hw in [1.0, 2.0, 4.0] {
+            m.observe_minibatch(hw, 2.0 / hw);
+        }
+        let p = m.predict_minibatch(8.0).unwrap();
+        assert!((p - 0.25).abs() < 1e-6, "p={p}");
+    }
+
+    #[test]
+    fn t_train_prefers_history_then_report_then_regression() {
+        let lin = {
+            let mut m = LinearityModel::default();
+            m.observe_epoch(100.0, 10.0);
+            m.observe_epoch(200.0, 20.0);
+            m
+        };
+        let info = active(33.0);
+        // 1) history wins
+        let mut h = PeriodicityTracker::new(4);
+        h.observe(40.0);
+        h.observe(40.0);
+        let t = estimate_t_train(&info, AggFrequency::PerEpoch, 600.0, Some(&h), &lin);
+        assert!((t - 40.0).abs() < 1e-9);
+        // 2) report next
+        let t = estimate_t_train(&info, AggFrequency::PerEpoch, 600.0, None, &lin);
+        assert!((t - 33.0).abs() < 1e-9);
+        // 3) regression fallback
+        let mut anon = info.clone();
+        anon.t_epoch = None;
+        anon.t_minibatch = None;
+        anon.dataset_items = Some(320.0);
+        let t = estimate_t_train(&anon, AggFrequency::PerEpoch, 600.0, None, &lin);
+        assert!((t - 32.0).abs() < 1e-6, "t={t}");
+    }
+
+    #[test]
+    fn intermittent_uses_t_wait() {
+        let mut info = active(33.0);
+        info.mode = Mode::Intermittent;
+        let lin = LinearityModel::default();
+        let t = estimate_t_train(&info, AggFrequency::PerEpoch, 600.0, None, &lin);
+        assert!((t - 600.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn agg_cost_formula() {
+        let c = AggCostModel {
+            t_pair: 0.2,
+            c_agg: 2,
+            n_agg: 5,
+            b_dc: 1.25e9, // 10 Gbps
+            model_bytes: 250_000_000,
+        };
+        // 100 * 0.2 / 10 + 0.25/1.25 = 2.0 + 0.2 = 2.2
+        assert!((c.t_agg(100) - 2.2).abs() < 1e-9);
+        assert!((c.item_secs() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn round_estimate_and_defer_point() {
+        let cost = AggCostModel {
+            t_pair: 1.0,
+            c_agg: 1,
+            n_agg: 1,
+            b_dc: f64::INFINITY,
+            model_bytes: 0,
+        };
+        let parties: Vec<PartyInfo> = (1..=6).map(|i| active(i as f64 * 3.0)).collect();
+        let lin = LinearityModel::default();
+        let est = estimate_round(&parties, AggFrequency::PerEpoch, 600.0, &cost, None, &lin);
+        assert_eq!(est.t_upd.len(), 6);
+        assert!((est.t_rnd - 18.0).abs() < 1e-9);
+        assert!((est.t_agg - 6.0).abs() < 1e-9);
+        assert!((est.start_offset() - 12.0).abs() < 1e-9);
+        // aggregation longer than round -> start immediately
+        let cost2 = AggCostModel { t_pair: 100.0, ..cost };
+        let est2 = estimate_round(&parties, AggFrequency::PerEpoch, 600.0, &cost2, None, &lin);
+        assert_eq!(est2.start_offset(), 0.0);
+    }
+
+    #[test]
+    fn t_comm_both_directions() {
+        let info = active(1.0);
+        let t = t_comm(200_000_000, &info);
+        assert!((t - 4.0).abs() < 1e-9); // 2s down + 2s up at 100 MB/s
+    }
+}

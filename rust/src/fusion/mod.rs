@@ -1,0 +1,487 @@
+//! Model-update fusion: the aggregation compute itself.
+//!
+//! §2.1: aggregation is a coordinate-wise function over flattened update
+//! vectors. This module provides:
+//!
+//! * the three paper algorithms — [`Algorithm::FedAvg`],
+//!   [`Algorithm::FedSgd`], [`Algorithm::FedProx`] — all reducible to a
+//!   weighted mean (FedProx adds a server-side proximal pull toward the
+//!   previous global model, mirroring `python/compile/kernels/fedprox_merge`);
+//! * a streaming [`Aggregator`] that folds updates in as they arrive
+//!   (eager/JIT) and can checkpoint/restore its partial state (§5.5);
+//! * [`tree_reduce`] — the data-parallel reduction used when `N_agg`
+//!   containers aggregate in parallel (§5.4);
+//! * `t_pair` calibration (§5.4): measure pair-fusion on randomly generated
+//!   updates of a zoo model's size.
+//!
+//! The arithmetic lives in pure-Rust kernels (`pair_merge_into`,
+//! `wsum_into`) written to auto-vectorize; the identical math is also
+//! available through the XLA artifacts (see `runtime::XlaFusion`), and an
+//! integration test pins rust ≡ XLA ≡ (transitively, via pytest) pallas.
+
+use crate::model::{ModelSpec, ModelUpdate};
+use crate::util::rng::Rng;
+
+/// Aggregation algorithm (§6.3 uses FedProx and FedSGD).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Algorithm {
+    /// Weighted average of party weights (weights = #samples).
+    FedAvg,
+    /// Average of party gradients (uniform weights unless given).
+    FedSgd,
+    /// Weighted average + proximal pull toward the previous global model.
+    FedProx { mu: f32 },
+}
+
+impl Algorithm {
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        match s {
+            "fedavg" => Some(Algorithm::FedAvg),
+            "fedsgd" => Some(Algorithm::FedSgd),
+            "fedprox" => Some(Algorithm::FedProx { mu: 0.1 }),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::FedAvg => "fedavg",
+            Algorithm::FedSgd => "fedsgd",
+            Algorithm::FedProx { .. } => "fedprox",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// kernels (pure Rust, autovectorizing)
+// ---------------------------------------------------------------------------
+
+/// acc ← (w_acc·acc + w_b·b) / (w_acc + w_b), in place. The `t_pair` unit.
+pub fn pair_merge_into(acc: &mut [f32], w_acc: f32, b: &[f32], w_b: f32) {
+    assert_eq!(acc.len(), b.len(), "update length mismatch");
+    let inv = 1.0 / (w_acc + w_b);
+    let ca = w_acc * inv;
+    let cb = w_b * inv;
+    for (a, &x) in acc.iter_mut().zip(b.iter()) {
+        *a = *a * ca + x * cb;
+    }
+}
+
+/// out ← Σ_k w[k]·u[k], updates as parallel slices (single full pass per
+/// update; see `wsum_blocked_into` for the cache-blocked hot path).
+pub fn wsum_into(out: &mut [f32], updates: &[&[f32]], w: &[f32]) {
+    assert_eq!(updates.len(), w.len());
+    out.fill(0.0);
+    for (u, &wk) in updates.iter().zip(w.iter()) {
+        assert_eq!(u.len(), out.len(), "update length mismatch");
+        for (o, &x) in out.iter_mut().zip(u.iter()) {
+            *o += wk * x;
+        }
+    }
+}
+
+/// Cache block for the K-way fold: 16k f32 = 64 KiB — the accumulator
+/// block stays L1/L2-resident while all K update rows stream through it,
+/// so DRAM traffic drops from 3 vectors/update (pair-merge chain) to
+/// ~(K+1)/K vectors/update. This is the §Perf L3 fusion optimization;
+/// before/after in EXPERIMENTS.md.
+pub const FOLD_BLOCK: usize = 16 * 1024;
+
+/// out ← Σ_k w[k]·u[k] with cache blocking. The bulk-fusion hot path used
+/// by lazy/JIT aggregation and the tree reduction.
+pub fn wsum_blocked_into(out: &mut [f32], updates: &[&[f32]], w: &[f32]) {
+    assert_eq!(updates.len(), w.len());
+    let d = out.len();
+    for u in updates {
+        assert_eq!(u.len(), d, "update length mismatch");
+    }
+    out.fill(0.0);
+    let mut off = 0;
+    while off < d {
+        let end = (off + FOLD_BLOCK).min(d);
+        let mut k = 0;
+        // 4-row unroll: one load+FMA stream per row, one store stream —
+        // 4× fewer passes over the accumulator block and enough ILP to
+        // keep the FMA ports busy.
+        while k + 4 <= updates.len() {
+            let (u0, u1, u2, u3) = (
+                &updates[k][off..end],
+                &updates[k + 1][off..end],
+                &updates[k + 2][off..end],
+                &updates[k + 3][off..end],
+            );
+            let (w0, w1, w2, w3) = (w[k], w[k + 1], w[k + 2], w[k + 3]);
+            let ob = &mut out[off..end];
+            for i in 0..ob.len() {
+                ob[i] += w0 * u0[i] + w1 * u1[i] + w2 * u2[i] + w3 * u3[i];
+            }
+            k += 4;
+        }
+        while k < updates.len() {
+            let ub = &updates[k][off..end];
+            let wk = w[k];
+            let ob = &mut out[off..end];
+            for (o, &x) in ob.iter_mut().zip(ub.iter()) {
+                *o += wk * x;
+            }
+            k += 1;
+        }
+        off = end;
+    }
+}
+
+/// Weighted mean over K updates (cache-blocked; K=2 dispatches to the
+/// 3-stream pair merge, which measures faster than a fill+fold there).
+pub fn weighted_mean(updates: &[&[f32]], w: &[f32]) -> Vec<f32> {
+    let n = updates.first().map(|u| u.len()).unwrap_or(0);
+    if updates.len() == 2 {
+        let mut out = updates[0].to_vec();
+        pair_merge_into(&mut out, w[0], updates[1], w[1]);
+        return out;
+    }
+    let mut out = vec![0.0f32; n];
+    wsum_blocked_into(&mut out, updates, w);
+    let total: f32 = w.iter().sum();
+    let inv = 1.0 / total;
+    for o in &mut out {
+        *o *= inv;
+    }
+    out
+}
+
+/// FedProx server merge: (1−μ)·weighted_mean + μ·global.
+pub fn fedprox_merge(updates: &[&[f32]], w: &[f32], global: &[f32], mu: f32) -> Vec<f32> {
+    let mut out = weighted_mean(updates, w);
+    assert_eq!(out.len(), global.len());
+    for (o, &g) in out.iter_mut().zip(global.iter()) {
+        *o = (1.0 - mu) * *o + mu * g;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// streaming aggregator with checkpoint/restore
+// ---------------------------------------------------------------------------
+
+/// Partial aggregation state: a running weighted mean.
+///
+/// Folding updates one at a time (eager), in batches (batched), or all at
+/// once (lazy/JIT) produces identical results — the algebra property the
+/// strategies' "same aggregated model" integration test pins down.
+#[derive(Clone, Debug)]
+pub struct Aggregator {
+    pub acc: Vec<f32>,
+    pub weight: f32,
+    pub n_merged: usize,
+}
+
+impl Aggregator {
+    pub fn new(dim: usize) -> Aggregator {
+        Aggregator {
+            acc: vec![0.0; dim],
+            weight: 0.0,
+            n_merged: 0,
+        }
+    }
+
+    /// Restore from a checkpoint (§5.5 preemption path).
+    pub fn from_parts(acc: Vec<f32>, weight: f32, n_merged: usize) -> Aggregator {
+        Aggregator {
+            acc,
+            weight,
+            n_merged,
+        }
+    }
+
+    /// Fold one update into the running mean.
+    pub fn add(&mut self, update: &[f32], weight: f32) {
+        if self.n_merged == 0 {
+            self.acc.copy_from_slice(update);
+            self.weight = weight;
+        } else {
+            pair_merge_into(&mut self.acc, self.weight, update, weight);
+            self.weight += weight;
+        }
+        self.n_merged += 1;
+    }
+
+    /// Fold another partial aggregate in (tree reduction / checkpoint merge).
+    pub fn merge(&mut self, other: &Aggregator) {
+        if other.n_merged == 0 {
+            return;
+        }
+        if self.n_merged == 0 {
+            self.acc.copy_from_slice(&other.acc);
+            self.weight = other.weight;
+            self.n_merged = other.n_merged;
+            return;
+        }
+        pair_merge_into(&mut self.acc, self.weight, &other.acc, other.weight);
+        self.weight += other.weight;
+        self.n_merged += other.n_merged;
+    }
+
+    /// Final global model for `alg` (FedProx needs the previous global).
+    pub fn finalize(&self, alg: Algorithm, prev_global: Option<&[f32]>) -> Vec<f32> {
+        match alg {
+            Algorithm::FedAvg | Algorithm::FedSgd => self.acc.clone(),
+            Algorithm::FedProx { mu } => {
+                let g = prev_global.expect("FedProx finalize needs the previous global model");
+                let mut out = self.acc.clone();
+                for (o, &gv) in out.iter_mut().zip(g.iter()) {
+                    *o = (1.0 - mu) * *o + mu * gv;
+                }
+                out
+            }
+        }
+    }
+}
+
+/// Data-parallel aggregation: split `updates` across `shards` workers
+/// (threads — stand-in for `N_agg` aggregator containers), each folds its
+/// shard with the cache-blocked weighted sum, then partials merge pairwise
+/// (§5.4's parallel aggregation). Returns a weighted-mean [`Aggregator`]
+/// identical (within fp tolerance) to streaming the updates one by one.
+pub fn tree_reduce(updates: &[ModelUpdate], shards: usize) -> Aggregator {
+    assert!(!updates.is_empty());
+    let dim = updates[0].data.len();
+    let shards = shards.max(1).min(updates.len());
+    let chunk = updates.len().div_ceil(shards);
+    // (weighted sum, total weight, count) per shard
+    let partials: Vec<(Vec<f32>, f32, usize)> = std::thread::scope(|s| {
+        let handles: Vec<_> = updates
+            .chunks(chunk)
+            .map(|part| {
+                s.spawn(move || {
+                    let views: Vec<&[f32]> = part.iter().map(|u| u.data.as_slice()).collect();
+                    let ws: Vec<f32> = part.iter().map(|u| u.weight).collect();
+                    let mut sum = vec![0.0f32; dim];
+                    wsum_blocked_into(&mut sum, &views, &ws);
+                    (sum, ws.iter().sum::<f32>(), part.len())
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    // combine partial sums, then normalize once
+    let mut acc = vec![0.0f32; dim];
+    let mut weight = 0.0f32;
+    let mut n_merged = 0usize;
+    for (sum, w, n) in &partials {
+        for (a, &x) in acc.iter_mut().zip(sum.iter()) {
+            *a += x;
+        }
+        weight += w;
+        n_merged += n;
+    }
+    let inv = 1.0 / weight;
+    for a in &mut acc {
+        *a *= inv;
+    }
+    Aggregator {
+        acc,
+        weight,
+        n_merged,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// t_pair calibration (§5.4)
+// ---------------------------------------------------------------------------
+
+/// Measured pair-fusion cost for a model (seconds), averaged over `reps`.
+/// "t_pair … can be easily computed offline … by randomly generating model
+/// updates and measuring the time taken to fuse pairs."
+pub fn calibrate_t_pair(spec: &ModelSpec, reps: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let a = ModelUpdate::random(spec, &mut rng, 1.0);
+    let b = ModelUpdate::random(spec, &mut rng, 1.0);
+    let mut acc = a.data.clone();
+    // warm-up
+    pair_merge_into(&mut acc, 1.0, &b.data, 1.0);
+    let start = std::time::Instant::now();
+    for i in 0..reps {
+        pair_merge_into(&mut acc, 1.0 + i as f32, &b.data, 1.0);
+    }
+    start.elapsed().as_secs_f64() / reps.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn updates_from(g: &mut prop::Gen, k: usize, d: usize) -> Vec<ModelUpdate> {
+        (0..k)
+            .map(|_| ModelUpdate {
+                data: g.vec_f32(d, 1.0),
+                weight: g.f64(0.1, 10.0) as f32,
+            })
+            .collect()
+    }
+
+    fn reference_mean(us: &[ModelUpdate]) -> Vec<f32> {
+        // f64 accumulation as the gold standard
+        let d = us[0].data.len();
+        let mut acc = vec![0.0f64; d];
+        let mut tw = 0.0f64;
+        for u in us {
+            for (a, &x) in acc.iter_mut().zip(u.data.iter()) {
+                *a += (u.weight as f64) * (x as f64);
+            }
+            tw += u.weight as f64;
+        }
+        acc.iter().map(|a| (*a / tw) as f32).collect()
+    }
+
+    #[test]
+    fn pair_merge_is_weighted_mean() {
+        let mut acc = vec![1.0, 2.0, 3.0];
+        pair_merge_into(&mut acc, 3.0, &[5.0, 6.0, 7.0], 1.0);
+        assert_eq!(acc, vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn wsum_matches_manual() {
+        let u1 = [1.0f32, 0.0];
+        let u2 = [0.0f32, 2.0];
+        let mut out = vec![0.0; 2];
+        wsum_into(&mut out, &[&u1, &u2], &[2.0, 3.0]);
+        assert_eq!(out, vec![2.0, 6.0]);
+    }
+
+    #[test]
+    fn streaming_equals_batch_property() {
+        prop::check("streaming==batch", prop::default_cases(), |g| {
+            let k = g.usize(1, 12);
+            let d = g.usize(1, 512);
+            let us = updates_from(g, k, d);
+            let mut stream = Aggregator::new(d);
+            for u in &us {
+                stream.add(&u.data, u.weight);
+            }
+            let views: Vec<&[f32]> = us.iter().map(|u| u.data.as_slice()).collect();
+            let ws: Vec<f32> = us.iter().map(|u| u.weight).collect();
+            let batch = weighted_mean(&views, &ws);
+            for (i, (a, b)) in stream.acc.iter().zip(batch.iter()).enumerate() {
+                crate::prop_assert!(
+                    prop::close(*a as f64, *b as f64, 1e-4),
+                    "elem {i}: stream {a} vs batch {b}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn permutation_invariance_property() {
+        prop::check("permutation-invariance", prop::default_cases(), |g| {
+            let k = g.usize(2, 10);
+            let d = g.usize(1, 256);
+            let mut us = updates_from(g, k, d);
+            let mut a1 = Aggregator::new(d);
+            for u in &us {
+                a1.add(&u.data, u.weight);
+            }
+            g.rng.shuffle(&mut us);
+            let mut a2 = Aggregator::new(d);
+            for u in &us {
+                a2.add(&u.data, u.weight);
+            }
+            for (x, y) in a1.acc.iter().zip(a2.acc.iter()) {
+                crate::prop_assert!(
+                    prop::close(*x as f64, *y as f64, 1e-4),
+                    "permutation changed result: {x} vs {y}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tree_reduce_matches_sequential_property() {
+        prop::check("tree==sequential", 24, |g| {
+            let k = g.usize(1, 24);
+            let d = g.usize(1, 300);
+            let us = updates_from(g, k, d);
+            let tree = tree_reduce(&us, g.usize(1, 6));
+            let gold = reference_mean(&us);
+            for (x, y) in tree.acc.iter().zip(gold.iter()) {
+                crate::prop_assert!(
+                    prop::close(*x as f64, *y as f64, 1e-3),
+                    "tree {x} vs gold {y}"
+                );
+            }
+            crate::prop_assert!(tree.n_merged == k, "n_merged {} != {k}", tree.n_merged);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn checkpoint_restore_equivalence() {
+        // fold 5 updates, checkpoint after 2, restore, fold the rest ==
+        // folding straight through (the §5.5 preemption invariant).
+        let mut g = prop::Gen::new(0xCAFE, 50);
+        let us = updates_from(&mut g, 5, 128);
+        let mut straight = Aggregator::new(128);
+        for u in &us {
+            straight.add(&u.data, u.weight);
+        }
+        let mut first = Aggregator::new(128);
+        first.add(&us[0].data, us[0].weight);
+        first.add(&us[1].data, us[1].weight);
+        let ckpt = (first.acc.clone(), first.weight, first.n_merged);
+        let mut resumed = Aggregator::from_parts(ckpt.0, ckpt.1, ckpt.2);
+        for u in &us[2..] {
+            resumed.add(&u.data, u.weight);
+        }
+        for (a, b) in straight.acc.iter().zip(resumed.acc.iter()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        assert_eq!(straight.n_merged, resumed.n_merged);
+    }
+
+    #[test]
+    fn fedprox_finalize_pulls_toward_global() {
+        let mut agg = Aggregator::new(2);
+        agg.add(&[2.0, 2.0], 1.0);
+        let global = [0.0f32, 4.0];
+        let out = agg.finalize(Algorithm::FedProx { mu: 0.5 }, Some(&global));
+        assert_eq!(out, vec![1.0, 3.0]);
+        let avg = agg.finalize(Algorithm::FedAvg, None);
+        assert_eq!(avg, vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn fedprox_merge_fn_matches_finalize() {
+        let mut g = prop::Gen::new(7, 50);
+        let us = updates_from(&mut g, 4, 64);
+        let global = g.vec_f32(64, 1.0);
+        let views: Vec<&[f32]> = us.iter().map(|u| u.data.as_slice()).collect();
+        let ws: Vec<f32> = us.iter().map(|u| u.weight).collect();
+        let direct = fedprox_merge(&views, &ws, &global, 0.3);
+        let mut agg = Aggregator::new(64);
+        for u in &us {
+            agg.add(&u.data, u.weight);
+        }
+        let via_agg = agg.finalize(Algorithm::FedProx { mu: 0.3 }, Some(&global));
+        for (a, b) in direct.iter().zip(via_agg.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn algorithm_parse_roundtrip() {
+        for n in ["fedavg", "fedsgd", "fedprox"] {
+            assert_eq!(Algorithm::parse(n).unwrap().name(), n);
+        }
+        assert!(Algorithm::parse("magic").is_none());
+    }
+
+    #[test]
+    fn calibration_returns_positive_time() {
+        let spec = ModelSpec::new("cal", vec![("l", 1 << 16)]);
+        let t = calibrate_t_pair(&spec, 3, 42);
+        assert!(t > 0.0 && t < 1.0, "t_pair={t}");
+    }
+}

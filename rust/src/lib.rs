@@ -1,0 +1,34 @@
+//! # fljit — Just-in-Time Aggregation for Federated Learning
+//!
+//! Full-system reproduction of *"Just-in-Time Aggregation for Federated
+//! Learning"* (Jayaram, Verma, Thomas, Muthusamy — IBM Research AI, 2022):
+//! a cloud-hosted FL aggregation platform in which aggregators are **not**
+//! always-on. The platform predicts when each party's model update will
+//! arrive (periodicity + linearity of training times, §4), estimates the
+//! aggregation time (§5.4), and defers aggregation until `t_rnd − t_agg`
+//! with an opportunistic priority and a hard deadline timer (§5.5).
+//!
+//! Three-layer architecture (DESIGN.md):
+//! * **L1** Pallas kernels (python, build-time): fused update merging.
+//! * **L2** JAX graphs (python, build-time): fusion entry points + the MLP
+//!   local-training substrate, AOT-lowered to HLO text in `artifacts/`.
+//! * **L3** this crate: the coordinator — strategies, JIT scheduler,
+//!   serverless cluster, message queue, stores, party emulation, metrics —
+//!   executing fusion through PJRT ([`runtime`]) or pure Rust ([`fusion`]).
+//!
+//! Python never runs on the request path.
+
+pub mod bench;
+pub mod cluster;
+pub mod coordinator;
+pub mod estimator;
+pub mod fusion;
+pub mod metrics;
+pub mod model;
+pub mod mq;
+pub mod party;
+pub mod runtime;
+pub mod sim;
+pub mod store;
+pub mod util;
+pub mod workloads;

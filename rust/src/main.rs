@@ -1,0 +1,22 @@
+//! `fljit` CLI — leader entrypoint for the JIT-aggregation platform.
+//!
+//! Subcommands:
+//!   * `timeline`  — the Fig 2 scenario: four design options on a 6-party
+//!                   round; prints the busy/idle/overhead timeline.
+//!   * `simulate`  — one scenario (workload × parties × strategy) in
+//!                   simulated time; prints latency + container-seconds.
+//!   * `bench-table <fig3|fig4|fig7|fig8|fig9>` — regenerate a paper
+//!                   figure/table.
+//!   * `calibrate` — offline t_pair calibration on zoo models (§5.4).
+//!   * `zoo`       — list zoo models.
+//!   * `run`       — run an FL job spec (JSON) on the live platform with
+//!                   real XLA aggregation.
+
+use fljit::util::cli::Args;
+
+fn main() {
+    fljit::util::logging::init_from_env();
+    let args = Args::from_env();
+    let code = fljit::bench::cli::dispatch(&args);
+    std::process::exit(code);
+}

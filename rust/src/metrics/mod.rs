@@ -1,0 +1,171 @@
+//! Evaluation metrics (§6.2): aggregation latency, container-seconds, and
+//! projected cost at Azure Container Instances pricing.
+
+use crate::util::json::Json;
+use crate::util::stats::{percentile, Summary};
+
+/// §6.2 / Fig 9: container cost per second (Microsoft Azure, 2021).
+pub const AZURE_USD_PER_CONTAINER_SECOND: f64 = 0.0002692;
+
+/// Per-round record.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundRecord {
+    pub round: u32,
+    /// Aggregation latency: "time elapsed between the reception of the last
+    /// model update and the availability of the aggregated model" (§6.2).
+    pub latency_secs: f64,
+    /// When the round's last update arrived (virtual secs).
+    pub last_arrival_secs: f64,
+    /// When the fused model became available.
+    pub complete_secs: f64,
+}
+
+/// A finished job's measurements.
+#[derive(Clone, Debug, Default)]
+pub struct JobReport {
+    pub strategy: String,
+    pub workload: String,
+    pub fleet: String,
+    pub parties: usize,
+    pub rounds: Vec<RoundRecord>,
+    /// Aggregation container-seconds from the cluster ledger.
+    pub container_seconds: f64,
+    /// Ancillary-service container-seconds (MongoDB/Kafka/COS share).
+    pub ancillary_seconds: f64,
+    /// Aggregator deployments across the job.
+    pub deployments: u64,
+    /// Updates fused across the job.
+    pub updates_fused: u64,
+    /// Wall duration of the job in virtual seconds.
+    pub makespan_secs: f64,
+}
+
+impl JobReport {
+    /// Total container-seconds (aggregation + ancillary) — the Fig 9 metric.
+    pub fn total_container_seconds(&self) -> f64 {
+        self.container_seconds + self.ancillary_seconds
+    }
+
+    /// Projected cost in USD (Fig 9).
+    pub fn cost_usd(&self) -> f64 {
+        self.total_container_seconds() * AZURE_USD_PER_CONTAINER_SECOND
+    }
+
+    /// Mean aggregation latency over rounds — the Fig 7/8 metric ("reported
+    /// numbers … are averaged over all the rounds of the FL job").
+    pub fn mean_latency_secs(&self) -> f64 {
+        if self.rounds.is_empty() {
+            return 0.0;
+        }
+        self.rounds.iter().map(|r| r.latency_secs).sum::<f64>() / self.rounds.len() as f64
+    }
+
+    pub fn latency_summary(&self) -> Summary {
+        Summary::of(&self.rounds.iter().map(|r| r.latency_secs).collect::<Vec<_>>())
+    }
+
+    pub fn latency_p95(&self) -> f64 {
+        percentile(
+            &self.rounds.iter().map(|r| r.latency_secs).collect::<Vec<_>>(),
+            95.0,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("strategy", Json::str(&self.strategy)),
+            ("workload", Json::str(&self.workload)),
+            ("fleet", Json::str(&self.fleet)),
+            ("parties", Json::num(self.parties as f64)),
+            ("rounds", Json::num(self.rounds.len() as f64)),
+            ("mean_latency_secs", Json::num(self.mean_latency_secs())),
+            ("latency_p95_secs", Json::num(self.latency_p95())),
+            ("container_seconds", Json::num(self.container_seconds)),
+            ("ancillary_seconds", Json::num(self.ancillary_seconds)),
+            (
+                "total_container_seconds",
+                Json::num(self.total_container_seconds()),
+            ),
+            ("cost_usd", Json::num(self.cost_usd())),
+            ("deployments", Json::num(self.deployments as f64)),
+            ("updates_fused", Json::num(self.updates_fused as f64)),
+            ("makespan_secs", Json::num(self.makespan_secs)),
+        ])
+    }
+}
+
+/// Savings of `ours` vs `baseline` in container-seconds (Fig 9 right).
+pub fn savings_pct(ours: &JobReport, baseline: &JobReport) -> f64 {
+    let b = baseline.total_container_seconds();
+    if b <= 0.0 {
+        return 0.0;
+    }
+    (1.0 - ours.total_container_seconds() / b) * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(cs: f64, latencies: &[f64]) -> JobReport {
+        JobReport {
+            strategy: "jit".into(),
+            workload: "w".into(),
+            fleet: "active-homog".into(),
+            parties: 10,
+            rounds: latencies
+                .iter()
+                .enumerate()
+                .map(|(i, &l)| RoundRecord {
+                    round: i as u32,
+                    latency_secs: l,
+                    last_arrival_secs: 0.0,
+                    complete_secs: l,
+                })
+                .collect(),
+            container_seconds: cs,
+            ancillary_seconds: 10.0,
+            deployments: 3,
+            updates_fused: 30,
+            makespan_secs: 100.0,
+        }
+    }
+
+    #[test]
+    fn cost_projection_uses_azure_rate() {
+        let r = report(90.0, &[1.0]);
+        assert!((r.total_container_seconds() - 100.0).abs() < 1e-12);
+        assert!((r.cost_usd() - 0.02692).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_aggregates() {
+        let r = report(0.0, &[1.0, 2.0, 3.0, 4.0]);
+        assert!((r.mean_latency_secs() - 2.5).abs() < 1e-12);
+        assert!(r.latency_p95() > 3.5);
+        assert_eq!(r.latency_summary().n, 4);
+        assert_eq!(report(0.0, &[]).mean_latency_secs(), 0.0);
+    }
+
+    #[test]
+    fn savings_formula() {
+        let jit = report(40.0, &[1.0]); // total 50
+        let eager = report(190.0, &[1.0]); // total 200
+        assert!((savings_pct(&jit, &eager) - 75.0).abs() < 1e-9);
+        let zero = report(0.0, &[1.0]);
+        let mut z2 = zero.clone();
+        z2.ancillary_seconds = 0.0;
+        z2.container_seconds = 0.0;
+        assert_eq!(savings_pct(&jit, &z2), 0.0);
+    }
+
+    #[test]
+    fn json_export_roundtrips() {
+        let r = report(40.0, &[1.0, 2.0]);
+        let j = r.to_json();
+        let parsed = crate::util::json::Json::parse(&j.print()).unwrap();
+        assert_eq!(parsed.get("strategy").as_str(), Some("jit"));
+        assert_eq!(parsed.get("parties").as_u64(), Some(10));
+        assert!((parsed.get("cost_usd").as_f64().unwrap() - r.cost_usd()).abs() < 1e-9);
+    }
+}

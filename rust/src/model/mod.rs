@@ -1,0 +1,163 @@
+//! Model updates and the model zoo.
+//!
+//! §2.1: "A model update … is flattened, and represented as a list of
+//! one-dimensional vectors, with each vector corresponding to a layer."
+//! [`ModelSpec`] carries that per-layer layout; [`ModelUpdate`] is the
+//! flattened weight vector plus its aggregation weight (#samples).
+//!
+//! The zoo provides the three evaluation models (§6.3) at their real
+//! parameter counts — EfficientNet-B7 (66.3M), VGG16 (138.4M, exact layer
+//! table), InceptionV4 (42.7M) — so update sizes, transfer times and
+//! `t_pair` calibration operate on realistic vectors, plus the small MLP
+//! whose layout mirrors `python/compile/model.py::param_shapes` for the
+//! real-training path.
+
+pub mod zoo;
+
+use crate::util::rng::Rng;
+
+/// One flattened layer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LayerSpec {
+    pub name: String,
+    pub numel: usize,
+}
+
+/// Architecture-level description of a model's update vector.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl ModelSpec {
+    pub fn new(name: &str, layers: Vec<(&str, usize)>) -> ModelSpec {
+        ModelSpec {
+            name: name.to_string(),
+            layers: layers
+                .into_iter()
+                .map(|(n, numel)| LayerSpec {
+                    name: n.to_string(),
+                    numel,
+                })
+                .collect(),
+        }
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.layers.iter().map(|l| l.numel).sum()
+    }
+
+    /// f32 payload size — the `M` of §5.3/§5.4 (transfer + state times).
+    pub fn size_bytes(&self) -> u64 {
+        (self.total_params() * 4) as u64
+    }
+
+    /// Offset of each layer in the flattened vector.
+    pub fn offsets(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.layers.len());
+        let mut acc = 0;
+        for l in &self.layers {
+            out.push(acc);
+            acc += l.numel;
+        }
+        out
+    }
+}
+
+/// A party's flattened model update.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelUpdate {
+    /// Flattened weights (layer-major, per ModelSpec order).
+    pub data: Vec<f32>,
+    /// Aggregation weight — #samples at the party (FedAvg weighting).
+    pub weight: f32,
+}
+
+impl ModelUpdate {
+    pub fn zeros(n: usize) -> ModelUpdate {
+        ModelUpdate {
+            data: vec![0.0; n],
+            weight: 0.0,
+        }
+    }
+
+    /// Random update for offline `t_pair` calibration (§5.4: "randomly
+    /// generating model updates … and measuring the time taken to fuse
+    /// pairs").
+    pub fn random(spec: &ModelSpec, rng: &mut Rng, weight: f32) -> ModelUpdate {
+        let mut data = vec![0.0f32; spec.total_params()];
+        rng.fill_normal_f32(&mut data);
+        ModelUpdate { data, weight }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Split back into per-layer views.
+    pub fn layer_views<'a>(&'a self, spec: &ModelSpec) -> Vec<&'a [f32]> {
+        assert_eq!(self.data.len(), spec.total_params(), "layout mismatch");
+        let mut out = Vec::with_capacity(spec.layers.len());
+        let mut off = 0;
+        for l in &spec.layers {
+            out.push(&self.data[off..off + l.numel]);
+            off += l.numel;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ModelSpec {
+        ModelSpec::new("tiny", vec![("a", 3), ("b", 5), ("c", 2)])
+    }
+
+    #[test]
+    fn totals_and_offsets() {
+        let m = tiny();
+        assert_eq!(m.total_params(), 10);
+        assert_eq!(m.size_bytes(), 40);
+        assert_eq!(m.offsets(), vec![0, 3, 8]);
+    }
+
+    #[test]
+    fn layer_views_partition_data() {
+        let m = tiny();
+        let u = ModelUpdate {
+            data: (0..10).map(|i| i as f32).collect(),
+            weight: 1.0,
+        };
+        let views = u.layer_views(&m);
+        assert_eq!(views.len(), 3);
+        assert_eq!(views[0], &[0.0, 1.0, 2.0]);
+        assert_eq!(views[1], &[3.0, 4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(views[2], &[8.0, 9.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "layout mismatch")]
+    fn layer_views_check_layout() {
+        let u = ModelUpdate::zeros(7);
+        u.layer_views(&tiny());
+    }
+
+    #[test]
+    fn random_updates_differ_and_are_seeded() {
+        let m = tiny();
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(1);
+        let a = ModelUpdate::random(&m, &mut r1, 1.0);
+        let b = ModelUpdate::random(&m, &mut r2, 1.0);
+        assert_eq!(a, b);
+        let c = ModelUpdate::random(&m, &mut r1, 1.0);
+        assert_ne!(a, c);
+    }
+}

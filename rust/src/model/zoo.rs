@@ -1,0 +1,146 @@
+//! The model zoo: the paper's three evaluation models (§6.3) plus the MLP
+//! used for real local training.
+//!
+//! VGG16 uses the exact published layer table (138,357,544 parameters).
+//! EfficientNet-B7 and InceptionV4 use representative per-stage layer
+//! tables normalized to the published totals (66.3M / 42.7M) — aggregation
+//! only sees flattened per-layer vectors, so stage-level granularity is
+//! faithful for everything this system measures (update size, fusion time,
+//! transfer time).
+
+use super::ModelSpec;
+
+/// VGG16 (Simonyan & Zisserman) — exact layer table, 138,357,544 params.
+pub fn vgg16() -> ModelSpec {
+    ModelSpec::new(
+        "vgg16",
+        vec![
+            ("conv1_1", 1_792),
+            ("conv1_2", 36_928),
+            ("conv2_1", 73_856),
+            ("conv2_2", 147_584),
+            ("conv3_1", 295_168),
+            ("conv3_2", 590_080),
+            ("conv3_3", 590_080),
+            ("conv4_1", 1_180_160),
+            ("conv4_2", 2_359_808),
+            ("conv4_3", 2_359_808),
+            ("conv5_1", 2_359_808),
+            ("conv5_2", 2_359_808),
+            ("conv5_3", 2_359_808),
+            ("fc6", 102_764_544),
+            ("fc7", 16_781_312),
+            ("fc8", 4_097_000),
+        ],
+    )
+}
+
+/// EfficientNet-B7 — stage-level table normalized to 66,347,960 params.
+pub fn efficientnet_b7() -> ModelSpec {
+    ModelSpec::new(
+        "efficientnet-b7",
+        vec![
+            ("stem", 186_000),
+            ("block1", 1_320_000),
+            ("block2", 3_100_000),
+            ("block3", 5_440_000),
+            ("block4", 9_660_000),
+            ("block5", 13_240_000),
+            ("block6", 18_900_000),
+            ("block7", 9_200_000),
+            ("head_conv", 2_560_000),
+            ("classifier", 2_741_960),
+        ],
+    )
+}
+
+/// InceptionV4 — stage-level table normalized to 42,679,816 params.
+pub fn inception_v4() -> ModelSpec {
+    ModelSpec::new(
+        "inception-v4",
+        vec![
+            ("stem", 1_050_000),
+            ("inception_a", 3_310_000),
+            ("reduction_a", 2_630_000),
+            ("inception_b", 12_300_000),
+            ("reduction_b", 3_770_000),
+            ("inception_c", 16_400_000),
+            ("avgpool_dropout", 0),
+            ("classifier", 3_219_816),
+        ],
+    )
+}
+
+/// The MLP trained for real in the end-to-end example. Mirrors
+/// `python/compile/model.py::param_shapes` (i=64, h=256, c=10).
+pub fn mlp(i: usize, h: usize, c: usize) -> ModelSpec {
+    ModelSpec::new(
+        "mlp",
+        vec![
+            ("w1", i * h),
+            ("b1", h),
+            ("w2", h * h),
+            ("b2", h),
+            ("w3", h * c),
+            ("b3", c),
+        ],
+    )
+}
+
+/// Default MLP matching the AOT artifacts.
+pub fn mlp_default() -> ModelSpec {
+    mlp(64, 256, 10)
+}
+
+/// Look up a zoo model by name (CLI/bench parameter).
+pub fn by_name(name: &str) -> Option<ModelSpec> {
+    match name {
+        "vgg16" => Some(vgg16()),
+        "efficientnet-b7" | "effnet-b7" | "efficientnet" => Some(efficientnet_b7()),
+        "inception-v4" | "inceptionv4" => Some(inception_v4()),
+        "mlp" => Some(mlp_default()),
+        _ => None,
+    }
+}
+
+pub fn all_names() -> &'static [&'static str] {
+    &["efficientnet-b7", "vgg16", "inception-v4", "mlp"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_exact_total() {
+        assert_eq!(vgg16().total_params(), 138_357_544);
+    }
+
+    #[test]
+    fn effnet_total_matches_published() {
+        assert_eq!(efficientnet_b7().total_params(), 66_347_960);
+    }
+
+    #[test]
+    fn inception_total_matches_published() {
+        assert_eq!(inception_v4().total_params(), 42_679_816);
+    }
+
+    #[test]
+    fn mlp_matches_python_param_shapes() {
+        let m = mlp_default();
+        let (i, h, c) = (64, 256, 10);
+        assert_eq!(m.total_params(), i * h + h + h * h + h + h * c + c);
+        assert_eq!(m.layers.len(), 6);
+        assert_eq!(m.layers[0].name, "w1");
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        for n in all_names() {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+        assert!(by_name("resnet-9000").is_none());
+        assert_eq!(by_name("effnet-b7").unwrap().name, "efficientnet-b7");
+    }
+}

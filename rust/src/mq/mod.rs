@@ -1,0 +1,293 @@
+//! Message queue substrate (Kafka stand-in).
+//!
+//! All dynamic aggregation strategies (§3) require model updates to be
+//! "buffered somewhere in the datacenter, e.g., a message queue like Kafka
+//! or a cloud object store". This module provides that buffer:
+//!
+//! * append-only **topics** with monotone offsets,
+//! * **consumer groups** with committed offsets (an aggregator deployment
+//!   resumes exactly where the previous one left off),
+//! * **checkpoint slots** for partially aggregated state — §5.5: "lower
+//!   priority aggregators are preempted by checkpointing partially
+//!   aggregated model updates using the message queue".
+//!
+//! Payloads either carry real update data inline / by object-store
+//! reference (live mode) or just a byte size (simulated mode); the queue
+//! semantics are identical in both.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::sim::Time;
+
+/// What a message carries.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// Live mode: flattened update inline.
+    Inline(Vec<f32>),
+    /// Live mode: key into the ObjectStore.
+    Ref(String),
+    /// Sim mode: only the size matters (transfer-time accounting).
+    Sim { size_bytes: u64 },
+}
+
+impl Payload {
+    pub fn size_bytes(&self) -> u64 {
+        match self {
+            Payload::Inline(v) => (v.len() * 4) as u64,
+            Payload::Ref(_) => 0,
+            Payload::Sim { size_bytes } => *size_bytes,
+        }
+    }
+}
+
+/// A model-update (or checkpoint) message.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Message {
+    /// Producing party (or aggregator id for checkpoints).
+    pub party: usize,
+    /// FL synchronization round.
+    pub round: u32,
+    /// Aggregation weight (= #samples at the party for FedAvg/FedProx).
+    pub weight: f32,
+    /// Enqueue timestamp (virtual or wall).
+    pub enqueued_at: Time,
+    pub payload: Payload,
+}
+
+#[derive(Debug, Default)]
+struct Topic {
+    log: Vec<Message>,
+    /// committed offset per consumer group
+    commits: BTreeMap<String, usize>,
+}
+
+/// The queue. Cheap to share behind `&` thanks to interior mutability.
+#[derive(Debug, Default)]
+pub struct MessageQueue {
+    topics: Mutex<BTreeMap<String, Topic>>,
+    /// Checkpoint slots: job/round keyed partial aggregates (latest wins).
+    checkpoints: Mutex<BTreeMap<String, CheckpointState>>,
+}
+
+/// A partially aggregated state parked by a preempted aggregator (§5.5).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointState {
+    /// Weighted-mean accumulator (live mode) or None in sim mode.
+    pub acc: Option<Vec<f32>>,
+    /// Total weight folded into the accumulator so far.
+    pub weight: f32,
+    /// Number of updates folded in.
+    pub n_merged: usize,
+    /// Offset in the update topic up to which merging is complete.
+    pub consumed_to: usize,
+    pub saved_at: Time,
+}
+
+impl MessageQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a message; returns its offset.
+    pub fn produce(&self, topic: &str, msg: Message) -> usize {
+        let mut topics = self.topics.lock().unwrap();
+        let t = topics.entry(topic.to_string()).or_default();
+        t.log.push(msg);
+        t.log.len() - 1
+    }
+
+    /// Messages in [from, to) — non-consuming read.
+    pub fn fetch(&self, topic: &str, from: usize, max: usize) -> Vec<Message> {
+        let topics = self.topics.lock().unwrap();
+        match topics.get(topic) {
+            None => Vec::new(),
+            Some(t) => t.log.iter().skip(from).take(max).cloned().collect(),
+        }
+    }
+
+    /// End offset (= number of messages produced so far).
+    pub fn end_offset(&self, topic: &str) -> usize {
+        self.topics
+            .lock()
+            .unwrap()
+            .get(topic)
+            .map(|t| t.log.len())
+            .unwrap_or(0)
+    }
+
+    /// Committed offset of a consumer group (0 if never committed).
+    pub fn committed(&self, topic: &str, group: &str) -> usize {
+        self.topics
+            .lock()
+            .unwrap()
+            .get(topic)
+            .and_then(|t| t.commits.get(group).copied())
+            .unwrap_or(0)
+    }
+
+    /// Commit a consumer-group offset. Offsets are monotone: committing
+    /// backwards is a no-op (idempotent redelivery semantics).
+    pub fn commit(&self, topic: &str, group: &str, offset: usize) {
+        let mut topics = self.topics.lock().unwrap();
+        let t = topics.entry(topic.to_string()).or_default();
+        let e = t.commits.entry(group.to_string()).or_insert(0);
+        if offset > *e {
+            *e = offset;
+        }
+    }
+
+    /// Uncommitted backlog for a group.
+    pub fn backlog(&self, topic: &str, group: &str) -> usize {
+        self.end_offset(topic) - self.committed(topic, group)
+    }
+
+    // ------------------------------------------------------------------
+    // checkpoint slots
+    // ------------------------------------------------------------------
+
+    pub fn save_checkpoint(&self, slot: &str, state: CheckpointState) {
+        self.checkpoints
+            .lock()
+            .unwrap()
+            .insert(slot.to_string(), state);
+    }
+
+    pub fn load_checkpoint(&self, slot: &str) -> Option<CheckpointState> {
+        self.checkpoints.lock().unwrap().get(slot).cloned()
+    }
+
+    pub fn clear_checkpoint(&self, slot: &str) -> bool {
+        self.checkpoints.lock().unwrap().remove(slot).is_some()
+    }
+
+    /// Total bytes resident across topics (capacity accounting).
+    pub fn resident_bytes(&self) -> u64 {
+        let topics = self.topics.lock().unwrap();
+        topics
+            .values()
+            .flat_map(|t| t.log.iter())
+            .map(|m| m.payload.size_bytes())
+            .sum()
+    }
+
+    /// Drop a whole topic (round GC after aggregation completes).
+    pub fn drop_topic(&self, topic: &str) -> usize {
+        self.topics
+            .lock()
+            .unwrap()
+            .remove(topic)
+            .map(|t| t.log.len())
+            .unwrap_or(0)
+    }
+}
+
+/// Conventional topic name for a job's round updates.
+pub fn update_topic(job: usize, round: u32) -> String {
+    format!("job{job}/round{round}/updates")
+}
+
+/// Conventional checkpoint slot for a job's round.
+pub fn checkpoint_slot(job: usize, round: u32) -> String {
+    format!("job{job}/round{round}/ckpt")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msg(party: usize, round: u32) -> Message {
+        Message {
+            party,
+            round,
+            weight: 1.0,
+            enqueued_at: 0,
+            payload: Payload::Sim { size_bytes: 100 },
+        }
+    }
+
+    #[test]
+    fn offsets_monotone() {
+        let q = MessageQueue::new();
+        assert_eq!(q.produce("t", msg(0, 0)), 0);
+        assert_eq!(q.produce("t", msg(1, 0)), 1);
+        assert_eq!(q.end_offset("t"), 2);
+    }
+
+    #[test]
+    fn fetch_window() {
+        let q = MessageQueue::new();
+        for p in 0..5 {
+            q.produce("t", msg(p, 0));
+        }
+        let w = q.fetch("t", 1, 2);
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[0].party, 1);
+        assert_eq!(w[1].party, 2);
+        assert!(q.fetch("t", 10, 5).is_empty());
+        assert!(q.fetch("missing", 0, 5).is_empty());
+    }
+
+    #[test]
+    fn consumer_group_commit_and_backlog() {
+        let q = MessageQueue::new();
+        for p in 0..4 {
+            q.produce("t", msg(p, 0));
+        }
+        assert_eq!(q.backlog("t", "agg"), 4);
+        q.commit("t", "agg", 3);
+        assert_eq!(q.committed("t", "agg"), 3);
+        assert_eq!(q.backlog("t", "agg"), 1);
+        // backwards commit ignored
+        q.commit("t", "agg", 1);
+        assert_eq!(q.committed("t", "agg"), 3);
+        // independent group
+        assert_eq!(q.backlog("t", "other"), 4);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let q = MessageQueue::new();
+        let slot = checkpoint_slot(3, 7);
+        assert!(q.load_checkpoint(&slot).is_none());
+        q.save_checkpoint(
+            &slot,
+            CheckpointState {
+                acc: Some(vec![1.0, 2.0]),
+                weight: 5.0,
+                n_merged: 3,
+                consumed_to: 3,
+                saved_at: 123,
+            },
+        );
+        let st = q.load_checkpoint(&slot).unwrap();
+        assert_eq!(st.n_merged, 3);
+        assert_eq!(st.acc.as_ref().unwrap().len(), 2);
+        assert!(q.clear_checkpoint(&slot));
+        assert!(!q.clear_checkpoint(&slot));
+    }
+
+    #[test]
+    fn resident_bytes_and_gc() {
+        let q = MessageQueue::new();
+        for p in 0..10 {
+            q.produce("a", msg(p, 0));
+        }
+        q.produce(
+            "b",
+            Message {
+                payload: Payload::Inline(vec![0.0; 25]),
+                ..msg(0, 0)
+            },
+        );
+        assert_eq!(q.resident_bytes(), 10 * 100 + 100);
+        assert_eq!(q.drop_topic("a"), 10);
+        assert_eq!(q.resident_bytes(), 100);
+    }
+
+    #[test]
+    fn topic_naming() {
+        assert_eq!(update_topic(2, 5), "job2/round5/updates");
+        assert_eq!(checkpoint_slot(2, 5), "job2/round5/ckpt");
+    }
+}

@@ -1,0 +1,398 @@
+//! Party emulation: who trains, on what, and when updates arrive.
+//!
+//! §6.1: "Parties were emulated, and distributed over four datacenters …
+//! We actually had parties running training to emulate realistic federated
+//! learning." This module is that emulation layer:
+//!
+//! * [`HardwareProfile`] / [`PartyProfile`] — heterogeneity (§2.3): vCPU
+//!   count (1 or 2) and RAM (2/4/6/8 GB) drawn randomly for heterogeneous
+//!   fleets, equal slices for homogeneous ones; dataset sizes are non-IID.
+//! * [`Fleet::arrival_offsets`] — per-round update arrival times: active
+//!   parties are *periodic* (epoch time × small lognormal jitter + transfer
+//!   time, §4.1/§4.3); intermittent parties draw uniformly within the
+//!   `t_wait` window (§6.3 "random update scheme").
+//! * [`PartyInfo`] extraction — what each party reports to the estimator
+//!   (§5.2), with a reporting-probability knob to exercise the regression
+//!   fallback path.
+//!
+//! Real training (the end-to-end example) lives in `coordinator::live`,
+//! which drives `runtime::Trainer` per party thread; this module supplies
+//! its data partitions via [`synth_party_dataset`].
+
+use crate::estimator::{Mode, PartyInfo};
+use crate::sim::Time;
+use crate::util::rng::Rng;
+
+/// Party compute capability.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HardwareProfile {
+    pub vcpus: u32,
+    pub ram_gb: u32,
+    /// Normalized speed multiplier (1.0 = the homogeneous baseline).
+    pub speed: f64,
+}
+
+impl HardwareProfile {
+    pub fn score(&self) -> f64 {
+        self.vcpus as f64 * self.speed
+    }
+}
+
+/// Fleet composition (§6.3 experiment axes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FleetKind {
+    ActiveHomogeneous,
+    ActiveHeterogeneous,
+    IntermittentHeterogeneous,
+}
+
+impl FleetKind {
+    pub fn parse(s: &str) -> Option<FleetKind> {
+        match s {
+            "active-homog" | "active-homogeneous" => Some(FleetKind::ActiveHomogeneous),
+            "active-hetero" | "active-heterogeneous" => Some(FleetKind::ActiveHeterogeneous),
+            "intermittent" | "intermittent-heterogeneous" => {
+                Some(FleetKind::IntermittentHeterogeneous)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FleetKind::ActiveHomogeneous => "active-homog",
+            FleetKind::ActiveHeterogeneous => "active-hetero",
+            FleetKind::IntermittentHeterogeneous => "intermittent-hetero",
+        }
+    }
+
+    pub fn mode(&self) -> Mode {
+        match self {
+            FleetKind::IntermittentHeterogeneous => Mode::Intermittent,
+            _ => Mode::Active,
+        }
+    }
+}
+
+/// One emulated party.
+#[derive(Clone, Debug)]
+pub struct PartyProfile {
+    pub id: usize,
+    pub mode: Mode,
+    pub hardware: HardwareProfile,
+    /// Local dataset size (items); non-IID across the fleet.
+    pub dataset_items: f64,
+    /// True mean epoch time (seconds) — ground truth the estimator tries
+    /// to predict.
+    pub epoch_secs: f64,
+    /// Round-to-round jitter (lognormal sigma) on the epoch time.
+    pub jitter_sigma: f64,
+    /// Party↔aggregator bandwidths, bytes/s.
+    pub bw_up: f64,
+    pub bw_down: f64,
+}
+
+impl PartyProfile {
+    /// Transfer time for a model of `model_bytes` (down + up, §5.3).
+    pub fn comm_secs(&self, model_bytes: u64) -> f64 {
+        model_bytes as f64 / self.bw_down + model_bytes as f64 / self.bw_up
+    }
+
+    /// Draw the actual update arrival offset for one round.
+    pub fn draw_arrival(&self, model_bytes: u64, t_wait: f64, rng: &mut Rng) -> f64 {
+        match self.mode {
+            Mode::Active => {
+                let train = self.epoch_secs * rng.lognormal(0.0, self.jitter_sigma);
+                train + self.comm_secs(model_bytes)
+            }
+            // §6.3: "each participant would send their model update at a
+            // random time" within the allotted round window.
+            Mode::Intermittent => {
+                rng.range_f64(0.05, 0.98) * t_wait
+            }
+        }
+    }
+
+    /// What this party reports to the platform (§5.2). With probability
+    /// `1 - report_prob` the timing fields are withheld, exercising the
+    /// linear-regression fallback of §5.3.
+    pub fn info(&self, report_prob: f64, rng: &mut Rng) -> PartyInfo {
+        let reports = rng.bool(report_prob);
+        PartyInfo {
+            mode: self.mode,
+            t_epoch: if reports { Some(self.epoch_secs) } else { None },
+            t_minibatch: if reports {
+                Some(self.epoch_secs / (self.dataset_items / 32.0).max(1.0))
+            } else {
+                None
+            },
+            dataset_items: Some(self.dataset_items),
+            hw_score: Some(self.hardware.score()),
+            bw_up: self.bw_up,
+            bw_down: self.bw_down,
+        }
+    }
+}
+
+/// A job's whole fleet.
+#[derive(Clone, Debug)]
+pub struct Fleet {
+    pub kind: FleetKind,
+    pub parties: Vec<PartyProfile>,
+}
+
+/// Generation parameters tying a fleet to a workload's timing scale.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetParams {
+    /// Mean epoch time on baseline hardware with the mean data slice.
+    pub base_epoch_secs: f64,
+    /// Lognormal jitter sigma on per-round epoch times (periodicity noise;
+    /// Fig 3 shows this is small in practice).
+    pub jitter_sigma: f64,
+    /// Party↔DC bandwidth range, bytes/s (4 emulated datacenters).
+    pub bw_lo: f64,
+    pub bw_hi: f64,
+}
+
+impl Default for FleetParams {
+    fn default() -> Self {
+        FleetParams {
+            base_epoch_secs: 30.0,
+            jitter_sigma: 0.015,
+            bw_lo: 40e6,
+            bw_hi: 120e6,
+        }
+    }
+}
+
+impl Fleet {
+    /// Generate a fleet per §6.3: homogeneous = equal 2-vCPU parties and
+    /// equal non-IID slices; heterogeneous = 1-or-2 vCPUs, 2/4/6/8 GB RAM,
+    /// Dirichlet-skewed dataset sizes.
+    pub fn generate(kind: FleetKind, n: usize, params: FleetParams, rng: &mut Rng) -> Fleet {
+        let hetero = kind != FleetKind::ActiveHomogeneous;
+        let mode = kind.mode();
+        // Dataset shares: equal for homogeneous, Dirichlet(2.0) for
+        // heterogeneous (moderate skew — every party still has data).
+        let shares: Vec<f64> = if hetero {
+            rng.dirichlet(2.0, n)
+        } else {
+            vec![1.0 / n as f64; n]
+        };
+        let parties = (0..n)
+            .map(|id| {
+                let hardware = if hetero {
+                    let vcpus = if rng.bool(0.5) { 1 } else { 2 };
+                    let ram_gb = *rng.choose(&[2u32, 4, 6, 8]);
+                    HardwareProfile {
+                        vcpus,
+                        ram_gb,
+                        speed: (vcpus as f64 / 2.0) * rng.range_f64(0.85, 1.15),
+                    }
+                } else {
+                    HardwareProfile {
+                        vcpus: 2,
+                        ram_gb: 4,
+                        speed: 1.0,
+                    }
+                };
+                // epoch time scales with data share (linearity, §4.2) and
+                // inversely with hardware speed
+                let rel_data = shares[id] * n as f64;
+                let epoch_secs = params.base_epoch_secs * rel_data / hardware.speed;
+                let bw = rng.range_f64(params.bw_lo, params.bw_hi);
+                PartyProfile {
+                    id,
+                    mode,
+                    hardware,
+                    dataset_items: 320.0 * rel_data,
+                    epoch_secs,
+                    jitter_sigma: params.jitter_sigma,
+                    bw_up: bw,
+                    bw_down: bw * rng.range_f64(1.0, 2.0),
+                }
+            })
+            .collect();
+        Fleet { kind, parties }
+    }
+
+    pub fn len(&self) -> usize {
+        self.parties.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parties.is_empty()
+    }
+
+    /// Actual arrival offsets (micros from round start) for one round.
+    pub fn arrival_offsets(&self, model_bytes: u64, t_wait: f64, rng: &mut Rng) -> Vec<Time> {
+        self.parties
+            .iter()
+            .map(|p| crate::sim::secs(p.draw_arrival(model_bytes, t_wait, rng)))
+            .collect()
+    }
+
+    /// PartyInfos for the estimator.
+    pub fn infos(&self, report_prob: f64, rng: &mut Rng) -> Vec<PartyInfo> {
+        self.parties.iter().map(|p| p.info(report_prob, rng)).collect()
+    }
+}
+
+/// Synthetic non-IID classification shard for *real* training parties:
+/// class prototypes + Gaussian noise, labels drawn from a per-party
+/// Dirichlet distribution (the standard label-skew construction).
+/// Returns (x, y_onehot) with x: [items×in_dim], y: [items×classes].
+pub fn synth_party_dataset(
+    party: usize,
+    items: usize,
+    in_dim: usize,
+    classes: usize,
+    alpha: f64,
+    seed: u64,
+) -> (Vec<f32>, Vec<f32>) {
+    // Shared prototypes across all parties (same underlying task).
+    let mut proto_rng = Rng::new(seed);
+    let protos: Vec<Vec<f32>> = (0..classes)
+        .map(|_| (0..in_dim).map(|_| proto_rng.normal() as f32).collect())
+        .collect();
+    let mut rng = Rng::new(seed ^ (party as u64).wrapping_mul(0x9E3779B97F4A7C15));
+    let label_dist = rng.dirichlet(alpha, classes);
+    // cumulative for sampling
+    let mut cdf = vec![0.0; classes];
+    let mut acc = 0.0;
+    for (i, p) in label_dist.iter().enumerate() {
+        acc += p;
+        cdf[i] = acc;
+    }
+    let mut x = Vec::with_capacity(items * in_dim);
+    let mut y = vec![0.0f32; items * classes];
+    for i in 0..items {
+        let u = rng.f64();
+        let label = cdf.iter().position(|&c| u <= c).unwrap_or(classes - 1);
+        for d in 0..in_dim {
+            x.push(protos[label][d] + 0.35 * rng.normal() as f32);
+        }
+        y[i * classes + label] = 1.0;
+    }
+    (x, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn homogeneous_fleet_is_uniform() {
+        let mut rng = Rng::new(1);
+        let f = Fleet::generate(
+            FleetKind::ActiveHomogeneous,
+            16,
+            FleetParams::default(),
+            &mut rng,
+        );
+        assert_eq!(f.len(), 16);
+        for p in &f.parties {
+            assert_eq!(p.hardware.vcpus, 2);
+            assert!((p.epoch_secs - 30.0).abs() < 1e-9);
+            assert_eq!(p.mode, Mode::Active);
+        }
+    }
+
+    #[test]
+    fn heterogeneous_fleet_varies() {
+        let mut rng = Rng::new(2);
+        let f = Fleet::generate(
+            FleetKind::ActiveHeterogeneous,
+            64,
+            FleetParams::default(),
+            &mut rng,
+        );
+        let vcpus: std::collections::BTreeSet<u32> =
+            f.parties.iter().map(|p| p.hardware.vcpus).collect();
+        assert_eq!(vcpus, [1u32, 2].into_iter().collect());
+        let epochs: Vec<f64> = f.parties.iter().map(|p| p.epoch_secs).collect();
+        let s = crate::util::stats::Summary::of(&epochs);
+        assert!(s.cv() > 0.2, "heterogeneous fleet should spread, cv={}", s.cv());
+        // data shares sum to the fleet total
+        let total: f64 = f.parties.iter().map(|p| p.dataset_items).sum();
+        assert!((total - 320.0 * 64.0).abs() / total < 1e-9);
+    }
+
+    #[test]
+    fn active_arrivals_track_epoch_time() {
+        let mut rng = Rng::new(3);
+        let f = Fleet::generate(
+            FleetKind::ActiveHomogeneous,
+            8,
+            FleetParams::default(),
+            &mut rng,
+        );
+        let offs = f.arrival_offsets(100_000_000, 600.0, &mut rng);
+        for (&t, p) in offs.iter().zip(&f.parties) {
+            let secs = crate::sim::to_secs(t);
+            let expect = p.epoch_secs + p.comm_secs(100_000_000);
+            assert!(
+                (secs - expect).abs() / expect < 0.1,
+                "arrival {secs} vs expected {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn intermittent_arrivals_fill_window() {
+        let mut rng = Rng::new(4);
+        let f = Fleet::generate(
+            FleetKind::IntermittentHeterogeneous,
+            200,
+            FleetParams::default(),
+            &mut rng,
+        );
+        let offs = f.arrival_offsets(1_000_000, 600.0, &mut rng);
+        let secs: Vec<f64> = offs.iter().map(|&t| crate::sim::to_secs(t)).collect();
+        let min = secs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = secs.iter().cloned().fold(0.0, f64::max);
+        assert!(min >= 0.0 && max <= 600.0);
+        assert!(max - min > 300.0, "arrivals should spread over the window");
+    }
+
+    #[test]
+    fn report_prob_controls_fallback_path() {
+        let mut rng = Rng::new(5);
+        let f = Fleet::generate(
+            FleetKind::ActiveHeterogeneous,
+            100,
+            FleetParams::default(),
+            &mut rng,
+        );
+        let full = f.infos(1.0, &mut rng);
+        assert!(full.iter().all(|i| i.t_epoch.is_some()));
+        let none = f.infos(0.0, &mut rng);
+        assert!(none.iter().all(|i| i.t_epoch.is_none()));
+        assert!(none.iter().all(|i| i.hw_score.is_some()));
+    }
+
+    #[test]
+    fn synth_dataset_shapes_and_skew() {
+        let (x, y) = synth_party_dataset(3, 128, 64, 10, 0.3, 42);
+        assert_eq!(x.len(), 128 * 64);
+        assert_eq!(y.len(), 128 * 10);
+        // one-hot rows
+        for i in 0..128 {
+            let row = &y[i * 10..(i + 1) * 10];
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        }
+        // low alpha -> skewed labels
+        let mut counts = [0usize; 10];
+        for i in 0..128 {
+            let label = y[i * 10..(i + 1) * 10].iter().position(|&v| v == 1.0).unwrap();
+            counts[label] += 1;
+        }
+        let max = *counts.iter().max().unwrap();
+        assert!(max > 25, "expected label skew, counts={counts:?}");
+        // deterministic per (party, seed)
+        let (x2, _) = synth_party_dataset(3, 128, 64, 10, 0.3, 42);
+        assert_eq!(x, x2);
+        let (x3, _) = synth_party_dataset(4, 128, 64, 10, 0.3, 42);
+        assert_ne!(x, x3);
+    }
+}

@@ -1,0 +1,488 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! The bridge between L3 (this crate) and the build-time L1/L2 python
+//! layers. `make artifacts` writes `artifacts/*.hlo.txt` plus
+//! `manifest.json`; this module loads the manifest, compiles each entry on
+//! the PJRT CPU client on first use, and exposes typed call helpers:
+//!
+//! * [`XlaFusion`] — model-update fusion through the Pallas-kernel-bearing
+//!   artifacts (`pair_merge_*`, `fuse_k*`, `fedprox_*`), chunking arbitrary
+//!   model sizes over the fixed artifact shapes;
+//! * [`Trainer`] — real local training for emulated parties
+//!   (`train_step_*`, `train_epoch_*`, `eval_*`).
+//!
+//! HLO **text** is the interchange format (not serialized protos): jax≥0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids. See python/compile/aot.py and
+//! /opt/xla-example/README.md.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One artifact's manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    /// Input dims (all f32).
+    pub inputs: Vec<Vec<usize>>,
+    pub n_outputs: usize,
+    pub meta: Json,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let mut artifacts = Vec::new();
+        for e in v.get("artifacts").as_arr().unwrap_or(&[]) {
+            let inputs = e
+                .get("inputs")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|i| {
+                    i.get("dims")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|d| d.as_usize())
+                        .collect()
+                })
+                .collect();
+            artifacts.push(ArtifactInfo {
+                name: e.get("name").as_str().unwrap_or_default().to_string(),
+                file: e.get("file").as_str().unwrap_or_default().to_string(),
+                inputs,
+                n_outputs: e.get("n_outputs").as_usize().unwrap_or(1),
+                meta: e.get("meta").clone(),
+            });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest has no artifacts");
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+/// Locate the artifacts directory: $FLJIT_ARTIFACTS, ./artifacts, or
+/// relative to the crate root.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("FLJIT_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    for cand in ["artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")] {
+        let p = PathBuf::from(cand);
+        if p.join("manifest.json").exists() {
+            return p;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+/// PJRT CPU runtime with a lazily compiled executable cache.
+///
+/// Not `Send`: PJRT client handles are thread-local by construction here;
+/// each live-party thread builds its own `Runtime`.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    exes: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        // Quiet the TfrtCpuClient created/destroyed info lines unless the
+        // user asked for them.
+        if std::env::var("TF_CPP_MIN_LOG_LEVEL").is_err() {
+            std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+        }
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            exes: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn with_default_dir() -> Result<Runtime> {
+        Self::new(&default_artifact_dir())
+    }
+
+    fn executable(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exes.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let info = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+        let path = self.dir.join(&info.file);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| anyhow!("parse HLO {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let rc = std::rc::Rc::new(exe);
+        self.exes.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Execute `name` on literals; returns the decomposed output tuple.
+    pub fn call(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let info = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+        if args.len() != info.inputs.len() {
+            bail!(
+                "artifact '{name}' expects {} inputs, got {}",
+                info.inputs.len(),
+                args.len()
+            );
+        }
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let mut lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {name}: {e:?}"))?;
+        let parts = lit
+            .decompose_tuple()
+            .map_err(|e| anyhow!("decompose result of {name}: {e:?}"))?;
+        if parts.len() != info.n_outputs {
+            bail!(
+                "artifact '{name}': expected {} outputs, got {}",
+                info.n_outputs,
+                parts.len()
+            );
+        }
+        Ok(parts)
+    }
+
+    /// Build an f32 literal of the given shape.
+    pub fn literal(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+        let numel: usize = dims.iter().product();
+        if numel != data.len() {
+            bail!("literal shape {:?} != data len {}", dims, data.len());
+        }
+        let flat = xla::Literal::vec1(data);
+        if dims.len() == 1 {
+            return Ok(flat);
+        }
+        let dims_i64: Vec<i64> = dims.iter().map(|d| *d as i64).collect();
+        flat.reshape(&dims_i64)
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+
+    pub fn to_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fusion through the artifacts
+// ---------------------------------------------------------------------------
+
+/// XLA-backed fusion: the request-path compute of the aggregator, running
+/// the Pallas-kernel artifacts. Mirrors `fusion::` pure-Rust math; the
+/// integration tests pin both to agree.
+pub struct XlaFusion<'r> {
+    rt: &'r Runtime,
+    /// Chunk width — must match a `pair_merge_d{D}` / `fuse_k{K}_d{D}` pair.
+    pub chunk: usize,
+    pub k: usize,
+}
+
+impl<'r> XlaFusion<'r> {
+    pub fn new(rt: &'r Runtime) -> XlaFusion<'r> {
+        XlaFusion {
+            rt,
+            chunk: 65536,
+            k: 8,
+        }
+    }
+
+    fn pair_name(&self) -> String {
+        format!("pair_merge_d{}", self.chunk)
+    }
+
+    fn fuse_name(&self) -> String {
+        format!("fuse_k{}_d{}", self.k, self.chunk)
+    }
+
+    /// acc ← weighted mean of (acc, w_acc) and (upd, w_upd), chunked.
+    pub fn pair_merge(&self, acc: &mut [f32], w_acc: f32, upd: &[f32], w_upd: f32) -> Result<()> {
+        anyhow::ensure!(acc.len() == upd.len(), "length mismatch");
+        let name = self.pair_name();
+        let d = self.chunk;
+        let wa = xla::Literal::vec1(&[w_acc]);
+        let wb = xla::Literal::vec1(&[w_upd]);
+        let mut off = 0;
+        while off < acc.len() {
+            let end = (off + d).min(acc.len());
+            let mut a_chunk = vec![0.0f32; d];
+            let mut b_chunk = vec![0.0f32; d];
+            a_chunk[..end - off].copy_from_slice(&acc[off..end]);
+            b_chunk[..end - off].copy_from_slice(&upd[off..end]);
+            let out = self.rt.call(
+                &name,
+                &[
+                    Runtime::literal(&a_chunk, &[d])?,
+                    Runtime::literal(&b_chunk, &[d])?,
+                    wa.reshape(&[1]).map_err(|e| anyhow!("{e:?}"))?,
+                    wb.reshape(&[1]).map_err(|e| anyhow!("{e:?}"))?,
+                ],
+            )?;
+            let merged = Runtime::to_vec(&out[0])?;
+            acc[off..end].copy_from_slice(&merged[..end - off]);
+            off = end;
+        }
+        Ok(())
+    }
+
+    /// Weighted mean over arbitrary K and D by grouping rows in `k`-blocks
+    /// (zero-weight padding) and recursing on the partial means.
+    pub fn weighted_mean(&self, updates: &[&[f32]], w: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(!updates.is_empty(), "no updates");
+        anyhow::ensure!(updates.len() == w.len(), "weights mismatch");
+        if updates.len() == 1 {
+            return Ok(updates[0].to_vec());
+        }
+        let dim = updates[0].len();
+        let mut groups: Vec<(Vec<f32>, f32)> = Vec::new();
+        for (chunk_rows, chunk_w) in updates.chunks(self.k).zip(w.chunks(self.k)) {
+            let mean = self.fuse_group(chunk_rows, chunk_w, dim)?;
+            groups.push((mean, chunk_w.iter().sum()));
+        }
+        if groups.len() == 1 {
+            return Ok(groups.pop().unwrap().0);
+        }
+        let views: Vec<&[f32]> = groups.iter().map(|(g, _)| g.as_slice()).collect();
+        let ws: Vec<f32> = groups.iter().map(|(_, w)| *w).collect();
+        self.weighted_mean(&views, &ws)
+    }
+
+    /// One fuse_k call per D-chunk for ≤ k rows.
+    fn fuse_group(&self, rows: &[&[f32]], w: &[f32], dim: usize) -> Result<Vec<f32>> {
+        let name = self.fuse_name();
+        let k = self.k;
+        let d = self.chunk;
+        let mut wk = vec![0.0f32; k];
+        wk[..w.len()].copy_from_slice(w);
+        let w_lit = Runtime::literal(&wk, &[k])?;
+        let mut out = vec![0.0f32; dim];
+        let mut off = 0;
+        while off < dim {
+            let end = (off + d).min(dim);
+            // pack (k, d) slab, zero-padded
+            let mut slab = vec![0.0f32; k * d];
+            for (r, row) in rows.iter().enumerate() {
+                slab[r * d..r * d + (end - off)].copy_from_slice(&row[off..end]);
+            }
+            let res = self.rt.call(
+                &name,
+                &[Runtime::literal(&slab, &[k, d])?, w_lit.reshape(&[k as i64]).map_err(|e| anyhow!("{e:?}"))?],
+            )?;
+            let mean = Runtime::to_vec(&res[0])?;
+            out[off..end].copy_from_slice(&mean[..end - off]);
+            off = end;
+        }
+        Ok(out)
+    }
+
+    /// FedProx merge via the `fedprox_k{K}_d{D}` artifact (single group) or
+    /// weighted_mean + host-side pull for larger fan-in.
+    pub fn fedprox(&self, updates: &[&[f32]], w: &[f32], global: &[f32], mu: f32) -> Result<Vec<f32>> {
+        let mut mean = self.weighted_mean(updates, w)?;
+        for (m, &g) in mean.iter_mut().zip(global.iter()) {
+            *m = (1.0 - mu) * *m + mu * g;
+        }
+        Ok(mean)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// real local training (party substrate)
+// ---------------------------------------------------------------------------
+
+/// MLP dimensions baked into the training artifacts.
+pub const MLP_IN: usize = 64;
+pub const MLP_HIDDEN: usize = 256;
+pub const MLP_CLASSES: usize = 10;
+
+/// Parameter shapes in artifact order (mirrors python param_shapes()).
+pub fn mlp_param_dims() -> Vec<Vec<usize>> {
+    vec![
+        vec![MLP_IN, MLP_HIDDEN],
+        vec![MLP_HIDDEN],
+        vec![MLP_HIDDEN, MLP_HIDDEN],
+        vec![MLP_HIDDEN],
+        vec![MLP_HIDDEN, MLP_CLASSES],
+        vec![MLP_CLASSES],
+    ]
+}
+
+/// Real training session over the AOT train artifacts.
+pub struct Trainer<'r> {
+    rt: &'r Runtime,
+    /// Current parameters, flattened per tensor.
+    pub params: Vec<Vec<f32>>,
+}
+
+impl<'r> Trainer<'r> {
+    /// He-initialized parameters from a seed (host-side init keeps the
+    /// artifacts purely functional).
+    pub fn init(rt: &'r Runtime, seed: u64) -> Trainer<'r> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let params = mlp_param_dims()
+            .iter()
+            .map(|dims| {
+                let numel: usize = dims.iter().product();
+                if dims.len() == 2 {
+                    let scale = (2.0 / dims[0] as f64).sqrt();
+                    (0..numel).map(|_| (rng.normal() * scale) as f32).collect()
+                } else {
+                    vec![0.0f32; numel]
+                }
+            })
+            .collect();
+        Trainer { rt, params }
+    }
+
+    pub fn from_params(rt: &'r Runtime, params: Vec<Vec<f32>>) -> Trainer<'r> {
+        Trainer { rt, params }
+    }
+
+    fn param_literals(&self) -> Result<Vec<xla::Literal>> {
+        mlp_param_dims()
+            .iter()
+            .zip(self.params.iter())
+            .map(|(dims, p)| Runtime::literal(p, dims))
+            .collect()
+    }
+
+    /// One SGD minibatch step. x: [b, IN] flattened; y one-hot [b, CLASSES].
+    /// Returns the minibatch loss.
+    pub fn step(&mut self, b: usize, x: &[f32], y: &[f32], lr: f32) -> Result<f32> {
+        let name = format!("train_step_b{b}");
+        let mut args = self.param_literals()?;
+        args.push(Runtime::literal(x, &[b, MLP_IN])?);
+        args.push(Runtime::literal(y, &[b, MLP_CLASSES])?);
+        args.push(Runtime::literal(&[lr], &[1])?);
+        let out = self.rt.call(&name, &args)?;
+        for (i, lit) in out[..6].iter().enumerate() {
+            self.params[i] = Runtime::to_vec(lit)?;
+        }
+        Ok(Runtime::to_vec(&out[6])?[0])
+    }
+
+    /// One local epoch over n minibatches of 32 via the scan artifact.
+    pub fn epoch(&mut self, n: usize, xs: &[f32], ys: &[f32], lr: f32) -> Result<f32> {
+        let name = format!("train_epoch_n{n}_b32");
+        let mut args = self.param_literals()?;
+        args.push(Runtime::literal(xs, &[n, 32, MLP_IN])?);
+        args.push(Runtime::literal(ys, &[n, 32, MLP_CLASSES])?);
+        args.push(Runtime::literal(&[lr], &[1])?);
+        let out = self.rt.call(&name, &args)?;
+        for (i, lit) in out[..6].iter().enumerate() {
+            self.params[i] = Runtime::to_vec(lit)?;
+        }
+        Ok(Runtime::to_vec(&out[6])?[0])
+    }
+
+    /// Evaluate on a 256-sample batch → (loss, accuracy).
+    pub fn eval(&self, x: &[f32], y: &[f32]) -> Result<(f32, f32)> {
+        let mut args = self.param_literals()?;
+        args.push(Runtime::literal(x, &[256, MLP_IN])?);
+        args.push(Runtime::literal(y, &[256, MLP_CLASSES])?);
+        let out = self.rt.call("eval_b256", &args)?;
+        let loss = Runtime::to_vec(&out[0])?[0];
+        let correct = Runtime::to_vec(&out[1])?[0];
+        Ok((loss, correct / 256.0))
+    }
+
+    /// Flatten parameters into a single update vector (ModelSpec order).
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        for p in &self.params {
+            out.extend_from_slice(p);
+        }
+        out
+    }
+
+    /// Load parameters from a flattened global model.
+    pub fn unflatten(&mut self, flat: &[f32]) {
+        let mut off = 0;
+        for (p, dims) in self.params.iter_mut().zip(mlp_param_dims()) {
+            let numel: usize = dims.iter().product();
+            p.copy_from_slice(&flat[off..off + numel]);
+            off += numel;
+        }
+        assert_eq!(off, flat.len(), "flattened length mismatch");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let text = r#"{"version":1,"artifacts":[
+            {"name":"a","file":"a.hlo.txt","inputs":[{"dtype":"f32","dims":[8]}],
+             "n_outputs":1,"meta":{"kind":"pair_merge","d":8}}]}"#;
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.find("a").unwrap();
+        assert_eq!(a.inputs, vec![vec![8]]);
+        assert_eq!(a.n_outputs, 1);
+        assert_eq!(a.meta.get("kind").as_str(), Some("pair_merge"));
+        assert!(m.find("zzz").is_none());
+    }
+
+    #[test]
+    fn manifest_rejects_empty() {
+        assert!(Manifest::parse(r#"{"artifacts":[]}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn mlp_dims_consistent_with_zoo() {
+        let total: usize = mlp_param_dims()
+            .iter()
+            .map(|d| d.iter().product::<usize>())
+            .sum();
+        assert_eq!(total, crate::model::zoo::mlp_default().total_params());
+    }
+}

@@ -1,0 +1,311 @@
+//! Persistence substrates: metadata store + object store.
+//!
+//! The paper's platform (§5.2) keeps job metadata "in a persistent store
+//! like MongoDB" and buffers model state in a cloud object store. We build
+//! both in-process:
+//!
+//! * [`MetaStore`] — versioned document store keyed by collection/id, with
+//!   optional JSON-file persistence (compare-and-swap on version numbers so
+//!   concurrent aggregator tasks can't clobber each other's job state).
+//! * [`ObjectStore`] — content-addressed blob store for model updates and
+//!   partial-aggregate checkpoints, with byte-accounting so experiments can
+//!   report state-transfer volumes.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+/// A versioned document.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Doc {
+    pub version: u64,
+    pub body: Json,
+}
+
+/// Errors from the metadata store.
+#[derive(Debug, PartialEq)]
+pub enum StoreError {
+    /// CAS failure: expected version does not match current.
+    VersionConflict { expected: u64, actual: u64 },
+    NotFound,
+    Io(String),
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::VersionConflict { expected, actual } => {
+                write!(f, "version conflict: expected {expected}, actual {actual}")
+            }
+            StoreError::NotFound => write!(f, "document not found"),
+            StoreError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+/// MongoDB stand-in: collections of versioned JSON documents.
+#[derive(Debug, Default)]
+pub struct MetaStore {
+    inner: Mutex<BTreeMap<String, BTreeMap<String, Doc>>>,
+    persist_path: Option<PathBuf>,
+}
+
+impl MetaStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A store that persists every mutation to a JSON file (durability for
+    /// the live platform; the sim grid uses the in-memory form).
+    pub fn persistent(path: PathBuf) -> Result<Self, StoreError> {
+        let mut s = Self {
+            inner: Mutex::new(BTreeMap::new()),
+            persist_path: Some(path.clone()),
+        };
+        if path.exists() {
+            let text =
+                std::fs::read_to_string(&path).map_err(|e| StoreError::Io(e.to_string()))?;
+            if !text.trim().is_empty() {
+                s.load_json(&text)?;
+            }
+        }
+        Ok(s)
+    }
+
+    fn load_json(&mut self, text: &str) -> Result<(), StoreError> {
+        let v = Json::parse(text).map_err(|e| StoreError::Io(e.to_string()))?;
+        let mut map = BTreeMap::new();
+        if let Some(cols) = v.as_obj() {
+            for (col, docs) in cols {
+                let mut dm = BTreeMap::new();
+                if let Some(docs) = docs.as_obj() {
+                    for (id, d) in docs {
+                        dm.insert(
+                            id.clone(),
+                            Doc {
+                                version: d.get("version").as_u64().unwrap_or(1),
+                                body: d.get("body").clone(),
+                            },
+                        );
+                    }
+                }
+                map.insert(col.clone(), dm);
+            }
+        }
+        *self.inner.lock().unwrap() = map;
+        Ok(())
+    }
+
+    fn flush(&self, inner: &BTreeMap<String, BTreeMap<String, Doc>>) -> Result<(), StoreError> {
+        let Some(path) = &self.persist_path else {
+            return Ok(());
+        };
+        let mut cols = BTreeMap::new();
+        for (col, docs) in inner {
+            let mut dm = BTreeMap::new();
+            for (id, d) in docs {
+                dm.insert(
+                    id.clone(),
+                    Json::obj(vec![
+                        ("version", Json::num(d.version as f64)),
+                        ("body", d.body.clone()),
+                    ]),
+                );
+            }
+            cols.insert(col.clone(), Json::Obj(dm));
+        }
+        std::fs::write(path, Json::Obj(cols).print()).map_err(|e| StoreError::Io(e.to_string()))
+    }
+
+    /// Insert or replace unconditionally; returns the new version.
+    pub fn put(&self, collection: &str, id: &str, body: Json) -> Result<u64, StoreError> {
+        let mut inner = self.inner.lock().unwrap();
+        let col = inner.entry(collection.to_string()).or_default();
+        let version = col.get(id).map(|d| d.version + 1).unwrap_or(1);
+        col.insert(id.to_string(), Doc { version, body });
+        self.flush(&inner)?;
+        Ok(version)
+    }
+
+    /// Compare-and-swap on version.
+    pub fn cas(
+        &self,
+        collection: &str,
+        id: &str,
+        expected_version: u64,
+        body: Json,
+    ) -> Result<u64, StoreError> {
+        let mut inner = self.inner.lock().unwrap();
+        let col = inner.entry(collection.to_string()).or_default();
+        let actual = col.get(id).map(|d| d.version).unwrap_or(0);
+        if actual != expected_version {
+            return Err(StoreError::VersionConflict {
+                expected: expected_version,
+                actual,
+            });
+        }
+        let version = actual + 1;
+        col.insert(id.to_string(), Doc { version, body });
+        self.flush(&inner)?;
+        Ok(version)
+    }
+
+    pub fn get(&self, collection: &str, id: &str) -> Option<Doc> {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(collection)
+            .and_then(|c| c.get(id))
+            .cloned()
+    }
+
+    pub fn delete(&self, collection: &str, id: &str) -> Result<(), StoreError> {
+        let mut inner = self.inner.lock().unwrap();
+        let removed = inner
+            .get_mut(collection)
+            .and_then(|c| c.remove(id))
+            .is_some();
+        if !removed {
+            return Err(StoreError::NotFound);
+        }
+        self.flush(&inner)?;
+        Ok(())
+    }
+
+    pub fn list(&self, collection: &str) -> Vec<String> {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(collection)
+            .map(|c| c.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+}
+
+/// Object store for model blobs (cloud-object-store stand-in).
+#[derive(Debug, Default)]
+pub struct ObjectStore {
+    inner: Mutex<ObjectStoreInner>,
+}
+
+#[derive(Debug, Default)]
+struct ObjectStoreInner {
+    blobs: BTreeMap<String, Vec<f32>>,
+    bytes_put: u64,
+    bytes_got: u64,
+}
+
+impl ObjectStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put(&self, key: &str, data: Vec<f32>) {
+        let mut g = self.inner.lock().unwrap();
+        g.bytes_put += (data.len() * 4) as u64;
+        g.blobs.insert(key.to_string(), data);
+    }
+
+    pub fn get(&self, key: &str) -> Option<Vec<f32>> {
+        let mut g = self.inner.lock().unwrap();
+        let v = g.blobs.get(key).cloned();
+        if let Some(ref d) = v {
+            g.bytes_got += (d.len() * 4) as u64;
+        }
+        v
+    }
+
+    pub fn delete(&self, key: &str) -> bool {
+        self.inner.lock().unwrap().blobs.remove(key).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().blobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// (bytes written, bytes read) — used to charge state-transfer time.
+    pub fn traffic(&self) -> (u64, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.bytes_put, g.bytes_got)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_version_increments() {
+        let s = MetaStore::new();
+        let v1 = s.put("jobs", "j1", Json::num(1.0)).unwrap();
+        let v2 = s.put("jobs", "j1", Json::num(2.0)).unwrap();
+        assert_eq!((v1, v2), (1, 2));
+        let d = s.get("jobs", "j1").unwrap();
+        assert_eq!(d.version, 2);
+        assert_eq!(d.body, Json::num(2.0));
+    }
+
+    #[test]
+    fn cas_guards_concurrent_writers() {
+        let s = MetaStore::new();
+        s.put("jobs", "j1", Json::num(1.0)).unwrap();
+        // stale writer (expected v0) loses
+        let err = s.cas("jobs", "j1", 0, Json::num(9.0)).unwrap_err();
+        assert!(matches!(err, StoreError::VersionConflict { actual: 1, .. }));
+        // current writer wins
+        let v = s.cas("jobs", "j1", 1, Json::num(3.0)).unwrap();
+        assert_eq!(v, 2);
+    }
+
+    #[test]
+    fn delete_and_list() {
+        let s = MetaStore::new();
+        s.put("c", "a", Json::Null).unwrap();
+        s.put("c", "b", Json::Null).unwrap();
+        assert_eq!(s.list("c"), vec!["a".to_string(), "b".to_string()]);
+        s.delete("c", "a").unwrap();
+        assert_eq!(s.list("c"), vec!["b".to_string()]);
+        assert_eq!(s.delete("c", "zz"), Err(StoreError::NotFound));
+    }
+
+    #[test]
+    fn persistence_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("fljit_store_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("meta.json");
+        let _ = std::fs::remove_file(&path);
+        {
+            let s = MetaStore::persistent(path.clone()).unwrap();
+            s.put("jobs", "j1", Json::obj(vec![("rounds", Json::num(50.0))]))
+                .unwrap();
+            s.put("jobs", "j1", Json::obj(vec![("rounds", Json::num(51.0))]))
+                .unwrap();
+        }
+        let s2 = MetaStore::persistent(path.clone()).unwrap();
+        let d = s2.get("jobs", "j1").unwrap();
+        assert_eq!(d.version, 2);
+        assert_eq!(d.body.get("rounds").as_u64(), Some(51));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn object_store_traffic_accounting() {
+        let o = ObjectStore::new();
+        o.put("m1", vec![0.0; 1024]);
+        assert_eq!(o.traffic().0, 4096);
+        let got = o.get("m1").unwrap();
+        assert_eq!(got.len(), 1024);
+        assert_eq!(o.traffic().1, 4096);
+        assert!(o.get("missing").is_none());
+        assert!(o.delete("m1"));
+        assert!(o.is_empty());
+    }
+}

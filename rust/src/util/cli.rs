@@ -1,0 +1,111 @@
+//! Tiny argument parser (no `clap` offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional
+//! arguments and subcommands. Used by the `fljit` binary, the examples and
+//! the bench harnesses.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from process args (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless the next token is another flag.
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.flags.insert(stripped.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(stripped.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse("simulate fig9 --parties 100 --strategy=jit --verbose");
+        assert_eq!(a.subcommand(), Some("simulate"));
+        assert_eq!(a.get_u64("parties", 0), 100);
+        assert_eq!(a.get("strategy"), Some("jit"));
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positional, vec!["simulate", "fig9"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.get_u64("rounds", 50), 50);
+        assert_eq!(a.get_or("workload", "cifar100"), "cifar100");
+        assert!(!a.get_bool("verbose"));
+        assert_eq!(a.get_f64("twait", 600.0), 600.0);
+    }
+
+    #[test]
+    fn flag_value_vs_boolean() {
+        let a = parse("--a --b 5 --c=x --d");
+        assert!(a.get_bool("a"));
+        assert_eq!(a.get_u64("b", 0), 5);
+        assert_eq!(a.get("c"), Some("x"));
+        assert!(a.get_bool("d"));
+    }
+}

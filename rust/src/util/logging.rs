@@ -1,0 +1,94 @@
+//! Leveled logger substrate (no `log`/`env_logger` crates offline).
+//!
+//! Level is process-global, settable via code or the `FLJIT_LOG`
+//! environment variable (`error|warn|info|debug|trace`). The macros are
+//! zero-cost when the level is filtered out apart from one atomic load.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+pub const ERROR: u8 = 0;
+pub const WARN: u8 = 1;
+pub const INFO: u8 = 2;
+pub const DEBUG: u8 = 3;
+pub const TRACE: u8 = 4;
+
+static LEVEL: AtomicU8 = AtomicU8::new(INFO);
+static INIT: std::sync::Once = std::sync::Once::new();
+
+pub fn init_from_env() {
+    INIT.call_once(|| {
+        if let Ok(v) = std::env::var("FLJIT_LOG") {
+            set_level_str(&v);
+        }
+    });
+}
+
+pub fn set_level(level: u8) {
+    LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn set_level_str(s: &str) {
+    let lvl = match s.to_ascii_lowercase().as_str() {
+        "error" => ERROR,
+        "warn" => WARN,
+        "info" => INFO,
+        "debug" => DEBUG,
+        "trace" => TRACE,
+        _ => INFO,
+    };
+    set_level(lvl);
+}
+
+#[inline]
+pub fn enabled(level: u8) -> bool {
+    level <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(level: u8, module: &str, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let tag = match level {
+        ERROR => "ERROR",
+        WARN => "WARN ",
+        INFO => "INFO ",
+        DEBUG => "DEBUG",
+        _ => "TRACE",
+    };
+    eprintln!("[{tag}] {module}: {args}");
+}
+
+#[macro_export]
+macro_rules! log_error { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::ERROR, module_path!(), format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::WARN, module_path!(), format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_info { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::INFO, module_path!(), format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::DEBUG, module_path!(), format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::TRACE, module_path!(), format_args!($($t)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_filtering() {
+        set_level(WARN);
+        assert!(enabled(ERROR));
+        assert!(enabled(WARN));
+        assert!(!enabled(INFO));
+        set_level(INFO);
+        assert!(enabled(INFO));
+        assert!(!enabled(DEBUG));
+    }
+
+    #[test]
+    fn level_parse() {
+        set_level_str("trace");
+        assert!(enabled(TRACE));
+        set_level_str("bogus");
+        assert!(enabled(INFO) && !enabled(DEBUG));
+    }
+}

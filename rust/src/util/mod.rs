@@ -1,0 +1,11 @@
+//! Utility substrates the offline image forces us to carry in-tree:
+//! PRNG, JSON, statistics/OLS, CLI parsing, logging, table rendering and a
+//! mini property-testing harness. See DESIGN.md §Substrates.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

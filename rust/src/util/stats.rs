@@ -1,0 +1,261 @@
+//! Statistics + ordinary least squares.
+//!
+//! OLS is not just a test helper here: it is the paper's *estimator* —
+//! §4.2 uses linear regression to predict epoch times from dataset size
+//! (and minibatch times from batch size / hardware), and §5.3 falls back to
+//! regression when parties do not report timings directly.
+
+/// Summary statistics over a sample.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary::default();
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+
+    /// Coefficient of variation — the paper's periodicity claim (Fig 3) is
+    /// "epoch times are fairly constant", i.e. CV is small.
+    pub fn cv(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            self.std / self.mean
+        }
+    }
+}
+
+/// Percentile with linear interpolation (p in [0, 100]).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Ordinary least squares fit y = intercept + slope * x.
+#[derive(Clone, Copy, Debug)]
+pub struct LinearFit {
+    pub slope: f64,
+    pub intercept: f64,
+    /// Coefficient of determination.
+    pub r2: f64,
+    pub n: usize,
+}
+
+impl LinearFit {
+    pub fn fit(xs: &[f64], ys: &[f64]) -> Option<LinearFit> {
+        let n = xs.len();
+        if n < 2 || n != ys.len() {
+            return None;
+        }
+        let nf = n as f64;
+        let mx = xs.iter().sum::<f64>() / nf;
+        let my = ys.iter().sum::<f64>() / nf;
+        let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+        let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+        if sxx == 0.0 {
+            return None;
+        }
+        let slope = sxy / sxx;
+        let intercept = my - slope * mx;
+        let ss_tot: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
+        let ss_res: f64 = xs
+            .iter()
+            .zip(ys)
+            .map(|(x, y)| {
+                let e = y - (intercept + slope * x);
+                e * e
+            })
+            .sum();
+        let r2 = if ss_tot == 0.0 { 1.0 } else { 1.0 - ss_res / ss_tot };
+        Some(LinearFit {
+            slope,
+            intercept,
+            r2,
+            n,
+        })
+    }
+
+    pub fn predict(&self, x: f64) -> f64 {
+        self.intercept + self.slope * x
+    }
+}
+
+/// Incremental (online) OLS — the estimator keeps one of these per party
+/// and feeds it (dataset_size, epoch_time) observations as rounds complete.
+#[derive(Clone, Debug, Default)]
+pub struct OnlineOls {
+    n: f64,
+    sx: f64,
+    sy: f64,
+    sxx: f64,
+    sxy: f64,
+}
+
+impl OnlineOls {
+    pub fn add(&mut self, x: f64, y: f64) {
+        self.n += 1.0;
+        self.sx += x;
+        self.sy += y;
+        self.sxx += x * x;
+        self.sxy += x * y;
+    }
+
+    pub fn len(&self) -> usize {
+        self.n as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0.0
+    }
+
+    pub fn fit(&self) -> Option<(f64, f64)> {
+        if self.n < 2.0 {
+            return None;
+        }
+        let det = self.n * self.sxx - self.sx * self.sx;
+        if det.abs() < 1e-12 {
+            return None;
+        }
+        let slope = (self.n * self.sxy - self.sx * self.sy) / det;
+        let intercept = (self.sy - slope * self.sx) / self.n;
+        Some((slope, intercept))
+    }
+
+    pub fn predict(&self, x: f64) -> Option<f64> {
+        self.fit().map(|(m, b)| b + m * x)
+    }
+}
+
+/// Exponentially weighted moving average — bandwidth tracking (§5.2's
+/// periodic B_u/B_d measurements).
+#[derive(Clone, Copy, Debug)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        Self { alpha, value: None }
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        self.value = Some(match self.value {
+            None => x,
+            Some(v) => self.alpha * x + (1.0 - self.alpha) * v,
+        });
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.min - 1.0).abs() < 1e-12);
+        assert!((s.max - 4.0).abs() < 1e-12);
+        assert!((s.std - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 3.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 5.0).abs() < 1e-12);
+        assert!((percentile(&xs, 25.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_linear_fit() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [3.0, 5.0, 7.0, 9.0]; // y = 1 + 2x
+        let f = LinearFit::fit(&xs, &ys).unwrap();
+        assert!((f.slope - 2.0).abs() < 1e-12);
+        assert!((f.intercept - 1.0).abs() < 1e-12);
+        assert!((f.r2 - 1.0).abs() < 1e-12);
+        assert!((f.predict(10.0) - 21.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noisy_fit_r2_below_one() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|x| 2.0 * x + 1.0 + if (*x as u64) % 2 == 0 { 0.5 } else { -0.5 })
+            .collect();
+        let f = LinearFit::fit(&xs, &ys).unwrap();
+        assert!((f.slope - 2.0).abs() < 0.01);
+        assert!(f.r2 > 0.99 && f.r2 < 1.0);
+    }
+
+    #[test]
+    fn online_matches_batch() {
+        let xs = [1.0, 3.0, 5.0, 7.0, 11.0];
+        let ys = [2.1, 6.2, 9.8, 14.1, 22.3];
+        let batch = LinearFit::fit(&xs, &ys).unwrap();
+        let mut online = OnlineOls::default();
+        for (x, y) in xs.iter().zip(ys.iter()) {
+            online.add(*x, *y);
+        }
+        let (slope, intercept) = online.fit().unwrap();
+        assert!((slope - batch.slope).abs() < 1e-9);
+        assert!((intercept - batch.intercept).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_fits_rejected() {
+        assert!(LinearFit::fit(&[1.0], &[2.0]).is_none());
+        assert!(LinearFit::fit(&[2.0, 2.0, 2.0], &[1.0, 2.0, 3.0]).is_none());
+        let mut o = OnlineOls::default();
+        o.add(1.0, 1.0);
+        assert!(o.fit().is_none());
+    }
+
+    #[test]
+    fn ewma_converges() {
+        let mut e = Ewma::new(0.5);
+        assert!(e.get().is_none());
+        for _ in 0..20 {
+            e.observe(10.0);
+        }
+        assert!((e.get().unwrap() - 10.0).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,141 @@
+//! Property tests over whole-platform scenarios: invariants that must hold
+//! for *any* randomly drawn job configuration, via the in-tree prop
+//! harness (util::prop).
+
+use fljit::coordinator::job::FlJobSpec;
+use fljit::coordinator::platform::run_scenario;
+use fljit::party::FleetKind;
+use fljit::util::prop;
+use fljit::workloads::Workload;
+
+fn random_spec(g: &mut prop::Gen) -> FlJobSpec {
+    let workloads = [
+        Workload::cifar100_effnet(),
+        Workload::rvlcdip_vgg16(),
+        Workload::inat_inception(),
+    ];
+    let fleets = [
+        FleetKind::ActiveHomogeneous,
+        FleetKind::ActiveHeterogeneous,
+        FleetKind::IntermittentHeterogeneous,
+    ];
+    let w = workloads[g.usize(0, 2).min(2)].clone();
+    let fleet = fleets[g.usize(0, 2).min(2)];
+    let parties = g.usize(2, 60);
+    let rounds = g.usize(1, 6) as u32;
+    let mut spec = FlJobSpec::new(w, fleet, parties, rounds);
+    spec.t_wait_secs = g.f64(60.0, 600.0);
+    spec.report_prob = g.f64(0.0, 1.0);
+    spec
+}
+
+#[test]
+fn every_strategy_completes_every_round_and_fuses_everything() {
+    prop::check("completion", 24, |g| {
+        let spec = random_spec(g);
+        let strat = *g.rng.choose(&["jit", "batched", "eager-serverless", "eager-ao", "lazy"]);
+        let r = run_scenario(&spec, strat, g.rng.next_u64());
+        fljit::prop_assert!(
+            r.rounds.len() == spec.rounds as usize,
+            "{strat}: {} of {} rounds completed ({} parties, {})",
+            r.rounds.len(),
+            spec.rounds,
+            spec.n_parties,
+            spec.fleet_kind.name()
+        );
+        fljit::prop_assert!(
+            r.updates_fused == (spec.n_parties as u64) * spec.rounds as u64,
+            "{strat}: fused {} != {}",
+            r.updates_fused,
+            spec.n_parties * spec.rounds as usize
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn latencies_nonnegative_and_rounds_ordered() {
+    prop::check("latency-sanity", 16, |g| {
+        let spec = random_spec(g);
+        let strat = *g.rng.choose(&["jit", "batched", "eager-serverless"]);
+        let r = run_scenario(&spec, strat, g.rng.next_u64());
+        let mut prev_complete = f64::NEG_INFINITY;
+        for rec in &r.rounds {
+            fljit::prop_assert!(
+                rec.latency_secs >= 0.0,
+                "negative latency {} in round {}",
+                rec.latency_secs,
+                rec.round
+            );
+            fljit::prop_assert!(
+                rec.complete_secs >= rec.last_arrival_secs - 1e-9,
+                "round {} completed before its last arrival",
+                rec.round
+            );
+            fljit::prop_assert!(
+                rec.complete_secs > prev_complete,
+                "rounds complete out of order"
+            );
+            prev_complete = rec.complete_secs;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn container_seconds_bounded_below_by_pure_work() {
+    // cs can never be less than the fusion work itself: N·rounds·item.
+    prop::check("cs-lower-bound", 16, |g| {
+        let spec = random_spec(g);
+        let strat = *g.rng.choose(&["jit", "batched", "eager-serverless", "eager-ao"]);
+        let r = run_scenario(&spec, strat, g.rng.next_u64());
+        let item = spec.workload.t_pair / 2.0; // C_agg = 2
+        let work = spec.n_parties as f64 * spec.rounds as f64 * item;
+        fljit::prop_assert!(
+            r.container_seconds >= work * 0.99,
+            "{strat}: cs {} below pure work {}",
+            r.container_seconds,
+            work
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn jit_never_costlier_than_always_on() {
+    prop::check("jit<=ao", 12, |g| {
+        let spec = random_spec(g);
+        let seed = g.rng.next_u64();
+        let jit = run_scenario(&spec, "jit", seed);
+        let ao = run_scenario(&spec, "eager-ao", seed);
+        fljit::prop_assert!(
+            jit.total_container_seconds() <= ao.total_container_seconds() * 1.01,
+            "jit {} > ao {} ({} parties, {})",
+            jit.total_container_seconds(),
+            ao.total_container_seconds(),
+            spec.n_parties,
+            spec.fleet_kind.name()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn deployments_bounded_by_updates_plus_fleet() {
+    // no strategy may deploy more containers than one per update plus the
+    // always-on fleet (sanity bound on deployment storms)
+    prop::check("deployment-bound", 16, |g| {
+        let spec = random_spec(g);
+        let strat = *g.rng.choose(&["jit", "batched", "eager-serverless", "eager-ao", "lazy"]);
+        let r = run_scenario(&spec, strat, g.rng.next_u64());
+        let bound = (spec.n_parties * spec.rounds as usize
+            + spec.workload.n_agg(spec.n_parties) as usize
+            + spec.rounds as usize) as u64;
+        fljit::prop_assert!(
+            r.deployments <= bound,
+            "{strat}: {} deployments > bound {bound}",
+            r.deployments
+        );
+        Ok(())
+    });
+}

@@ -1,0 +1,145 @@
+//! Integration: the AOT bridge end to end — load HLO-text artifacts on the
+//! PJRT CPU client, execute, and pin the numerics against the pure-Rust
+//! fusion path (which pytest pins against the jnp oracle, closing the
+//! three-way pallas ≡ jnp ≡ rust consistency loop).
+//!
+//! Requires `make artifacts`; every test skips gracefully if absent so
+//! `cargo test` stays green on a fresh checkout.
+
+use fljit::fusion;
+use fljit::runtime::{Runtime, Trainer, XlaFusion};
+use fljit::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = fljit::runtime::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("runtime"))
+}
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; n];
+    rng.fill_normal_f32(&mut v);
+    v
+}
+
+#[test]
+fn pair_merge_xla_matches_rust() {
+    let Some(rt) = runtime() else { return };
+    let fx = XlaFusion::new(&rt);
+    let mut rng = Rng::new(11);
+    // exercises padding (non-multiple of the 65536 chunk) and chunking
+    for n in [1000usize, 65536, 65536 + 123, 3 * 65536] {
+        let a = rand_vec(&mut rng, n);
+        let b = rand_vec(&mut rng, n);
+        let (wa, wb) = (3.0f32, 2.0f32);
+        let mut xla_acc = a.clone();
+        fx.pair_merge(&mut xla_acc, wa, &b, wb).expect("xla pair_merge");
+        let mut rust_acc = a.clone();
+        fusion::pair_merge_into(&mut rust_acc, wa, &b, wb);
+        for (i, (x, r)) in xla_acc.iter().zip(rust_acc.iter()).enumerate() {
+            assert!(
+                (x - r).abs() < 1e-4,
+                "n={n} elem {i}: xla {x} vs rust {r}"
+            );
+        }
+    }
+}
+
+#[test]
+fn weighted_mean_xla_matches_rust_many_k() {
+    let Some(rt) = runtime() else { return };
+    let fx = XlaFusion::new(&rt);
+    let mut rng = Rng::new(13);
+    // k=12 forces the grouped/recursive path (artifact fan-in is 8)
+    for k in [1usize, 3, 8, 12, 20] {
+        let n = 70_000; // crosses the chunk boundary
+        let updates: Vec<Vec<f32>> = (0..k).map(|_| rand_vec(&mut rng, n)).collect();
+        let views: Vec<&[f32]> = updates.iter().map(|u| u.as_slice()).collect();
+        let w: Vec<f32> = (0..k).map(|i| 1.0 + i as f32 * 0.5).collect();
+        let got = fx.weighted_mean(&views, &w).expect("xla weighted_mean");
+        let want = fusion::weighted_mean(&views, &w);
+        let mut max_err = 0.0f32;
+        for (x, r) in got.iter().zip(want.iter()) {
+            max_err = max_err.max((x - r).abs());
+        }
+        assert!(max_err < 1e-3, "k={k} max err {max_err}");
+    }
+}
+
+#[test]
+fn fedprox_xla_matches_rust() {
+    let Some(rt) = runtime() else { return };
+    let fx = XlaFusion::new(&rt);
+    let mut rng = Rng::new(17);
+    let n = 65536;
+    let updates: Vec<Vec<f32>> = (0..4).map(|_| rand_vec(&mut rng, n)).collect();
+    let views: Vec<&[f32]> = updates.iter().map(|u| u.as_slice()).collect();
+    let w = [1.0f32, 2.0, 3.0, 4.0];
+    let g = rand_vec(&mut rng, n);
+    let mu = 0.3f32;
+    let got = fx.fedprox(&views, &w, &g, mu).expect("xla fedprox");
+    let want = fusion::fedprox_merge(&views, &w, &g, mu);
+    for (x, r) in got.iter().zip(want.iter()) {
+        assert!((x - r).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn trainer_learns_on_synthetic_task() {
+    let Some(rt) = runtime() else { return };
+    let (x, y) = fljit::party::synth_party_dataset(0, 256, 64, 10, 50.0, 7);
+    let mut t = Trainer::init(&rt, 7);
+    let (loss0, acc0) = t.eval(&x, &y).expect("eval");
+    // 20 SGD steps on the same batch of 32
+    let (bx, by) = fljit::party::synth_party_dataset(1, 32, 64, 10, 50.0, 7);
+    let mut last = f32::INFINITY;
+    for _ in 0..20 {
+        last = t.step(32, &bx, &by, 0.1).expect("step");
+    }
+    let (loss1, acc1) = t.eval(&x, &y).expect("eval");
+    assert!(last.is_finite());
+    assert!(loss1 < loss0, "loss {loss0} -> {loss1}");
+    assert!(acc1 >= acc0, "acc {acc0} -> {acc1}");
+}
+
+#[test]
+fn trainer_epoch_matches_shapes_and_flattens() {
+    let Some(rt) = runtime() else { return };
+    let (xs, ys) = fljit::party::synth_party_dataset(2, 8 * 32, 64, 10, 1.0, 9);
+    let mut t = Trainer::init(&rt, 9);
+    let flat0 = t.flatten();
+    assert_eq!(flat0.len(), fljit::model::zoo::mlp_default().total_params());
+    let loss = t.epoch(8, &xs, &ys, 0.05).expect("epoch");
+    assert!(loss.is_finite() && loss > 0.0);
+    let flat1 = t.flatten();
+    assert_ne!(flat0, flat1, "epoch must change parameters");
+    // unflatten round-trips
+    let mut t2 = Trainer::init(&rt, 1);
+    t2.unflatten(&flat1);
+    assert_eq!(t2.flatten(), flat1);
+}
+
+#[test]
+fn streaming_aggregator_over_xla_matches_tree_reduce() {
+    let Some(rt) = runtime() else { return };
+    let fx = XlaFusion::new(&rt);
+    let spec = fljit::model::ModelSpec::new("t", vec![("l", 40_000)]);
+    let mut rng = Rng::new(23);
+    let updates: Vec<fljit::model::ModelUpdate> = (0..6)
+        .map(|i| fljit::model::ModelUpdate::random(&spec, &mut rng, 1.0 + i as f32))
+        .collect();
+    // stream through XLA pair merges (the live platform's hot path)
+    let mut acc = updates[0].data.clone();
+    let mut w_acc = updates[0].weight;
+    for u in &updates[1..] {
+        fx.pair_merge(&mut acc, w_acc, &u.data, u.weight).unwrap();
+        w_acc += u.weight;
+    }
+    let tree = fusion::tree_reduce(&updates, 3);
+    for (x, r) in acc.iter().zip(tree.acc.iter()) {
+        assert!((x - r).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,126 @@
+//! Integration: every aggregation strategy must produce the *same fused
+//! model* — the design options of §3 trade cost and latency, never
+//! correctness. We fold the same set of updates in each strategy's
+//! characteristic order/grouping through the pure-Rust fusion engine and
+//! pin the results together (and, transitively via pytest + the runtime
+//! round-trip test, to the Pallas kernels).
+
+use fljit::fusion::{tree_reduce, weighted_mean, Aggregator};
+use fljit::model::{ModelSpec, ModelUpdate};
+use fljit::util::rng::Rng;
+
+fn make_updates(n: usize, dim: usize, seed: u64) -> Vec<ModelUpdate> {
+    let spec = ModelSpec::new("m", vec![("l", dim)]);
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let w = rng.range_f64(0.5, 8.0) as f32;
+            ModelUpdate::random(&spec, &mut rng, w)
+        })
+        .collect()
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert!((x - y).abs() < tol, "{what} elem {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn all_aggregation_orders_agree() {
+    let updates = make_updates(23, 2048, 99);
+    let dim = 2048;
+
+    // Eager (always-on / serverless): one-at-a-time in arrival order.
+    let mut eager = Aggregator::new(dim);
+    for u in &updates {
+        eager.add(&u.data, u.weight);
+    }
+
+    // Batched: fold in batches of 5, each batch into a partial that is
+    // checkpointed and restored (fresh deployment per batch).
+    let mut batched = Aggregator::new(dim);
+    for chunk in updates.chunks(5) {
+        // restore from "checkpoint"
+        let mut partial =
+            Aggregator::from_parts(batched.acc.clone(), batched.weight, batched.n_merged);
+        for u in chunk {
+            partial.add(&u.data, u.weight);
+        }
+        batched = partial; // checkpoint back
+    }
+
+    // Lazy / JIT with N_agg parallel shards: tree reduction.
+    let jit = tree_reduce(&updates, 4);
+
+    // One-shot weighted mean (the oracle).
+    let views: Vec<&[f32]> = updates.iter().map(|u| u.data.as_slice()).collect();
+    let ws: Vec<f32> = updates.iter().map(|u| u.weight).collect();
+    let oracle = weighted_mean(&views, &ws);
+
+    assert_close(&eager.acc, &oracle, 1e-3, "eager vs oracle");
+    assert_close(&batched.acc, &oracle, 1e-3, "batched vs oracle");
+    assert_close(&jit.acc, &oracle, 1e-3, "jit/tree vs oracle");
+    assert_eq!(eager.n_merged, 23);
+    assert_eq!(batched.n_merged, 23);
+    assert_eq!(jit.n_merged, 23);
+}
+
+#[test]
+fn preemption_checkpoint_mid_round_is_lossless() {
+    // JIT preemption (§5.5): partial aggregate checkpointed to the MQ and
+    // resumed by a later deployment must equal the uninterrupted fold.
+    let updates = make_updates(16, 1024, 5);
+    let mq = fljit::mq::MessageQueue::new();
+    let slot = fljit::mq::checkpoint_slot(0, 3);
+
+    let mut uninterrupted = Aggregator::new(1024);
+    for u in &updates {
+        uninterrupted.add(&u.data, u.weight);
+    }
+
+    // first deployment folds 7, preempted, checkpoints
+    let mut first = Aggregator::new(1024);
+    for u in &updates[..7] {
+        first.add(&u.data, u.weight);
+    }
+    mq.save_checkpoint(
+        &slot,
+        fljit::mq::CheckpointState {
+            acc: Some(first.acc.clone()),
+            weight: first.weight,
+            n_merged: first.n_merged,
+            consumed_to: 7,
+            saved_at: 0,
+        },
+    );
+
+    // resumed deployment restores and finishes
+    let ckpt = mq.load_checkpoint(&slot).expect("checkpoint");
+    let mut resumed = Aggregator::from_parts(ckpt.acc.unwrap(), ckpt.weight, ckpt.n_merged);
+    for u in &updates[ckpt.consumed_to..] {
+        resumed.add(&u.data, u.weight);
+    }
+    assert_close(&uninterrupted.acc, &resumed.acc, 1e-4, "preempted vs straight");
+    assert!(mq.clear_checkpoint(&slot));
+}
+
+#[test]
+fn fedprox_consistent_across_fold_orders() {
+    let updates = make_updates(9, 512, 41);
+    let spec = ModelSpec::new("g", vec![("l", 512)]);
+    let mut rng = Rng::new(123);
+    let global = ModelUpdate::random(&spec, &mut rng, 1.0);
+    let alg = fljit::fusion::Algorithm::FedProx { mu: 0.25 };
+
+    let mut stream = Aggregator::new(512);
+    for u in &updates {
+        stream.add(&u.data, u.weight);
+    }
+    let a = stream.finalize(alg, Some(&global.data));
+
+    let tree = tree_reduce(&updates, 3);
+    let b = tree.finalize(alg, Some(&global.data));
+    assert_close(&a, &b, 1e-3, "fedprox stream vs tree");
+}
