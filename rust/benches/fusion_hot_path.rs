@@ -1,20 +1,41 @@
 //! Bench: the aggregation hot path — `t_pair` calibration (§5.4) across
-//! the model zoo on the pure-Rust fusion engine, plus K-way weighted means
-//! and the tree reduction. Prints achieved GB/s against the streaming
-//! roofline (pair merge touches 3 vectors: 2 reads + 1 write).
+//! the model zoo on the pure-Rust fusion engine, K-way weighted means
+//! (fresh-alloc vs pooled scratch buffers), and the tree reduction
+//! (persistent worker pool vs per-call thread spawn). Prints achieved GB/s
+//! against the streaming roofline (pair merge touches 3 vectors: 2 reads +
+//! 1 write) and writes every row to `BENCH_fusion.json` so the perf
+//! trajectory is tracked across PRs.
 //!
 //! Run: cargo bench --bench fusion_hot_path
 
 use fljit::bench::time_median;
-use fljit::fusion;
-use fljit::model::{zoo, ModelUpdate};
+use fljit::fusion::{self, ScratchPool, WorkerPool};
+use fljit::model::{zoo, ModelSpec, ModelUpdate};
+use fljit::util::json::Json;
 use fljit::util::rng::Rng;
 use fljit::util::table::Table;
+
+fn row_json(case: &str, detail: &str, median_secs: f64, throughput: Option<(&str, f64)>) -> Json {
+    let mut pairs = vec![
+        ("case", Json::str(case)),
+        ("detail", Json::str(detail)),
+        ("median_secs", Json::num(median_secs)),
+    ];
+    if let Some((unit, v)) = throughput {
+        pairs.push(("throughput", Json::num(v)));
+        pairs.push(("throughput_unit", Json::str(unit)));
+    }
+    Json::obj(pairs)
+}
 
 fn main() {
     let reps = 7;
     let mut rng = Rng::new(42);
+    let mut json_rows: Vec<Json> = Vec::new();
 
+    // ------------------------------------------------------------------
+    // 1) pair merge (t_pair, §5.4) across the zoo
+    // ------------------------------------------------------------------
     let mut t = Table::new(
         "fusion hot path — pair merge (t_pair, §5.4)",
         &["model", "MB", "median t_pair (ms)", "best (ms)", "GB/s (median)"],
@@ -29,20 +50,21 @@ fn main() {
             fusion::pair_merge_into(&mut acc, 2.0, &b.data, 1.0);
         });
         let mb = spec.size_bytes() as f64 / 1e6;
+        let gbps = 3.0 * mb / 1e3 / med;
         t.row(vec![
             name.to_string(),
             format!("{:.1}", mb),
             format!("{:.2}", med * 1e3),
             format!("{:.2}", best * 1e3),
-            format!("{:.2}", 3.0 * mb / 1e3 / med),
+            format!("{:.2}", gbps),
         ]);
+        json_rows.push(row_json("pair_merge", name, med, Some(("GB/s", gbps))));
     }
     t.print();
 
-    // K-way fold: the §Perf L3 optimization — pair-merge chain (3 vectors
-    // of DRAM traffic per update) vs the cache-blocked weighted sum
-    // (~(K+1)/K vectors per update). Buffers preallocated so the bench
-    // measures fusion math, not page faults.
+    // ------------------------------------------------------------------
+    // 2) K-way fold: pair-merge chain vs cache-blocked weighted sum
+    // ------------------------------------------------------------------
     let mut t2 = Table::new(
         "K-way fusion (EfficientNet-B7 updates, preallocated buffers)",
         &["K", "pair-chain (ms)", "blocked fold (ms)", "speedup", "fold GB/s"],
@@ -79,12 +101,103 @@ fn main() {
             format!("{:.2}x", chain_med / fold_med),
             format!("{:.2}", gb / fold_med),
         ]);
+        json_rows.push(row_json(
+            "kway_fold",
+            &format!("k={k}"),
+            fold_med,
+            Some(("GB/s", gb / fold_med)),
+        ));
     }
     t2.print();
+    drop(out);
 
-    // tree reduction wall time (threads share DRAM bandwidth)
+    // ------------------------------------------------------------------
+    // 3) weighted mean: fresh allocation vs pooled scratch buffer
+    // ------------------------------------------------------------------
     let mut t3 = Table::new(
-        "tree_reduce wall time (K=16, EfficientNet-B7)",
+        "weighted_mean — fresh Vec per call vs pooled scratch (K=8)",
+        &["model", "fresh (ms)", "pooled (ms)", "speedup"],
+    );
+    let scratch = ScratchPool::global();
+    for name in ["efficientnet-b7", "vgg16"] {
+        let spec = zoo::by_name(name).unwrap();
+        let updates: Vec<ModelUpdate> = (0..8)
+            .map(|i| ModelUpdate::random(&spec, &mut rng, 1.0 + i as f32))
+            .collect();
+        let views: Vec<&[f32]> = updates.iter().map(|u| u.data.as_slice()).collect();
+        let ws: Vec<f32> = updates.iter().map(|u| u.weight).collect();
+        let (fresh_med, _) = time_median(5, || {
+            let m = fusion::weighted_mean(&views, &ws);
+            std::hint::black_box(m[0]);
+        });
+        drop(fusion::weighted_mean_pooled(scratch, &views, &ws)); // warm the pool
+        let (pooled_med, _) = time_median(5, || {
+            let m = fusion::weighted_mean_pooled(scratch, &views, &ws);
+            std::hint::black_box(m[0]);
+        });
+        t3.row(vec![
+            name.to_string(),
+            format!("{:.1}", fresh_med * 1e3),
+            format!("{:.1}", pooled_med * 1e3),
+            format!("{:.2}x", fresh_med / pooled_med),
+        ]);
+        json_rows.push(row_json(
+            "weighted_mean_pooled",
+            name,
+            pooled_med,
+            Some(("speedup_vs_fresh", fresh_med / pooled_med)),
+        ));
+        json_rows.push(row_json("weighted_mean_fresh", name, fresh_med, None));
+    }
+    t3.print();
+
+    // ------------------------------------------------------------------
+    // 4) tree_reduce: persistent pool vs per-call thread spawn
+    // ------------------------------------------------------------------
+    // 2 MB updates keep K=128 in a ~256 MB working set; at these sizes the
+    // per-shard work is small enough that spawn + page-fault overhead is
+    // the dominant term the pool removes (the K ≥ 64 acceptance band).
+    let spec = ModelSpec::new("synthetic-512k", vec![("flat", 512 * 1024)]);
+    let shards = WorkerPool::global().threads().clamp(2, 8);
+    let mut t4 = Table::new(
+        &format!("tree_reduce — worker pool vs per-call spawn ({shards} shards, 2 MB updates)"),
+        &["K", "spawn (ms)", "pool (ms)", "speedup"],
+    );
+    for k in [16usize, 64, 128] {
+        let updates: Vec<ModelUpdate> = (0..k)
+            .map(|i| ModelUpdate::random(&spec, &mut rng, 1.0 + (i % 7) as f32))
+            .collect();
+        // warm both paths (page in the data, fill the scratch pool)
+        std::hint::black_box(fusion::tree_reduce_spawning(&updates, shards).weight);
+        std::hint::black_box(fusion::tree_reduce(&updates, shards).weight);
+        let (spawn_med, _) = time_median(5, || {
+            let agg = fusion::tree_reduce_spawning(&updates, shards);
+            std::hint::black_box(agg.weight);
+        });
+        let (pool_med, _) = time_median(5, || {
+            let agg = fusion::tree_reduce(&updates, shards);
+            std::hint::black_box(agg.weight);
+        });
+        t4.row(vec![
+            k.to_string(),
+            format!("{:.2}", spawn_med * 1e3),
+            format!("{:.2}", pool_med * 1e3),
+            format!("{:.2}x", spawn_med / pool_med),
+        ]);
+        json_rows.push(row_json(
+            "tree_reduce_pool",
+            &format!("k={k}"),
+            pool_med,
+            Some(("speedup_vs_spawn", spawn_med / pool_med)),
+        ));
+        json_rows.push(row_json("tree_reduce_spawn", &format!("k={k}"), spawn_med, None));
+    }
+    t4.print();
+
+    // tree reduction wall time on a real zoo model (threads share DRAM bw)
+    let spec = zoo::efficientnet_b7();
+    let mut t5 = Table::new(
+        "tree_reduce wall time (K=16, EfficientNet-B7, pooled)",
         &["shards", "median (ms)"],
     );
     let updates: Vec<ModelUpdate> = (0..16)
@@ -95,8 +208,23 @@ fn main() {
             let agg = fusion::tree_reduce(&updates, shards);
             std::hint::black_box(agg.weight);
         });
-        t3.row(vec![shards.to_string(), format!("{:.1}", med * 1e3)]);
+        t5.row(vec![shards.to_string(), format!("{:.1}", med * 1e3)]);
+        json_rows.push(row_json(
+            "tree_reduce_scaling",
+            &format!("shards={shards}"),
+            med,
+            None,
+        ));
     }
-    t3.print();
+    t5.print();
     println!("note: fusion is memory-bound; GB/s ≈ sustained stream bandwidth is the roofline.");
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("fusion_hot_path")),
+        ("rows", Json::Arr(json_rows)),
+    ]);
+    match std::fs::write("BENCH_fusion.json", out.pretty()) {
+        Ok(()) => eprintln!("[rows written to BENCH_fusion.json]"),
+        Err(e) => eprintln!("warn: could not write BENCH_fusion.json: {e}"),
+    }
 }

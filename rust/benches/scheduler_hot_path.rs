@@ -1,39 +1,92 @@
-//! Bench: L3 coordinator hot paths — the discrete-event engine, the
-//! cluster's indexed δ-tick scheduler, and a full 10k-party scenario.
+//! Bench: L3 coordinator hot paths — the discrete-event engine (binary
+//! heap vs two-level bucket queue, plain and cancel-heavy), the cluster's
+//! indexed δ-tick scheduler, and a full 10k-party scenario cell swept both
+//! sequentially and in parallel on the worker pool.
 //! Targets (DESIGN.md §Perf L3): ≥1M events/s through the engine; the
-//! whole Fig 9 worst cell in low single-digit seconds.
+//! whole Fig 9 worst cell in low single-digit seconds. Every row lands in
+//! `BENCH_scheduler.json` so the perf trajectory is tracked across PRs.
 //!
 //! Run: cargo bench --bench scheduler_hot_path
 
+use fljit::bench::figs::run_cells;
 use fljit::bench::time_median;
 use fljit::cluster::{Cluster, ClusterConfig, TaskSpec};
 use fljit::coordinator::job::FlJobSpec;
 use fljit::coordinator::platform::run_scenario;
 use fljit::party::FleetKind;
-use fljit::sim::{secs, EventKind, EventQueue};
+use fljit::sim::{secs, EventKind, EventQueue, QueueKind};
+use fljit::util::json::Json;
 use fljit::util::table::Table;
 use fljit::workloads::Workload;
 
-fn main() {
-    let mut t = Table::new(
-        "L3 scheduler hot paths",
-        &["case", "median", "throughput"],
-    );
+fn row_json(case: &str, median_secs: f64, throughput: Option<(&str, f64)>) -> Json {
+    let mut pairs = vec![
+        ("case", Json::str(case)),
+        ("median_secs", Json::num(median_secs)),
+    ];
+    if let Some((unit, v)) = throughput {
+        pairs.push(("throughput", Json::num(v)));
+        pairs.push(("throughput_unit", Json::str(unit)));
+    }
+    Json::obj(pairs)
+}
 
-    // 1) raw event engine
+fn main() {
+    let mut t = Table::new("L3 scheduler hot paths", &["case", "median", "throughput"]);
+    let mut json_rows: Vec<Json> = Vec::new();
+
+    // 1) raw event engine: heap vs bucket backend
     let n_events = 1_000_000u64;
-    let (med, _) = time_median(3, || {
-        let mut q = EventQueue::new();
-        for i in 0..n_events {
-            q.schedule_at((i * 7) % 10_000_000, EventKind::Custom { tag: i });
-        }
-        while q.next().is_some() {}
-    });
-    t.row(vec![
-        format!("event engine ({n_events} sched+pop)"),
-        format!("{:.1} ms", med * 1e3),
-        format!("{:.2} M ev/s", n_events as f64 / med / 1e6),
-    ]);
+    for kind in [QueueKind::Heap, QueueKind::Bucket] {
+        let (med, _) = time_median(3, || {
+            let mut q = EventQueue::with_kind(kind);
+            for i in 0..n_events {
+                q.schedule_at((i * 7) % 10_000_000, EventKind::Custom { tag: i });
+            }
+            while q.next().is_some() {}
+        });
+        let evps = n_events as f64 / med;
+        t.row(vec![
+            format!("event engine {kind:?} ({n_events} sched+pop)"),
+            format!("{:.1} ms", med * 1e3),
+            format!("{:.2} M ev/s", evps / 1e6),
+        ]);
+        json_rows.push(row_json(
+            &format!("engine_{kind:?}").to_lowercase(),
+            med,
+            Some(("events_per_sec", evps)),
+        ));
+    }
+
+    // 1b) cancel-heavy profile: schedule, cancel half, drain the rest —
+    // the JIT deadline-timer pattern (most timers are canceled by quorum)
+    for kind in [QueueKind::Heap, QueueKind::Bucket] {
+        let (med, _) = time_median(3, || {
+            let mut q = EventQueue::with_kind(kind);
+            let mut ids = Vec::with_capacity(n_events as usize / 2);
+            for i in 0..n_events {
+                let id = q.schedule_at((i * 7) % 10_000_000, EventKind::Custom { tag: i });
+                if i % 2 == 0 {
+                    ids.push(id);
+                }
+            }
+            for id in ids {
+                q.cancel(id);
+            }
+            while q.next().is_some() {}
+        });
+        let evps = n_events as f64 / med;
+        t.row(vec![
+            format!("cancel-heavy {kind:?} (1M sched, 500k cancel)"),
+            format!("{:.1} ms", med * 1e3),
+            format!("{:.2} M ev/s", evps / 1e6),
+        ]);
+        json_rows.push(row_json(
+            &format!("cancel_heavy_{kind:?}").to_lowercase(),
+            med,
+            Some(("events_per_sec", evps)),
+        ));
+    }
 
     // 2) cluster tick with a deep pending queue (indexed scheduler)
     let (med, _) = time_median(3, || {
@@ -69,6 +122,7 @@ fn main() {
         format!("{:.1} ms", med * 1e3),
         "-".into(),
     ]);
+    json_rows.push(row_json("cluster_10k_tasks", med, None));
 
     // 3) full worst-case Fig 9 cell: 10k intermittent parties × 50 rounds
     let spec = FlJobSpec::new(
@@ -87,6 +141,41 @@ fn main() {
             format!("{:.2} s", med),
             format!("{:.0}k updates/s", 500.0 / med),
         ]);
+        json_rows.push(row_json(
+            &format!("cell_10k_{strat}"),
+            med,
+            Some(("k_updates_per_sec", 500.0 / med)),
+        ));
     }
+
+    // 4) the same three cells swept in parallel on the worker pool — the
+    // Fig 7/8/9 grid path after this PR
+    let (med, _) = time_median(1, || {
+        let cells = ["jit", "eager-serverless", "eager-ao"]
+            .iter()
+            .map(|s| (spec.clone(), *s, 7u64))
+            .collect();
+        let reports = run_cells(cells);
+        std::hint::black_box(reports.len());
+    });
+    t.row(vec![
+        "3 × 10k-party cells via worker pool".into(),
+        format!("{:.2} s", med),
+        format!("{:.0}k updates/s", 3.0 * 500.0 / med),
+    ]);
+    json_rows.push(row_json(
+        "cells_10k_parallel_x3",
+        med,
+        Some(("k_updates_per_sec", 3.0 * 500.0 / med)),
+    ));
+
     t.print();
+    let out = Json::obj(vec![
+        ("bench", Json::str("scheduler_hot_path")),
+        ("rows", Json::Arr(json_rows)),
+    ]);
+    match std::fs::write("BENCH_scheduler.json", out.pretty()) {
+        Ok(()) => eprintln!("[rows written to BENCH_scheduler.json]"),
+        Err(e) => eprintln!("warn: could not write BENCH_scheduler.json: {e}"),
+    }
 }

@@ -1,5 +1,11 @@
 //! Figure/table regeneration (§6): Fig 3 (periodicity), Fig 4 (linearity),
 //! Fig 7/8 (aggregation latency), Fig 9 (container-seconds + cost).
+//!
+//! Grid sweeps fan the independent scenario cells out across the global
+//! fusion [`WorkerPool`](crate::fusion::WorkerPool): each cell owns its
+//! platform, event queue and seeded RNG, so the parallel sweep is
+//! bit-identical to the sequential one — just `threads()`× faster on the
+//! 3-workload × 4-fleet-size × 4-strategy grids.
 
 use crate::coordinator::job::FlJobSpec;
 use crate::coordinator::platform::run_scenario;
@@ -13,6 +19,20 @@ use crate::workloads::Workload;
 /// Party-count axis of the paper's grids.
 pub const PARTY_GRID: [usize; 4] = [10, 100, 1000, 10000];
 
+/// Run independent scenario cells on the global worker pool, preserving
+/// input order. Every cell is self-contained (own `Platform`, own seeded
+/// RNG), so results match the sequential sweep exactly.
+pub fn run_cells(cells: Vec<(FlJobSpec, &'static str, u64)>) -> Vec<JobReport> {
+    let tasks: Vec<Box<dyn FnOnce() -> JobReport + Send>> = cells
+        .into_iter()
+        .map(|(spec, strat, seed)| {
+            Box::new(move || run_scenario(&spec, strat, seed))
+                as Box<dyn FnOnce() -> JobReport + Send>
+        })
+        .collect();
+    crate::fusion::WorkerPool::global().run_all(tasks)
+}
+
 /// Latency grid (Fig 7 intermittent / Fig 8 active heterogeneous).
 pub struct LatencyGrid {
     pub fleet: FleetKind,
@@ -23,9 +43,22 @@ pub struct LatencyGrid {
 
 impl LatencyGrid {
     pub fn run(&self) -> (Vec<Table>, Json) {
+        let workloads = Workload::all_paper();
+        let strategies = paper_strategies();
+        // Flatten the (workload × parties × strategy) grid into
+        // independent cells and sweep them in parallel.
+        let mut cells = Vec::new();
+        for workload in &workloads {
+            for &n in PARTY_GRID.iter().filter(|&&n| n <= self.max_parties) {
+                for strat in strategies {
+                    cells.push((self.spec(workload, n), *strat, self.seed));
+                }
+            }
+        }
+        let mut reports = run_cells(cells).into_iter();
         let mut tables = Vec::new();
         let mut json_rows = Vec::new();
-        for workload in Workload::all_paper() {
+        for workload in &workloads {
             let mut t = Table::new(
                 &format!(
                     "{} on {} — mean aggregation latency (s), {} parties",
@@ -37,9 +70,8 @@ impl LatencyGrid {
             );
             for &n in PARTY_GRID.iter().filter(|&&n| n <= self.max_parties) {
                 let mut row = vec![n.to_string()];
-                for strat in paper_strategies() {
-                    let spec = self.spec(&workload, n);
-                    let r = run_scenario(&spec, strat, self.seed);
+                for _ in strategies {
+                    let r = reports.next().expect("one report per grid cell");
                     row.push(format!("{:.2}", r.mean_latency_secs()));
                     json_rows.push(report_json(&r));
                 }
@@ -84,14 +116,34 @@ impl Default for ResourceGrid {
 
 impl ResourceGrid {
     pub fn run(&self) -> (Vec<Table>, Json) {
-        let mut tables = Vec::new();
-        let mut json_rows = Vec::new();
-        for workload in Workload::all_paper() {
-            if let Some(only) = &self.only_workload {
-                if workload.name != only {
-                    continue;
+        let strategies = paper_strategies();
+        let workloads: Vec<Workload> = Workload::all_paper()
+            .into_iter()
+            .filter(|w| match &self.only_workload {
+                None => true,
+                Some(only) => w.name == only.as_str(),
+            })
+            .collect();
+        // Flatten the (workload × fleet × parties × strategy) grid into
+        // independent cells and sweep them in parallel.
+        let mut cells = Vec::new();
+        for workload in &workloads {
+            for &fleet in &self.fleets {
+                for &n in PARTY_GRID.iter().filter(|&&n| n <= self.max_parties) {
+                    for strat in strategies {
+                        cells.push((
+                            FlJobSpec::new(workload.clone(), fleet, n, self.rounds),
+                            *strat,
+                            self.seed,
+                        ));
+                    }
                 }
             }
+        }
+        let mut results = run_cells(cells).into_iter();
+        let mut tables = Vec::new();
+        let mut json_rows = Vec::new();
+        for workload in &workloads {
             for &fleet in &self.fleets {
                 // the paper's intermittent block skips homogeneous fleets
                 let mut t = Table::new(
@@ -115,10 +167,9 @@ impl ResourceGrid {
                     ],
                 );
                 for &n in PARTY_GRID.iter().filter(|&&n| n <= self.max_parties) {
-                    let spec = FlJobSpec::new(workload.clone(), fleet, n, self.rounds);
-                    let reports: Vec<JobReport> = paper_strategies()
+                    let reports: Vec<JobReport> = strategies
                         .iter()
-                        .map(|s| run_scenario(&spec, s, self.seed))
+                        .map(|_| results.next().expect("one report per grid cell"))
                         .collect();
                     let (jit, batch, eager, ao) =
                         (&reports[0], &reports[1], &reports[2], &reports[3]);

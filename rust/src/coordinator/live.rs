@@ -20,6 +20,7 @@
 //! the loss curve this produces; EXPERIMENTS.md records it.
 
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
@@ -150,10 +151,12 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
 
     let items = cfg.minibatches * 32;
     let (update_tx, update_rx) = mpsc::channel::<PartyMsg>();
-    let mut model_txs = Vec::new();
+    // The global model is broadcast as one shared Arc per round instead of
+    // n_parties deep clones of a model-sized Vec.
+    let mut model_txs: Vec<mpsc::Sender<Option<Arc<Vec<f32>>>>> = Vec::new();
     let mut handles = Vec::new();
     for party in 0..cfg.n_parties {
-        let (mtx, mrx) = mpsc::channel::<Option<Vec<f32>>>();
+        let (mtx, mrx) = mpsc::channel::<Option<Arc<Vec<f32>>>>();
         model_txs.push(mtx);
         let utx = update_tx.clone();
         let cfgc = cfg.clone();
@@ -187,15 +190,19 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
     drop(update_tx);
 
     let mut histories = vec![PeriodicityTracker::new(6); cfg.n_parties];
-    let mut global = global0;
+    let mut global = Arc::new(global0);
     let mut rounds = Vec::new();
     let job_start = Instant::now();
     let mut total_busy = 0.0;
+    // Round-persistent hot-path state: the aggregator (reset, not
+    // reallocated, each round) and one evaluation trainer.
+    let mut agg = Aggregator::new(global.len());
+    let mut eval_trainer = Trainer::init(&rt, cfg.seed);
 
     for round in 0..cfg.rounds {
         let round_start = Instant::now();
         for tx in &model_txs {
-            tx.send(Some(global.clone()))
+            tx.send(Some(Arc::clone(&global)))
                 .map_err(|_| anyhow!("party hung up"))?;
         }
 
@@ -230,7 +237,7 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
             LiveStrategy::Jit { .. } => Instant::now(),
             LiveStrategy::EagerAlwaysOn => round_start,
         };
-        let mut agg = Aggregator::new(global.len());
+        agg.reset();
         let mut last_arrival = round_start;
         let mut train_loss_sum = 0.0f32;
         let mut fused = 0usize;
@@ -273,13 +280,12 @@ pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
         } else {
             agg.acc.clone()
         };
-        global = fused_model;
+        global = Arc::new(fused_model);
         let publish = Instant::now();
         let busy = (publish - busy_start).as_secs_f64();
         total_busy += busy;
 
-        // Evaluate the global model.
-        let mut eval_trainer = Trainer::init(&rt, cfg.seed);
+        // Evaluate the global model (trainer reused across rounds).
         eval_trainer.unflatten(&global);
         let (eval_loss, eval_acc) = eval_trainer.eval(&eval_x, &eval_y)?;
 
@@ -321,9 +327,10 @@ mod tests {
     use super::*;
 
     fn artifacts_available() -> bool {
-        crate::runtime::default_artifact_dir()
-            .join("manifest.json")
-            .exists()
+        crate::runtime::xla_enabled()
+            && crate::runtime::default_artifact_dir()
+                .join("manifest.json")
+                .exists()
     }
 
     #[test]

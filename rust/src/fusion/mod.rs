@@ -19,8 +19,12 @@
 //! available through the XLA artifacts (see `runtime::XlaFusion`), and an
 //! integration test pins rust ≡ XLA ≡ (transitively, via pytest) pallas.
 
+pub mod pool;
+
 use crate::model::{ModelSpec, ModelUpdate};
 use crate::util::rng::Rng;
+
+pub use pool::{ScratchBuf, ScratchPool, WorkerPool};
 
 /// Aggregation algorithm (§6.3 uses FedProx and FedSGD).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -34,12 +38,23 @@ pub enum Algorithm {
 }
 
 impl Algorithm {
+    /// Parse an algorithm name, case-insensitively. `fedprox` accepts an
+    /// optional server-pull coefficient as `fedprox:<mu>` (0 ≤ μ ≤ 1), so
+    /// CLI sweeps can vary μ without code changes.
     pub fn parse(s: &str) -> Option<Algorithm> {
-        match s {
+        let s = s.trim().to_ascii_lowercase();
+        match s.as_str() {
             "fedavg" => Some(Algorithm::FedAvg),
             "fedsgd" => Some(Algorithm::FedSgd),
             "fedprox" => Some(Algorithm::FedProx { mu: 0.1 }),
-            _ => None,
+            _ => {
+                let mu = s.strip_prefix("fedprox:")?.parse::<f32>().ok()?;
+                if mu.is_finite() && (0.0..=1.0).contains(&mu) {
+                    Some(Algorithm::FedProx { mu })
+                } else {
+                    None
+                }
+            }
         }
     }
 
@@ -57,8 +72,16 @@ impl Algorithm {
 // ---------------------------------------------------------------------------
 
 /// acc ← (w_acc·acc + w_b·b) / (w_acc + w_b), in place. The `t_pair` unit.
+///
+/// Panics if the combined weight is not positive and finite — a zero total
+/// would silently turn the mean into ±inf/NaN garbage.
 pub fn pair_merge_into(acc: &mut [f32], w_acc: f32, b: &[f32], w_b: f32) {
     assert_eq!(acc.len(), b.len(), "update length mismatch");
+    let total = w_acc + w_b;
+    assert!(
+        total > 0.0 && total.is_finite(),
+        "pair_merge_into: total weight must be positive and finite, got {w_acc} + {w_b}"
+    );
     let inv = 1.0 / (w_acc + w_b);
     let ca = w_acc * inv;
     let cb = w_b * inv;
@@ -130,22 +153,57 @@ pub fn wsum_blocked_into(out: &mut [f32], updates: &[&[f32]], w: &[f32]) {
     }
 }
 
-/// Weighted mean over K updates (cache-blocked; K=2 dispatches to the
+/// Weighted mean over K updates into a caller-provided buffer — the
+/// zero-allocation hot path (cache-blocked; K=2 dispatches to the
 /// 3-stream pair merge, which measures faster than a fill+fold there).
-pub fn weighted_mean(updates: &[&[f32]], w: &[f32]) -> Vec<f32> {
-    let n = updates.first().map(|u| u.len()).unwrap_or(0);
-    if updates.len() == 2 {
-        let mut out = updates[0].to_vec();
-        pair_merge_into(&mut out, w[0], updates[1], w[1]);
-        return out;
+///
+/// Edge cases are explicit rather than garbage: `updates` empty zeroes
+/// `out`; a non-positive or non-finite total weight panics with a clear
+/// message (the old behaviour silently produced `1.0/0.0 = inf` means).
+pub fn weighted_mean_into(out: &mut [f32], updates: &[&[f32]], w: &[f32]) {
+    assert_eq!(updates.len(), w.len(), "weights mismatch");
+    if updates.is_empty() {
+        out.fill(0.0);
+        return;
     }
-    let mut out = vec![0.0f32; n];
-    wsum_blocked_into(&mut out, updates, w);
     let total: f32 = w.iter().sum();
+    assert!(
+        total > 0.0 && total.is_finite(),
+        "weighted_mean: total weight must be positive and finite, got {total}"
+    );
+    if updates.len() == 2 {
+        assert_eq!(out.len(), updates[0].len(), "update length mismatch");
+        out.copy_from_slice(updates[0]);
+        pair_merge_into(out, w[0], updates[1], w[1]);
+        return;
+    }
+    wsum_blocked_into(out, updates, w);
     let inv = 1.0 / total;
-    for o in &mut out {
+    for o in out.iter_mut() {
         *o *= inv;
     }
+}
+
+/// Weighted mean over K updates, freshly allocated (reference path; the
+/// hot paths use [`weighted_mean_into`] / [`weighted_mean_pooled`]).
+pub fn weighted_mean(updates: &[&[f32]], w: &[f32]) -> Vec<f32> {
+    let n = updates.first().map(|u| u.len()).unwrap_or(0);
+    let mut out = vec![0.0f32; n];
+    weighted_mean_into(&mut out, updates, w);
+    out
+}
+
+/// Weighted mean into a pooled scratch buffer: after warm-up this performs
+/// zero model-sized allocations per call — the buffer returns to `scratch`
+/// when the returned guard drops (or is detached).
+pub fn weighted_mean_pooled<'p>(
+    scratch: &'p ScratchPool,
+    updates: &[&[f32]],
+    w: &[f32],
+) -> ScratchBuf<'p> {
+    let n = updates.first().map(|u| u.len()).unwrap_or(0);
+    let mut out = scratch.take(n);
+    weighted_mean_into(&mut out, updates, w);
     out
 }
 
@@ -221,33 +279,109 @@ impl Aggregator {
         self.n_merged += other.n_merged;
     }
 
-    /// Final global model for `alg` (FedProx needs the previous global).
-    pub fn finalize(&self, alg: Algorithm, prev_global: Option<&[f32]>) -> Vec<f32> {
-        match alg {
-            Algorithm::FedAvg | Algorithm::FedSgd => self.acc.clone(),
-            Algorithm::FedProx { mu } => {
-                let g = prev_global.expect("FedProx finalize needs the previous global model");
-                let mut out = self.acc.clone();
-                for (o, &gv) in out.iter_mut().zip(g.iter()) {
-                    *o = (1.0 - mu) * *o + mu * gv;
-                }
-                out
+    /// Rewind to the empty state while keeping the accumulator allocation,
+    /// so one `Aggregator` can be reused round after round (the first
+    /// `add` after a reset overwrites the stale contents wholesale).
+    pub fn reset(&mut self) {
+        self.weight = 0.0;
+        self.n_merged = 0;
+    }
+
+    /// Final global model for `alg` into a caller-provided buffer — the
+    /// zero-allocation path (`out`'s capacity is reused across rounds).
+    pub fn finalize_into(&self, alg: Algorithm, prev_global: Option<&[f32]>, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend_from_slice(&self.acc);
+        if let Algorithm::FedProx { mu } = alg {
+            let g = prev_global.expect("FedProx finalize needs the previous global model");
+            assert_eq!(out.len(), g.len(), "global model length mismatch");
+            for (o, &gv) in out.iter_mut().zip(g.iter()) {
+                *o = (1.0 - mu) * *o + mu * gv;
             }
         }
+    }
+
+    /// Final global model for `alg` (FedProx needs the previous global).
+    pub fn finalize(&self, alg: Algorithm, prev_global: Option<&[f32]>) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.acc.len());
+        self.finalize_into(alg, prev_global, &mut out);
+        out
     }
 }
 
 /// Data-parallel aggregation: split `updates` across `shards` workers
-/// (threads — stand-in for `N_agg` aggregator containers), each folds its
-/// shard with the cache-blocked weighted sum, then partials merge pairwise
-/// (§5.4's parallel aggregation). Returns a weighted-mean [`Aggregator`]
-/// identical (within fp tolerance) to streaming the updates one by one.
+/// (stand-in for `N_agg` aggregator containers), each folds its shard with
+/// the cache-blocked weighted sum, then partials merge pairwise (§5.4's
+/// parallel aggregation). Returns a weighted-mean [`Aggregator`] identical
+/// (within fp tolerance) to streaming the updates one by one.
+///
+/// Shards execute on the persistent global [`WorkerPool`] with partial
+/// sums drawn from the global [`ScratchPool`] — no OS threads are spawned
+/// and no per-shard model-sized vectors are allocated after warm-up.
 pub fn tree_reduce(updates: &[ModelUpdate], shards: usize) -> Aggregator {
-    assert!(!updates.is_empty());
+    tree_reduce_with(WorkerPool::global(), ScratchPool::global(), updates, shards)
+}
+
+/// [`tree_reduce`] against explicit pools (tests/benches inject their own).
+pub fn tree_reduce_with<'a>(
+    workers: &WorkerPool,
+    scratch: &'a ScratchPool,
+    updates: &'a [ModelUpdate],
+    shards: usize,
+) -> Aggregator {
+    assert!(!updates.is_empty(), "tree_reduce: no updates to aggregate");
     let dim = updates[0].data.len();
     let shards = shards.max(1).min(updates.len());
     let chunk = updates.len().div_ceil(shards);
     // (weighted sum, total weight, count) per shard
+    type ShardTask<'t> = Box<dyn FnOnce() -> (ScratchBuf<'t>, f32, usize) + Send + 't>;
+    let tasks: Vec<ShardTask<'a>> = updates
+        .chunks(chunk)
+        .map(|part| {
+            Box::new(move || {
+                let views: Vec<&[f32]> = part.iter().map(|u| u.data.as_slice()).collect();
+                let ws: Vec<f32> = part.iter().map(|u| u.weight).collect();
+                let mut sum = scratch.take(dim);
+                wsum_blocked_into(&mut sum, &views, &ws);
+                (sum, ws.iter().sum::<f32>(), part.len())
+            }) as ShardTask<'a>
+        })
+        .collect();
+    let mut partials = workers.run_all(tasks).into_iter();
+    // combine partial sums into the first shard's buffer, normalize once
+    let (first, mut weight, mut n_merged) = partials.next().expect("at least one shard");
+    let mut acc = first.detach();
+    for (sum, w, n) in partials {
+        for (a, &x) in acc.iter_mut().zip(sum.iter()) {
+            *a += x;
+        }
+        weight += w;
+        n_merged += n;
+    }
+    assert!(
+        weight > 0.0 && weight.is_finite(),
+        "tree_reduce: total weight must be positive and finite, got {weight}"
+    );
+    let inv = 1.0 / weight;
+    for a in &mut acc {
+        *a *= inv;
+    }
+    Aggregator {
+        acc,
+        weight,
+        n_merged,
+    }
+}
+
+/// The pre-pool `tree_reduce`: spawns fresh scoped OS threads and
+/// allocates per-shard sums on every call. Kept as the measured baseline
+/// for `fusion_hot_path` (pool vs per-call spawn) — do not use on the
+/// request path.
+pub fn tree_reduce_spawning(updates: &[ModelUpdate], shards: usize) -> Aggregator {
+    assert!(!updates.is_empty(), "tree_reduce: no updates to aggregate");
+    let dim = updates[0].data.len();
+    let shards = shards.max(1).min(updates.len());
+    let chunk = updates.len().div_ceil(shards);
     let partials: Vec<(Vec<f32>, f32, usize)> = std::thread::scope(|s| {
         let handles: Vec<_> = updates
             .chunks(chunk)
@@ -263,7 +397,6 @@ pub fn tree_reduce(updates: &[ModelUpdate], shards: usize) -> Aggregator {
             .collect();
         handles.into_iter().map(|h| h.join().unwrap()).collect()
     });
-    // combine partial sums, then normalize once
     let mut acc = vec![0.0f32; dim];
     let mut weight = 0.0f32;
     let mut n_merged = 0usize;
@@ -274,6 +407,10 @@ pub fn tree_reduce(updates: &[ModelUpdate], shards: usize) -> Aggregator {
         weight += w;
         n_merged += n;
     }
+    assert!(
+        weight > 0.0 && weight.is_finite(),
+        "tree_reduce: total weight must be positive and finite, got {weight}"
+    );
     let inv = 1.0 / weight;
     for a in &mut acc {
         *a *= inv;
@@ -476,6 +613,149 @@ mod tests {
             assert_eq!(Algorithm::parse(n).unwrap().name(), n);
         }
         assert!(Algorithm::parse("magic").is_none());
+    }
+
+    #[test]
+    fn algorithm_parse_case_insensitive_and_mu() {
+        assert_eq!(Algorithm::parse("FedAvg"), Some(Algorithm::FedAvg));
+        assert_eq!(Algorithm::parse(" FEDSGD "), Some(Algorithm::FedSgd));
+        assert_eq!(
+            Algorithm::parse("FedProx:0.25"),
+            Some(Algorithm::FedProx { mu: 0.25 })
+        );
+        assert_eq!(
+            Algorithm::parse("fedprox:0"),
+            Some(Algorithm::FedProx { mu: 0.0 })
+        );
+        assert_eq!(
+            Algorithm::parse("fedprox"),
+            Some(Algorithm::FedProx { mu: 0.1 })
+        );
+        assert!(Algorithm::parse("fedprox:1.5").is_none());
+        assert!(Algorithm::parse("fedprox:-0.1").is_none());
+        assert!(Algorithm::parse("fedprox:nan").is_none());
+        assert!(Algorithm::parse("fedprox:").is_none());
+    }
+
+    #[test]
+    fn weighted_mean_empty_updates_is_empty() {
+        let out = weighted_mean(&[], &[]);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "total weight must be positive and finite")]
+    fn weighted_mean_zero_total_weight_panics() {
+        let u1 = [1.0f32, 2.0];
+        let u2 = [3.0f32, 4.0];
+        let u3 = [5.0f32, 6.0];
+        weighted_mean(&[&u1, &u2, &u3], &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "total weight must be positive and finite")]
+    fn pair_merge_zero_total_weight_panics() {
+        let mut acc = vec![1.0f32, 2.0];
+        pair_merge_into(&mut acc, 0.0, &[3.0, 4.0], 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "no updates to aggregate")]
+    fn tree_reduce_empty_panics_clearly() {
+        tree_reduce(&[], 4);
+    }
+
+    #[test]
+    fn pooled_weighted_mean_matches_fresh_alloc_property() {
+        let scratch = pool::ScratchPool::new();
+        prop::check("pooled==fresh weighted_mean", prop::default_cases(), |g| {
+            let k = g.usize(1, 12);
+            let d = g.usize(1, 4096);
+            let us = updates_from(g, k, d);
+            let views: Vec<&[f32]> = us.iter().map(|u| u.data.as_slice()).collect();
+            let ws: Vec<f32> = us.iter().map(|u| u.weight).collect();
+            let fresh = weighted_mean(&views, &ws);
+            let pooled = weighted_mean_pooled(&scratch, &views, &ws);
+            crate::prop_assert!(pooled.len() == fresh.len(), "length mismatch");
+            for (i, (a, b)) in pooled.iter().zip(fresh.iter()).enumerate() {
+                crate::prop_assert!(
+                    (*a == *b) || prop::close(*a as f64, *b as f64, 1e-6),
+                    "elem {i}: pooled {a} vs fresh {b}"
+                );
+            }
+            Ok(())
+        });
+        assert!(
+            scratch.parked() >= 1,
+            "buffers must return to the pool for reuse"
+        );
+    }
+
+    #[test]
+    fn pool_tree_reduce_matches_spawning_and_sequential_property() {
+        let workers = pool::WorkerPool::new(4);
+        let scratch = pool::ScratchPool::new();
+        prop::check("pool tree==spawn tree==fold", 24, |g| {
+            let k = g.usize(1, 80);
+            let d = g.usize(1, 300);
+            let us = updates_from(g, k, d);
+            let shards = g.usize(1, 8);
+            let pooled = tree_reduce_with(&workers, &scratch, &us, shards);
+            let spawned = tree_reduce_spawning(&us, shards);
+            let gold = reference_mean(&us);
+            crate::prop_assert!(
+                pooled.n_merged == k && spawned.n_merged == k,
+                "n_merged {} / {} != {k}",
+                pooled.n_merged,
+                spawned.n_merged
+            );
+            for ((i, (p, s)), gref) in pooled
+                .acc
+                .iter()
+                .zip(spawned.acc.iter())
+                .enumerate()
+                .zip(gold.iter())
+            {
+                crate::prop_assert!(
+                    *p == *s,
+                    "elem {i}: pool {p} != spawn {s} (identical shard math must bit-match)"
+                );
+                crate::prop_assert!(
+                    prop::close(*p as f64, *gref as f64, 1e-3),
+                    "elem {i}: pool {p} vs reference {gref}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn finalize_into_matches_finalize_and_reset_reuses() {
+        let mut g = prop::Gen::new(0xF00D, 60);
+        let us = updates_from(&mut g, 5, 96);
+        let global = g.vec_f32(96, 1.0);
+        let mut agg = Aggregator::new(96);
+        for u in &us {
+            agg.add(&u.data, u.weight);
+        }
+        let mut out = Vec::new();
+        for alg in [Algorithm::FedAvg, Algorithm::FedProx { mu: 0.3 }] {
+            agg.finalize_into(alg, Some(&global), &mut out);
+            assert_eq!(out, agg.finalize(alg, Some(&global)));
+        }
+        // reset + re-add reproduces a fresh aggregator without reallocating
+        let cap_ptr = agg.acc.as_ptr();
+        agg.reset();
+        assert_eq!(agg.n_merged, 0);
+        for u in &us {
+            agg.add(&u.data, u.weight);
+        }
+        assert_eq!(agg.acc.as_ptr(), cap_ptr, "reset must keep the allocation");
+        let mut fresh = Aggregator::new(96);
+        for u in &us {
+            fresh.add(&u.data, u.weight);
+        }
+        assert_eq!(agg.acc, fresh.acc);
     }
 
     #[test]

@@ -1,0 +1,470 @@
+//! Persistent fusion worker pool + reusable scratch buffers.
+//!
+//! The §Perf hot-path problem this solves: `tree_reduce` used to spawn
+//! fresh OS threads on *every call* (`std::thread::scope`), and every
+//! aggregation round allocated model-sized `Vec<f32>`s (66–138 MB for the
+//! zoo models) for partial sums and outputs. At 10k-party × 50-round × 4-
+//! strategy sweep scale, thread spawn + page-fault cost dominates the
+//! fusion math itself. This module provides:
+//!
+//! * [`WorkerPool`] — a fixed set of long-lived worker threads fed through
+//!   a channel. `run_all` executes a batch of borrowed (non-`'static`)
+//!   closures with the *caller participating* in the drain, so the pool is
+//!   deadlock-free even when nested or sized to one thread, and every
+//!   borrow is provably dead before `run_all` returns (the lifetime
+//!   erasure below is sound for exactly that reason).
+//! * [`ScratchPool`] — a free-list of reusable `Vec<f32>` buffers handed
+//!   out as RAII [`ScratchBuf`]s. After warm-up, taking a model-sized
+//!   buffer is a pop + `resize`, not an allocation.
+//!
+//! Both have process-wide singletons ([`WorkerPool::global`],
+//! [`ScratchPool::global`]) shared by `fusion`, `runtime`,
+//! `coordinator::live` and the `bench::figs` scenario sweeps.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::ops::{Deref, DerefMut};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+thread_local! {
+    /// Id of the [`WorkerPool`] this thread is a worker of (0 = none).
+    /// `run_all` re-entered on a worker of the same pool runs its tasks
+    /// inline instead of queueing helper jobs — workers therefore never
+    /// block on a latch, which is what makes the protocol deadlock-free.
+    static WORKER_OF_POOL: Cell<usize> = const { Cell::new(0) };
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A boxed task for [`WorkerPool::run_all`]: may borrow from the caller's
+/// stack (`'env`), must send its result back across threads.
+pub type Task<'env, R> = Box<dyn FnOnce() -> R + Send + 'env>;
+
+/// Counts outstanding helper jobs; `wait` returns when all checked in.
+struct Latch {
+    state: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch {
+            state: Mutex::new(n),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn count_down(&self) {
+        let mut n = self.state.lock().unwrap();
+        *n -= 1;
+        if *n == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut n = self.state.lock().unwrap();
+        while *n > 0 {
+            n = self.cv.wait(n).unwrap();
+        }
+    }
+}
+
+/// Work shared between the caller and the pool helpers for one `run_all`.
+struct Batch<'env, R> {
+    queue: Mutex<VecDeque<(usize, Task<'env, R>)>>,
+    results: Mutex<Vec<Option<R>>>,
+    panicked: AtomicBool,
+}
+
+impl<R: Send> Batch<'_, R> {
+    /// Pop and run tasks until the queue is empty. Panics inside a task are
+    /// caught so pool workers survive; the flag re-raises on the caller.
+    fn drain(&self) {
+        loop {
+            let next = self.queue.lock().unwrap().pop_front();
+            let Some((i, task)) = next else { break };
+            match catch_unwind(AssertUnwindSafe(task)) {
+                Ok(r) => self.results.lock().unwrap()[i] = Some(r),
+                Err(_) => self.panicked.store(true, Ordering::SeqCst),
+            }
+        }
+    }
+}
+
+/// A fixed-size pool of persistent worker threads.
+///
+/// Threads are spawned once (at construction) and reused across every
+/// `run_all` call — the replacement for per-call `thread::scope` spawns on
+/// the fusion and sweep hot paths.
+pub struct WorkerPool {
+    tx: mpsc::Sender<Job>,
+    n_threads: usize,
+    /// Unique pool id for the reentrancy check (see [`WORKER_OF_POOL`]).
+    id: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `n_threads` persistent workers (at least one).
+    pub fn new(n_threads: usize) -> WorkerPool {
+        static NEXT_ID: AtomicUsize = AtomicUsize::new(1);
+        let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+        let n = n_threads.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        for i in 0..n {
+            let rx = Arc::clone(&rx);
+            std::thread::Builder::new()
+                .name(format!("fljit-pool-{i}"))
+                .spawn(move || {
+                    WORKER_OF_POOL.with(|w| w.set(id));
+                    loop {
+                        // Hold the lock only for the dequeue, never while
+                        // running the job.
+                        let job = rx.lock().unwrap().recv();
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // pool dropped
+                        }
+                    }
+                })
+                .expect("spawn fljit pool worker");
+        }
+        WorkerPool {
+            tx,
+            n_threads: n,
+            id,
+        }
+    }
+
+    /// Worker count (parallelism available to `run_all`).
+    pub fn threads(&self) -> usize {
+        self.n_threads
+    }
+
+    /// Process-wide pool sized to the machine, created on first use and
+    /// reused for every subsequent fusion call and scenario sweep.
+    pub fn global() -> &'static WorkerPool {
+        static POOL: OnceLock<WorkerPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let n = std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(4);
+            WorkerPool::new(n)
+        })
+    }
+
+    /// Run every task (possibly borrowing from the caller's stack) and
+    /// return their results in task order. The caller thread drains the
+    /// shared queue alongside up to `threads()` pool helpers, and a call
+    /// made *from* one of this pool's workers (a nested `run_all`) runs
+    /// its tasks inline — so workers never block, every queued helper job
+    /// eventually runs, and same-pool nesting cannot deadlock. (Cyclic
+    /// waits across two *different* pools are still the caller's problem.)
+    ///
+    /// Panics (after all tasks settle) if any task panicked.
+    pub fn run_all<'env, R: Send>(&self, tasks: Vec<Task<'env, R>>) -> Vec<R> {
+        let n = tasks.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        // Reentrancy: a task already running on one of this pool's workers
+        // must not wait on further helper jobs (the queued helpers could
+        // only ever run on workers that are themselves blocked waiting).
+        // Run nested batches inline — the outer call already owns the
+        // parallelism.
+        if WORKER_OF_POOL.with(|w| w.get()) == self.id {
+            return tasks.into_iter().map(|t| t()).collect();
+        }
+        let batch = Batch {
+            queue: Mutex::new(tasks.into_iter().enumerate().collect()),
+            results: Mutex::new((0..n).map(|_| None).collect()),
+            panicked: AtomicBool::new(false),
+        };
+        // One task runs on the caller anyway; helpers beyond n-1 are waste.
+        let n_helpers = self.n_threads.min(n - 1);
+        let latch = Arc::new(Latch::new(n_helpers));
+        {
+            let batch_ref: &Batch<'env, R> = &batch;
+            for _ in 0..n_helpers {
+                let latch = Arc::clone(&latch);
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    batch_ref.drain();
+                    // After this point the helper touches only the Arc'd
+                    // latch, never the caller's stack.
+                    latch.count_down();
+                });
+                // SAFETY: lifetime erasure to feed the 'static channel. The
+                // job borrows `batch` on this stack frame; `latch.wait()`
+                // below does not return until every helper has finished
+                // `drain` and checked in, so the borrow never outlives the
+                // frame. The latch itself is Arc-owned, so a helper
+                // finishing its `count_down` after `wait` returns touches
+                // only memory it co-owns.
+                let job: Job = unsafe { std::mem::transmute(job) };
+                if let Err(e) = self.tx.send(job) {
+                    // Channel closed (pool being torn down): degrade to
+                    // running the helper inline.
+                    (e.0)();
+                }
+            }
+            batch_ref.drain(); // caller participates
+            latch.wait();
+        }
+        if batch.panicked.load(Ordering::SeqCst) {
+            panic!("WorkerPool task panicked");
+        }
+        batch
+            .results
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("task drained without a result"))
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scratch buffers
+// ---------------------------------------------------------------------------
+
+/// Free-list of reusable `f32` buffers. `take` pops (or allocates) a
+/// buffer and returns it as an RAII guard that puts it back on drop, so
+/// steady-state aggregation rounds perform zero model-sized allocations.
+#[derive(Default)]
+pub struct ScratchPool {
+    free: Mutex<Vec<Vec<f32>>>,
+}
+
+impl ScratchPool {
+    pub fn new() -> ScratchPool {
+        ScratchPool::default()
+    }
+
+    /// Process-wide scratch pool.
+    pub fn global() -> &'static ScratchPool {
+        static POOL: OnceLock<ScratchPool> = OnceLock::new();
+        POOL.get_or_init(ScratchPool::new)
+    }
+
+    /// A buffer of exactly `len` elements with **unspecified contents**
+    /// (zeroed only where the buffer had to grow) — scratch semantics:
+    /// every consumer fully overwrites, so reuse pays no memset. Reuses
+    /// the largest pooled buffer when one exists (capacity is retained
+    /// across rounds).
+    pub fn take(&self, len: usize) -> ScratchBuf<'_> {
+        let mut v = {
+            let mut free = self.free.lock().unwrap();
+            // Largest-first keeps big (model-sized) buffers circulating
+            // instead of repeatedly growing small ones.
+            free.pop().unwrap_or_default()
+        };
+        if v.len() >= len {
+            v.truncate(len);
+        } else {
+            v.resize(len, 0.0);
+        }
+        ScratchBuf {
+            v,
+            pool: Some(self),
+        }
+    }
+
+    /// Buffers currently parked in the free list (test/inspection hook).
+    pub fn parked(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+
+    fn put(&self, v: Vec<f32>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        let mut free = self.free.lock().unwrap();
+        // Keep the free list sorted by capacity so `take` pops the largest.
+        let at = free
+            .binary_search_by_key(&v.capacity(), |b| b.capacity())
+            .unwrap_or_else(|i| i);
+        free.insert(at, v);
+    }
+}
+
+/// RAII scratch buffer: derefs to `[f32]`, returns to its pool on drop.
+pub struct ScratchBuf<'p> {
+    v: Vec<f32>,
+    pool: Option<&'p ScratchPool>,
+}
+
+impl ScratchBuf<'_> {
+    /// Detach the buffer from the pool, keeping the allocation.
+    pub fn detach(mut self) -> Vec<f32> {
+        self.pool = None;
+        std::mem::take(&mut self.v)
+    }
+}
+
+impl Deref for ScratchBuf<'_> {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.v
+    }
+}
+
+impl DerefMut for ScratchBuf<'_> {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.v
+    }
+}
+
+impl Drop for ScratchBuf<'_> {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool {
+            pool.put(std::mem::take(&mut self.v));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_all_preserves_task_order() {
+        let pool = WorkerPool::new(4);
+        let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..64)
+            .map(|i| Box::new(move || i * i) as Box<dyn FnOnce() -> usize + Send>)
+            .collect();
+        let got = pool.run_all(tasks);
+        assert_eq!(got, (0..64).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_all_borrows_caller_data() {
+        let pool = WorkerPool::new(2);
+        let data: Vec<u64> = (0..1000).collect();
+        let chunks: Vec<&[u64]> = data.chunks(100).collect();
+        let tasks: Vec<Box<dyn FnOnce() -> u64 + Send>> = chunks
+            .into_iter()
+            .map(|c| Box::new(move || c.iter().sum::<u64>()) as Box<dyn FnOnce() -> u64 + Send>)
+            .collect();
+        let sums = pool.run_all(tasks);
+        assert_eq!(sums.iter().sum::<u64>(), data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn run_all_single_thread_pool_completes() {
+        let pool = WorkerPool::new(1);
+        let tasks: Vec<Box<dyn FnOnce() -> u32 + Send>> = (0..16)
+            .map(|i| Box::new(move || i + 1) as Box<dyn FnOnce() -> u32 + Send>)
+            .collect();
+        assert_eq!(pool.run_all(tasks).iter().sum::<u32>(), (1..=16).sum());
+    }
+
+    #[test]
+    fn run_all_nested_does_not_deadlock() {
+        let pool = WorkerPool::new(2);
+        let outer: Vec<Box<dyn FnOnce() -> u32 + Send>> = (0..4)
+            .map(|i| {
+                Box::new(move || {
+                    let inner: Vec<Box<dyn FnOnce() -> u32 + Send>> = (0..4)
+                        .map(|j| Box::new(move || i * 10 + j) as Box<dyn FnOnce() -> u32 + Send>)
+                        .collect();
+                    WorkerPool::global().run_all(inner).into_iter().sum()
+                }) as Box<dyn FnOnce() -> u32 + Send>
+            })
+            .collect();
+        let total: u32 = pool.run_all(outer).into_iter().sum();
+        let want: u32 = (0..4u32).map(|i| (0..4).map(|j| i * 10 + j).sum::<u32>()).sum();
+        assert_eq!(total, want);
+    }
+
+    #[test]
+    fn run_all_nested_on_the_same_single_thread_pool_does_not_deadlock() {
+        // The adversarial shape: every outer task re-enters the SAME pool,
+        // and the pool has one worker. Reentrant calls must run inline
+        // rather than queue helper jobs behind a blocked worker.
+        let pool = Arc::new(WorkerPool::new(1));
+        let outer: Vec<Box<dyn FnOnce() -> u32 + Send>> = (0..3)
+            .map(|i| {
+                let pool = Arc::clone(&pool);
+                Box::new(move || {
+                    let inner: Vec<Box<dyn FnOnce() -> u32 + Send>> = (0..3)
+                        .map(|j| Box::new(move || i * 10 + j) as Box<dyn FnOnce() -> u32 + Send>)
+                        .collect();
+                    pool.run_all(inner).into_iter().sum()
+                }) as Box<dyn FnOnce() -> u32 + Send>
+            })
+            .collect();
+        let total: u32 = pool.run_all(outer).into_iter().sum();
+        let want: u32 = (0..3u32).map(|i| (0..3).map(|j| i * 10 + j).sum::<u32>()).sum();
+        assert_eq!(total, want);
+    }
+
+    #[test]
+    #[should_panic(expected = "WorkerPool task panicked")]
+    fn run_all_propagates_panics() {
+        let pool = WorkerPool::new(2);
+        let tasks: Vec<Box<dyn FnOnce() + Send>> = (0..4)
+            .map(|i| {
+                Box::new(move || {
+                    if i == 2 {
+                        panic!("boom");
+                    }
+                }) as Box<dyn FnOnce() + Send>
+            })
+            .collect();
+        pool.run_all(tasks);
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_batch() {
+        let pool = WorkerPool::new(2);
+        let bad: Vec<Box<dyn FnOnce() + Send>> =
+            vec![Box::new(|| panic!("first batch dies"))];
+        assert!(catch_unwind(AssertUnwindSafe(|| pool.run_all(bad))).is_err());
+        // Workers caught the panic and are still serving.
+        let ok: Vec<Box<dyn FnOnce() -> u32 + Send>> = (0..8)
+            .map(|i| Box::new(move || i) as Box<dyn FnOnce() -> u32 + Send>)
+            .collect();
+        assert_eq!(pool.run_all(ok).len(), 8);
+    }
+
+    #[test]
+    fn scratch_buffers_are_reused_not_reallocated() {
+        let pool = ScratchPool::new();
+        let ptr = {
+            let mut b = pool.take(1 << 16);
+            assert_eq!(b.len(), 1 << 16);
+            assert_eq!(b[0], 0.0, "freshly grown buffers are zeroed");
+            b[0] = 1.0;
+            b.as_ptr() as usize
+        }; // drops back into the pool
+        assert_eq!(pool.parked(), 1);
+        let b2 = pool.take(1 << 16);
+        assert_eq!(b2.as_ptr() as usize, ptr, "same allocation must be reused");
+        assert_eq!(b2.len(), 1 << 16);
+        // contents are unspecified on reuse (no memset) — b2[0] may be 1.0
+        assert_eq!(pool.parked(), 0);
+    }
+
+    #[test]
+    fn scratch_detach_keeps_buffer_out_of_pool() {
+        let pool = ScratchPool::new();
+        let v = pool.take(128).detach();
+        assert_eq!(v.len(), 128);
+        assert_eq!(pool.parked(), 0);
+    }
+
+    #[test]
+    fn scratch_prefers_largest_parked_buffer() {
+        let pool = ScratchPool::new();
+        drop(pool.take(16));
+        drop(pool.take(4096));
+        drop(pool.take(64));
+        assert_eq!(pool.parked(), 3);
+        let big = pool.take(10);
+        assert!(big.v.capacity() >= 4096, "largest buffer should pop first");
+    }
+}

@@ -16,7 +16,7 @@
 //! semantics are identical in both.
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::sim::Time;
 
@@ -39,7 +39,20 @@ impl Payload {
             Payload::Sim { size_bytes } => *size_bytes,
         }
     }
+
+    /// Inline update data, if this payload carries any.
+    pub fn data(&self) -> Option<&[f32]> {
+        match self {
+            Payload::Inline(v) => Some(v),
+            _ => None,
+        }
+    }
 }
+
+/// Zero-copy message view handed to consumers: the topic log and every
+/// consumer share one refcounted allocation, so fetching an inline
+/// model update never clones its `Vec<f32>`.
+pub type MessageView = Arc<Message>;
 
 /// A model-update (or checkpoint) message.
 #[derive(Clone, Debug, PartialEq)]
@@ -57,9 +70,12 @@ pub struct Message {
 
 #[derive(Debug, Default)]
 struct Topic {
-    log: Vec<Message>,
+    log: Vec<MessageView>,
     /// committed offset per consumer group
     commits: BTreeMap<String, usize>,
+    /// round → offsets of that round's messages, so round-scoped consumers
+    /// jump straight to their slice instead of scanning from offset 0.
+    by_round: BTreeMap<u32, Vec<usize>>,
 }
 
 /// The queue. Cheap to share behind `&` thanks to interior mutability.
@@ -93,17 +109,51 @@ impl MessageQueue {
     pub fn produce(&self, topic: &str, msg: Message) -> usize {
         let mut topics = self.topics.lock().unwrap();
         let t = topics.entry(topic.to_string()).or_default();
-        t.log.push(msg);
-        t.log.len() - 1
+        let off = t.log.len();
+        t.by_round.entry(msg.round).or_default().push(off);
+        t.log.push(Arc::new(msg));
+        off
     }
 
-    /// Messages in [from, to) — non-consuming read.
-    pub fn fetch(&self, topic: &str, from: usize, max: usize) -> Vec<Message> {
+    /// Messages in [from, from+max) — non-consuming, zero-copy read: the
+    /// returned views share the log's allocations (cloning an `Arc`, not
+    /// the payload).
+    pub fn fetch(&self, topic: &str, from: usize, max: usize) -> Vec<MessageView> {
         let topics = self.topics.lock().unwrap();
         match topics.get(topic) {
             None => Vec::new(),
             Some(t) => t.log.iter().skip(from).take(max).cloned().collect(),
         }
+    }
+
+    /// All of one round's messages, via the round index — O(messages in
+    /// the round), not O(log length). Zero-copy like [`fetch`].
+    pub fn fetch_round(&self, topic: &str, round: u32) -> Vec<MessageView> {
+        let topics = self.topics.lock().unwrap();
+        match topics.get(topic) {
+            None => Vec::new(),
+            Some(t) => t
+                .by_round
+                .get(&round)
+                .map(|offs| offs.iter().map(|&o| Arc::clone(&t.log[o])).collect())
+                .unwrap_or_default(),
+        }
+    }
+
+    /// Consume for a group: fetch up to `max` messages past the group's
+    /// committed offset and advance the commit past them, atomically.
+    /// Zero-copy like [`fetch`].
+    pub fn poll(&self, topic: &str, group: &str, max: usize) -> Vec<MessageView> {
+        let mut topics = self.topics.lock().unwrap();
+        let Some(t) = topics.get_mut(topic) else {
+            return Vec::new();
+        };
+        let from = t.commits.get(group).copied().unwrap_or(0);
+        let batch: Vec<MessageView> = t.log.iter().skip(from).take(max).cloned().collect();
+        if !batch.is_empty() {
+            t.commits.insert(group.to_string(), from + batch.len());
+        }
+        batch
     }
 
     /// End offset (= number of messages produced so far).
@@ -289,5 +339,61 @@ mod tests {
     fn topic_naming() {
         assert_eq!(update_topic(2, 5), "job2/round5/updates");
         assert_eq!(checkpoint_slot(2, 5), "job2/round5/ckpt");
+    }
+
+    #[test]
+    fn fetch_round_uses_index_not_scan() {
+        let q = MessageQueue::new();
+        for r in 0..4u32 {
+            for p in 0..3 {
+                q.produce("t", msg(p, r));
+            }
+        }
+        let r2 = q.fetch_round("t", 2);
+        assert_eq!(r2.len(), 3);
+        assert!(r2.iter().all(|m| m.round == 2));
+        assert_eq!(
+            r2.iter().map(|m| m.party).collect::<Vec<_>>(),
+            vec![0, 1, 2],
+            "round fetch preserves production order"
+        );
+        assert!(q.fetch_round("t", 99).is_empty());
+        assert!(q.fetch_round("missing", 0).is_empty());
+    }
+
+    #[test]
+    fn inline_payload_reads_are_zero_copy() {
+        let q = MessageQueue::new();
+        let data = vec![1.0f32; 1024];
+        q.produce(
+            "t",
+            Message {
+                payload: Payload::Inline(data),
+                ..msg(0, 0)
+            },
+        );
+        let a = q.fetch("t", 0, 1).remove(0);
+        let b = q.fetch_round("t", 0).remove(0);
+        let pa = a.payload.data().unwrap().as_ptr();
+        let pb = b.payload.data().unwrap().as_ptr();
+        assert_eq!(pa, pb, "both views must share the log's allocation");
+        assert!(Arc::ptr_eq(&a, &b), "fetch must hand out the same Arc");
+    }
+
+    #[test]
+    fn poll_advances_commit_and_shares_data() {
+        let q = MessageQueue::new();
+        for p in 0..5 {
+            q.produce("t", msg(p, 0));
+        }
+        let first = q.poll("t", "agg", 2);
+        assert_eq!(first.len(), 2);
+        assert_eq!(q.committed("t", "agg"), 2);
+        let rest = q.poll("t", "agg", 10);
+        assert_eq!(rest.len(), 3);
+        assert_eq!(rest[0].party, 2);
+        assert_eq!(q.committed("t", "agg"), 5);
+        assert!(q.poll("t", "agg", 10).is_empty());
+        assert!(q.poll("missing", "agg", 10).is_empty());
     }
 }

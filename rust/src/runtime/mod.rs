@@ -15,14 +15,28 @@
 //! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids. See python/compile/aot.py and
 //! /opt/xla-example/README.md.
+//!
+//! The PJRT bridge needs the `xla` (xla_extension) crate, which the
+//! offline image does not ship. It is gated behind the `xla` cargo
+//! feature: without it this module still exposes the same types and
+//! signatures (manifest loading, parameter layout, host-side `Trainer`
+//! state) but every method that would execute an artifact returns a clear
+//! error. Use [`xla_enabled`] to branch.
 
+#[cfg(feature = "xla")]
 use std::cell::RefCell;
+#[cfg(feature = "xla")]
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::Json;
+
+/// Whether this build carries the PJRT/XLA runtime.
+pub fn xla_enabled() -> bool {
+    cfg!(feature = "xla")
+}
 
 /// One artifact's manifest entry.
 #[derive(Clone, Debug)]
@@ -105,6 +119,7 @@ pub fn default_artifact_dir() -> PathBuf {
 ///
 /// Not `Send`: PJRT client handles are thread-local by construction here;
 /// each live-party thread builds its own `Runtime`.
+#[cfg(feature = "xla")]
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
@@ -112,6 +127,31 @@ pub struct Runtime {
     exes: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
 }
 
+/// Stub runtime for builds without the `xla` feature: constructors fail
+/// with a clear error, so every caller degrades gracefully.
+#[cfg(not(feature = "xla"))]
+pub struct Runtime {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+#[cfg(not(feature = "xla"))]
+impl Runtime {
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let _ = dir;
+        bail!(
+            "fljit was built without the `xla` feature; the PJRT/XLA runtime \
+             is unavailable (rebuild with `--features xla` and the vendored \
+             xla_extension crate)"
+        )
+    }
+
+    pub fn with_default_dir() -> Result<Runtime> {
+        Self::new(&default_artifact_dir())
+    }
+}
+
+#[cfg(feature = "xla")]
 impl Runtime {
     pub fn new(dir: &Path) -> Result<Runtime> {
         // Quiet the TfrtCpuClient created/destroyed info lines unless the
@@ -218,7 +258,7 @@ impl Runtime {
 /// the Pallas-kernel artifacts. Mirrors `fusion::` pure-Rust math; the
 /// integration tests pin both to agree.
 pub struct XlaFusion<'r> {
-    rt: &'r Runtime,
+    pub rt: &'r Runtime,
     /// Chunk width — must match a `pair_merge_d{D}` / `fuse_k{K}_d{D}` pair.
     pub chunk: usize,
     pub k: usize,
@@ -232,7 +272,40 @@ impl<'r> XlaFusion<'r> {
             k: 8,
         }
     }
+}
 
+/// Stub fusion for builds without the `xla` feature. Unreachable in
+/// practice (the stub `Runtime` cannot be constructed) but keeps every
+/// caller compiling with identical signatures.
+#[cfg(not(feature = "xla"))]
+impl XlaFusion<'_> {
+    pub fn pair_merge(
+        &self,
+        _acc: &mut [f32],
+        _w_acc: f32,
+        _upd: &[f32],
+        _w_upd: f32,
+    ) -> Result<()> {
+        bail!("XLA fusion unavailable: built without the `xla` feature")
+    }
+
+    pub fn weighted_mean(&self, _updates: &[&[f32]], _w: &[f32]) -> Result<Vec<f32>> {
+        bail!("XLA fusion unavailable: built without the `xla` feature")
+    }
+
+    pub fn fedprox(
+        &self,
+        _updates: &[&[f32]],
+        _w: &[f32],
+        _global: &[f32],
+        _mu: f32,
+    ) -> Result<Vec<f32>> {
+        bail!("XLA fusion unavailable: built without the `xla` feature")
+    }
+}
+
+#[cfg(feature = "xla")]
+impl<'r> XlaFusion<'r> {
     fn pair_name(&self) -> String {
         format!("pair_merge_d{}", self.chunk)
     }
@@ -248,13 +321,21 @@ impl<'r> XlaFusion<'r> {
         let d = self.chunk;
         let wa = xla::Literal::vec1(&[w_acc]);
         let wb = xla::Literal::vec1(&[w_upd]);
+        // Chunk staging buffers come from the global scratch pool and are
+        // reused across chunks and calls — no per-chunk allocations.
+        let scratch = crate::fusion::ScratchPool::global();
+        let mut a_chunk = scratch.take(d);
+        let mut b_chunk = scratch.take(d);
         let mut off = 0;
         while off < acc.len() {
             let end = (off + d).min(acc.len());
-            let mut a_chunk = vec![0.0f32; d];
-            let mut b_chunk = vec![0.0f32; d];
             a_chunk[..end - off].copy_from_slice(&acc[off..end]);
             b_chunk[..end - off].copy_from_slice(&upd[off..end]);
+            if end - off < d {
+                // zero the padding lanes so the artifact sees clean input
+                a_chunk[end - off..].fill(0.0);
+                b_chunk[end - off..].fill(0.0);
+            }
             let out = self.rt.call(
                 &name,
                 &[
@@ -272,41 +353,56 @@ impl<'r> XlaFusion<'r> {
     }
 
     /// Weighted mean over arbitrary K and D by grouping rows in `k`-blocks
-    /// (zero-weight padding) and recursing on the partial means.
+    /// (zero-weight padding) and folding level by level on the partial
+    /// means. Intermediate group means live in pooled scratch buffers that
+    /// recycle as each level drops; only the final result detaches.
     pub fn weighted_mean(&self, updates: &[&[f32]], w: &[f32]) -> Result<Vec<f32>> {
         anyhow::ensure!(!updates.is_empty(), "no updates");
         anyhow::ensure!(updates.len() == w.len(), "weights mismatch");
+        anyhow::ensure!(self.k >= 2, "fuse fan-in k must be ≥ 2, got {}", self.k);
         if updates.len() == 1 {
             return Ok(updates[0].to_vec());
         }
         let dim = updates[0].len();
-        let mut groups: Vec<(Vec<f32>, f32)> = Vec::new();
-        for (chunk_rows, chunk_w) in updates.chunks(self.k).zip(w.chunks(self.k)) {
-            let mean = self.fuse_group(chunk_rows, chunk_w, dim)?;
-            groups.push((mean, chunk_w.iter().sum()));
+        let mut groups: Vec<(crate::fusion::ScratchBuf<'static>, f32)> = updates
+            .chunks(self.k)
+            .zip(w.chunks(self.k))
+            .map(|(rows, ws)| Ok((self.fuse_group(rows, ws, dim)?, ws.iter().sum::<f32>())))
+            .collect::<Result<_>>()?;
+        while groups.len() > 1 {
+            let mut next = Vec::with_capacity(groups.len().div_ceil(self.k));
+            for chunk in groups.chunks(self.k) {
+                let views: Vec<&[f32]> = chunk.iter().map(|(g, _)| &**g).collect();
+                let ws: Vec<f32> = chunk.iter().map(|(_, gw)| *gw).collect();
+                next.push((self.fuse_group(&views, &ws, dim)?, ws.iter().sum::<f32>()));
+            }
+            groups = next; // the previous level's buffers return to the pool
         }
-        if groups.len() == 1 {
-            return Ok(groups.pop().unwrap().0);
-        }
-        let views: Vec<&[f32]> = groups.iter().map(|(g, _)| g.as_slice()).collect();
-        let ws: Vec<f32> = groups.iter().map(|(_, w)| *w).collect();
-        self.weighted_mean(&views, &ws)
+        Ok(groups.pop().expect("at least one group").0.detach())
     }
 
-    /// One fuse_k call per D-chunk for ≤ k rows.
-    fn fuse_group(&self, rows: &[&[f32]], w: &[f32], dim: usize) -> Result<Vec<f32>> {
+    /// One fuse_k call per D-chunk for ≤ k rows; the mean lands in a
+    /// pooled scratch buffer.
+    fn fuse_group(
+        &self,
+        rows: &[&[f32]],
+        w: &[f32],
+        dim: usize,
+    ) -> Result<crate::fusion::ScratchBuf<'static>> {
         let name = self.fuse_name();
         let k = self.k;
         let d = self.chunk;
         let mut wk = vec![0.0f32; k];
         wk[..w.len()].copy_from_slice(w);
         let w_lit = Runtime::literal(&wk, &[k])?;
-        let mut out = vec![0.0f32; dim];
+        let scratch = crate::fusion::ScratchPool::global();
+        let mut out = scratch.take(dim);
+        let mut slab = scratch.take(k * d);
         let mut off = 0;
         while off < dim {
             let end = (off + d).min(dim);
-            // pack (k, d) slab, zero-padded
-            let mut slab = vec![0.0f32; k * d];
+            // pack the (k, d) slab, zero-padded
+            slab.fill(0.0);
             for (r, row) in rows.iter().enumerate() {
                 slab[r * d..r * d + (end - off)].copy_from_slice(&row[off..end]);
             }
@@ -355,7 +451,8 @@ pub fn mlp_param_dims() -> Vec<Vec<usize>> {
 
 /// Real training session over the AOT train artifacts.
 pub struct Trainer<'r> {
-    rt: &'r Runtime,
+    /// Runtime the train/eval artifacts execute on.
+    pub rt: &'r Runtime,
     /// Current parameters, flattened per tensor.
     pub params: Vec<Vec<f32>>,
 }
@@ -384,6 +481,45 @@ impl<'r> Trainer<'r> {
         Trainer { rt, params }
     }
 
+    /// Flatten parameters into a single update vector (ModelSpec order).
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        for p in &self.params {
+            out.extend_from_slice(p);
+        }
+        out
+    }
+
+    /// Load parameters from a flattened global model.
+    pub fn unflatten(&mut self, flat: &[f32]) {
+        let mut off = 0;
+        for (p, dims) in self.params.iter_mut().zip(mlp_param_dims()) {
+            let numel: usize = dims.iter().product();
+            p.copy_from_slice(&flat[off..off + numel]);
+            off += numel;
+        }
+        assert_eq!(off, flat.len(), "flattened length mismatch");
+    }
+}
+
+/// Stub training methods for builds without the `xla` feature.
+#[cfg(not(feature = "xla"))]
+impl Trainer<'_> {
+    pub fn step(&mut self, _b: usize, _x: &[f32], _y: &[f32], _lr: f32) -> Result<f32> {
+        bail!("XLA training unavailable: built without the `xla` feature")
+    }
+
+    pub fn epoch(&mut self, _n: usize, _xs: &[f32], _ys: &[f32], _lr: f32) -> Result<f32> {
+        bail!("XLA training unavailable: built without the `xla` feature")
+    }
+
+    pub fn eval(&self, _x: &[f32], _y: &[f32]) -> Result<(f32, f32)> {
+        bail!("XLA evaluation unavailable: built without the `xla` feature")
+    }
+}
+
+#[cfg(feature = "xla")]
+impl Trainer<'_> {
     fn param_literals(&self) -> Result<Vec<xla::Literal>> {
         mlp_param_dims()
             .iter()
@@ -430,26 +566,6 @@ impl<'r> Trainer<'r> {
         let loss = Runtime::to_vec(&out[0])?[0];
         let correct = Runtime::to_vec(&out[1])?[0];
         Ok((loss, correct / 256.0))
-    }
-
-    /// Flatten parameters into a single update vector (ModelSpec order).
-    pub fn flatten(&self) -> Vec<f32> {
-        let mut out = Vec::new();
-        for p in &self.params {
-            out.extend_from_slice(p);
-        }
-        out
-    }
-
-    /// Load parameters from a flattened global model.
-    pub fn unflatten(&mut self, flat: &[f32]) {
-        let mut off = 0;
-        for (p, dims) in self.params.iter_mut().zip(mlp_param_dims()) {
-            let numel: usize = dims.iter().product();
-            p.copy_from_slice(&flat[off..off + numel]);
-            off += numel;
-        }
-        assert_eq!(off, flat.len(), "flattened length mismatch");
     }
 }
 

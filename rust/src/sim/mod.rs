@@ -14,12 +14,30 @@
 //! Time is `u64` microseconds. Events carry an opaque `EventKind` that the
 //! world dispatcher (coordinator::platform) interprets; the engine itself
 //! is domain-agnostic, ordered by (time, seq) for determinism.
+//!
+//! Two interchangeable priority-queue backends share that contract:
+//!
+//! * [`QueueKind::Heap`] — one global `BinaryHeap`, the reference
+//!   implementation (and the default).
+//! * [`QueueKind::Bucket`] — a two-level calendar queue: a wheel of
+//!   δ-tick-sized buckets (each a small heap) plus a `BTreeMap` overflow
+//!   for far-future events. Inserts and pops touch one small bucket
+//!   instead of a multi-megabyte heap, which is what the cancel/peek-heavy
+//!   scheduler profile wants; `scheduler_hot_path` measures both.
+//!
+//! Cancellation uses lazy deletion: [`EventQueue::cancel`] tombstones the
+//! event id and [`EventQueue::next`]/[`EventQueue::peek_time`] skip
+//! tombstones on the way out, so cancel is O(1) regardless of backend.
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BTreeMap, BinaryHeap, HashSet};
 
 /// Virtual time in microseconds.
 pub type Time = u64;
+
+/// Identifier of a scheduled event, for [`EventQueue::cancel`]. Ids are
+/// never reused within one queue.
+pub type EventId = u64;
 
 pub const MICROS: f64 = 1_000_000.0;
 
@@ -82,18 +100,212 @@ impl Ord for ScheduledEvent {
     }
 }
 
-/// Deterministic event queue with a virtual clock.
-#[derive(Debug, Default)]
+// ---------------------------------------------------------------------------
+// bucket (calendar) backend
+// ---------------------------------------------------------------------------
+
+/// log2 of the bucket width in µs: 2^19 µs ≈ 0.52 s ≈ the δ scheduling
+/// tick, so a typical tick's churn lands in one or two buckets.
+const BUCKET_WIDTH_LOG2: u32 = 19;
+/// Wheel size (power of two): 256 buckets ≈ a 134 s near-future window.
+const WHEEL_SIZE: u64 = 256;
+
+/// Two-level bucket queue: a wheel of small per-bucket heaps over the near
+/// future plus a `BTreeMap` overflow for everything beyond the window.
+///
+/// Invariant: every pending event lives in absolute bucket ≥ `base`; an
+/// insert whose natural bucket has already been passed is clamped into
+/// `base` (its heap still orders it correctly by (time, seq), and every
+/// event in bucket `base` sorts before everything in later buckets).
+#[derive(Debug)]
+struct BucketQueue {
+    wheel: Vec<BinaryHeap<ScheduledEvent>>,
+    /// Absolute bucket index the wheel cursor is parked on.
+    base: u64,
+    /// Events in absolute buckets ≥ base + WHEEL_SIZE.
+    overflow: BTreeMap<u64, Vec<ScheduledEvent>>,
+    len: usize,
+    wheel_len: usize,
+}
+
+impl BucketQueue {
+    fn new() -> BucketQueue {
+        BucketQueue {
+            wheel: (0..WHEEL_SIZE).map(|_| BinaryHeap::new()).collect(),
+            base: 0,
+            overflow: BTreeMap::new(),
+            len: 0,
+            wheel_len: 0,
+        }
+    }
+
+    fn push(&mut self, ev: ScheduledEvent) {
+        let natural = ev.time >> BUCKET_WIDTH_LOG2;
+        let ab = natural.max(self.base);
+        self.len += 1;
+        if ab < self.base + WHEEL_SIZE {
+            self.wheel[(ab % WHEEL_SIZE) as usize].push(ev);
+            self.wheel_len += 1;
+        } else {
+            self.overflow.entry(ab).or_default().push(ev);
+        }
+    }
+
+    /// Move the cursor to the next populated bucket and pull any overflow
+    /// buckets that entered the window.
+    fn advance(&mut self) {
+        if self.wheel_len == 0 {
+            // Fast-forward across an empty wheel straight to the overflow.
+            let (&k, _) = self
+                .overflow
+                .iter()
+                .next()
+                .expect("advance on an empty queue");
+            self.base = k;
+        } else {
+            self.base += 1;
+        }
+        let horizon = self.base + WHEEL_SIZE;
+        loop {
+            let Some((&k, _)) = self.overflow.iter().next() else {
+                break;
+            };
+            if k >= horizon {
+                break;
+            }
+            let evs = self.overflow.remove(&k).unwrap();
+            let slot = (k % WHEEL_SIZE) as usize;
+            self.wheel_len += evs.len();
+            for e in evs {
+                self.wheel[slot].push(e);
+            }
+        }
+    }
+
+    fn pop(&mut self) -> Option<ScheduledEvent> {
+        if self.len == 0 {
+            return None;
+        }
+        loop {
+            let slot = (self.base % WHEEL_SIZE) as usize;
+            if let Some(ev) = self.wheel[slot].pop() {
+                self.len -= 1;
+                self.wheel_len -= 1;
+                return Some(ev);
+            }
+            self.advance();
+        }
+    }
+
+    fn peek(&mut self) -> Option<&ScheduledEvent> {
+        if self.len == 0 {
+            return None;
+        }
+        loop {
+            let slot = (self.base % WHEEL_SIZE) as usize;
+            if !self.wheel[slot].is_empty() {
+                break;
+            }
+            self.advance();
+        }
+        self.wheel[(self.base % WHEEL_SIZE) as usize].peek()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the engine
+// ---------------------------------------------------------------------------
+
+/// Which priority-queue backend an [`EventQueue`] runs on.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QueueKind {
+    /// Single global binary heap (reference implementation, default).
+    #[default]
+    Heap,
+    /// Two-level bucket/calendar queue (cancel/peek-heavy profile).
+    Bucket,
+}
+
+#[derive(Debug)]
+enum Backend {
+    Heap(BinaryHeap<ScheduledEvent>),
+    Bucket(BucketQueue),
+}
+
+/// Deterministic event queue with a virtual clock. Both backends pop in
+/// identical (time, insertion-seq) order — pinned by property test.
+#[derive(Debug)]
 pub struct EventQueue {
-    heap: BinaryHeap<ScheduledEvent>,
+    backend: Backend,
     now: Time,
     seq: u64,
     processed: u64,
+    /// Scheduled minus popped minus canceled.
+    live: usize,
+    /// Lazily deleted event ids, skipped on the way out of the queue.
+    canceled: HashSet<EventId>,
+    /// One bit per id ever issued: set while the event is pending (not yet
+    /// popped or canceled). Makes `cancel` of a fired/duplicate/unknown id
+    /// an exact no-op instead of a counter-corrupting guess.
+    pending_bits: Vec<u64>,
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        EventQueue::with_kind(QueueKind::default())
+    }
 }
 
 impl EventQueue {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    pub fn with_kind(kind: QueueKind) -> Self {
+        EventQueue {
+            backend: match kind {
+                QueueKind::Heap => Backend::Heap(BinaryHeap::new()),
+                QueueKind::Bucket => Backend::Bucket(BucketQueue::new()),
+            },
+            now: 0,
+            seq: 0,
+            processed: 0,
+            live: 0,
+            canceled: HashSet::new(),
+            pending_bits: Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn set_pending(&mut self, id: EventId) {
+        let (word, bit) = ((id >> 6) as usize, id & 63);
+        if word >= self.pending_bits.len() {
+            self.pending_bits.resize(word + 1, 0);
+        }
+        self.pending_bits[word] |= 1 << bit;
+    }
+
+    #[inline]
+    fn clear_pending(&mut self, id: EventId) {
+        let (word, bit) = ((id >> 6) as usize, id & 63);
+        if let Some(w) = self.pending_bits.get_mut(word) {
+            *w &= !(1 << bit);
+        }
+    }
+
+    #[inline]
+    fn is_pending(&self, id: EventId) -> bool {
+        let (word, bit) = ((id >> 6) as usize, id & 63);
+        self.pending_bits
+            .get(word)
+            .is_some_and(|w| w & (1 << bit) != 0)
+    }
+
+    pub fn kind(&self) -> QueueKind {
+        match self.backend {
+            Backend::Heap(_) => QueueKind::Heap,
+            Backend::Bucket(_) => QueueKind::Bucket,
+        }
     }
 
     pub fn now(&self) -> Time {
@@ -105,48 +317,95 @@ impl EventQueue {
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.live
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.live == 0
     }
 
     /// Schedule `kind` at absolute time `at` (clamped to now — scheduling in
-    /// the past executes "immediately", preserving causality).
-    pub fn schedule_at(&mut self, at: Time, kind: EventKind) {
+    /// the past executes "immediately", preserving causality). Returns the
+    /// event's id, usable with [`cancel`](EventQueue::cancel).
+    pub fn schedule_at(&mut self, at: Time, kind: EventKind) -> EventId {
         let t = at.max(self.now);
         self.seq += 1;
-        self.heap.push(ScheduledEvent {
+        let ev = ScheduledEvent {
             time: t,
             seq: self.seq,
             kind,
-        });
+        };
+        match &mut self.backend {
+            Backend::Heap(h) => h.push(ev),
+            Backend::Bucket(b) => b.push(ev),
+        }
+        self.live += 1;
+        self.set_pending(self.seq);
+        self.seq
     }
 
     /// Schedule `kind` after a relative delay.
-    pub fn schedule_in(&mut self, delay: Time, kind: EventKind) {
-        self.schedule_at(self.now.saturating_add(delay), kind);
+    pub fn schedule_in(&mut self, delay: Time, kind: EventKind) -> EventId {
+        self.schedule_at(self.now.saturating_add(delay), kind)
     }
 
-    /// Pop the next event, advancing the clock.
+    /// Lazily cancel a scheduled event: O(1), the entry is skipped when it
+    /// reaches the head of the queue. Canceling an id that already fired,
+    /// was already canceled, or was never issued is an exact no-op that
+    /// returns false. Returns whether the event was live and is now dead.
+    pub fn cancel(&mut self, id: EventId) -> bool {
+        if !self.is_pending(id) {
+            return false;
+        }
+        self.clear_pending(id);
+        self.canceled.insert(id);
+        self.live -= 1;
+        true
+    }
+
+    /// Pop the next live event, advancing the clock.
     pub fn next(&mut self) -> Option<(Time, EventKind)> {
-        let ev = self.heap.pop()?;
-        debug_assert!(ev.time >= self.now, "time went backwards");
-        self.now = ev.time;
-        self.processed += 1;
-        Some((ev.time, ev.kind))
+        loop {
+            let ev = match &mut self.backend {
+                Backend::Heap(h) => h.pop(),
+                Backend::Bucket(b) => b.pop(),
+            }?;
+            if !self.canceled.is_empty() && self.canceled.remove(&ev.seq) {
+                continue; // tombstoned by cancel()
+            }
+            debug_assert!(ev.time >= self.now, "time went backwards");
+            self.clear_pending(ev.seq);
+            self.now = ev.time;
+            self.processed += 1;
+            self.live -= 1;
+            return Some((ev.time, ev.kind));
+        }
     }
 
-    /// Peek at the time of the next event.
-    pub fn peek_time(&self) -> Option<Time> {
-        self.heap.peek().map(|e| e.time)
+    /// Time of the next live event (purges tombstoned heads on the way).
+    pub fn peek_time(&mut self) -> Option<Time> {
+        loop {
+            let head = match &mut self.backend {
+                Backend::Heap(h) => h.peek().map(|e| (e.time, e.seq)),
+                Backend::Bucket(b) => b.peek().map(|e| (e.time, e.seq)),
+            };
+            let (t, seq) = head?;
+            if !self.canceled.is_empty() && self.canceled.remove(&seq) {
+                let _ = match &mut self.backend {
+                    Backend::Heap(h) => h.pop(),
+                    Backend::Bucket(b) => b.pop(),
+                };
+                continue;
+            }
+            return Some(t);
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop;
 
     #[test]
     fn events_pop_in_time_order() {
@@ -165,25 +424,29 @@ mod tests {
 
     #[test]
     fn ties_break_by_insertion_order() {
-        let mut q = EventQueue::new();
-        for tag in 0..10 {
-            q.schedule_at(secs(1.0), EventKind::Custom { tag });
+        for kind in [QueueKind::Heap, QueueKind::Bucket] {
+            let mut q = EventQueue::with_kind(kind);
+            for tag in 0..10 {
+                q.schedule_at(secs(1.0), EventKind::Custom { tag });
+            }
+            let mut tags = Vec::new();
+            while let Some((_, EventKind::Custom { tag })) = q.next() {
+                tags.push(tag);
+            }
+            assert_eq!(tags, (0..10).collect::<Vec<_>>(), "{kind:?}");
         }
-        let mut tags = Vec::new();
-        while let Some((_, EventKind::Custom { tag })) = q.next() {
-            tags.push(tag);
-        }
-        assert_eq!(tags, (0..10).collect::<Vec<_>>());
     }
 
     #[test]
     fn past_events_clamped_to_now() {
-        let mut q = EventQueue::new();
-        q.schedule_at(secs(5.0), EventKind::Custom { tag: 1 });
-        q.next();
-        q.schedule_at(secs(1.0), EventKind::Custom { tag: 2 }); // in the past
-        let (t, _) = q.next().unwrap();
-        assert_eq!(t, secs(5.0));
+        for kind in [QueueKind::Heap, QueueKind::Bucket] {
+            let mut q = EventQueue::with_kind(kind);
+            q.schedule_at(secs(5.0), EventKind::Custom { tag: 1 });
+            q.next();
+            q.schedule_at(secs(1.0), EventKind::Custom { tag: 2 }); // in the past
+            let (t, _) = q.next().unwrap();
+            assert_eq!(t, secs(5.0), "{kind:?}");
+        }
     }
 
     #[test]
@@ -207,14 +470,150 @@ mod tests {
     fn throughput_smoke() {
         // engine must sustain ~1M events/s (DESIGN.md §Perf L3); here we
         // just sanity-check that 100k schedule+pop round trips complete.
-        let mut q = EventQueue::new();
-        for i in 0..100_000u64 {
-            q.schedule_at(i * 3 % 1_000_000, EventKind::Custom { tag: i });
+        for kind in [QueueKind::Heap, QueueKind::Bucket] {
+            let mut q = EventQueue::with_kind(kind);
+            for i in 0..100_000u64 {
+                q.schedule_at(i * 3 % 1_000_000, EventKind::Custom { tag: i });
+            }
+            let mut n = 0;
+            while q.next().is_some() {
+                n += 1;
+            }
+            assert_eq!(n, 100_000, "{kind:?}");
         }
-        let mut n = 0;
-        while q.next().is_some() {
-            n += 1;
+    }
+
+    #[test]
+    fn cancel_skips_events_and_updates_len() {
+        for kind in [QueueKind::Heap, QueueKind::Bucket] {
+            let mut q = EventQueue::with_kind(kind);
+            let a = q.schedule_at(secs(1.0), EventKind::Custom { tag: 1 });
+            let b = q.schedule_at(secs(2.0), EventKind::Custom { tag: 2 });
+            let c = q.schedule_at(secs(3.0), EventKind::Custom { tag: 3 });
+            assert_eq!(q.len(), 3);
+            assert!(q.cancel(b));
+            assert!(!q.cancel(b), "double cancel is a no-op");
+            assert!(!q.cancel(9999), "unknown id rejected");
+            assert_eq!(q.len(), 2);
+            let mut tags = Vec::new();
+            while let Some((_, EventKind::Custom { tag })) = q.next() {
+                tags.push(tag);
+            }
+            assert_eq!(tags, vec![1, 3], "{kind:?}");
+            assert_eq!(q.processed(), 2);
+            let _ = (a, c);
         }
-        assert_eq!(n, 100_000);
+    }
+
+    #[test]
+    fn cancel_of_fired_event_is_exact_noop() {
+        for kind in [QueueKind::Heap, QueueKind::Bucket] {
+            let mut q = EventQueue::with_kind(kind);
+            let a = q.schedule_at(secs(1.0), EventKind::Custom { tag: 1 });
+            q.schedule_at(secs(2.0), EventKind::Custom { tag: 2 });
+            let (t, _) = q.next().unwrap(); // fires `a`
+            assert_eq!(t, secs(1.0));
+            assert!(!q.cancel(a), "canceling a fired id must be a no-op");
+            assert_eq!(q.len(), 1, "len must stay exact after a stale cancel");
+            assert!(!q.is_empty());
+            let (t2, _) = q.next().unwrap();
+            assert_eq!(t2, secs(2.0), "{kind:?}");
+            assert!(q.is_empty());
+        }
+    }
+
+    #[test]
+    fn cancel_head_respected_by_peek() {
+        for kind in [QueueKind::Heap, QueueKind::Bucket] {
+            let mut q = EventQueue::with_kind(kind);
+            let a = q.schedule_at(secs(1.0), EventKind::Custom { tag: 1 });
+            q.schedule_at(secs(2.0), EventKind::Custom { tag: 2 });
+            q.cancel(a);
+            assert_eq!(q.peek_time(), Some(secs(2.0)), "{kind:?}");
+            let (t, _) = q.next().unwrap();
+            assert_eq!(t, secs(2.0));
+            assert!(q.is_empty());
+        }
+    }
+
+    #[test]
+    fn far_future_events_cross_the_overflow_boundary() {
+        // events far beyond the 256-bucket wheel window must round-trip
+        let mut q = EventQueue::with_kind(QueueKind::Bucket);
+        q.schedule_at(secs(10_000.0), EventKind::Custom { tag: 3 });
+        q.schedule_at(secs(0.1), EventKind::Custom { tag: 1 });
+        q.schedule_at(secs(700.0), EventKind::Custom { tag: 2 });
+        let mut tags = Vec::new();
+        while let Some((_, EventKind::Custom { tag })) = q.next() {
+            tags.push(tag);
+        }
+        assert_eq!(tags, vec![1, 2, 3]);
+        assert_eq!(q.now(), secs(10_000.0));
+    }
+
+    #[test]
+    fn bucket_ordering_equals_heap_ordering_property() {
+        // The satellite invariant: both backends emit identical event
+        // sequences for any random schedule, including interleaved pops,
+        // past-time clamps and cancels.
+        prop::check("bucket==heap ordering", prop::default_cases(), |g| {
+            let mut heap = EventQueue::with_kind(QueueKind::Heap);
+            let mut bucket = EventQueue::with_kind(QueueKind::Bucket);
+            let ops = g.usize(1, 120);
+            // tag → event id, so pops can retire ids before a cancel picks one
+            let mut id_of_tag: std::collections::HashMap<u64, EventId> =
+                std::collections::HashMap::new();
+            let mut live_ids: Vec<EventId> = Vec::new();
+            for i in 0..ops {
+                match g.usize(0, 9) {
+                    // mostly schedules, with a long-tail time distribution
+                    0..=5 => {
+                        let t = if g.bool() {
+                            g.f64(0.0, 30.0)
+                        } else {
+                            g.f64(0.0, 5_000.0)
+                        };
+                        let kind = EventKind::Custom { tag: i as u64 };
+                        let id1 = heap.schedule_at(secs(t), kind.clone());
+                        let id2 = bucket.schedule_at(secs(t), kind);
+                        crate::prop_assert!(id1 == id2, "ids diverged: {id1} vs {id2}");
+                        id_of_tag.insert(i as u64, id1);
+                        live_ids.push(id1);
+                    }
+                    6..=7 => {
+                        let a = heap.next();
+                        let b = bucket.next();
+                        crate::prop_assert!(a == b, "pop diverged: {a:?} vs {b:?}");
+                        if let Some((_, EventKind::Custom { tag })) = a {
+                            if let Some(id) = id_of_tag.remove(&tag) {
+                                live_ids.retain(|&x| x != id);
+                            }
+                        }
+                    }
+                    _ => {
+                        if !live_ids.is_empty() {
+                            let at = g.usize(0, live_ids.len() - 1);
+                            let id = live_ids.swap_remove(at);
+                            let r1 = heap.cancel(id);
+                            let r2 = bucket.cancel(id);
+                            crate::prop_assert!(r1 == r2, "cancel diverged on {id}");
+                        }
+                    }
+                }
+            }
+            loop {
+                let a = heap.next();
+                let b = bucket.next();
+                crate::prop_assert!(a == b, "drain diverged: {a:?} vs {b:?}");
+                if a.is_none() {
+                    break;
+                }
+            }
+            crate::prop_assert!(
+                heap.processed() == bucket.processed(),
+                "processed diverged"
+            );
+            Ok(())
+        });
     }
 }

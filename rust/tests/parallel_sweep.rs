@@ -1,0 +1,64 @@
+//! The parallel grid sweep must be *bit-identical* to the sequential one:
+//! every scenario cell owns its platform and seeded RNG, so fanning cells
+//! out across the worker pool may only change wall-clock time, never a
+//! single reported number.
+
+use fljit::bench::figs::run_cells;
+use fljit::coordinator::job::FlJobSpec;
+use fljit::coordinator::platform::run_scenario;
+use fljit::party::FleetKind;
+use fljit::workloads::Workload;
+
+#[test]
+fn parallel_sweep_is_bit_identical_to_sequential() {
+    let strategies = ["jit", "batched", "eager-serverless", "eager-ao"];
+    let fleets = [
+        FleetKind::ActiveHomogeneous,
+        FleetKind::ActiveHeterogeneous,
+        FleetKind::IntermittentHeterogeneous,
+    ];
+    let mut cells = Vec::new();
+    for (i, &fleet) in fleets.iter().enumerate() {
+        for &strat in &strategies {
+            let spec = FlJobSpec::new(
+                Workload::cifar100_effnet(),
+                fleet,
+                6 + 2 * i, // vary the fleet size a little per row
+                2,
+            );
+            cells.push((spec, strat, 0xBEE5 + i as u64));
+        }
+    }
+    let sequential: Vec<_> = cells
+        .iter()
+        .map(|(spec, strat, seed)| run_scenario(spec, strat, *seed))
+        .collect();
+    let parallel = run_cells(cells);
+    assert_eq!(parallel.len(), sequential.len());
+    for (p, s) in parallel.iter().zip(&sequential) {
+        assert_eq!(
+            p.to_json(),
+            s.to_json(),
+            "parallel cell diverged from sequential ({}/{})",
+            p.strategy,
+            p.fleet
+        );
+    }
+}
+
+#[test]
+fn run_cells_preserves_cell_order() {
+    let cells: Vec<_> = ["eager-ao", "jit", "batched"]
+        .iter()
+        .map(|&s| {
+            (
+                FlJobSpec::new(Workload::inat_inception(), FleetKind::ActiveHomogeneous, 5, 1),
+                s,
+                3u64,
+            )
+        })
+        .collect();
+    let reports = run_cells(cells);
+    let names: Vec<&str> = reports.iter().map(|r| r.strategy.as_str()).collect();
+    assert_eq!(names, vec!["eager-ao", "jit", "batched"]);
+}

@@ -11,6 +11,10 @@ use fljit::runtime::{Runtime, Trainer, XlaFusion};
 use fljit::util::rng::Rng;
 
 fn runtime() -> Option<Runtime> {
+    if !fljit::runtime::xla_enabled() {
+        eprintln!("skipping: built without the `xla` feature");
+        return None;
+    }
     let dir = fljit::runtime::default_artifact_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("skipping: artifacts not built (run `make artifacts`)");

@@ -1,0 +1,180 @@
+//! Minimal, API-compatible subset of the `anyhow` crate.
+//!
+//! The offline build image ships no crates.io registry, so the workspace
+//! carries this shim as a path dependency. It covers exactly the surface
+//! `fljit` uses: [`Error`], [`Result`], the [`anyhow!`], [`bail!`] and
+//! [`ensure!`] macros, and the [`Context`] extension trait. Error values
+//! are a context chain of strings; `{e}` prints the outermost message and
+//! `{e:#}` prints the whole chain separated by `": "`, mirroring anyhow's
+//! Display behaviour.
+
+use std::fmt;
+
+/// A chain of error messages, outermost context first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Prepend a layer of context (the new outermost message).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn root_message(&self) -> &str {
+        self.chain.first().map(String::as_str).unwrap_or("")
+    }
+
+    /// Iterate the chain, outermost context first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.root_message())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket `From` legal.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a `Result`'s error.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = anyhow!("outer {}", 1);
+        assert_eq!(format!("{e}"), "outer 1");
+        let e = e.context("context");
+        assert_eq!(format!("{e}"), "context");
+        assert_eq!(format!("{e:#}"), "context: outer 1");
+        assert_eq!(format!("{e:?}"), "context: outer 1");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(format!("{e}").contains("missing thing"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert!(format!("{e:#}").contains("missing thing"));
+
+        let n: Option<u32> = None;
+        let e = n.with_context(|| format!("want {}", 7)).unwrap_err();
+        assert_eq!(format!("{e}"), "want 7");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(format!("{}", f(3).unwrap_err()), "three is right out");
+        assert_eq!(format!("{}", f(11).unwrap_err()), "x too big: 11");
+    }
+}
