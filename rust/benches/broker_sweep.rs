@@ -1,0 +1,27 @@
+//! Bench: the multi-tenant broker sweep at full grid — 12 Poisson job
+//! arrivals (one pinned at 10k parties) on a 96-container cluster, the
+//! same trace replayed under every cross-job arbitration policy, with
+//! per-job solo baselines for latency inflation. Every row lands in
+//! `BENCH_broker.json` so the per-policy utilization / container-second
+//! allocations are tracked across PRs.
+//!
+//! Run: cargo bench --bench broker_sweep
+//! Tiny grids: cargo bench --bench broker_sweep -- --jobs 4 --max-parties 100
+
+use fljit::bench::broker::{run_sweep, SweepConfig};
+use fljit::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cfg = SweepConfig::from_args(&args);
+    let t0 = std::time::Instant::now();
+    let (tables, json) = run_sweep(&cfg);
+    for t in &tables {
+        t.print();
+    }
+    eprintln!("[sweep wall time: {:.2}s]", t0.elapsed().as_secs_f64());
+    match std::fs::write("BENCH_broker.json", json.pretty()) {
+        Ok(()) => eprintln!("[rows written to BENCH_broker.json]"),
+        Err(e) => eprintln!("warn: could not write BENCH_broker.json: {e}"),
+    }
+}

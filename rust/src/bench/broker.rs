@@ -1,0 +1,289 @@
+//! Multi-tenant broker sweep: one job-arrival trace replayed under every
+//! cross-job arbitration policy on the same shared cluster.
+//!
+//! Reports, per policy: cluster utilization, total container-seconds,
+//! peak job concurrency, mean admission queue wait, and per-job
+//! round-latency inflation vs an uncontended solo run. Dumped as
+//! `BENCH_broker.json` (CLI `fljit broker`, bench binary `broker_sweep`,
+//! and a small-grid smoke under `cargo test`).
+
+use crate::broker::admission::AdmissionConfig;
+use crate::broker::workload::{poisson_trace, JobTrace, TraceConfig};
+use crate::broker::{self, arbitration, BrokerConfig};
+use crate::coordinator::job::FlJobSpec;
+use crate::party::FleetKind;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// Sweep shape knobs (CLI flags map 1:1).
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    pub jobs: usize,
+    /// Largest fleet allowed in the trace (10k = the paper's top scale).
+    pub max_parties: usize,
+    /// Upper bound on per-job rounds (lower bound stays 2).
+    pub rounds: u32,
+    /// Shared cluster container capacity — deliberately below the sum of
+    /// peak gang sizes so arbitration has something to arbitrate.
+    pub capacity: usize,
+    /// Admission budget as a multiple of capacity (statistical overcommit
+    /// of short-lived JIT gangs; jobs beyond it queue).
+    pub admission_overcommit: f64,
+    pub seed: u64,
+    /// Run each job solo too (latency-inflation baseline).
+    pub with_solo: bool,
+    /// Pin job 0 to `max_parties` so the top-scale cell is always present.
+    pub pin_large: bool,
+    pub mean_interarrival_secs: f64,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            jobs: 12,
+            max_parties: 10_000,
+            rounds: 5,
+            capacity: 96,
+            admission_overcommit: 4.0,
+            seed: 0xB40C,
+            with_solo: true,
+            pin_large: true,
+            mean_interarrival_secs: 30.0,
+        }
+    }
+}
+
+impl SweepConfig {
+    /// Single flag mapping shared by the `fljit broker` CLI subcommand
+    /// and the `broker_sweep` bench binary, so the two can't drift.
+    pub fn from_args(args: &Args) -> SweepConfig {
+        let d = SweepConfig::default();
+        SweepConfig {
+            jobs: args.get_usize("jobs", d.jobs),
+            max_parties: args.get_usize("max-parties", d.max_parties),
+            rounds: args.get_u64("rounds", d.rounds as u64) as u32,
+            capacity: args.get_usize("capacity", d.capacity),
+            admission_overcommit: args.get_f64("overcommit", d.admission_overcommit),
+            seed: args.get_u64("seed", d.seed),
+            with_solo: !args.get_bool("no-solo"),
+            pin_large: !args.get_bool("no-pin-large"),
+            mean_interarrival_secs: args
+                .get_f64("interarrival", d.mean_interarrival_secs),
+        }
+    }
+}
+
+/// Build the sweep's arrival trace (deterministic in the seed).
+pub fn build_trace(cfg: &SweepConfig) -> JobTrace {
+    let mut party_mix: Vec<(usize, f64)> = [(10, 0.4), (100, 0.3), (1000, 0.2), (10_000, 0.1)]
+        .into_iter()
+        .filter(|&(n, _)| n <= cfg.max_parties)
+        .collect();
+    if party_mix.is_empty() {
+        party_mix = vec![(cfg.max_parties.max(2), 1.0)];
+    }
+    let tc = TraceConfig {
+        n_jobs: cfg.jobs,
+        mean_interarrival_secs: cfg.mean_interarrival_secs,
+        party_mix,
+        rounds_lo: 2,
+        rounds_hi: cfg.rounds.max(2),
+        seed: cfg.seed,
+        ..Default::default()
+    };
+    let mut trace = poisson_trace(&tc);
+    if cfg.pin_large {
+        if let Some(a) = trace.arrivals.first_mut() {
+            let mut spec = FlJobSpec::new(
+                a.spec.workload.clone(),
+                FleetKind::ActiveHeterogeneous,
+                cfg.max_parties,
+                a.spec.rounds,
+            );
+            spec.t_wait_secs = a.spec.t_wait_secs;
+            spec.name = format!("job0-pinned-{}", spec.name);
+            a.spec = spec;
+        }
+    }
+    trace
+}
+
+fn admission_budget(cfg: &SweepConfig) -> usize {
+    ((cfg.capacity as f64) * cfg.admission_overcommit.max(1.0)).round() as usize
+}
+
+/// Run the sweep: same trace under each arbitration policy.
+pub fn run_sweep(cfg: &SweepConfig) -> (Vec<Table>, Json) {
+    let trace = build_trace(cfg);
+    let mut tables = Vec::new();
+    let mut policies_json = Vec::new();
+    let mut summary = Table::new(
+        &format!(
+            "broker sweep — {} jobs (max {} parties) on {} containers",
+            trace.len(),
+            trace.max_parties(),
+            cfg.capacity
+        ),
+        &[
+            "policy",
+            "util %",
+            "total cs",
+            "peak jobs",
+            "mean queue wait (s)",
+            "mean latency inflation",
+        ],
+    );
+    for &policy in arbitration::all_policies() {
+        let bcfg = BrokerConfig {
+            capacity: cfg.capacity,
+            admission: AdmissionConfig {
+                budget: admission_budget(cfg),
+                max_jobs: 0,
+            },
+            policy: policy.to_string(),
+            seed: cfg.seed,
+            with_solo: cfg.with_solo,
+        };
+        let rep = broker::run_trace(&trace, &bcfg);
+        let mut t = Table::new(
+            &format!("broker sweep — policy '{policy}'"),
+            &[
+                "job",
+                "class",
+                "parties",
+                "arrive (s)",
+                "queue wait (s)",
+                "mean lat (s)",
+                "inflation",
+                "cs",
+            ],
+        );
+        for o in &rep.jobs {
+            t.row(vec![
+                o.name.clone(),
+                o.class.name().to_string(),
+                o.report.parties.to_string(),
+                format!("{:.1}", o.arrival_secs),
+                format!("{:.1}", o.queue_wait_secs),
+                format!("{:.3}", o.report.mean_latency_secs()),
+                match o.latency_inflation() {
+                    Some(v) => format!("{v:.2}x"),
+                    None => "-".to_string(),
+                },
+                format!("{:.1}", o.report.container_seconds),
+            ]);
+        }
+        tables.push(t);
+        summary.row(vec![
+            policy.to_string(),
+            format!("{:.1}", rep.cluster_utilization * 100.0),
+            format!("{:.1}", rep.total_container_seconds),
+            rep.max_concurrent_jobs().to_string(),
+            format!("{:.1}", rep.mean_queue_wait_secs()),
+            match rep.mean_latency_inflation() {
+                Some(v) => format!("{v:.2}x"),
+                None => "-".to_string(),
+            },
+        ]);
+        policies_json.push(rep.to_json());
+    }
+    tables.push(summary);
+    let json = Json::obj(vec![
+        ("bench", Json::str("broker_sweep")),
+        ("jobs", Json::num(trace.len() as f64)),
+        ("max_parties", Json::num(trace.max_parties() as f64)),
+        ("capacity", Json::num(cfg.capacity as f64)),
+        ("admission_budget", Json::num(admission_budget(cfg) as f64)),
+        ("seed", Json::num(cfg.seed as f64)),
+        ("policies", Json::Arr(policies_json)),
+    ]);
+    (tables, json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn per_job_cs(policy: &Json) -> Vec<f64> {
+        policy
+            .get("jobs")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|j| j.get("report").get("container_seconds").as_f64().unwrap())
+            .collect()
+    }
+
+    /// The acceptance-criteria sweep at small grid: a 10k-party job among
+    /// ≥8 concurrent jobs on a scarce cluster, run to completion under
+    /// every policy, emitting BENCH_broker.json.
+    #[test]
+    fn small_grid_10k_party_8_job_sweep() {
+        let cfg = SweepConfig {
+            jobs: 8,
+            max_parties: 10_000,
+            rounds: 2,
+            capacity: 64,
+            admission_overcommit: 6.0,
+            seed: 11,
+            with_solo: false,
+            pin_large: true,
+            mean_interarrival_secs: 3.0,
+        };
+        let (tables, json) = run_sweep(&cfg);
+        crate::bench::dump("BENCH_broker", &json);
+        assert_eq!(tables.len(), 4, "three policy tables + summary");
+        let pols = json.get("policies").as_arr().unwrap().to_vec();
+        assert_eq!(pols.len(), 3);
+        for p in &pols {
+            let jobs = p.get("jobs").as_arr().unwrap();
+            assert_eq!(jobs.len(), 8, "every job reported");
+            for j in jobs {
+                let rounds = j.get("report").get("rounds").as_u64().unwrap();
+                assert!(rounds >= 2, "job must finish its rounds");
+            }
+            assert!(p.get("cluster_utilization").as_f64().unwrap() > 0.0);
+            // ≥8 jobs live at once (arrivals are bunched vs job duration)
+            let peak = p.get("max_concurrent_jobs").as_u64().unwrap();
+            assert!(peak >= 8, "expected ≥8 concurrent jobs, peak={peak}");
+            // the pinned 10k-party job is present
+            let top = jobs
+                .iter()
+                .map(|j| j.get("report").get("parties").as_u64().unwrap())
+                .max()
+                .unwrap();
+            assert_eq!(top, 10_000);
+        }
+        // deadline-priority vs weighted-fair-share: measurably different
+        // per-job container-second allocations on the same trace
+        let deadline = per_job_cs(&pols[0]);
+        let wfs = per_job_cs(&pols[2]);
+        let delta: f64 = deadline
+            .iter()
+            .zip(&wfs)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(
+            delta > 1e-6,
+            "deadline vs wfs should allocate container-seconds differently (Δ={delta})"
+        );
+    }
+
+    #[test]
+    fn build_trace_pins_and_caps_party_counts() {
+        let cfg = SweepConfig {
+            jobs: 6,
+            max_parties: 100,
+            seed: 3,
+            ..Default::default()
+        };
+        let t = build_trace(&cfg);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.max_parties(), 100, "pinned job at the cap");
+        assert!(t.arrivals.iter().all(|a| a.spec.n_parties <= 100));
+        // deterministic
+        let t2 = build_trace(&cfg);
+        assert_eq!(t.arrivals[3].spec.name, t2.arrivals[3].spec.name);
+    }
+}

@@ -22,6 +22,11 @@ SUBCOMMANDS:
              --strategy jit --rounds 50 --seed 7
   bench-table <fig3|fig4|fig7|fig8|fig9>  regenerate a paper figure/table
              [--rounds N] [--max-parties N] [--reps N] [--workload W]
+  broker     multi-tenant broker sweep: Poisson job arrivals, admission
+             control, every arbitration policy on one trace
+             [--jobs N] [--capacity N] [--rounds N] [--max-parties N]
+             [--interarrival S] [--overcommit X] [--seed N] [--no-solo]
+             [--no-pin-large]   (writes BENCH_broker.json dump)
   calibrate  [--reps 5]            offline t_pair per zoo model (§5.4)
   run        --spec job.json       run a JSON job spec end to end (sim)
   live       [--parties 4 --rounds 10]  real training + real XLA fusion
@@ -33,6 +38,7 @@ pub fn dispatch(args: &Args) -> i32 {
         Some("timeline") => cmd_timeline(args),
         Some("simulate") => cmd_simulate(args),
         Some("bench-table") => cmd_bench_table(args),
+        Some("broker") => cmd_broker(args),
         Some("calibrate") => cmd_calibrate(args),
         Some("run") => cmd_run(args),
         Some("live") => cmd_live(args),
@@ -170,6 +176,16 @@ fn cmd_bench_table(args: &Args) -> i32 {
             2
         }
     }
+}
+
+fn cmd_broker(args: &Args) -> i32 {
+    let cfg = crate::bench::broker::SweepConfig::from_args(args);
+    let (tables, json) = crate::bench::broker::run_sweep(&cfg);
+    for t in tables {
+        t.print();
+    }
+    crate::bench::dump("BENCH_broker", &json);
+    0
 }
 
 fn cmd_calibrate(args: &Args) -> i32 {
@@ -322,6 +338,17 @@ mod tests {
     #[test]
     fn timeline_runs() {
         assert_eq!(dispatch(&args("timeline")), 0);
+    }
+
+    #[test]
+    fn broker_tiny_grid_runs() {
+        assert_eq!(
+            dispatch(&args(
+                "broker --jobs 3 --capacity 16 --rounds 2 --max-parties 20 \
+                 --interarrival 3 --no-solo --seed 5"
+            )),
+            0
+        );
     }
 
     #[test]

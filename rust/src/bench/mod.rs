@@ -3,6 +3,7 @@
 //! the `cargo bench` binaries). Results print as aligned tables mirroring
 //! the paper's rows, and are dumped as JSON under `target/repro/`.
 
+pub mod broker;
 pub mod cli;
 pub mod figs;
 

@@ -1,0 +1,234 @@
+//! Admission control: capacity quotas, SLO classes and queueing.
+//!
+//! The broker commits an estimated peak container demand per job (the
+//! workload's `N_agg` gang size) against a budget; jobs that do not fit
+//! wait in an SLO-then-FIFO queue until running jobs finish and free
+//! committed capacity — backpressure instead of unbounded oversubscription.
+//! The budget may deliberately exceed the raw cluster capacity
+//! (statistical overcommit: JIT gangs are short-lived bursts), in which
+//! case the cross-job [`arbitration`](super::arbitration) policy decides
+//! who runs when bursts collide.
+//!
+//! Everything here is a deterministic function of (registration order,
+//! arrival order, finish order), so broker runs replay bit-identically.
+
+use std::collections::BTreeSet;
+
+use crate::sim::{to_secs, Time};
+
+use super::SloClass;
+
+#[derive(Clone, Debug)]
+pub struct AdmissionConfig {
+    /// Aggregator-container demand the controller may commit concurrently.
+    pub budget: usize,
+    /// Max concurrently admitted jobs (0 = unlimited).
+    pub max_jobs: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            budget: 256,
+            max_jobs: 0,
+        }
+    }
+}
+
+/// Per-job admission record (broker bookkeeping + queue-wait metrics).
+#[derive(Clone, Debug)]
+pub struct JobAdmission {
+    /// Committed container demand (clamped into the budget so every job
+    /// is eventually admissible).
+    pub demand: usize,
+    pub class: SloClass,
+    pub arrived_at: Option<Time>,
+    pub admitted_at: Option<Time>,
+    pub finished_at: Option<Time>,
+}
+
+/// The admission controller: tracks committed demand and the wait queue.
+#[derive(Clone, Debug)]
+pub struct AdmissionController {
+    cfg: AdmissionConfig,
+    jobs: Vec<JobAdmission>,
+    committed: usize,
+    running: usize,
+    /// Waiting jobs ordered by (SLO rank, arrival seq, job): premium
+    /// first, FIFO within a class.
+    wait: BTreeSet<(u8, u64, usize)>,
+    arrival_seq: u64,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: AdmissionConfig) -> AdmissionController {
+        AdmissionController {
+            cfg,
+            jobs: Vec::new(),
+            committed: 0,
+            running: 0,
+            wait: BTreeSet::new(),
+            arrival_seq: 0,
+        }
+    }
+
+    fn budget(&self) -> usize {
+        self.cfg.budget.max(1)
+    }
+
+    /// Register a job before the run starts. Jobs must be registered in
+    /// platform id order (dense ids).
+    pub fn register(&mut self, job: usize, demand: usize, class: SloClass) {
+        assert_eq!(job, self.jobs.len(), "register jobs in platform id order");
+        let demand = demand.clamp(1, self.budget());
+        self.jobs.push(JobAdmission {
+            demand,
+            class,
+            arrived_at: None,
+            admitted_at: None,
+            finished_at: None,
+        });
+    }
+
+    /// The job's submission reached the broker; returns every job (possibly
+    /// including this one) that may start now.
+    pub fn arrive(&mut self, job: usize, now: Time) -> Vec<usize> {
+        let seq = self.arrival_seq;
+        self.arrival_seq += 1;
+        self.jobs[job].arrived_at = Some(now);
+        self.wait.insert((self.jobs[job].class.rank(), seq, job));
+        self.drain(now)
+    }
+
+    /// A running job finished; its committed demand frees, possibly
+    /// releasing queued jobs.
+    pub fn finish(&mut self, job: usize, now: Time) -> Vec<usize> {
+        let j = &mut self.jobs[job];
+        if j.admitted_at.is_some() && j.finished_at.is_none() {
+            j.finished_at = Some(now);
+            self.committed -= j.demand;
+            self.running -= 1;
+        }
+        self.drain(now)
+    }
+
+    /// Admit waiting jobs in (SLO rank, FIFO) order while the budget (and
+    /// the job-count quota) holds. Head-of-line blocking is deliberate —
+    /// no bypass — so admission order is deterministic and every job is
+    /// eventually admitted as committed demand drains.
+    fn drain(&mut self, now: Time) -> Vec<usize> {
+        let mut started = Vec::new();
+        loop {
+            let Some(&(rank, seq, job)) = self.wait.iter().next() else {
+                break;
+            };
+            let demand = self.jobs[job].demand;
+            if self.committed + demand > self.budget() {
+                break;
+            }
+            if self.cfg.max_jobs > 0 && self.running >= self.cfg.max_jobs {
+                break;
+            }
+            self.wait.remove(&(rank, seq, job));
+            self.committed += demand;
+            self.running += 1;
+            self.jobs[job].admitted_at = Some(now);
+            started.push(job);
+        }
+        started
+    }
+
+    /// Seconds the job spent queued between arrival and admission.
+    pub fn queue_wait_secs(&self, job: usize) -> f64 {
+        match self.jobs.get(job) {
+            Some(JobAdmission {
+                arrived_at: Some(a),
+                admitted_at: Some(s),
+                ..
+            }) => to_secs(s.saturating_sub(*a)),
+            _ => 0.0,
+        }
+    }
+
+    pub fn job(&self, job: usize) -> &JobAdmission {
+        &self.jobs[job]
+    }
+
+    /// Currently committed container demand.
+    pub fn committed(&self) -> usize {
+        self.committed
+    }
+
+    /// Jobs currently waiting for admission.
+    pub fn queued(&self) -> usize {
+        self.wait.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::secs;
+
+    #[test]
+    fn fifo_admission_within_budget() {
+        let mut c = AdmissionController::new(AdmissionConfig {
+            budget: 10,
+            max_jobs: 0,
+        });
+        c.register(0, 4, SloClass::Standard);
+        c.register(1, 4, SloClass::Standard);
+        c.register(2, 4, SloClass::Standard);
+        assert_eq!(c.arrive(0, secs(1.0)), vec![0]);
+        assert_eq!(c.arrive(1, secs(2.0)), vec![1]);
+        // third job would exceed the budget (12 > 10): backpressure
+        assert_eq!(c.arrive(2, secs(3.0)), vec![]);
+        assert_eq!(c.queued(), 1);
+        assert_eq!(c.committed(), 8);
+        // job 0 finishing frees demand; job 2 releases
+        assert_eq!(c.finish(0, secs(50.0)), vec![2]);
+        assert!((c.queue_wait_secs(2) - 47.0).abs() < 1e-9);
+        assert_eq!(c.queue_wait_secs(0), 0.0, "admitted instantly");
+    }
+
+    #[test]
+    fn slo_classes_jump_the_fifo_queue() {
+        let mut c = AdmissionController::new(AdmissionConfig {
+            budget: 4,
+            max_jobs: 0,
+        });
+        c.register(0, 4, SloClass::BestEffort);
+        c.register(1, 4, SloClass::BestEffort);
+        c.register(2, 4, SloClass::Premium);
+        assert_eq!(c.arrive(0, secs(1.0)), vec![0]);
+        assert_eq!(c.arrive(1, secs(2.0)), vec![]);
+        assert_eq!(c.arrive(2, secs(3.0)), vec![]);
+        // premium (job 2) outranks the earlier best-effort arrival (job 1)
+        assert_eq!(c.finish(0, secs(10.0)), vec![2]);
+        assert_eq!(c.finish(2, secs(20.0)), vec![1]);
+    }
+
+    #[test]
+    fn oversized_demand_is_clamped_so_jobs_still_admit() {
+        let mut c = AdmissionController::new(AdmissionConfig {
+            budget: 8,
+            max_jobs: 0,
+        });
+        c.register(0, 500, SloClass::Standard);
+        assert_eq!(c.job(0).demand, 8, "demand clamped into the budget");
+        assert_eq!(c.arrive(0, 0), vec![0]);
+    }
+
+    #[test]
+    fn max_jobs_quota_limits_concurrency() {
+        let mut c = AdmissionController::new(AdmissionConfig {
+            budget: 100,
+            max_jobs: 1,
+        });
+        c.register(0, 1, SloClass::Standard);
+        c.register(1, 1, SloClass::Standard);
+        assert_eq!(c.arrive(0, 0), vec![0]);
+        assert_eq!(c.arrive(1, 0), vec![], "job quota holds job 1 back");
+        assert_eq!(c.finish(0, secs(5.0)), vec![1]);
+    }
+}

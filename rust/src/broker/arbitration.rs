@@ -1,0 +1,230 @@
+//! Cross-job aggregation arbitration — which job's pending aggregation
+//! task starts when cluster capacity frees.
+//!
+//! The paper's scheduler (§5.5) orders pending tasks purely by their
+//! aggregation deadline (`t_rnd − t_agg`); that is [`DeadlinePriority`],
+//! the baseline. Adaptive Aggregation (arXiv 2203.12163) motivates richer
+//! cross-job arbitration once many FL jobs share one cluster:
+//!
+//! * [`LeastSlackFirst`] — classic real-time scheduling: order by
+//!   `deadline − now − queued_work`, so a task with a large backlog is
+//!   started earlier than its raw deadline suggests.
+//! * [`WeightedFairShare`] — order by accumulated container-seconds per
+//!   fair-share weight, so a tenant that has consumed little of the
+//!   cluster gets the next free slot regardless of deadlines (weights come
+//!   from the broker's SLO classes).
+//!
+//! The policy only reorders *starts*; preemption stays in §5.5 deadline
+//! order (see `Cluster::on_tick`), so the JIT FORCE_TRIGGER guarantee is
+//! identical under every policy.
+
+use crate::cluster::{Priority, TaskId};
+use crate::sim::Time;
+
+/// One startable pending task, as the scheduler sees it. Deliberately
+/// only the fields a policy reads — the snapshot is rebuilt every
+/// arbitrated δ-tick, so dead payload here is hot-path cost.
+#[derive(Clone, Copy, Debug)]
+pub struct Candidate {
+    pub task: TaskId,
+    /// Owning job (index into `usage_cs` / `weights`).
+    pub job: usize,
+    /// §5.5 priority: absolute aggregation deadline in µs (smaller =
+    /// more urgent).
+    pub priority: Priority,
+    /// Total queued work duration, seconds (incrementally tracked by the
+    /// cluster, not re-summed per tick).
+    pub queued_secs: f64,
+}
+
+/// Immutable snapshot handed to a policy at each scheduling decision.
+pub struct ArbitrationView<'a> {
+    pub now: Time,
+    /// Startable pending tasks in ascending `(priority, task)` order —
+    /// the §5.5 baseline order.
+    pub candidates: &'a [Candidate],
+    /// Per-job aggregation container-seconds so far (index = job id).
+    pub usage_cs: &'a [f64],
+    /// Per-job fair-share weights (index = job id; 1.0 default).
+    pub weights: &'a [f64],
+}
+
+/// Pluggable cross-job arbitration. Implementations must be deterministic
+/// functions of the view (ties broken by the candidates' `(priority,
+/// task)` order), so multi-job runs replay bit-identically.
+pub trait ArbitrationPolicy: Send + std::fmt::Debug {
+    fn name(&self) -> &'static str;
+
+    /// Pick the next pending task to deploy, or `None` to leave the free
+    /// capacity idle this tick.
+    fn pick(&mut self, view: &ArbitrationView) -> Option<TaskId>;
+}
+
+/// §5.5 baseline: earliest aggregation deadline first. With this policy
+/// installed the cluster behaves exactly as with no policy at all.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DeadlinePriority;
+
+impl ArbitrationPolicy for DeadlinePriority {
+    fn name(&self) -> &'static str {
+        "deadline"
+    }
+
+    fn pick(&mut self, view: &ArbitrationView) -> Option<TaskId> {
+        view.candidates.first().map(|c| c.task)
+    }
+}
+
+/// Least slack first: `slack = deadline − now − queued_work`. A deep
+/// backlog erodes slack, so backlogged tasks start before their raw
+/// deadline order.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LeastSlackFirst;
+
+impl ArbitrationPolicy for LeastSlackFirst {
+    fn name(&self) -> &'static str {
+        "least-slack"
+    }
+
+    fn pick(&mut self, view: &ArbitrationView) -> Option<TaskId> {
+        let mut best: Option<(i128, TaskId)> = None;
+        for c in view.candidates {
+            let work = crate::sim::secs(c.queued_secs) as i128;
+            let slack = c.priority as i128 - view.now as i128 - work;
+            let replace = match best {
+                None => true,
+                // strict <: first-seen wins ties, and candidates arrive in
+                // (priority, task) order, so ties resolve deterministically
+                Some((s, _)) => slack < s,
+            };
+            if replace {
+                best = Some((slack, c.task));
+            }
+        }
+        best.map(|(_, t)| t)
+    }
+}
+
+/// Weighted fair share of container-seconds: the job with the smallest
+/// `usage_cs / weight` ratio gets the next free slot.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WeightedFairShare;
+
+impl ArbitrationPolicy for WeightedFairShare {
+    fn name(&self) -> &'static str {
+        "wfs"
+    }
+
+    fn pick(&mut self, view: &ArbitrationView) -> Option<TaskId> {
+        let mut best: Option<(f64, TaskId)> = None;
+        for c in view.candidates {
+            let w = view.weights.get(c.job).copied().unwrap_or(1.0).max(1e-9);
+            let used = view.usage_cs.get(c.job).copied().unwrap_or(0.0);
+            let ratio = used / w;
+            let replace = match best {
+                None => true,
+                Some((r, _)) => ratio < r,
+            };
+            if replace {
+                best = Some((ratio, c.task));
+            }
+        }
+        best.map(|(_, t)| t)
+    }
+}
+
+/// Construct a policy by name (accepts short and long spellings).
+pub fn by_name(name: &str) -> Option<Box<dyn ArbitrationPolicy>> {
+    match name {
+        "deadline" | "deadline-priority" => Some(Box::new(DeadlinePriority)),
+        "least-slack" | "lsf" | "least-slack-first" => Some(Box::new(LeastSlackFirst)),
+        "wfs" | "weighted-fair-share" | "fair" => Some(Box::new(WeightedFairShare)),
+        _ => None,
+    }
+}
+
+/// Canonical policy names for sweeps (baseline first).
+pub fn all_policies() -> &'static [&'static str] {
+    &["deadline", "least-slack", "wfs"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::secs;
+
+    fn cand(task: TaskId, job: usize, deadline_secs: f64, queued_secs: f64) -> Candidate {
+        Candidate {
+            task,
+            job,
+            priority: secs(deadline_secs) as Priority,
+            queued_secs,
+        }
+    }
+
+    #[test]
+    fn by_name_resolves_all_policies() {
+        for n in all_policies() {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+        assert_eq!(by_name("deadline").unwrap().name(), "deadline");
+        assert_eq!(by_name("weighted-fair-share").unwrap().name(), "wfs");
+        assert!(by_name("bogus").is_none());
+    }
+
+    #[test]
+    fn deadline_picks_first_candidate() {
+        let cands = [cand(7, 0, 10.0, 1.0), cand(3, 1, 20.0, 1.0)];
+        let view = ArbitrationView {
+            now: 0,
+            candidates: &cands,
+            usage_cs: &[0.0, 0.0],
+            weights: &[1.0, 1.0],
+        };
+        assert_eq!(DeadlinePriority.pick(&view), Some(7));
+        let empty = ArbitrationView {
+            now: 0,
+            candidates: &[],
+            usage_cs: &[],
+            weights: &[],
+        };
+        assert_eq!(DeadlinePriority.pick(&empty), None);
+    }
+
+    #[test]
+    fn least_slack_prefers_backlogged_task() {
+        // task 1 has a later deadline but 15s of queued work: slack
+        // 20−15=5 beats task 0's 10−1=9.
+        let cands = [cand(0, 0, 10.0, 1.0), cand(1, 1, 20.0, 15.0)];
+        let view = ArbitrationView {
+            now: 0,
+            candidates: &cands,
+            usage_cs: &[0.0, 0.0],
+            weights: &[1.0, 1.0],
+        };
+        assert_eq!(LeastSlackFirst.pick(&view), Some(1));
+    }
+
+    #[test]
+    fn wfs_prefers_underserved_weighted_job() {
+        // job 0 has consumed 100 cs at weight 1; job 1 consumed 30 cs at
+        // weight 2 → ratios 100 vs 15 → job 1's task wins despite a
+        // later deadline.
+        let cands = [cand(0, 0, 10.0, 1.0), cand(1, 1, 20.0, 1.0)];
+        let view = ArbitrationView {
+            now: 0,
+            candidates: &cands,
+            usage_cs: &[100.0, 30.0],
+            weights: &[1.0, 2.0],
+        };
+        assert_eq!(WeightedFairShare.pick(&view), Some(1));
+        // equal ratios tie-break to the first (earliest-deadline) candidate
+        let even = ArbitrationView {
+            now: 0,
+            candidates: &cands,
+            usage_cs: &[10.0, 10.0],
+            weights: &[1.0, 1.0],
+        };
+        assert_eq!(WeightedFairShare.pick(&even), Some(0));
+    }
+}

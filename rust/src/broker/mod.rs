@@ -1,0 +1,391 @@
+//! Multi-tenant job broker — the control plane between job submission and
+//! [`coordinator::platform`](crate::coordinator::platform).
+//!
+//! The paper's economics argument (§1, §6.2) is about *fleets* of FL jobs
+//! sharing cloud aggregation capacity. This subsystem turns the repo's
+//! platform from "several independent jobs admitted at t = 0" into that
+//! shared cluster:
+//!
+//! * [`workload`] — job-arrival generation: Poisson/trace-driven
+//!   submissions over the three §6.3 workload profiles, mixed
+//!   active/intermittent fleets, party counts up to 10k, SLO classes.
+//! * [`admission`] — admission control: per-job container-demand quotas
+//!   against a budget with SLO-ordered queueing/backpressure, so jobs wait
+//!   for headroom instead of oversubscribing the cluster unboundedly.
+//! * [`arbitration`] — the pluggable [`ArbitrationPolicy`]
+//!   (deadline-priority §5.5 baseline, least-slack-first, weighted fair
+//!   share of container-seconds) wired into the cluster's pending queue:
+//!   the policy decides which job's aggregation task starts when capacity
+//!   frees.
+//!
+//! [`run_trace`] replays one [`JobTrace`](workload::JobTrace) under one
+//! policy and reports per-job queue waits, latency inflation vs an
+//! uncontended solo run, and cluster utilization; `bench::broker` sweeps
+//! the same trace across all policies (`BENCH_broker.json`).
+//!
+//! [`ArbitrationPolicy`]: arbitration::ArbitrationPolicy
+
+pub mod admission;
+pub mod arbitration;
+pub mod workload;
+
+use crate::coordinator::platform::{Platform, PlatformConfig};
+use crate::metrics::JobReport;
+use crate::sim::secs;
+use crate::util::json::Json;
+
+use admission::{AdmissionConfig, AdmissionController};
+use workload::{JobArrival, JobTrace};
+
+/// Service classes the broker offers (admission order + fair-share weight).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SloClass {
+    Premium,
+    Standard,
+    BestEffort,
+}
+
+impl SloClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            SloClass::Premium => "premium",
+            SloClass::Standard => "standard",
+            SloClass::BestEffort => "best-effort",
+        }
+    }
+
+    /// Admission-queue rank (smaller admits first).
+    pub fn rank(self) -> u8 {
+        match self {
+            SloClass::Premium => 0,
+            SloClass::Standard => 1,
+            SloClass::BestEffort => 2,
+        }
+    }
+
+    /// Fair-share weight for [`arbitration::WeightedFairShare`].
+    pub fn weight(self) -> f64 {
+        match self {
+            SloClass::Premium => 4.0,
+            SloClass::Standard => 2.0,
+            SloClass::BestEffort => 1.0,
+        }
+    }
+}
+
+/// One broker run's configuration.
+#[derive(Clone, Debug)]
+pub struct BrokerConfig {
+    /// Cluster container capacity shared by every admitted job.
+    pub capacity: usize,
+    pub admission: AdmissionConfig,
+    /// Arbitration policy name (see [`arbitration::by_name`]).
+    pub policy: String,
+    pub seed: u64,
+    /// Also run each job solo on an uncontended cluster to measure
+    /// latency inflation (doubles the work; off for quick runs).
+    pub with_solo: bool,
+}
+
+impl Default for BrokerConfig {
+    fn default() -> Self {
+        BrokerConfig {
+            capacity: 96,
+            admission: AdmissionConfig::default(),
+            policy: "deadline".to_string(),
+            seed: 0xB40C,
+            with_solo: false,
+        }
+    }
+}
+
+/// One job's outcome in a broker run.
+#[derive(Clone, Debug)]
+pub struct BrokerJobOutcome {
+    pub job: usize,
+    pub name: String,
+    pub class: SloClass,
+    pub arrival_secs: f64,
+    /// Admission backpressure: seconds queued before the job started.
+    pub queue_wait_secs: f64,
+    pub report: JobReport,
+    /// Mean aggregation latency of the same job (same fleet, same arrival
+    /// randomness) run alone on an uncontended cluster.
+    pub solo_mean_latency_secs: Option<f64>,
+}
+
+impl BrokerJobOutcome {
+    /// Contended / solo mean-latency ratio (1.0 = no inflation).
+    pub fn latency_inflation(&self) -> Option<f64> {
+        let solo = self.solo_mean_latency_secs?;
+        if solo <= 0.0 {
+            return None;
+        }
+        Some(self.report.mean_latency_secs() / solo)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("job", Json::num(self.job as f64)),
+            ("name", Json::str(&self.name)),
+            ("class", Json::str(self.class.name())),
+            ("arrival_secs", Json::num(self.arrival_secs)),
+            ("queue_wait_secs", Json::num(self.queue_wait_secs)),
+            (
+                "solo_mean_latency_secs",
+                match self.solo_mean_latency_secs {
+                    Some(v) => Json::num(v),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "latency_inflation",
+                match self.latency_inflation() {
+                    Some(v) => Json::num(v),
+                    None => Json::Null,
+                },
+            ),
+            ("report", self.report.to_json()),
+        ])
+    }
+}
+
+/// A whole broker run's report (one policy over one trace).
+#[derive(Clone, Debug)]
+pub struct BrokerReport {
+    pub policy: String,
+    pub capacity: usize,
+    pub jobs: Vec<BrokerJobOutcome>,
+    /// Σ container-seconds / (capacity × span): how busy the shared
+    /// cluster was over the run.
+    pub cluster_utilization: f64,
+    pub total_container_seconds: f64,
+    pub span_secs: f64,
+}
+
+impl BrokerReport {
+    pub fn mean_queue_wait_secs(&self) -> f64 {
+        if self.jobs.is_empty() {
+            return 0.0;
+        }
+        self.jobs.iter().map(|j| j.queue_wait_secs).sum::<f64>() / self.jobs.len() as f64
+    }
+
+    pub fn mean_latency_inflation(&self) -> Option<f64> {
+        let vals: Vec<f64> = self.jobs.iter().filter_map(|j| j.latency_inflation()).collect();
+        if vals.is_empty() {
+            None
+        } else {
+            Some(vals.iter().sum::<f64>() / vals.len() as f64)
+        }
+    }
+
+    /// Peak number of jobs simultaneously admitted (running) — the
+    /// "N-concurrent-job" figure of the sweeps.
+    pub fn max_concurrent_jobs(&self) -> usize {
+        let mut events: Vec<(f64, i32)> = Vec::new();
+        for o in &self.jobs {
+            let start = o.arrival_secs + o.queue_wait_secs;
+            let end = o.report.makespan_secs;
+            if end > start {
+                events.push((start, 1));
+                events.push((end, -1));
+            }
+        }
+        // -1 sorts before +1 at equal times: back-to-back jobs don't overlap
+        events.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut cur = 0i32;
+        let mut peak = 0i32;
+        for (_, d) in events {
+            cur += d;
+            peak = peak.max(cur);
+        }
+        peak.max(0) as usize
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("policy", Json::str(&self.policy)),
+            ("capacity", Json::num(self.capacity as f64)),
+            ("cluster_utilization", Json::num(self.cluster_utilization)),
+            (
+                "total_container_seconds",
+                Json::num(self.total_container_seconds),
+            ),
+            ("span_secs", Json::num(self.span_secs)),
+            (
+                "max_concurrent_jobs",
+                Json::num(self.max_concurrent_jobs() as f64),
+            ),
+            ("mean_queue_wait_secs", Json::num(self.mean_queue_wait_secs())),
+            (
+                "mean_latency_inflation",
+                match self.mean_latency_inflation() {
+                    Some(v) => Json::num(v),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "jobs",
+                Json::Arr(self.jobs.iter().map(|j| j.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+/// The platform derives each job's fleet RNG as `seed ^ job·φ`; folding
+/// the broker job index into a solo platform's seed reproduces the exact
+/// fleet and arrival randomness for job 0 of that platform.
+fn solo_seed(seed: u64, job: usize) -> u64 {
+    seed ^ (job as u64).wrapping_mul(0x9E3779B9)
+}
+
+/// Uncontended baseline: the same job alone on an amply sized cluster.
+fn solo_mean_latency(arr: &JobArrival, seed: u64, job: usize) -> f64 {
+    let mut pcfg = PlatformConfig {
+        seed: solo_seed(seed, job),
+        ..Default::default()
+    };
+    pcfg.cluster.capacity =
+        (arr.spec.workload.n_agg(arr.spec.n_parties) as usize * 4).max(64);
+    let mut p = Platform::new(pcfg);
+    p.admit(arr.spec.clone(), &arr.strategy);
+    p.run().remove(0).mean_latency_secs()
+}
+
+/// Replay `trace` under `cfg`: jobs arrive over time, pass admission
+/// control, and share one cluster whose pending queue is ordered by the
+/// configured arbitration policy.
+pub fn run_trace(trace: &JobTrace, cfg: &BrokerConfig) -> BrokerReport {
+    let policy = arbitration::by_name(&cfg.policy)
+        .unwrap_or_else(|| panic!("unknown arbitration policy '{}'", cfg.policy));
+    let mut pcfg = PlatformConfig {
+        seed: cfg.seed,
+        ..Default::default()
+    };
+    pcfg.cluster.capacity = cfg.capacity.max(1);
+    let mut platform = Platform::new(pcfg);
+    let mut ctrl = AdmissionController::new(cfg.admission.clone());
+    for arr in &trace.arrivals {
+        let demand = arr.spec.workload.n_agg(arr.spec.n_parties) as usize;
+        let job = platform.submit_at(arr.spec.clone(), &arr.strategy, secs(arr.at_secs));
+        ctrl.register(job, demand, arr.class);
+        platform.cluster_mut().set_job_weight(job, arr.class.weight());
+    }
+    platform.cluster_mut().set_policy(policy);
+    platform.set_admission(ctrl);
+    let (reports, stats) = platform.run_with_stats();
+    let ctrl = stats.admission.expect("admission controller returned");
+    let span = stats.end_secs;
+    let util =
+        stats.total_container_seconds / (cfg.capacity.max(1) as f64 * span.max(1e-9));
+    let jobs = reports
+        .into_iter()
+        .enumerate()
+        .map(|(job, report)| {
+            let arr = &trace.arrivals[job];
+            BrokerJobOutcome {
+                job,
+                name: arr.spec.name.clone(),
+                class: arr.class,
+                arrival_secs: arr.at_secs,
+                queue_wait_secs: ctrl.queue_wait_secs(job),
+                solo_mean_latency_secs: cfg
+                    .with_solo
+                    .then(|| solo_mean_latency(arr, cfg.seed, job)),
+                report,
+            }
+        })
+        .collect();
+    BrokerReport {
+        policy: cfg.policy.clone(),
+        capacity: cfg.capacity,
+        jobs,
+        cluster_utilization: util,
+        total_container_seconds: stats.total_container_seconds,
+        span_secs: span,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::workload::{poisson_trace, TraceConfig};
+    use super::*;
+
+    fn tiny_trace(seed: u64) -> JobTrace {
+        poisson_trace(&TraceConfig {
+            n_jobs: 4,
+            mean_interarrival_secs: 10.0,
+            party_mix: vec![(6, 0.6), (12, 0.4)],
+            intermittent_frac: 0.25,
+            rounds_lo: 2,
+            rounds_hi: 2,
+            t_wait_secs: 60.0,
+            seed,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn broker_run_completes_every_job() {
+        let trace = tiny_trace(5);
+        let cfg = BrokerConfig {
+            capacity: 8,
+            admission: AdmissionConfig {
+                budget: 32,
+                max_jobs: 0,
+            },
+            policy: "deadline".into(),
+            seed: 77,
+            with_solo: true,
+        };
+        let rep = run_trace(&trace, &cfg);
+        assert_eq!(rep.jobs.len(), 4);
+        for o in &rep.jobs {
+            assert_eq!(
+                o.report.rounds.len() as u32,
+                trace.arrivals[o.job].spec.rounds,
+                "job {} must finish all rounds",
+                o.name
+            );
+            assert!(o.latency_inflation().is_some());
+        }
+        assert!(rep.cluster_utilization > 0.0);
+        assert!(rep.span_secs > 0.0);
+        assert!(rep.max_concurrent_jobs() >= 1);
+    }
+
+    #[test]
+    fn tight_budget_queues_jobs_and_releases_them() {
+        let trace = tiny_trace(9);
+        // budget 1 admits one job at a time: later arrivals must wait
+        let cfg = BrokerConfig {
+            capacity: 8,
+            admission: AdmissionConfig {
+                budget: 1,
+                max_jobs: 1,
+            },
+            policy: "deadline".into(),
+            seed: 78,
+            with_solo: false,
+        };
+        let rep = run_trace(&trace, &cfg);
+        assert_eq!(rep.jobs.len(), 4);
+        for o in &rep.jobs {
+            assert_eq!(o.report.rounds.len() as u32, trace.arrivals[o.job].spec.rounds);
+        }
+        assert!(
+            rep.jobs.iter().any(|o| o.queue_wait_secs > 1.0),
+            "serialized admission must produce queue waits"
+        );
+        assert_eq!(rep.max_concurrent_jobs(), 1, "max_jobs quota of 1");
+    }
+
+    #[test]
+    fn slo_weights_and_ranks_are_ordered() {
+        assert!(SloClass::Premium.weight() > SloClass::Standard.weight());
+        assert!(SloClass::Standard.weight() > SloClass::BestEffort.weight());
+        assert!(SloClass::Premium.rank() < SloClass::BestEffort.rank());
+        assert_eq!(SloClass::Premium.name(), "premium");
+    }
+}

@@ -1,0 +1,219 @@
+//! Job-arrival workload generation: the broker's scenarios cover a
+//! *living cluster* — FL jobs arriving over time (Poisson or trace-driven)
+//! with mixed active/intermittent fleets, party counts up to 10k, the
+//! three §6.3 workload profiles and an SLO-class mix — rather than a
+//! fixed job set admitted at t = 0.
+//!
+//! Traces are deterministic functions of the seed, so the same trace can
+//! be replayed under every arbitration policy (that is what makes the
+//! per-policy comparison in `bench::broker` meaningful).
+
+use crate::coordinator::job::FlJobSpec;
+use crate::party::FleetKind;
+use crate::util::rng::Rng;
+use crate::workloads::Workload;
+
+use super::SloClass;
+
+/// One job submission reaching the broker.
+#[derive(Clone, Debug)]
+pub struct JobArrival {
+    /// Submission time, virtual seconds from trace start.
+    pub at_secs: f64,
+    pub spec: FlJobSpec,
+    pub strategy: String,
+    pub class: SloClass,
+}
+
+/// A full arrival trace, sorted by submission time.
+#[derive(Clone, Debug, Default)]
+pub struct JobTrace {
+    pub arrivals: Vec<JobArrival>,
+}
+
+impl JobTrace {
+    /// Trace-driven construction from explicit arrivals (sorted on entry).
+    pub fn from_arrivals(mut arrivals: Vec<JobArrival>) -> JobTrace {
+        arrivals.sort_by(|a, b| a.at_secs.partial_cmp(&b.at_secs).unwrap());
+        JobTrace { arrivals }
+    }
+
+    pub fn len(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals.is_empty()
+    }
+
+    /// Largest fleet in the trace.
+    pub fn max_parties(&self) -> usize {
+        self.arrivals.iter().map(|a| a.spec.n_parties).max().unwrap_or(0)
+    }
+}
+
+/// Poisson-arrival generator configuration.
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    pub n_jobs: usize,
+    /// Mean inter-arrival gap of the Poisson process, seconds.
+    pub mean_interarrival_secs: f64,
+    /// `(party count, draw weight)` mix; includes 10k-party jobs by default.
+    pub party_mix: Vec<(usize, f64)>,
+    /// Fraction of jobs with intermittent fleets (rest split between
+    /// active homogeneous and heterogeneous).
+    pub intermittent_frac: f64,
+    /// Rounds drawn uniformly in `[rounds_lo, rounds_hi]`.
+    pub rounds_lo: u32,
+    pub rounds_hi: u32,
+    /// Round window for intermittent jobs (short so sweeps stay fast).
+    pub t_wait_secs: f64,
+    /// `(SLO class, draw weight)` mix.
+    pub slo_mix: Vec<(SloClass, f64)>,
+    pub strategy: String,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            n_jobs: 12,
+            mean_interarrival_secs: 30.0,
+            party_mix: vec![(10, 0.4), (100, 0.3), (1000, 0.2), (10_000, 0.1)],
+            intermittent_frac: 0.3,
+            rounds_lo: 2,
+            rounds_hi: 5,
+            t_wait_secs: 120.0,
+            slo_mix: vec![
+                (SloClass::Premium, 0.2),
+                (SloClass::Standard, 0.5),
+                (SloClass::BestEffort, 0.3),
+            ],
+            strategy: "jit".to_string(),
+            seed: 0xB40C,
+        }
+    }
+}
+
+/// Weighted draw from a `(value, weight)` mix (deterministic in the rng
+/// stream; the last entry absorbs floating-point remainder).
+fn draw_weighted<'a, T>(rng: &mut Rng, mix: &'a [(T, f64)]) -> &'a T {
+    debug_assert!(!mix.is_empty(), "empty mix");
+    let total: f64 = mix.iter().map(|(_, w)| *w).sum();
+    let mut u = rng.f64() * total;
+    for (v, w) in mix {
+        if u < *w {
+            return v;
+        }
+        u -= *w;
+    }
+    &mix[mix.len() - 1].0
+}
+
+/// Generate a Poisson arrival trace over the three §6.3 workload profiles.
+pub fn poisson_trace(cfg: &TraceConfig) -> JobTrace {
+    assert!(cfg.n_jobs > 0, "trace needs at least one job");
+    assert!(!cfg.party_mix.is_empty(), "party mix must be non-empty");
+    assert!(!cfg.slo_mix.is_empty(), "slo mix must be non-empty");
+    let mut rng = Rng::new(cfg.seed);
+    let workloads = Workload::all_paper();
+    let rounds_hi = cfg.rounds_hi.max(cfg.rounds_lo);
+    let mut at = 0.0;
+    let mut arrivals = Vec::with_capacity(cfg.n_jobs);
+    for i in 0..cfg.n_jobs {
+        if i > 0 {
+            at += rng.exp(1.0 / cfg.mean_interarrival_secs.max(1e-9));
+        }
+        let workload = workloads[rng.below(workloads.len() as u64) as usize].clone();
+        let parties = *draw_weighted(&mut rng, &cfg.party_mix);
+        let fleet = if rng.bool(cfg.intermittent_frac) {
+            FleetKind::IntermittentHeterogeneous
+        } else if rng.bool(0.5) {
+            FleetKind::ActiveHeterogeneous
+        } else {
+            FleetKind::ActiveHomogeneous
+        };
+        let rounds = rng.range_u64(cfg.rounds_lo as u64, rounds_hi as u64 + 1) as u32;
+        let class = *draw_weighted(&mut rng, &cfg.slo_mix);
+        let mut spec = FlJobSpec::new(workload, fleet, parties, rounds);
+        spec.t_wait_secs = cfg.t_wait_secs;
+        spec.name = format!("job{i}-{}", spec.name);
+        arrivals.push(JobArrival {
+            at_secs: at,
+            spec,
+            strategy: cfg.strategy.clone(),
+            class,
+        });
+    }
+    JobTrace { arrivals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_trace_is_deterministic_and_sorted() {
+        let cfg = TraceConfig {
+            n_jobs: 20,
+            seed: 7,
+            ..Default::default()
+        };
+        let a = poisson_trace(&cfg);
+        let b = poisson_trace(&cfg);
+        assert_eq!(a.len(), 20);
+        for (x, y) in a.arrivals.iter().zip(&b.arrivals) {
+            assert_eq!(x.at_secs, y.at_secs);
+            assert_eq!(x.spec.name, y.spec.name);
+            assert_eq!(x.spec.n_parties, y.spec.n_parties);
+            assert_eq!(x.class, y.class);
+        }
+        // sorted, starting at 0
+        assert_eq!(a.arrivals[0].at_secs, 0.0);
+        for w in a.arrivals.windows(2) {
+            assert!(w[0].at_secs <= w[1].at_secs);
+        }
+        // a different seed moves the arrivals
+        let c = poisson_trace(&TraceConfig {
+            n_jobs: 20,
+            seed: 8,
+            ..Default::default()
+        });
+        assert_ne!(a.arrivals[5].at_secs, c.arrivals[5].at_secs);
+    }
+
+    #[test]
+    fn mix_draws_cover_the_configured_values() {
+        let cfg = TraceConfig {
+            n_jobs: 200,
+            seed: 3,
+            ..Default::default()
+        };
+        let t = poisson_trace(&cfg);
+        let counts: std::collections::BTreeSet<usize> =
+            t.arrivals.iter().map(|a| a.spec.n_parties).collect();
+        assert!(counts.contains(&10) && counts.contains(&10_000), "{counts:?}");
+        assert_eq!(t.max_parties(), 10_000);
+        let classes: std::collections::BTreeSet<&str> =
+            t.arrivals.iter().map(|a| a.class.name()).collect();
+        assert_eq!(classes.len(), 3, "all three SLO classes drawn");
+        let fleets: std::collections::BTreeSet<&str> =
+            t.arrivals.iter().map(|a| a.spec.fleet_kind.name()).collect();
+        assert_eq!(fleets.len(), 3, "all three fleet kinds drawn");
+    }
+
+    #[test]
+    fn trace_driven_arrivals_sort_on_entry() {
+        let cfg = TraceConfig {
+            n_jobs: 3,
+            seed: 1,
+            ..Default::default()
+        };
+        let mut arrivals = poisson_trace(&cfg).arrivals;
+        arrivals[0].at_secs = 500.0; // force out-of-order entry
+        let t = JobTrace::from_arrivals(arrivals);
+        for w in t.arrivals.windows(2) {
+            assert!(w[0].at_secs <= w[1].at_secs);
+        }
+    }
+}

@@ -28,6 +28,7 @@
 
 use std::collections::{BTreeSet, VecDeque};
 
+use crate::broker::arbitration::{ArbitrationPolicy, ArbitrationView, Candidate};
 use crate::sim::{EventKind, EventQueue, Time};
 
 pub type TaskId = usize;
@@ -71,6 +72,10 @@ struct Task {
     spec: TaskSpec,
     phase: Phase,
     work: VecDeque<Time>,
+    /// Σ durations in `work`, maintained incrementally so arbitration
+    /// snapshots never re-sum the deque (items leave only on completed
+    /// merges — a preempted in-flight item stays queued and is redone).
+    queued_time: Time,
     /// Token guarding scheduled phase-end events (stale events are ignored).
     token: u64,
     finish_requested: bool,
@@ -131,6 +136,24 @@ impl Default for ClusterConfig {
     }
 }
 
+/// Incremental per-job container-seconds (O(1) usage queries for the
+/// cross-job arbitration policies; the ledger stays the reporting truth).
+#[derive(Clone, Copy, Debug, Default)]
+struct JobUsage {
+    closed_cs: f64,
+    open_count: u64,
+    /// Σ start times of the job's live deployments, so charging them up
+    /// to `now` is `open_count·now − open_starts_sum`.
+    open_starts_sum: Time,
+}
+
+impl JobUsage {
+    fn cs(&self, now: Time) -> f64 {
+        self.closed_cs
+            + crate::sim::to_secs((self.open_count * now).saturating_sub(self.open_starts_sum))
+    }
+}
+
 #[derive(Debug)]
 pub struct Cluster {
     pub cfg: ClusterConfig,
@@ -146,6 +169,12 @@ pub struct Cluster {
     active_idx: BTreeSet<(Priority, TaskId)>,
     /// Live container count (capacity checks without scanning).
     deployed: usize,
+    /// Per-job incremental container-seconds (arbitration input).
+    usage: Vec<JobUsage>,
+    /// Per-job fair-share weights (broker SLO classes; 1.0 default).
+    weights: Vec<f64>,
+    /// Cross-job arbitration policy; `None` = §5.5 deadline-priority order.
+    policy: Option<Box<dyn ArbitrationPolicy>>,
 }
 
 impl Cluster {
@@ -159,7 +188,36 @@ impl Cluster {
             pending_idx: BTreeSet::new(),
             active_idx: BTreeSet::new(),
             deployed: 0,
+            usage: Vec::new(),
+            weights: Vec::new(),
+            policy: None,
         }
+    }
+
+    fn ensure_job(&mut self, job: usize) {
+        if job >= self.usage.len() {
+            self.usage.resize(job + 1, JobUsage::default());
+            self.weights.resize(job + 1, 1.0);
+        }
+    }
+
+    /// Install a cross-job arbitration policy (broker control plane):
+    /// pending starts then follow the policy; preemption stays in §5.5
+    /// deadline order so FORCE_TRIGGER semantics are policy-independent.
+    pub fn set_policy(&mut self, policy: Box<dyn ArbitrationPolicy>) {
+        self.policy = Some(policy);
+    }
+
+    /// Fair-share weight for a job (broker SLO class; ignored unless a
+    /// weight-aware policy is installed).
+    pub fn set_job_weight(&mut self, job: usize, weight: f64) {
+        self.ensure_job(job);
+        self.weights[job] = if weight > 0.0 { weight } else { 1.0 };
+    }
+
+    /// Container-seconds charged to `job` so far — O(1), incremental.
+    pub fn job_usage_cs(&self, job: usize, now: Time) -> f64 {
+        self.usage.get(job).map_or(0.0, |u| u.cs(now))
     }
 
     /// Recompute a task's membership in the scheduler indices after any
@@ -246,10 +304,12 @@ impl Cluster {
     /// via `force_start`.
     pub fn submit(&mut self, spec: TaskSpec) -> TaskId {
         let id = self.tasks.len();
+        self.ensure_job(spec.job);
         self.tasks.push(Task {
             spec,
             phase: Phase::Pending,
             work: VecDeque::new(),
+            queued_time: 0,
             token: u64::MAX,
             finish_requested: false,
             preempting: false,
@@ -266,6 +326,7 @@ impl Cluster {
     /// Append work items (one per update merge; duration = t_pair / C_agg).
     pub fn push_work(&mut self, q: &mut EventQueue, task: TaskId, items: &[Time]) {
         self.tasks[task].work.extend(items.iter().copied());
+        self.tasks[task].queued_time += items.iter().sum::<Time>();
         // An idle (kept-alive) container picks work up immediately.
         if self.tasks[task].phase == Phase::Idle && !items.is_empty() {
             self.begin_next_work(q, task);
@@ -289,9 +350,15 @@ impl Cluster {
         self.reindex(task);
     }
 
-    /// δ-tick: start pending tasks in priority order while capacity lasts;
-    /// then, if a pending task outranks a running one, preempt the victim.
+    /// δ-tick: start pending tasks while capacity lasts — in §5.5 priority
+    /// order, or by the installed arbitration policy — then, if a pending
+    /// task outranks a running one, preempt the victim (always deadline-
+    /// ordered, policy or not).
     pub fn on_tick(&mut self, q: &mut EventQueue) {
+        if self.policy.is_some() {
+            self.on_tick_arbitrated(q);
+            return;
+        }
         loop {
             let Some(best) = self.best_pending() else { break };
             if self.has_capacity() {
@@ -308,6 +375,69 @@ impl Cluster {
             // the pending task starts on a later tick.
             break;
         }
+    }
+
+    /// δ-tick with an arbitration policy installed: the policy picks which
+    /// startable pending task deploys into each free slot.
+    fn on_tick_arbitrated(&mut self, q: &mut EventQueue) {
+        let mut policy = self.policy.take().expect("checked by on_tick");
+        let now = q.now();
+        // Loop-invariant within one tick: a deploy at `now` removes
+        // exactly the picked task from the pending set and charges zero
+        // container-seconds at `now`, so the snapshot and usage vector
+        // are computed once instead of once per filled slot.
+        let mut candidates = self.startable_candidates();
+        let usage_cs: Vec<f64> = self.usage.iter().map(|u| u.cs(now)).collect();
+        loop {
+            if candidates.is_empty() {
+                break;
+            }
+            if self.has_capacity() {
+                let view = ArbitrationView {
+                    now,
+                    candidates: &candidates,
+                    usage_cs: &usage_cs,
+                    weights: &self.weights,
+                };
+                let Some(task) = policy.pick(&view) else { break };
+                let at = candidates
+                    .iter()
+                    .position(|c| c.task == task)
+                    .unwrap_or_else(|| {
+                        panic!("arbitration policy picked non-candidate task {task}")
+                    });
+                candidates.remove(at);
+                debug_assert!(self.tasks[task].pending_key.is_some());
+                self.deploy(q, task);
+                continue;
+            }
+            let Some(best) = self.best_pending() else { break };
+            let Some(victim) = self.worst_running() else { break };
+            if self.tasks[victim].spec.priority <= self.tasks[best].spec.priority {
+                break;
+            }
+            self.begin_checkpoint(q, victim, true);
+            break;
+        }
+        self.policy = Some(policy);
+    }
+
+    /// Snapshot of startable pending tasks in ascending (priority, id)
+    /// order — the arbitration policies' candidate list. O(pending) via
+    /// the incremental `queued_time` counters (no deque re-summing).
+    fn startable_candidates(&self) -> Vec<Candidate> {
+        self.pending_idx
+            .iter()
+            .map(|&(priority, task)| {
+                let t = &self.tasks[task];
+                Candidate {
+                    task,
+                    job: t.spec.job,
+                    priority,
+                    queued_secs: crate::sim::to_secs(t.queued_time),
+                }
+            })
+            .collect()
     }
 
     /// FORCE_TRIGGER (Fig 6 line 21): deadline reached — deploy now,
@@ -362,8 +492,9 @@ impl Cluster {
         t.phase = Phase::Starting;
         t.deployments += 1;
         t.preempting = false;
+        let job = t.spec.job;
         let dep = Deployment {
-            job: t.spec.job,
+            job,
             task,
             start: now,
             end: None,
@@ -371,6 +502,8 @@ impl Cluster {
         let dur = t.spec.cold_start + t.spec.state_load;
         self.ledger.push(dep);
         self.deployed += 1;
+        self.usage[job].open_count += 1;
+        self.usage[job].open_starts_sum += now;
         self.tasks[task].live_deployment = Some(self.ledger.len() - 1);
         self.schedule_phase_end(q, task, dur);
         self.reindex(task);
@@ -398,6 +531,11 @@ impl Cluster {
         if let Some(di) = self.tasks[task].live_deployment.take() {
             self.ledger[di].end = Some(now);
             self.deployed -= 1;
+            let (job, start) = (self.ledger[di].job, self.ledger[di].start);
+            let u = &mut self.usage[job];
+            u.open_count -= 1;
+            u.open_starts_sum -= start;
+            u.closed_cs += crate::sim::to_secs(now - start);
         }
     }
 
@@ -421,7 +559,9 @@ impl Cluster {
                 Some(Notification::Deployed { task })
             }
             Phase::Running => {
-                self.tasks[task].work.pop_front();
+                if let Some(d) = self.tasks[task].work.pop_front() {
+                    self.tasks[task].queued_time -= d;
+                }
                 self.tasks[task].work_done += 1;
                 if !self.tasks[task].work.is_empty() {
                     self.begin_next_work(q, task);
@@ -701,7 +841,107 @@ mod tests {
                     crate::prop_assert!(e >= d.start, "deployment ends before start");
                 }
             }
+            // incremental per-job usage must agree with the ledger scan
+            for j in 0..njobs {
+                crate::prop_assert!(
+                    crate::util::prop::close(
+                        c.job_usage_cs(j, now),
+                        c.container_seconds(j, now),
+                        1e-9
+                    ),
+                    "incremental usage diverged from ledger for job {j}"
+                );
+            }
             Ok(())
         });
+    }
+
+    #[test]
+    fn incremental_usage_charges_open_deployments() {
+        let mut q = EventQueue::new();
+        let mut c = Cluster::new(ClusterConfig::default());
+        let t = c.submit(spec(0, 10));
+        c.push_work(&mut q, t, &[secs(5.0)]);
+        c.force_start(&mut q, t);
+        // container still open: usage charged up to `now`, like the ledger
+        let later = q.now() + secs(2.0);
+        assert!(
+            (c.job_usage_cs(0, later) - c.container_seconds(0, later)).abs() < 1e-9
+        );
+        assert!(c.job_usage_cs(0, later) > 1.9);
+    }
+
+    #[test]
+    fn deadline_policy_matches_default_tick_order() {
+        // DeadlinePriority must reproduce the §5.5 baseline exactly: same
+        // deployments, same ledger, same phases on an identical workload.
+        use crate::broker::arbitration::DeadlinePriority;
+        let run = |with_policy: bool| {
+            let mut q = EventQueue::new();
+            let mut c = Cluster::new(ClusterConfig {
+                capacity: 2,
+                ..Default::default()
+            });
+            if with_policy {
+                c.set_policy(Box::new(DeadlinePriority));
+            }
+            for i in 0..6usize {
+                let t = c.submit(spec(i % 3, (i as Priority) * 31 % 7));
+                c.push_work(&mut q, t, &[secs(0.7), secs(0.4)]);
+                c.request_finish(&mut q, t);
+            }
+            c.on_tick(&mut q); // seed the first deployments
+            let notes = drain(&mut c, &mut q);
+            let ledger: Vec<(usize, Time, Option<Time>)> = c
+                .ledger()
+                .iter()
+                .map(|d| (d.job, d.start, d.end))
+                .collect();
+            (notes, ledger, q.now())
+        };
+        let (n0, l0, t0) = run(false);
+        let (n1, l1, t1) = run(true);
+        assert_eq!(n0, n1, "notifications diverged");
+        assert_eq!(l0, l1, "ledger diverged");
+        assert_eq!(t0, t1, "clock diverged");
+    }
+
+    #[test]
+    fn wfs_policy_balances_jobs_under_scarcity() {
+        // Two jobs, one slot: job 0's tasks all have earlier deadlines, but
+        // after job 0 consumes container time the weighted-fair-share
+        // policy must alternate to job 1 instead of draining job 0 first.
+        use crate::broker::arbitration::WeightedFairShare;
+        let mut q = EventQueue::new();
+        let mut c = Cluster::new(ClusterConfig {
+            capacity: 1,
+            ..Default::default()
+        });
+        c.set_policy(Box::new(WeightedFairShare));
+        let mut tasks = Vec::new();
+        for i in 0..4usize {
+            // job 0 gets priorities 0..1, job 1 gets 100.. — deadline
+            // order would run both job-0 tasks first
+            let job = i % 2;
+            let t = c.submit(spec(job, (job as Priority) * 100 + i as Priority));
+            c.push_work(&mut q, t, &[secs(1.0)]);
+            c.request_finish(&mut q, t);
+            tasks.push(t);
+        }
+        c.on_tick(&mut q); // seed the first deployment
+        let _ = drain(&mut c, &mut q);
+        // all four ran to completion under the policy
+        for &t in &tasks {
+            assert_eq!(c.phase(t), Phase::Done);
+        }
+        // deployment order from the ledger: after job 0's first container
+        // accrues time, job 1 must get the next slot (usage 0 beats >0)
+        let order: Vec<usize> = c.ledger().iter().map(|d| d.job).collect();
+        assert_eq!(order.len(), 4);
+        assert_eq!(
+            &order[..2],
+            &[0, 1],
+            "fair share must alternate jobs, got {order:?}"
+        );
     }
 }

@@ -10,6 +10,7 @@
 //! Identical strategy code runs here (virtual time) and in
 //! `coordinator::live` (wall time + real XLA fusion).
 
+use crate::broker::admission::AdmissionController;
 use crate::cluster::{Cluster, ClusterConfig};
 use crate::coordinator::job::{FlJobSpec, JobParams};
 use crate::coordinator::strategies::{self, Ctx, Strategy};
@@ -38,6 +39,9 @@ struct JobState {
     records: Vec<RoundRecord>,
     done: bool,
     finished_at: Time,
+    /// Broker path: round 0 is gated on a JobArrival event + admission
+    /// control instead of starting at t = 0.
+    deferred: bool,
 }
 
 /// Platform configuration.
@@ -75,6 +79,19 @@ pub struct Platform {
     mq: MessageQueue,
     jobs: Vec<JobState>,
     tick_scheduled: bool,
+    /// Broker admission control; `None` = every job starts unconditionally.
+    admission: Option<AdmissionController>,
+}
+
+/// End-of-run aggregates for the broker (`run_with_stats`).
+#[derive(Debug)]
+pub struct RunStats {
+    /// Virtual time when the last event fired, seconds.
+    pub end_secs: f64,
+    /// Container-seconds across all jobs (aggregation only).
+    pub total_container_seconds: f64,
+    /// The admission controller handed back (queue-wait metrics).
+    pub admission: Option<AdmissionController>,
 }
 
 impl Platform {
@@ -85,6 +102,7 @@ impl Platform {
             mq: MessageQueue::new(),
             jobs: Vec::new(),
             tick_scheduled: false,
+            admission: None,
             cfg,
         }
     }
@@ -124,8 +142,47 @@ impl Platform {
             records: Vec::new(),
             done: false,
             finished_at: 0,
+            deferred: false,
         });
         job
+    }
+
+    /// Broker path: submit a job that *arrives* at virtual time `at` and
+    /// must pass the admission controller before its first round starts.
+    pub fn submit_at(&mut self, spec: FlJobSpec, strategy_name: &str, at: Time) -> usize {
+        let job = self.admit(spec, strategy_name);
+        self.jobs[job].deferred = true;
+        self.q.schedule_at(at, EventKind::JobArrival { job });
+        job
+    }
+
+    /// Install the broker's admission controller (see `broker::admission`).
+    pub fn set_admission(&mut self, ctrl: AdmissionController) {
+        self.admission = Some(ctrl);
+    }
+
+    /// Mutable cluster access for the broker control plane (arbitration
+    /// policy installation, per-job fair-share weights).
+    pub fn cluster_mut(&mut self) -> &mut Cluster {
+        &mut self.cluster
+    }
+
+    /// A job cleared admission (or has no controller): start round 0 now.
+    fn release_job(&mut self, job: usize) {
+        let now = self.q.now();
+        self.q
+            .schedule_at(now, EventKind::RoundStart { job, round: 0 });
+    }
+
+    fn on_job_arrival(&mut self, job: usize) {
+        let now = self.q.now();
+        let started = match self.admission.as_mut() {
+            Some(ctrl) => ctrl.arrive(job, now),
+            None => vec![job],
+        };
+        for j in started {
+            self.release_job(j);
+        }
     }
 
     fn estimate_for(&mut self, job: usize) -> RoundEstimate {
@@ -245,6 +302,14 @@ impl Platform {
                 params: &params,
             };
             self.jobs[job].strategy.on_job_end(&mut ctx);
+            // a finished job frees committed admission demand: queued
+            // jobs may start now (broker backpressure path)
+            if let Some(ctrl) = self.admission.as_mut() {
+                let released = ctrl.finish(job, now);
+                for j in released {
+                    self.release_job(j);
+                }
+            }
             return;
         }
         j.round = round + 1;
@@ -265,10 +330,20 @@ impl Platform {
     }
 
     /// Run every admitted job to completion; returns one report per job.
-    pub fn run(mut self) -> Vec<JobReport> {
-        // kick off round 0 of every job
+    pub fn run(self) -> Vec<JobReport> {
+        self.run_with_stats().0
+    }
+
+    /// Like [`run`](Platform::run), but also returns end-of-run aggregates
+    /// (span, total container-seconds, the admission controller) for the
+    /// broker's utilization and queue-wait reporting.
+    pub fn run_with_stats(mut self) -> (Vec<JobReport>, RunStats) {
+        // kick off round 0 of every non-deferred job; deferred jobs wait
+        // for their JobArrival event + admission
         for job in 0..self.jobs.len() {
-            self.q.schedule_at(0, EventKind::RoundStart { job, round: 0 });
+            if !self.jobs[job].deferred {
+                self.q.schedule_at(0, EventKind::RoundStart { job, round: 0 });
+            }
         }
         let mut safety: u64 = 0;
         while let Some((_, ev)) = self.q.next() {
@@ -341,11 +416,15 @@ impl Platform {
                         self.ensure_tick();
                     }
                 }
+                EventKind::JobArrival { job } => {
+                    self.on_job_arrival(job);
+                }
                 EventKind::RoundTimeout { .. } => {}
             }
         }
         let now = self.q.now();
-        self.jobs
+        let reports: Vec<JobReport> = self
+            .jobs
             .iter()
             .enumerate()
             .map(|(job, j)| JobReport {
@@ -361,7 +440,13 @@ impl Platform {
                 updates_fused: self.cluster.job_work_done(job),
                 makespan_secs: to_secs(j.finished_at),
             })
-            .collect()
+            .collect();
+        let stats = RunStats {
+            end_secs: to_secs(now),
+            total_container_seconds: self.cluster.total_container_seconds(now),
+            admission: self.admission.take(),
+        };
+        (reports, stats)
     }
 }
 

@@ -27,7 +27,7 @@ use super::{Ctx, RoundTracker, Strategy};
 use crate::cluster::{Notification, Phase, TaskId, TaskSpec};
 use crate::estimator::RoundEstimate;
 use crate::metrics::RoundRecord;
-use crate::sim::{secs, EventKind, Time};
+use crate::sim::{secs, EventId, EventKind, Time};
 
 #[derive(Default)]
 pub struct Jit {
@@ -43,6 +43,9 @@ pub struct Jit {
     /// Whether the deadline timer fired already.
     triggered: bool,
     rr: usize,
+    /// Live deadline-timer event for this round, canceled (O(1) lazy
+    /// deletion) once the round completes instead of left to fire stale.
+    timer: Option<EventId>,
     /// Deadline offsets measured for introspection/tests.
     pub last_deadline: Time,
 }
@@ -87,6 +90,18 @@ impl Jit {
             }
         }
         self.tracker.maybe_complete(ctx.params.quorum, ctx.q.now());
+        self.cancel_timer_if_done(ctx);
+    }
+
+    /// ROADMAP carried item: once the round has produced its record, the
+    /// pending deadline timer is dead weight — cancel it in the engine
+    /// rather than letting it fire as a stale no-op.
+    fn cancel_timer_if_done(&mut self, ctx: &mut Ctx) {
+        if self.tracker.done {
+            if let Some(id) = self.timer.take() {
+                ctx.q.cancel(id);
+            }
+        }
     }
 }
 
@@ -132,14 +147,18 @@ impl Strategy for Jit {
             self.tasks.push(task);
             self.tracker.open_tasks.push(task);
         }
-        // SET_TIMER (line 18).
-        ctx.q.schedule_at(
+        // SET_TIMER (line 18). A previous round's timer that somehow
+        // survived is stale by definition — cancel before re-arming.
+        if let Some(id) = self.timer.take() {
+            ctx.q.cancel(id);
+        }
+        self.timer = Some(ctx.q.schedule_at(
             deadline_abs,
             EventKind::TimerAlert {
                 job: ctx.params.job,
                 round,
             },
-        );
+        ));
     }
 
     fn on_update(&mut self, ctx: &mut Ctx, _round: u32, _party: usize, _arrived: usize) {
@@ -166,6 +185,10 @@ impl Strategy for Jit {
     }
 
     fn on_timer(&mut self, ctx: &mut Ctx, round: u32) {
+        if round == self.tracker.round {
+            // this round's timer just fired; nothing left to cancel
+            self.timer = None;
+        }
         if round != self.tracker.round || self.triggered {
             return;
         }
@@ -186,10 +209,12 @@ impl Strategy for Jit {
             Notification::WorkItemDone { .. } | Notification::WorkDrained { .. } => {
                 self.tracker.note_fused();
                 self.tracker.maybe_complete(ctx.params.quorum, ctx.q.now());
+                self.cancel_timer_if_done(ctx);
             }
             Notification::TaskExited { task } => {
                 self.tracker.close_task(*task);
                 self.tracker.maybe_complete(ctx.params.quorum, ctx.q.now());
+                self.cancel_timer_if_done(ctx);
             }
             Notification::TaskPreempted { .. } => {
                 // Work is conserved by the cluster; the task resumes by
@@ -394,6 +419,29 @@ mod tests {
         // have deployed at the deadline otherwise. Either way the round
         // completes; here all-arrived forces completion promptly.
         assert!(records[0].complete_secs <= 20.0);
+    }
+
+    #[test]
+    fn completed_round_cancels_deadline_timer() {
+        // All updates land early; the round completes long before the
+        // 17.8s deadline. The timer must be canceled — the drain must
+        // never pop a TimerAlert, so the sim clock never reaches the
+        // deadline and the queue ends empty.
+        let arrivals = vec![1.0, 2.0, 3.0];
+        let est = RoundEstimate {
+            t_upd: vec![18.0, 19.0, 20.0],
+            t_rnd: 20.0,
+            t_agg: 2.0,
+        };
+        let (records, _cluster, s, q) = run_round(3, &arrivals, est, true);
+        assert_eq!(records.len(), 1);
+        assert!(s.timer.is_none(), "completed round must cancel its timer");
+        assert!(q.is_empty(), "no live events may remain after the drain");
+        assert!(
+            to_secs(q.now()) < 17.0,
+            "canceled deadline timer fired anyway (clock at {})",
+            to_secs(q.now())
+        );
     }
 
     #[test]

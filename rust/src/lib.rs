@@ -19,6 +19,7 @@
 //! Python never runs on the request path.
 
 pub mod bench;
+pub mod broker;
 pub mod cluster;
 pub mod coordinator;
 pub mod estimator;

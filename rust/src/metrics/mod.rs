@@ -36,7 +36,11 @@ pub struct JobReport {
     pub deployments: u64,
     /// Updates fused across the job.
     pub updates_fused: u64,
-    /// Wall duration of the job in virtual seconds.
+    /// Absolute virtual-time instant the job finished (seconds from
+    /// platform start). For jobs admitted at t = 0 this equals the wall
+    /// duration; for broker jobs arriving later it includes arrival +
+    /// queue time (BrokerReport::max_concurrent_jobs relies on this
+    /// absolute interpretation).
     pub makespan_secs: f64,
 }
 

@@ -68,6 +68,8 @@ pub enum EventKind {
     RoundStart { job: usize, round: u32 },
     /// t_wait expired for a round of an intermittent job.
     RoundTimeout { job: usize, round: u32 },
+    /// A job submission reaches the broker (multi-tenant admission).
+    JobArrival { job: usize },
     /// Generic user event for tests/extensions.
     Custom { tag: u64 },
 }

@@ -138,6 +138,56 @@ fn quorum_rounds_complete_without_stragglers() {
 }
 
 #[test]
+fn broker_multi_job_determinism_per_policy() {
+    // PR 2 invariant: same seed + same arrival trace ⇒ bit-identical
+    // JobReports, for every arbitration policy. The policies are pure
+    // functions of the (deterministically ordered) candidate snapshot, so
+    // two replays may not diverge in a single reported number.
+    use fljit::broker::admission::AdmissionConfig;
+    use fljit::broker::workload::{poisson_trace, TraceConfig};
+    use fljit::broker::{run_trace, BrokerConfig};
+
+    let trace = poisson_trace(&TraceConfig {
+        n_jobs: 5,
+        mean_interarrival_secs: 8.0,
+        party_mix: vec![(8, 0.5), (20, 0.5)],
+        intermittent_frac: 0.25,
+        rounds_lo: 2,
+        rounds_hi: 3,
+        t_wait_secs: 60.0,
+        seed: 99,
+        ..Default::default()
+    });
+    for policy in ["deadline", "least-slack", "wfs"] {
+        let cfg = BrokerConfig {
+            capacity: 4, // scarce: arbitration decisions actually happen
+            admission: AdmissionConfig {
+                budget: 16,
+                max_jobs: 0,
+            },
+            policy: policy.to_string(),
+            seed: 4242,
+            with_solo: false,
+        };
+        let a = run_trace(&trace, &cfg);
+        let b = run_trace(&trace, &cfg);
+        assert_eq!(
+            a.to_json().print(),
+            b.to_json().print(),
+            "policy '{policy}' replay diverged"
+        );
+        for o in &a.jobs {
+            assert_eq!(
+                o.report.rounds.len() as u32,
+                trace.arrivals[o.job].spec.rounds,
+                "policy '{policy}' left job {} unfinished",
+                o.name
+            );
+        }
+    }
+}
+
+#[test]
 fn deterministic_given_seed() {
     let spec = FlJobSpec::new(
         Workload::rvlcdip_vgg16(),

@@ -20,13 +20,55 @@ fn runtime() -> Option<Runtime> {
         eprintln!("skipping: artifacts not built (run `make artifacts`)");
         return None;
     }
-    Some(Runtime::new(&dir).expect("runtime"))
+    // With the vendored xla_extension *stub* the feature compiles but the
+    // PJRT client cannot construct — skip on the stub's distinctive error
+    // only, so a real-crate PJRT/manifest regression still fails loudly
+    // instead of silently turning the suite into skips.
+    match Runtime::new(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            let msg = format!("{e:#}");
+            assert!(
+                msg.contains("xla_extension stub"),
+                "PJRT runtime failed for a non-stub reason: {msg}"
+            );
+            eprintln!("skipping: offline xla stub active ({msg})");
+            None
+        }
+    }
 }
 
 fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
     let mut v = vec![0.0f32; n];
     rng.fill_normal_f32(&mut v);
     v
+}
+
+/// PR 2: with the vendored `xla_extension` stub, `--features xla` builds
+/// offline, so these assertions are compiled (not skipped at the feature
+/// gate) and run identically against the stub and the real crate.
+#[cfg(feature = "xla")]
+mod xla_feature_gate {
+    #[test]
+    fn feature_flag_reports_enabled() {
+        assert!(fljit::runtime::xla_enabled());
+    }
+
+    #[test]
+    fn runtime_init_without_artifacts_errors_cleanly() {
+        // A directory with no manifest must yield a descriptive error —
+        // both the stub and the real crate take this path — never a panic.
+        let err = fljit::runtime::Runtime::new(std::path::Path::new(
+            "/nonexistent-artifact-dir",
+        ))
+        .err()
+        .expect("Runtime::new must fail without artifacts");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("manifest") || msg.contains("artifacts"),
+            "unhelpful error: {msg}"
+        );
+    }
 }
 
 #[test]
