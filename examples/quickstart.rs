@@ -3,14 +3,15 @@
 //! 1. **Simulated timeline** — six parties send updates over ~20 s; we run
 //!    all five aggregation design options (§3) and print the latency /
 //!    container-seconds comparison.
-//! 2. **Live round** — the same JIT policy drives *real* aggregation: four
-//!    parties train a real MLP through the AOT train artifacts and the
-//!    aggregator fuses their updates through the Pallas-kernel XLA
-//!    artifacts, deferring deployment until `t_rnd − t_agg`.
+//! 2. **Live round** — the *same* JIT `Strategy` implementation drives a
+//!    wall-clock job: party threads publish updates into the zero-copy
+//!    MQ, the wall driver sleeps to the JIT deadline, and the aggregator
+//!    folds the topic log (with real XLA training when the artifacts are
+//!    built — `--backend xla`; synthetic training otherwise).
 //!
-//! Run: `make artifacts && cargo run --release --example quickstart`
+//! Run: `cargo run --release --example quickstart`
 
-use fljit::coordinator::live::{run_live, LiveConfig, LiveStrategy};
+use fljit::coordinator::live::{run_live, LiveConfig, PartyBackend};
 use fljit::coordinator::timeline;
 
 fn main() {
@@ -27,42 +28,45 @@ fn main() {
         timeline::eager_ao_idle_fraction(6.0, 21.0) * 100.0
     );
 
-    println!("—— Act 2: one live federated job (real XLA fusion) ————\n");
+    println!("—— Act 2: one live federated job (wall clock + MQ) ————\n");
+    let backend = match args.get("backend") {
+        Some("xla") => PartyBackend::XlaThreads,
+        _ => PartyBackend::SynthThreads,
+    };
     let cfg = LiveConfig {
+        strategy: args.get_or("strategy", "jit").to_string(),
         n_parties: args.get_usize("parties", 4),
         rounds: args.get_u64("rounds", 6) as u32,
         minibatches: 4,
-        extra_epoch_ms: 300, // emulate heavier local datasets (DESIGN.md §3)
-        strategy: LiveStrategy::Jit { margin: 0.15 },
+        backend,
         seed,
         ..Default::default()
     };
     match run_live(&cfg) {
         Ok(report) => {
-            println!(
-                "t_pair (measured on the XLA fusion path, §5.4): {:.2} ms",
-                report.t_pair_secs * 1e3
-            );
-            println!("round  eval-loss  eval-acc  defer(ms)  agg-latency(ms)  busy(ms)");
-            for r in &report.rounds {
+            println!("round  agg-latency(ms)  complete(s)");
+            for r in &report.records {
                 println!(
-                    "{:>5}  {:>9.4}  {:>8.3}  {:>9.1}  {:>15.1}  {:>8.1}",
+                    "{:>5}  {:>15.1}  {:>11.2}",
                     r.round,
-                    r.eval_loss,
-                    r.eval_acc,
-                    r.defer_secs * 1e3,
-                    r.agg_latency_secs * 1e3,
-                    r.agg_busy_secs * 1e3
+                    r.latency_secs * 1e3,
+                    r.complete_secs
+                );
+            }
+            for s in &report.stats {
+                println!(
+                    "round {}: eval_loss={:.4} eval_acc={:.3}",
+                    s.round, s.eval_loss, s.eval_acc
                 );
             }
             println!(
-                "\naggregator busy {:.2} s of {:.2} s wall — the rest was \
-                 JIT-deferred and free for other jobs.",
-                report.total_busy_secs, report.total_secs
+                "\naggregator busy {:.3} container-seconds over {:.2} s wall — \
+                 the rest was JIT-deferred and free for other jobs.",
+                report.container_seconds, report.wall_secs
             );
         }
         Err(e) => {
-            eprintln!("live act skipped (run `make artifacts` first): {e:#}");
+            eprintln!("live act failed: {e:#}");
             std::process::exit(1);
         }
     }

@@ -1,0 +1,178 @@
+//! Live strategy sweep — the wall-clock analogue of the Fig 7/9 grids.
+//!
+//! Runs the *same* job under every §3 strategy on the live platform
+//! (wall-clock driver + zero-copy MQ traffic) and reports busy
+//! (container) seconds and per-round aggregation latency per strategy —
+//! the §6.2 metrics, measured on the real event path instead of virtual
+//! time. Dumped to `BENCH_live.json` via `fljit live --strategy all` (or
+//! the scripted variant under `cargo test`).
+
+use crate::coordinator::live::{run_live, LiveConfig, PartyBackend};
+use crate::coordinator::strategies;
+use crate::util::json::Json;
+use crate::util::table::Table;
+use crate::workloads::Workload;
+
+#[derive(Clone, Debug)]
+pub struct LiveSweepConfig {
+    pub n_parties: usize,
+    pub rounds: u32,
+    pub seed: u64,
+    pub dim: usize,
+    /// Mean synthetic epoch time (wall seconds; scales the sweep's wall
+    /// duration — every strategy pays the same round windows).
+    pub epoch_secs: f64,
+    /// Thread-backed parties on the real wall clock; `false` = scripted
+    /// parties on an instant clock (deterministic, CI-fast, same code
+    /// path through the MQ + wall driver).
+    pub wall: bool,
+}
+
+impl Default for LiveSweepConfig {
+    fn default() -> Self {
+        LiveSweepConfig {
+            n_parties: 4,
+            rounds: 3,
+            seed: 42,
+            dim: 512,
+            epoch_secs: 0.4,
+            wall: true,
+        }
+    }
+}
+
+impl LiveSweepConfig {
+    pub fn from_args(args: &crate::util::cli::Args) -> LiveSweepConfig {
+        let d = LiveSweepConfig::default();
+        LiveSweepConfig {
+            n_parties: args.get_usize("parties", d.n_parties),
+            rounds: args.get_u64("rounds", d.rounds as u64) as u32,
+            seed: args.get_u64("seed", d.seed),
+            dim: args.get_usize("dim", d.dim),
+            epoch_secs: args.get_f64("epoch-secs", d.epoch_secs),
+            wall: !args.get_bool("scripted") && args.get("backend") != Some("scripted"),
+        }
+    }
+
+    fn live_config(&self, strategy: &str) -> LiveConfig {
+        let mut workload = Workload::mlp_live();
+        workload.base_epoch_secs = self.epoch_secs;
+        LiveConfig {
+            strategy: strategy.to_string(),
+            n_parties: self.n_parties,
+            rounds: self.rounds,
+            seed: self.seed,
+            dim: self.dim,
+            workload,
+            backend: if self.wall {
+                PartyBackend::SynthThreads
+            } else {
+                PartyBackend::Scripted
+            },
+            ..Default::default()
+        }
+    }
+}
+
+/// Run every strategy on the identical live job; table + JSON rows.
+pub fn run_sweep(cfg: &LiveSweepConfig) -> (Table, Json) {
+    let mut t = Table::new(
+        &format!(
+            "live strategy sweep — {} parties × {} rounds, dim {} ({})",
+            cfg.n_parties,
+            cfg.rounds,
+            cfg.dim,
+            if cfg.wall { "wall clock" } else { "scripted" }
+        ),
+        &[
+            "strategy",
+            "busy (cs)",
+            "mean lat (ms)",
+            "deployments",
+            "fused",
+            "wall (s)",
+        ],
+    );
+    let mut rows = Vec::new();
+    for name in strategies::all_strategies() {
+        let lc = cfg.live_config(name);
+        match run_live(&lc) {
+            Ok(r) => {
+                t.row(vec![
+                    name.to_string(),
+                    format!("{:.3}", r.container_seconds),
+                    format!("{:.1}", r.mean_latency_secs() * 1e3),
+                    r.deployments.to_string(),
+                    r.updates_fused.to_string(),
+                    format!("{:.2}", r.wall_secs),
+                ]);
+                rows.push(Json::obj(vec![
+                    ("strategy", Json::str(name)),
+                    ("busy_secs", Json::num(r.container_seconds)),
+                    ("mean_latency_secs", Json::num(r.mean_latency_secs())),
+                    ("deployments", Json::num(r.deployments as f64)),
+                    ("updates_fused", Json::num(r.updates_fused as f64)),
+                    ("wall_secs", Json::num(r.wall_secs)),
+                    ("rounds", Json::num(r.records.len() as f64)),
+                ]));
+            }
+            Err(e) => {
+                t.row(vec![
+                    name.to_string(),
+                    format!("failed: {e}"),
+                    String::new(),
+                    String::new(),
+                    String::new(),
+                    String::new(),
+                ]);
+                rows.push(Json::obj(vec![
+                    ("strategy", Json::str(name)),
+                    ("error", Json::str(&format!("{e:#}"))),
+                ]));
+            }
+        }
+    }
+    let json = Json::obj(vec![
+        ("parties", Json::num(cfg.n_parties as f64)),
+        ("rounds", Json::num(cfg.rounds as f64)),
+        ("seed", Json::num(cfg.seed as f64)),
+        ("dim", Json::num(cfg.dim as f64)),
+        ("epoch_secs", Json::num(cfg.epoch_secs)),
+        ("wall", Json::Bool(cfg.wall)),
+        ("strategies", Json::Arr(rows)),
+    ]);
+    (t, json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scripted_sweep_covers_all_strategies_and_dumps_json() {
+        let cfg = LiveSweepConfig {
+            n_parties: 3,
+            rounds: 2,
+            dim: 32,
+            wall: false,
+            ..Default::default()
+        };
+        let (_t, json) = run_sweep(&cfg);
+        let rows = json.get("strategies").as_arr().unwrap();
+        assert_eq!(rows.len(), 5);
+        for row in rows {
+            assert!(
+                row.get("error").as_str().is_none(),
+                "strategy {} failed: {:?}",
+                row.get("strategy").as_str().unwrap_or("?"),
+                row.get("error")
+            );
+            assert_eq!(row.get("rounds").as_u64(), Some(2));
+            assert_eq!(row.get("updates_fused").as_u64(), Some(6));
+        }
+        crate::bench::dump("BENCH_live", &json);
+        let text =
+            std::fs::read_to_string(crate::bench::repro_dir().join("BENCH_live.json")).unwrap();
+        assert!(Json::parse(&text).is_ok());
+    }
+}

@@ -6,6 +6,7 @@
 pub mod broker;
 pub mod cli;
 pub mod figs;
+pub mod live;
 
 use crate::util::json::Json;
 use std::path::PathBuf;

@@ -14,6 +14,15 @@
 //!   cluster gets the next free slot regardless of deadlines (weights come
 //!   from the broker's SLO classes).
 //!
+//! Both non-baseline policies apply **aging**: a candidate's effective
+//! priority improves with the time it has waited startable
+//! (`Candidate::waited_secs`, tracked by the cluster from the instant
+//! work first lands / the task is preempted back to Pending). Without it
+//! a low-weight or high-usage tenant can starve indefinitely behind a
+//! stream of fresher, better-scoring tasks; with it every waiting task's
+//! score improves without bound, so it is eventually picked — the
+//! no-starvation property pinned by this module's tests.
+//!
 //! The policy only reorders *starts*; preemption stays in §5.5 deadline
 //! order (see `Cluster::on_tick`), so the JIT FORCE_TRIGGER guarantee is
 //! identical under every policy.
@@ -35,6 +44,9 @@ pub struct Candidate {
     /// Total queued work duration, seconds (incrementally tracked by the
     /// cluster, not re-summed per tick).
     pub queued_secs: f64,
+    /// Seconds this task has been startable (Pending with work) without
+    /// being deployed — the aging input. Resets on deploy/preemption.
+    pub waited_secs: f64,
 }
 
 /// Immutable snapshot handed to a policy at each scheduling decision.
@@ -75,11 +87,21 @@ impl ArbitrationPolicy for DeadlinePriority {
     }
 }
 
-/// Least slack first: `slack = deadline − now − queued_work`. A deep
-/// backlog erodes slack, so backlogged tasks start before their raw
-/// deadline order.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct LeastSlackFirst;
+/// Least slack first: `slack = deadline − now − queued_work −
+/// aging·waited`. A deep backlog erodes slack, so backlogged tasks start
+/// before their raw deadline order; the aging term guarantees a waiting
+/// task's effective slack falls below any fixed competitor's eventually.
+#[derive(Clone, Copy, Debug)]
+pub struct LeastSlackFirst {
+    /// Seconds of slack credit per second waited startable (0 = pure LSF).
+    pub aging: f64,
+}
+
+impl Default for LeastSlackFirst {
+    fn default() -> Self {
+        LeastSlackFirst { aging: 0.5 }
+    }
+}
 
 impl ArbitrationPolicy for LeastSlackFirst {
     fn name(&self) -> &'static str {
@@ -90,7 +112,8 @@ impl ArbitrationPolicy for LeastSlackFirst {
         let mut best: Option<(i128, TaskId)> = None;
         for c in view.candidates {
             let work = crate::sim::secs(c.queued_secs) as i128;
-            let slack = c.priority as i128 - view.now as i128 - work;
+            let age_credit = crate::sim::secs(self.aging * c.waited_secs) as i128;
+            let slack = c.priority as i128 - view.now as i128 - work - age_credit;
             let replace = match best {
                 None => true,
                 // strict <: first-seen wins ties, and candidates arrive in
@@ -106,9 +129,21 @@ impl ArbitrationPolicy for LeastSlackFirst {
 }
 
 /// Weighted fair share of container-seconds: the job with the smallest
-/// `usage_cs / weight` ratio gets the next free slot.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct WeightedFairShare;
+/// `usage_cs / weight − aging_cs·waited` score gets the next free slot.
+/// The aging discount keeps a heavy tenant's queued task from starving
+/// behind a stream of fresh low-usage tenants.
+#[derive(Clone, Copy, Debug)]
+pub struct WeightedFairShare {
+    /// Container-second discount per second waited startable (0 = pure
+    /// fair share).
+    pub aging_cs: f64,
+}
+
+impl Default for WeightedFairShare {
+    fn default() -> Self {
+        WeightedFairShare { aging_cs: 2.0 }
+    }
+}
 
 impl ArbitrationPolicy for WeightedFairShare {
     fn name(&self) -> &'static str {
@@ -120,13 +155,13 @@ impl ArbitrationPolicy for WeightedFairShare {
         for c in view.candidates {
             let w = view.weights.get(c.job).copied().unwrap_or(1.0).max(1e-9);
             let used = view.usage_cs.get(c.job).copied().unwrap_or(0.0);
-            let ratio = used / w;
+            let score = used / w - self.aging_cs * c.waited_secs;
             let replace = match best {
                 None => true,
-                Some((r, _)) => ratio < r,
+                Some((r, _)) => score < r,
             };
             if replace {
-                best = Some((ratio, c.task));
+                best = Some((score, c.task));
             }
         }
         best.map(|(_, t)| t)
@@ -137,8 +172,12 @@ impl ArbitrationPolicy for WeightedFairShare {
 pub fn by_name(name: &str) -> Option<Box<dyn ArbitrationPolicy>> {
     match name {
         "deadline" | "deadline-priority" => Some(Box::new(DeadlinePriority)),
-        "least-slack" | "lsf" | "least-slack-first" => Some(Box::new(LeastSlackFirst)),
-        "wfs" | "weighted-fair-share" | "fair" => Some(Box::new(WeightedFairShare)),
+        "least-slack" | "lsf" | "least-slack-first" => {
+            Some(Box::new(LeastSlackFirst::default()))
+        }
+        "wfs" | "weighted-fair-share" | "fair" => {
+            Some(Box::new(WeightedFairShare::default()))
+        }
         _ => None,
     }
 }
@@ -159,6 +198,7 @@ mod tests {
             job,
             priority: secs(deadline_secs) as Priority,
             queued_secs,
+            waited_secs: 0.0,
         }
     }
 
@@ -202,7 +242,59 @@ mod tests {
             usage_cs: &[0.0, 0.0],
             weights: &[1.0, 1.0],
         };
-        assert_eq!(LeastSlackFirst.pick(&view), Some(1));
+        assert_eq!(LeastSlackFirst::default().pick(&view), Some(1));
+    }
+
+    #[test]
+    fn least_slack_aging_eventually_promotes_a_waiting_task() {
+        // task 0 has a far deadline (would lose pure LSF forever against
+        // an endless stream of tighter tasks); with aging its effective
+        // slack drops below the fresh competitor's after a bounded wait
+        let mut policy = LeastSlackFirst::default();
+        let mut promoted_at = None;
+        for waited in 0..4000u64 {
+            let mut old = cand(0, 0, 1000.0, 1.0);
+            old.waited_secs = waited as f64;
+            let fresh = cand(1, 1, 50.0, 1.0);
+            let cands = [fresh, old];
+            let view = ArbitrationView {
+                now: 0,
+                candidates: &cands,
+                usage_cs: &[0.0, 0.0],
+                weights: &[1.0, 1.0],
+            };
+            if policy.pick(&view) == Some(0) {
+                promoted_at = Some(waited);
+                break;
+            }
+        }
+        // slack gap is (1000−1) − (50−1) = 950s; at aging 0.5 s/s the
+        // strict-< tie-break promotes at 950/0.5 + 1 = 1901s waited
+        let w = promoted_at.expect("aging must eventually promote the waiting task");
+        assert_eq!(w, 1901, "deterministic promotion bound");
+    }
+
+    #[test]
+    fn least_slack_aging_bound_is_finite_and_ordered() {
+        // with aging disabled the old task NEVER wins — the starvation
+        // this satellite exists to fix
+        let mut pure = LeastSlackFirst { aging: 0.0 };
+        let mut old = cand(0, 0, 1000.0, 1.0);
+        old.waited_secs = 1e9;
+        let fresh = cand(1, 1, 50.0, 1.0);
+        let cands = [fresh, old];
+        let view = ArbitrationView {
+            now: 0,
+            candidates: &cands,
+            usage_cs: &[0.0, 0.0],
+            weights: &[1.0, 1.0],
+        };
+        assert_eq!(pure.pick(&view), Some(1), "pure LSF starves the far deadline");
+        assert_eq!(
+            LeastSlackFirst::default().pick(&view),
+            Some(0),
+            "aged LSF does not"
+        );
     }
 
     #[test]
@@ -217,7 +309,7 @@ mod tests {
             usage_cs: &[100.0, 30.0],
             weights: &[1.0, 2.0],
         };
-        assert_eq!(WeightedFairShare.pick(&view), Some(1));
+        assert_eq!(WeightedFairShare::default().pick(&view), Some(1));
         // equal ratios tie-break to the first (earliest-deadline) candidate
         let even = ArbitrationView {
             now: 0,
@@ -225,6 +317,39 @@ mod tests {
             usage_cs: &[10.0, 10.0],
             weights: &[1.0, 1.0],
         };
-        assert_eq!(WeightedFairShare.pick(&even), Some(0));
+        assert_eq!(WeightedFairShare::default().pick(&even), Some(0));
+    }
+
+    #[test]
+    fn wfs_aging_pins_no_starvation() {
+        // a best-effort tenant with huge historical usage would starve
+        // forever under pure fair share while premium tenants keep
+        // submitting fresh zero-usage work; the aging discount must
+        // promote its waiting task after a bounded wait
+        let mut pure = WeightedFairShare { aging_cs: 0.0 };
+        let mut aged = WeightedFairShare::default();
+        let run = |policy: &mut WeightedFairShare| -> Option<u64> {
+            for waited in 0..10_000u64 {
+                let mut starving = cand(0, 0, 10.0, 1.0);
+                starving.waited_secs = waited as f64;
+                let fresh = cand(1, 1, 5.0, 1.0); // always waited 0
+                let cands = [starving, fresh];
+                let view = ArbitrationView {
+                    now: 0,
+                    candidates: &cands,
+                    usage_cs: &[5000.0, 0.0],
+                    weights: &[1.0, 4.0],
+                };
+                if policy.pick(&view) == Some(0) {
+                    return Some(waited);
+                }
+            }
+            None
+        };
+        assert_eq!(run(&mut pure), None, "pure WFS starves the heavy tenant");
+        let w = run(&mut aged).expect("aged WFS must promote the waiting task");
+        // crossover: 5000/1 − 2·w ≤ 0 ⇒ w ≥ 2500 (the starving task is
+        // first in the candidate list, so a tie resolves in its favor)
+        assert_eq!(w, 2500, "deterministic crossover at usage/weight/aging_cs");
     }
 }

@@ -71,6 +71,16 @@ impl SloClass {
             SloClass::BestEffort => 1.0,
         }
     }
+
+    /// Parse a class name (the on-disk trace format, `workload::JobTrace`).
+    pub fn parse(s: &str) -> Option<SloClass> {
+        match s {
+            "premium" => Some(SloClass::Premium),
+            "standard" => Some(SloClass::Standard),
+            "best-effort" | "besteffort" => Some(SloClass::BestEffort),
+            _ => None,
+        }
+    }
 }
 
 /// One broker run's configuration.
@@ -387,5 +397,13 @@ mod tests {
         assert!(SloClass::Standard.weight() > SloClass::BestEffort.weight());
         assert!(SloClass::Premium.rank() < SloClass::BestEffort.rank());
         assert_eq!(SloClass::Premium.name(), "premium");
+    }
+
+    #[test]
+    fn slo_parse_roundtrips_names() {
+        for c in [SloClass::Premium, SloClass::Standard, SloClass::BestEffort] {
+            assert_eq!(SloClass::parse(c.name()), Some(c));
+        }
+        assert!(SloClass::parse("gold").is_none());
     }
 }

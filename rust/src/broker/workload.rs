@@ -6,10 +6,18 @@
 //!
 //! Traces are deterministic functions of the seed, so the same trace can
 //! be replayed under every arbitration policy (that is what makes the
-//! per-policy comparison in `bench::broker` meaningful).
+//! per-policy comparison in `bench::broker` meaningful). They also
+//! round-trip through JSON ([`JobTrace::save`]/[`JobTrace::load`]), so
+//! recorded production workloads can be replayed offline — the format is
+//! pinned by a golden file (`rust/tests/data/job_trace.golden.json`).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::job::FlJobSpec;
 use crate::party::FleetKind;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::workloads::Workload;
 
@@ -31,6 +39,30 @@ pub struct JobTrace {
     pub arrivals: Vec<JobArrival>,
 }
 
+impl JobArrival {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("at_secs", Json::num(self.at_secs)),
+            ("spec", self.spec.to_json()),
+            ("strategy", Json::str(&self.strategy)),
+            ("class", Json::str(self.class.name())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<JobArrival> {
+        // strategy is validated at load so a bad trace fails with a file
+        // diagnostic instead of panicking mid-replay in JobEngine::new
+        let strategy = v.get("strategy").as_str()?.to_string();
+        crate::coordinator::strategies::by_name(&strategy)?;
+        Some(JobArrival {
+            at_secs: v.get("at_secs").as_f64()?,
+            spec: FlJobSpec::from_json(v.get("spec"))?,
+            strategy,
+            class: SloClass::parse(v.get("class").as_str().unwrap_or("standard"))?,
+        })
+    }
+}
+
 impl JobTrace {
     /// Trace-driven construction from explicit arrivals (sorted on entry).
     pub fn from_arrivals(mut arrivals: Vec<JobArrival>) -> JobTrace {
@@ -49,6 +81,47 @@ impl JobTrace {
     /// Largest fleet in the trace.
     pub fn max_parties(&self) -> usize {
         self.arrivals.iter().map(|a| a.spec.n_parties).max().unwrap_or(0)
+    }
+
+    // ------------------------------------------------------------------
+    // on-disk format (ROADMAP carried item: replay recorded workloads)
+    // ------------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::num(1.0)),
+            (
+                "arrivals",
+                Json::Arr(self.arrivals.iter().map(|a| a.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// Parse a trace; arrivals are re-sorted by submission time, so
+    /// hand-edited files need not be ordered.
+    pub fn from_json(v: &Json) -> Option<JobTrace> {
+        let arrivals = v
+            .get("arrivals")
+            .as_arr()?
+            .iter()
+            .map(JobArrival::from_json)
+            .collect::<Option<Vec<_>>>()?;
+        Some(JobTrace::from_arrivals(arrivals))
+    }
+
+    /// Write the trace as pretty JSON.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().pretty())
+            .with_context(|| format!("writing trace to {path:?}"))
+    }
+
+    /// Load a trace written by [`save`](JobTrace::save) (or by hand).
+    pub fn load(path: &Path) -> Result<JobTrace> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace from {path:?}"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("trace {path:?}: {e}"))?;
+        JobTrace::from_json(&v)
+            .ok_or_else(|| anyhow!("trace {path:?}: malformed arrivals"))
     }
 }
 
@@ -200,6 +273,73 @@ mod tests {
         let fleets: std::collections::BTreeSet<&str> =
             t.arrivals.iter().map(|a| a.spec.fleet_kind.name()).collect();
         assert_eq!(fleets.len(), 3, "all three fleet kinds drawn");
+    }
+
+    #[test]
+    fn trace_json_roundtrip_preserves_every_field() {
+        let cfg = TraceConfig {
+            n_jobs: 12,
+            seed: 21,
+            ..Default::default()
+        };
+        let a = poisson_trace(&cfg);
+        let b = JobTrace::from_json(&a.to_json()).expect("roundtrip parse");
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.arrivals.iter().zip(&b.arrivals) {
+            assert_eq!(x.at_secs.to_bits(), y.at_secs.to_bits(), "exact times");
+            assert_eq!(x.spec.name, y.spec.name);
+            assert_eq!(x.spec.workload.name, y.spec.workload.name);
+            assert_eq!(x.spec.fleet_kind, y.spec.fleet_kind);
+            assert_eq!(x.spec.n_parties, y.spec.n_parties);
+            assert_eq!(x.spec.rounds, y.spec.rounds);
+            assert_eq!(x.spec.quorum, y.spec.quorum);
+            assert_eq!(x.spec.t_wait_secs, y.spec.t_wait_secs);
+            assert_eq!(x.strategy, y.strategy);
+            assert_eq!(x.class, y.class);
+        }
+    }
+
+    #[test]
+    fn trace_save_load_roundtrip_on_disk() {
+        let cfg = TraceConfig {
+            n_jobs: 5,
+            seed: 33,
+            ..Default::default()
+        };
+        let a = poisson_trace(&cfg);
+        let dir = std::env::temp_dir().join("fljit_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        a.save(&path).expect("save");
+        let b = JobTrace::load(&path).expect("load");
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.arrivals.iter().zip(&b.arrivals) {
+            assert_eq!(x.at_secs.to_bits(), y.at_secs.to_bits());
+            assert_eq!(x.spec.name, y.spec.name);
+        }
+        assert!(JobTrace::load(&dir.join("missing.json")).is_err());
+    }
+
+    #[test]
+    fn malformed_trace_json_is_rejected() {
+        let v = Json::parse(r#"{"arrivals":[{"at_secs":1.0,"spec":{"workload":"nope"}}]}"#)
+            .unwrap();
+        assert!(JobTrace::from_json(&v).is_none(), "unknown workload");
+        let v = Json::parse(r#"{"no_arrivals":true}"#).unwrap();
+        assert!(JobTrace::from_json(&v).is_none());
+        // unknown or missing strategy must fail at load, not at replay
+        let v = Json::parse(
+            r#"{"arrivals":[{"at_secs":1.0,"strategy":"jot",
+                "spec":{"workload":"cifar100"},"class":"standard"}]}"#,
+        )
+        .unwrap();
+        assert!(JobTrace::from_json(&v).is_none(), "unknown strategy");
+        let v = Json::parse(
+            r#"{"arrivals":[{"at_secs":1.0,
+                "spec":{"workload":"cifar100"},"class":"standard"}]}"#,
+        )
+        .unwrap();
+        assert!(JobTrace::from_json(&v).is_none(), "missing strategy");
     }
 
     #[test]

@@ -78,6 +78,10 @@ struct Task {
     queued_time: Time,
     /// Token guarding scheduled phase-end events (stale events are ignored).
     token: u64,
+    /// When the task last became *startable* (Pending with work, or
+    /// preempted back to Pending) — the arbitration aging input. Cleared
+    /// on deploy.
+    pending_since: Option<Time>,
     finish_requested: bool,
     /// Set while checkpointing because of preemption (→ Pending after).
     preempting: bool,
@@ -311,6 +315,7 @@ impl Cluster {
             work: VecDeque::new(),
             queued_time: 0,
             token: u64::MAX,
+            pending_since: None,
             finish_requested: false,
             preempting: false,
             deployments: 0,
@@ -327,6 +332,14 @@ impl Cluster {
     pub fn push_work(&mut self, q: &mut EventQueue, task: TaskId, items: &[Time]) {
         self.tasks[task].work.extend(items.iter().copied());
         self.tasks[task].queued_time += items.iter().sum::<Time>();
+        // Work arriving at a Pending task makes it startable: the aging
+        // clock for arbitration starts now (first work only).
+        if self.tasks[task].phase == Phase::Pending
+            && !items.is_empty()
+            && self.tasks[task].pending_since.is_none()
+        {
+            self.tasks[task].pending_since = Some(q.now());
+        }
         // An idle (kept-alive) container picks work up immediately.
         if self.tasks[task].phase == Phase::Idle && !items.is_empty() {
             self.begin_next_work(q, task);
@@ -386,7 +399,7 @@ impl Cluster {
         // exactly the picked task from the pending set and charges zero
         // container-seconds at `now`, so the snapshot and usage vector
         // are computed once instead of once per filled slot.
-        let mut candidates = self.startable_candidates();
+        let mut candidates = self.startable_candidates(now);
         let usage_cs: Vec<f64> = self.usage.iter().map(|u| u.cs(now)).collect();
         loop {
             if candidates.is_empty() {
@@ -425,7 +438,7 @@ impl Cluster {
     /// Snapshot of startable pending tasks in ascending (priority, id)
     /// order — the arbitration policies' candidate list. O(pending) via
     /// the incremental `queued_time` counters (no deque re-summing).
-    fn startable_candidates(&self) -> Vec<Candidate> {
+    fn startable_candidates(&self, now: Time) -> Vec<Candidate> {
         self.pending_idx
             .iter()
             .map(|&(priority, task)| {
@@ -435,6 +448,9 @@ impl Cluster {
                     job: t.spec.job,
                     priority,
                     queued_secs: crate::sim::to_secs(t.queued_time),
+                    waited_secs: crate::sim::to_secs(
+                        now.saturating_sub(t.pending_since.unwrap_or(now)),
+                    ),
                 }
             })
             .collect()
@@ -492,6 +508,7 @@ impl Cluster {
         t.phase = Phase::Starting;
         t.deployments += 1;
         t.preempting = false;
+        t.pending_since = None;
         let job = t.spec.job;
         let dep = Deployment {
             job,
@@ -579,6 +596,8 @@ impl Cluster {
                 if self.tasks[task].preempting {
                     self.tasks[task].phase = Phase::Pending;
                     self.tasks[task].preempting = false;
+                    // aging restarts from the preemption instant
+                    self.tasks[task].pending_since = Some(now);
                     Some(Notification::TaskPreempted { task })
                 } else {
                     self.tasks[task].phase = Phase::Done;
@@ -857,6 +876,58 @@ mod tests {
     }
 
     #[test]
+    fn candidates_carry_waited_secs_for_aging() {
+        // a probe policy records the waited_secs the cluster reports —
+        // pins the pending_since plumbing behind arbitration aging
+        #[derive(Debug)]
+        struct Probe {
+            seen: std::sync::Arc<std::sync::Mutex<Vec<f64>>>,
+        }
+        impl crate::broker::arbitration::ArbitrationPolicy for Probe {
+            fn name(&self) -> &'static str {
+                "probe"
+            }
+            fn pick(
+                &mut self,
+                view: &crate::broker::arbitration::ArbitrationView,
+            ) -> Option<usize> {
+                let mut seen = self.seen.lock().unwrap();
+                for c in view.candidates {
+                    seen.push(c.waited_secs);
+                }
+                view.candidates.first().map(|c| c.task)
+            }
+        }
+        let seen = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        let mut q = EventQueue::new();
+        let mut c = Cluster::new(ClusterConfig {
+            capacity: 2,
+            ..Default::default()
+        });
+        c.set_policy(Box::new(Probe {
+            seen: std::sync::Arc::clone(&seen),
+        }));
+        let busy = c.submit(spec(0, 1));
+        c.push_work(&mut q, busy, &[secs(30.0)]);
+        c.on_tick(&mut q); // deploys `busy`; `waiter` not submitted yet
+        let waiter = c.submit(spec(1, 2));
+        c.push_work(&mut q, waiter, &[secs(1.0)]); // pending_since = now (0)
+        // advance virtual time via a far event, then tick again
+        q.schedule_at(secs(4.0), EventKind::Custom { tag: 0 });
+        while let Some((t, _)) = q.next() {
+            if t >= secs(4.0) {
+                break;
+            }
+        }
+        c.on_tick(&mut q);
+        let seen = seen.lock().unwrap();
+        assert!(
+            seen.iter().any(|&w| w >= 4.0),
+            "waiter must report ≥4s waited, saw {seen:?}"
+        );
+    }
+
+    #[test]
     fn incremental_usage_charges_open_deployments() {
         let mut q = EventQueue::new();
         let mut c = Cluster::new(ClusterConfig::default());
@@ -917,7 +988,7 @@ mod tests {
             capacity: 1,
             ..Default::default()
         });
-        c.set_policy(Box::new(WeightedFairShare));
+        c.set_policy(Box::new(WeightedFairShare::default()));
         let mut tasks = Vec::new();
         for i in 0..4usize {
             // job 0 gets priorities 0..1, job 1 gets 100.. — deadline

@@ -44,6 +44,13 @@ impl FlJobSpec {
         }
     }
 
+    /// Set the round quorum, clamped to the fleet size (builder-style;
+    /// used by the live runner's spec construction).
+    pub fn with_quorum(mut self, quorum: usize) -> FlJobSpec {
+        self.quorum = quorum.min(self.n_parties);
+        self
+    }
+
     pub fn algorithm(&self) -> Algorithm {
         self.workload.algorithm
     }
@@ -203,6 +210,14 @@ mod tests {
         let shards = p.shard_sizes();
         assert_eq!(shards.iter().sum::<usize>(), 3);
         assert_eq!(shards.len(), 3);
+    }
+
+    #[test]
+    fn with_quorum_clamps_to_fleet() {
+        let s = spec().with_quorum(17);
+        assert_eq!(s.quorum, 17);
+        let s = spec().with_quorum(5000);
+        assert_eq!(s.quorum, 100, "clamped to n_parties");
     }
 
     #[test]

@@ -1,7 +1,14 @@
 //! The coordinator: FL jobs, aggregation strategies, the JIT scheduler and
-//! the platform drivers (simulated + live). This is the paper's system
-//! contribution (§3, §5) — everything else in the crate is substrate.
+//! the platform drivers. This is the paper's system contribution (§3, §5)
+//! — everything else in the crate is substrate.
+//!
+//! One event-driven implementation, two time regimes ([`driver`]):
+//! [`platform`] pulls the per-job [`driver::JobEngine`]s with the virtual
+//! driver (simulation grids, multi-tenant broker), [`live`] pulls one
+//! engine with the wall-clock driver over real MQ traffic. The five
+//! [`strategies`] run unmodified under both.
 
+pub mod driver;
 pub mod job;
 pub mod live;
 pub mod platform;

@@ -7,42 +7,21 @@
 //! with observed timings (periodicity histories + the cross-party
 //! linearity regressors), and produces a [`JobReport`] per job.
 //!
-//! Identical strategy code runs here (virtual time) and in
-//! `coordinator::live` (wall time + real XLA fusion).
+//! Per-job round logic lives in [`JobEngine`] (`coordinator::driver`);
+//! this module adds the multi-job concerns — admission control, event
+//! routing by job id, broker arbitration — and pulls events through a
+//! [`Driver`]. The default is the [`VirtualDriver`] (virtual time); the
+//! *identical* engine + strategy code runs under `coordinator::live`'s
+//! wall-clock driver with real MQ traffic.
 
 use crate::broker::admission::AdmissionController;
 use crate::cluster::{Cluster, ClusterConfig};
-use crate::coordinator::job::{FlJobSpec, JobParams};
-use crate::coordinator::strategies::{self, Ctx, Strategy};
-use crate::estimator::{
-    estimate_round, LinearityModel, PeriodicityTracker, RoundEstimate,
-};
-use crate::metrics::{JobReport, RoundRecord};
-use crate::mq::{self, MessageQueue, Message, Payload};
-use crate::party::Fleet;
+use crate::coordinator::driver::{ArrivalMode, Driver, JobEngine, VirtualDriver};
+use crate::coordinator::job::FlJobSpec;
+use crate::coordinator::strategies::Strategy;
+use crate::metrics::JobReport;
+use crate::mq::{self, MessageQueue};
 use crate::sim::{secs, to_secs, EventKind, EventQueue, Time};
-use crate::util::rng::Rng;
-
-/// One admitted job's runtime state.
-struct JobState {
-    spec: FlJobSpec,
-    params: JobParams,
-    fleet: Fleet,
-    strategy: Box<dyn Strategy>,
-    rng: Rng,
-    round: u32,
-    round_start: Time,
-    arrived: usize,
-    /// Periodicity histories per party (fed with observed timings).
-    histories: Vec<PeriodicityTracker>,
-    linearity: LinearityModel,
-    records: Vec<RoundRecord>,
-    done: bool,
-    finished_at: Time,
-    /// Broker path: round 0 is gated on a JobArrival event + admission
-    /// control instead of starting at t = 0.
-    deferred: bool,
-}
 
 /// Platform configuration.
 #[derive(Clone, Debug)]
@@ -77,7 +56,7 @@ pub struct Platform {
     q: EventQueue,
     cluster: Cluster,
     mq: MessageQueue,
-    jobs: Vec<JobState>,
+    jobs: Vec<JobEngine>,
     tick_scheduled: bool,
     /// Broker admission control; `None` = every job starts unconditionally.
     admission: Option<AdmissionController>,
@@ -110,40 +89,15 @@ impl Platform {
     /// Admit a job with the given strategy. Returns the job id.
     pub fn admit(&mut self, spec: FlJobSpec, strategy_name: &str) -> usize {
         let job = self.jobs.len();
-        let mut params = JobParams::derive(job, &spec);
-        params.opportunistic = self.cfg.opportunistic;
+        let mut engine = JobEngine::new(job, spec, strategy_name, self.cfg.seed);
+        engine.params.opportunistic = self.cfg.opportunistic;
         if let Some(m) = self.cfg.jit_margin {
-            params.jit_margin = m;
+            engine.params.jit_margin = m;
         }
         if let Some(b) = self.cfg.batch_override {
-            params.batch = b.max(1);
+            engine.params.batch = b.max(1);
         }
-        let mut rng = Rng::new(self.cfg.seed ^ (job as u64).wrapping_mul(0x9E3779B9));
-        let fleet = Fleet::generate(
-            spec.fleet_kind,
-            spec.n_parties,
-            spec.workload.fleet_params(),
-            &mut rng,
-        );
-        let strategy = strategies::by_name(strategy_name)
-            .unwrap_or_else(|| panic!("unknown strategy '{strategy_name}'"));
-        let histories = vec![PeriodicityTracker::new(8); spec.n_parties];
-        self.jobs.push(JobState {
-            spec,
-            params,
-            fleet,
-            strategy,
-            rng,
-            round: 0,
-            round_start: 0,
-            arrived: 0,
-            histories,
-            linearity: LinearityModel::default(),
-            records: Vec::new(),
-            done: false,
-            finished_at: 0,
-            deferred: false,
-        });
+        self.jobs.push(engine);
         job
     }
 
@@ -185,49 +139,13 @@ impl Platform {
         }
     }
 
-    fn estimate_for(&mut self, job: usize) -> RoundEstimate {
-        let j = &mut self.jobs[job];
-        let infos = j.fleet.infos(j.spec.report_prob, &mut j.rng);
-        let cost = j.spec.workload.cost_model(j.spec.n_parties);
-        estimate_round(
-            &infos,
-            j.spec.agg_frequency,
-            j.spec.t_wait_secs,
-            &cost,
-            Some(&j.histories),
-            &j.linearity,
-        )
-    }
-
     fn start_round(&mut self, job: usize) {
-        let now = self.q.now();
-        let est = self.estimate_for(job);
-        let j = &mut self.jobs[job];
-        let round = j.round;
-        j.round_start = now;
-        j.arrived = 0;
-        // draw and schedule the actual arrivals
-        let model_bytes = j.spec.workload.model.size_bytes();
-        let offsets = j
-            .fleet
-            .arrival_offsets(model_bytes, j.spec.t_wait_secs, &mut j.rng);
-        for (party, &off) in offsets.iter().enumerate() {
-            self.q.schedule_at(
-                now + off,
-                EventKind::UpdateArrival { job, round, party },
-            );
-        }
-        let params = j.params.clone();
-        let mut ctx = Ctx {
-            q: &mut self.q,
-            cluster: &mut self.cluster,
-            mq: &self.mq,
-            params: &params,
-        };
-        if round == 0 {
-            self.jobs[job].strategy.on_job_start(&mut ctx);
-        }
-        self.jobs[job].strategy.on_round_start(&mut ctx, round, &est);
+        self.jobs[job].start_round(
+            &mut self.q,
+            &mut self.cluster,
+            &self.mq,
+            ArrivalMode::Schedule,
+        );
         self.ensure_tick();
     }
 
@@ -239,69 +157,16 @@ impl Platform {
         }
     }
 
-    fn handle_update(&mut self, job: usize, round: u32, party: usize) {
-        let now = self.q.now();
-        let j = &mut self.jobs[job];
-        if j.done || round != j.round {
-            return; // stale arrival from a quorum-completed round
-        }
-        j.arrived += 1;
-        let arrived = j.arrived;
-        // feed the estimator with the *observed* timing (active parties):
-        // train_time ≈ arrival_offset − estimated transfer time (§5.3)
-        let p = &j.fleet.parties[party];
-        if p.mode == crate::estimator::Mode::Active {
-            let off = to_secs(now - j.round_start);
-            let observed_train = (off - p.comm_secs(j.spec.workload.model.size_bytes())).max(0.0);
-            j.histories[party].observe(observed_train);
-            j.linearity.observe_epoch(p.dataset_items, observed_train);
-            let mb = observed_train / (p.dataset_items / 32.0).max(1.0);
-            j.linearity.observe_minibatch(p.hardware.score(), mb);
-        }
-        // buffer in the MQ (sim payload: size only)
-        self.mq.produce(
-            &mq::update_topic(job, round),
-            Message {
-                party,
-                round,
-                weight: p.dataset_items as f32,
-                enqueued_at: now,
-                payload: Payload::Sim {
-                    size_bytes: j.spec.workload.model.size_bytes(),
-                },
-            },
-        );
-        let params = j.params.clone();
-        let mut ctx = Ctx {
-            q: &mut self.q,
-            cluster: &mut self.cluster,
-            mq: &self.mq,
-            params: &params,
-        };
-        self.jobs[job].strategy.on_update(&mut ctx, round, party, arrived);
-    }
-
     fn poll_round_completion(&mut self, job: usize) {
-        let Some(rec) = self.jobs[job].strategy.take_completed() else {
+        let Some(rec) = self.jobs[job].take_completed() else {
             return;
         };
         let now = self.q.now();
-        let j = &mut self.jobs[job];
-        let round = rec.round;
-        j.records.push(rec);
         // GC the round's MQ topic
-        self.mq.drop_topic(&mq::update_topic(job, round));
-        if round + 1 >= j.spec.rounds {
-            j.done = true;
-            j.finished_at = now;
-            let params = j.params.clone();
-            let mut ctx = Ctx {
-                q: &mut self.q,
-                cluster: &mut self.cluster,
-                mq: &self.mq,
-                params: &params,
-            };
-            self.jobs[job].strategy.on_job_end(&mut ctx);
+        self.mq.drop_topic(&mq::update_topic(job, rec.round));
+        let finished =
+            self.jobs[job].finish_round(&mut self.q, &mut self.cluster, &self.mq, rec);
+        if finished {
             // a finished job frees committed admission demand: queued
             // jobs may start now (broker backpressure path)
             if let Some(ctrl) = self.admission.as_mut() {
@@ -310,19 +175,7 @@ impl Platform {
                     self.release_job(j);
                 }
             }
-            return;
         }
-        j.round = round + 1;
-        // pacing: active jobs start the next round as soon as the fused
-        // model is out; intermittent jobs run fixed t_wait windows (§4.3)
-        let next_at = match j.spec.fleet_kind {
-            crate::party::FleetKind::IntermittentHeterogeneous => {
-                (j.round_start + j.params.t_wait).max(now)
-            }
-            _ => now,
-        };
-        self.q
-            .schedule_at(next_at, EventKind::RoundStart { job, round: round + 1 });
     }
 
     fn all_done(&self) -> bool {
@@ -337,7 +190,14 @@ impl Platform {
     /// Like [`run`](Platform::run), but also returns end-of-run aggregates
     /// (span, total container-seconds, the admission controller) for the
     /// broker's utilization and queue-wait reporting.
-    pub fn run_with_stats(mut self) -> (Vec<JobReport>, RunStats) {
+    pub fn run_with_stats(self) -> (Vec<JobReport>, RunStats) {
+        self.run_with_driver(&mut VirtualDriver)
+    }
+
+    /// Run the platform pulling events through an explicit [`Driver`] —
+    /// the virtual driver for simulation (the default), or any other
+    /// pacing regime a caller wants to impose on the same control loop.
+    pub fn run_with_driver<D: Driver>(mut self, driver: &mut D) -> (Vec<JobReport>, RunStats) {
         // kick off round 0 of every non-deferred job; deferred jobs wait
         // for their JobArrival event + admission
         for job in 0..self.jobs.len() {
@@ -346,7 +206,7 @@ impl Platform {
             }
         }
         let mut safety: u64 = 0;
-        while let Some((_, ev)) = self.q.next() {
+        while let Some((_, ev)) = driver.next_event(&mut self.q, &self.mq) {
             safety += 1;
             debug_assert!(safety < 500_000_000, "runaway simulation");
             match ev {
@@ -356,21 +216,19 @@ impl Platform {
                     }
                 }
                 EventKind::UpdateArrival { job, round, party } => {
-                    self.handle_update(job, round, party);
+                    self.jobs[job].handle_update(
+                        &mut self.q,
+                        &mut self.cluster,
+                        &self.mq,
+                        round,
+                        party,
+                        ArrivalMode::Schedule,
+                    );
                     self.poll_round_completion(job);
                 }
                 EventKind::TimerAlert { job, round } => {
-                    if !self.jobs[job].done {
-                        let params = self.jobs[job].params.clone();
-                        let mut ctx = Ctx {
-                            q: &mut self.q,
-                            cluster: &mut self.cluster,
-                            mq: &self.mq,
-                            params: &params,
-                        };
-                        self.jobs[job].strategy.on_timer(&mut ctx, round);
-                        self.poll_round_completion(job);
-                    }
+                    self.jobs[job].on_timer(&mut self.q, &mut self.cluster, &self.mq, round);
+                    self.poll_round_completion(job);
                 }
                 EventKind::ContainerDone { container } => {
                     if let Some(note) = self.cluster.advance(&mut self.q, container) {
@@ -382,14 +240,7 @@ impl Platform {
                             | crate::cluster::Notification::TaskPreempted { task } => *task,
                         };
                         let job = self.cluster.job_of(task);
-                        let params = self.jobs[job].params.clone();
-                        let mut ctx = Ctx {
-                            q: &mut self.q,
-                            cluster: &mut self.cluster,
-                            mq: &self.mq,
-                            params: &params,
-                        };
-                        self.jobs[job].strategy.on_note(&mut ctx, &note);
+                        self.jobs[job].on_note(&mut self.q, &mut self.cluster, &self.mq, &note);
                         self.poll_round_completion(job);
                     }
                 }
@@ -397,17 +248,8 @@ impl Platform {
                     // linger timer: tag = task id
                     let task = tag as usize;
                     let job = self.cluster.job_of(task);
-                    if !self.jobs[job].done {
-                        let params = self.jobs[job].params.clone();
-                        let mut ctx = Ctx {
-                            q: &mut self.q,
-                            cluster: &mut self.cluster,
-                            mq: &self.mq,
-                            params: &params,
-                        };
-                        self.jobs[job].strategy.on_linger(&mut ctx, task);
-                        self.poll_round_completion(job);
-                    }
+                    self.jobs[job].on_linger(&mut self.q, &mut self.cluster, &self.mq, task);
+                    self.poll_round_completion(job);
                 }
                 EventKind::SchedTick => {
                     self.cluster.on_tick(&mut self.q);
@@ -462,10 +304,17 @@ pub fn run_scenario(
         ..Default::default()
     };
     // capacity: always-on fleets + serverless shards for this job, plus slack
-    cfg.cluster.capacity = (spec.workload.n_agg(spec.n_parties) as usize * 4).max(64);
+    cfg.cluster.capacity = scenario_capacity(spec);
     let mut p = Platform::new(cfg);
     p.admit(spec.clone(), strategy);
     p.run().remove(0)
+}
+
+/// The cluster capacity `run_scenario` provisions for a single job — also
+/// used by the live runner so sim/live comparisons share one cluster
+/// configuration.
+pub fn scenario_capacity(spec: &FlJobSpec) -> usize {
+    (spec.workload.n_agg(spec.n_parties) as usize * 4).max(64)
 }
 
 /// δ for scheduling decisions (§5.5) — re-exported for tests.
@@ -566,5 +415,26 @@ mod tests {
         // the paper's thesis: JIT latency stays eager-like even under
         // heterogeneity because training time is predictable
         assert!(r.mean_latency_secs() < 5.0, "latency {}", r.mean_latency_secs());
+    }
+
+    #[test]
+    fn explicit_virtual_driver_matches_default_run() {
+        let s = spec(FleetKind::ActiveHomogeneous, 10, 3);
+        let a = run_scenario(&s, "jit", 4);
+        let mut cfg = PlatformConfig {
+            seed: 4,
+            ..Default::default()
+        };
+        cfg.cluster.capacity = scenario_capacity(&s);
+        let mut p = Platform::new(cfg);
+        p.admit(s, "jit");
+        let b = p.run_with_driver(&mut VirtualDriver).0.remove(0);
+        assert_eq!(a.rounds.len(), b.rounds.len());
+        assert_eq!(a.updates_fused, b.updates_fused);
+        assert_eq!(a.deployments, b.deployments);
+        for (x, y) in a.rounds.iter().zip(&b.rounds) {
+            assert_eq!(x.latency_secs, y.latency_secs);
+            assert_eq!(x.complete_secs, y.complete_secs);
+        }
     }
 }

@@ -12,7 +12,8 @@
 //! deployment loads the current partial aggregate, folds its batch, and
 //! checkpoints the partial back — so every batch pays cold start + state
 //! in/out, which is exactly the amortization-vs-cost trade the paper
-//! describes.
+//! describes. Runs unmodified under the live wall-clock driver
+//! (`fljit live --strategy batched`).
 
 use super::{Ctx, RoundTracker, Strategy};
 use crate::cluster::{Notification, TaskId, TaskSpec};

@@ -14,6 +14,11 @@
 //! the last update; the always-on server merges each update right after
 //! receiving it, so its per-round latency is just the final merge,
 //! `t_pair/C_agg` — minimal, which is the one thing AO is good at.
+//!
+//! Runs unmodified under the live wall-clock driver (`fljit live
+//! --strategy eager-ao`): the long-lived container idles through real
+//! round windows, which is exactly the busy-second baseline the live
+//! JIT savings are measured against.
 
 use super::{Ctx, RoundTracker, Strategy};
 use crate::cluster::{Notification, TaskId, TaskSpec};

@@ -6,7 +6,8 @@
 //! containers keep warm for a short linger, then checkpoint and exit —
 //! at high arrival rates updates bunch onto live containers, which is how
 //! the real Ray-based implementation amortizes deployments too. Up to
-//! `n_agg` containers run concurrently.
+//! `n_agg` containers run concurrently. Runs unmodified under the live
+//! wall-clock driver (`fljit live --strategy eager-serverless`).
 
 use super::{Ctx, RoundTracker, Strategy};
 use crate::cluster::{Notification, Phase, TaskId, TaskSpec};

@@ -22,6 +22,11 @@
 //!
 //! The aggregation latency this yields is the tail merge + checkpoint —
 //! eager-class latency at lazy-class cost.
+//!
+//! Time-regime agnostic: the deadline timer is an event scheduled at an
+//! absolute `Time`, so under the live wall-clock driver it fires at the
+//! real deadline and the identical policy runs in production mode
+//! (`fljit live --strategy jit`).
 
 use super::{Ctx, RoundTracker, Strategy};
 use crate::cluster::{Notification, Phase, TaskId, TaskSpec};

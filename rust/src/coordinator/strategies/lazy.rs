@@ -7,6 +7,8 @@
 //! quickly as the number of parties increases"; for some jobs aggregation
 //! can dominate training). Included for the Fig 2 timeline and the
 //! ablation bench; the paper's Fig 7-9 grids compare the other four.
+//! Runs unmodified under the live wall-clock driver (`fljit live
+//! --strategy lazy`).
 
 use super::{Ctx, RoundTracker, Strategy};
 use crate::cluster::{Notification, TaskSpec};

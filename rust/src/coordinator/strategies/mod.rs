@@ -8,6 +8,16 @@
 //! * [`lazy::Lazy`] — deploy once, after the last update.
 //! * [`jit::Jit`] — the paper's contribution: deadline timer at
 //!   `t_rnd − t_agg` + opportunistic priorities (§5.5, Fig 6).
+//!
+//! A strategy is a pure event-driven policy: it never reads a clock or
+//! sleeps, it only reacts to events and schedules future ones through
+//! [`Ctx`]. That makes every implementation *time-regime agnostic* — the
+//! same code runs under the simulator's virtual driver (Fig 7/8/9 grids)
+//! and under the live wall-clock driver with real MQ traffic
+//! (`coordinator::driver` has the Driver/Clock pair, `coordinator::live`
+//! the wall deployment). `Ctx.q` is both the event scheduler and the
+//! clock: `q.now()` is virtual µs in sim and wall µs live; an event
+//! scheduled at `t` fires when the driver's clock reaches `t`.
 
 pub mod batched;
 pub mod eager_ao;
@@ -24,8 +34,13 @@ use crate::sim::{to_secs, EventQueue, Time};
 
 /// Everything a strategy may touch while handling an event.
 pub struct Ctx<'a> {
+    /// The event queue *and clock* of the current time regime: virtual
+    /// under the simulator's driver, wall-paced under the live driver.
     pub q: &'a mut EventQueue,
+    /// The (emulated) serverless cluster the strategy deploys into.
     pub cluster: &'a mut Cluster,
+    /// The zero-copy MQ buffering this job's updates — live mode's real
+    /// transport, simulation's accounting substrate.
     pub mq: &'a MessageQueue,
     pub params: &'a JobParams,
 }
@@ -76,6 +91,12 @@ pub fn by_name(name: &str) -> Option<Box<dyn Strategy>> {
 /// The strategy names of the Fig 7/8/9 comparison, paper order.
 pub fn paper_strategies() -> &'static [&'static str] {
     &["jit", "batched", "eager-serverless", "eager-ao"]
+}
+
+/// Every strategy, paper order plus `lazy` — all five run both simulated
+/// and live (`fljit live --strategy <any of these>`).
+pub fn all_strategies() -> &'static [&'static str] {
+    &["jit", "batched", "eager-serverless", "eager-ao", "lazy"]
 }
 
 /// Shared per-round bookkeeping for the serverless strategies.
@@ -205,6 +226,14 @@ mod tests {
         assert!(by_name("lazy").is_some());
         assert!(by_name("nope").is_none());
         assert_eq!(by_name("jit").unwrap().name(), "jit");
+    }
+
+    #[test]
+    fn all_strategies_resolve_and_are_exactly_five() {
+        assert_eq!(all_strategies().len(), 5);
+        for n in all_strategies() {
+            assert_eq!(by_name(n).unwrap().name(), *n, "{n}");
+        }
     }
 
     #[test]

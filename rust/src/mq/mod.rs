@@ -16,7 +16,8 @@
 //! semantics are identical in both.
 
 use std::collections::BTreeMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::sim::Time;
 
@@ -84,6 +85,10 @@ pub struct MessageQueue {
     topics: Mutex<BTreeMap<String, Topic>>,
     /// Checkpoint slots: job/round keyed partial aggregates (latest wins).
     checkpoints: Mutex<BTreeMap<String, CheckpointState>>,
+    /// Global produce counter + condvar: wall-clock consumers (the live
+    /// driver) sleep here instead of polling, and every `produce` wakes
+    /// them. Purely additive — virtual-time consumers never touch it.
+    produce_sig: (Mutex<u64>, Condvar),
 }
 
 /// A partially aggregated state parked by a preempted aggregator (§5.5).
@@ -105,14 +110,49 @@ impl MessageQueue {
         Self::default()
     }
 
-    /// Append a message; returns its offset.
+    /// Append a message; returns its offset. Wakes any wall-clock
+    /// consumer blocked in [`wait_produce`](MessageQueue::wait_produce).
     pub fn produce(&self, topic: &str, msg: Message) -> usize {
-        let mut topics = self.topics.lock().unwrap();
-        let t = topics.entry(topic.to_string()).or_default();
-        let off = t.log.len();
-        t.by_round.entry(msg.round).or_default().push(off);
-        t.log.push(Arc::new(msg));
+        let off = {
+            let mut topics = self.topics.lock().unwrap();
+            let t = topics.entry(topic.to_string()).or_default();
+            let off = t.log.len();
+            t.by_round.entry(msg.round).or_default().push(off);
+            t.log.push(Arc::new(msg));
+            off
+        };
+        let (lock, cvar) = &self.produce_sig;
+        *lock.lock().unwrap() += 1;
+        cvar.notify_all();
         off
+    }
+
+    /// Total messages produced across all topics since creation — the
+    /// wake counter for [`wait_produce`](MessageQueue::wait_produce).
+    pub fn produced(&self) -> u64 {
+        *self.produce_sig.0.lock().unwrap()
+    }
+
+    /// Block until the produce counter exceeds `seen` or `timeout`
+    /// elapses; returns the current counter. The live wall-clock driver
+    /// parks here between event deadlines so a party's publish wakes it
+    /// immediately.
+    pub fn wait_produce(&self, seen: u64, timeout: Duration) -> u64 {
+        let (lock, cvar) = &self.produce_sig;
+        let deadline = Instant::now() + timeout;
+        let mut n = lock.lock().unwrap();
+        while *n <= seen {
+            let rem = deadline.saturating_duration_since(Instant::now());
+            if rem.is_zero() {
+                break;
+            }
+            let (guard, res) = cvar.wait_timeout(n, rem).unwrap();
+            n = guard;
+            if res.timed_out() {
+                break;
+            }
+        }
+        *n
     }
 
     /// Messages in [from, from+max) — non-consuming, zero-copy read: the
@@ -242,6 +282,20 @@ pub fn checkpoint_slot(job: usize, round: u32) -> String {
     format!("job{job}/round{round}/ckpt")
 }
 
+/// Conventional topic for a job's published (fused) global models — one
+/// message per completed round, so offset == completed-round count. The
+/// live runner treats this log as the job's durable model state: a
+/// restarted aggregator derives "which round am I in" and "what is the
+/// current global" from it (§5.5 checkpoint/resume).
+pub fn model_topic(job: usize) -> String {
+    format!("job{job}/models")
+}
+
+/// Conventional topic for live party-side metrics (training losses).
+pub fn metrics_topic(job: usize) -> String {
+    format!("job{job}/metrics")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -339,6 +393,39 @@ mod tests {
     fn topic_naming() {
         assert_eq!(update_topic(2, 5), "job2/round5/updates");
         assert_eq!(checkpoint_slot(2, 5), "job2/round5/ckpt");
+        assert_eq!(model_topic(2), "job2/models");
+        assert_eq!(metrics_topic(2), "job2/metrics");
+    }
+
+    #[test]
+    fn produce_counter_counts_across_topics() {
+        let q = MessageQueue::new();
+        assert_eq!(q.produced(), 0);
+        q.produce("a", msg(0, 0));
+        q.produce("b", msg(1, 0));
+        assert_eq!(q.produced(), 2);
+        // already-satisfied wait returns immediately
+        let n = q.wait_produce(1, Duration::from_secs(5));
+        assert_eq!(n, 2);
+        // unsatisfied wait times out (short) and returns the counter
+        let n = q.wait_produce(2, Duration::from_millis(10));
+        assert_eq!(n, 2);
+    }
+
+    #[test]
+    fn wait_produce_woken_by_concurrent_producer() {
+        let q = Arc::new(MessageQueue::new());
+        let seen = q.produced();
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            q2.produce("t", msg(0, 0));
+        });
+        let t0 = Instant::now();
+        let n = q.wait_produce(seen, Duration::from_secs(5));
+        h.join().unwrap();
+        assert!(n > seen);
+        assert!(t0.elapsed() < Duration::from_secs(2), "wake, not timeout");
     }
 
     #[test]

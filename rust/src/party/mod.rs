@@ -47,11 +47,14 @@ pub enum FleetKind {
 }
 
 impl FleetKind {
+    /// Parse a fleet-kind name. Every [`name`](FleetKind::name) spelling
+    /// is accepted, so `parse(name())` round-trips — the on-disk
+    /// `JobTrace` format depends on this.
     pub fn parse(s: &str) -> Option<FleetKind> {
         match s {
             "active-homog" | "active-homogeneous" => Some(FleetKind::ActiveHomogeneous),
             "active-hetero" | "active-heterogeneous" => Some(FleetKind::ActiveHeterogeneous),
-            "intermittent" | "intermittent-heterogeneous" => {
+            "intermittent" | "intermittent-hetero" | "intermittent-heterogeneous" => {
                 Some(FleetKind::IntermittentHeterogeneous)
             }
             _ => None,
@@ -280,6 +283,18 @@ pub fn synth_party_dataset(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fleet_kind_name_parse_roundtrips() {
+        for k in [
+            FleetKind::ActiveHomogeneous,
+            FleetKind::ActiveHeterogeneous,
+            FleetKind::IntermittentHeterogeneous,
+        ] {
+            assert_eq!(FleetKind::parse(k.name()), Some(k), "{:?}", k.name());
+        }
+        assert!(FleetKind::parse("bogus").is_none());
+    }
 
     #[test]
     fn homogeneous_fleet_is_uniform() {

@@ -4,12 +4,13 @@
 //! parties) is written against virtual `Time` and an event queue, so the
 //! *same* scheduling code runs in two modes:
 //!
-//! * **simulated** — `EventQueue` + virtual clock: the Fig 7/8/9 grids
-//!   (up to 10 000 parties × 50 rounds × 4 strategies) execute in
-//!   milliseconds of wall time;
-//! * **live** — wall-clock: the quickstart / end-to-end examples drive real
-//!   XLA aggregation and real local training, reusing the same policy code
-//!   (see `coordinator::live`).
+//! * **simulated** — the virtual driver pops events immediately and the
+//!   clock jumps: the Fig 7/8/9 grids (up to 10 000 parties × 50 rounds ×
+//!   4 strategies) execute in milliseconds of wall time;
+//! * **live** — the wall-clock driver sleeps to each event's deadline and
+//!   wakes on MQ publishes, so the identical queue contents play out in
+//!   real time (see `coordinator::driver` for the Driver/Clock pair and
+//!   `coordinator::live` for the deployment).
 //!
 //! Time is `u64` microseconds. Events carry an opaque `EventKind` that the
 //! world dispatcher (coordinator::platform) interprets; the engine itself

@@ -1,0 +1,117 @@
+//! Sim/live equivalence: the wall-clock driver with a mocked instant
+//! clock must produce the *same* fuse-count and round-record sequence as
+//! the simulator for the same seed, spec and strategy.
+//!
+//! Both regimes run the identical `JobEngine` + `Strategy` code; the sim
+//! pre-schedules arrival events from the fleet model while the live path
+//! publishes the same drawn offsets into the zero-copy MQ and lets the
+//! wall driver ingest them back as arrival events. If the two event
+//! streams diverge anywhere — times, ordering, estimator feeding, round
+//! completion — these comparisons break bit-for-bit.
+
+use std::sync::Arc;
+
+use fljit::coordinator::job::FlJobSpec;
+use fljit::coordinator::live::{run_live_on, LiveConfig, PartyBackend};
+use fljit::coordinator::platform::run_scenario;
+use fljit::mq::MessageQueue;
+use fljit::party::FleetKind;
+use fljit::workloads::Workload;
+
+fn assert_equivalent(strategy: &str, fleet: FleetKind, parties: usize, rounds: u32, seed: u64) {
+    let workload = Workload::cifar100_effnet();
+    let spec = FlJobSpec::new(workload.clone(), fleet, parties, rounds);
+    let sim = run_scenario(&spec, strategy, seed);
+
+    let cfg = LiveConfig {
+        strategy: strategy.to_string(),
+        n_parties: parties,
+        rounds,
+        seed,
+        workload,
+        fleet,
+        backend: PartyBackend::Scripted,
+        dim: 64,
+        ..Default::default()
+    };
+    let live = run_live_on(&cfg, &Arc::new(MessageQueue::new()), false)
+        .unwrap_or_else(|e| panic!("{strategy}/{fleet:?} live run: {e:#}"));
+
+    assert_eq!(
+        sim.rounds.len(),
+        live.records.len(),
+        "{strategy}/{fleet:?}: round count"
+    );
+    for (a, b) in sim.rounds.iter().zip(&live.records) {
+        assert_eq!(a.round, b.round, "{strategy}: round index");
+        assert_eq!(
+            a.latency_secs.to_bits(),
+            b.latency_secs.to_bits(),
+            "{strategy} round {}: latency {} vs {}",
+            a.round,
+            a.latency_secs,
+            b.latency_secs
+        );
+        assert_eq!(
+            a.last_arrival_secs.to_bits(),
+            b.last_arrival_secs.to_bits(),
+            "{strategy} round {}: last arrival {} vs {}",
+            a.round,
+            a.last_arrival_secs,
+            b.last_arrival_secs
+        );
+        assert_eq!(
+            a.complete_secs.to_bits(),
+            b.complete_secs.to_bits(),
+            "{strategy} round {}: complete {} vs {}",
+            a.round,
+            a.complete_secs,
+            b.complete_secs
+        );
+    }
+    assert_eq!(
+        sim.updates_fused, live.updates_fused,
+        "{strategy}/{fleet:?}: fuse count"
+    );
+    assert_eq!(
+        sim.deployments, live.deployments,
+        "{strategy}/{fleet:?}: deployments"
+    );
+}
+
+#[test]
+fn jit_active_matches_sim() {
+    assert_equivalent("jit", FleetKind::ActiveHomogeneous, 10, 3, 0xE1);
+}
+
+#[test]
+fn jit_heterogeneous_matches_sim() {
+    assert_equivalent("jit", FleetKind::ActiveHeterogeneous, 8, 3, 0xE2);
+}
+
+#[test]
+fn batched_matches_sim() {
+    assert_equivalent("batched", FleetKind::ActiveHomogeneous, 10, 2, 0xE3);
+}
+
+#[test]
+fn eager_serverless_matches_sim() {
+    assert_equivalent("eager-serverless", FleetKind::ActiveHomogeneous, 8, 2, 0xE4);
+}
+
+#[test]
+fn eager_ao_matches_sim() {
+    assert_equivalent("eager-ao", FleetKind::ActiveHomogeneous, 8, 2, 0xE5);
+}
+
+#[test]
+fn lazy_matches_sim() {
+    assert_equivalent("lazy", FleetKind::ActiveHomogeneous, 8, 2, 0xE6);
+}
+
+#[test]
+fn jit_intermittent_matches_sim() {
+    // intermittent fleets pace rounds by t_wait; both sides use the
+    // workload-default window so the specs are identical
+    assert_equivalent("jit", FleetKind::IntermittentHeterogeneous, 6, 2, 0xE7);
+}

@@ -1,0 +1,96 @@
+//! Golden-file pin for the on-disk `JobTrace` format (ROADMAP carried
+//! item: record a production workload once, replay it under every
+//! arbitration policy forever). If the format drifts, this test — not a
+//! user's archived trace — is what breaks.
+
+use std::path::PathBuf;
+
+use fljit::broker::workload::{poisson_trace, JobTrace, TraceConfig};
+use fljit::broker::{run_trace, BrokerConfig, SloClass};
+use fljit::party::FleetKind;
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/data/job_trace.golden.json")
+}
+
+#[test]
+fn golden_trace_loads_with_every_field() {
+    let t = JobTrace::load(&golden_path()).expect("golden trace must parse");
+    assert_eq!(t.len(), 2);
+
+    let a = &t.arrivals[0];
+    assert_eq!(a.at_secs, 0.0);
+    assert_eq!(a.class, SloClass::Premium);
+    assert_eq!(a.strategy, "jit");
+    assert_eq!(a.spec.name, "golden-cifar-10p");
+    assert_eq!(a.spec.workload.name, "cifar100-effnet");
+    assert_eq!(a.spec.fleet_kind, FleetKind::ActiveHomogeneous);
+    assert_eq!(a.spec.n_parties, 10);
+    assert_eq!(a.spec.rounds, 3);
+    assert_eq!(a.spec.quorum, 8);
+    assert_eq!(a.spec.report_prob, 0.9);
+
+    let b = &t.arrivals[1];
+    assert_eq!(b.at_secs, 42.5);
+    assert_eq!(b.class, SloClass::BestEffort);
+    assert_eq!(b.strategy, "eager-ao");
+    assert_eq!(b.spec.fleet_kind, FleetKind::IntermittentHeterogeneous);
+    assert_eq!(b.spec.t_wait_secs, 120.0);
+    assert_eq!(t.max_parties(), 100);
+}
+
+#[test]
+fn golden_trace_resaves_identically() {
+    // save(load(golden)) must parse back to the same structure — the
+    // format is stable in both directions
+    let t = JobTrace::load(&golden_path()).expect("golden");
+    let reparsed = JobTrace::from_json(&t.to_json()).expect("reparse");
+    assert_eq!(t.len(), reparsed.len());
+    for (x, y) in t.arrivals.iter().zip(&reparsed.arrivals) {
+        assert_eq!(x.at_secs.to_bits(), y.at_secs.to_bits());
+        assert_eq!(x.spec.name, y.spec.name);
+        assert_eq!(x.spec.quorum, y.spec.quorum);
+        assert_eq!(x.class, y.class);
+        assert_eq!(x.strategy, y.strategy);
+    }
+}
+
+#[test]
+fn saved_trace_replays_identically_to_the_original() {
+    // a generated trace, persisted and reloaded, must drive the broker to
+    // bit-identical per-job outcomes
+    let trace = poisson_trace(&TraceConfig {
+        n_jobs: 3,
+        mean_interarrival_secs: 10.0,
+        party_mix: vec![(6, 1.0)],
+        intermittent_frac: 0.0,
+        rounds_lo: 2,
+        rounds_hi: 2,
+        t_wait_secs: 60.0,
+        seed: 51,
+        ..Default::default()
+    });
+    let dir = std::env::temp_dir().join("fljit_trace_replay");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("replay.json");
+    trace.save(&path).unwrap();
+    let reloaded = JobTrace::load(&path).unwrap();
+
+    let cfg = BrokerConfig {
+        capacity: 8,
+        seed: 77,
+        ..Default::default()
+    };
+    let a = run_trace(&trace, &cfg);
+    let b = run_trace(&reloaded, &cfg);
+    assert_eq!(a.jobs.len(), b.jobs.len());
+    for (x, y) in a.jobs.iter().zip(&b.jobs) {
+        assert_eq!(x.queue_wait_secs.to_bits(), y.queue_wait_secs.to_bits());
+        assert_eq!(
+            x.report.container_seconds.to_bits(),
+            y.report.container_seconds.to_bits()
+        );
+        assert_eq!(x.report.rounds.len(), y.report.rounds.len());
+    }
+    assert_eq!(a.span_secs.to_bits(), b.span_secs.to_bits());
+}
