@@ -1,0 +1,14 @@
+# Build-time helpers. The request path is pure Rust; Python only runs
+# here, once, to AOT-lower the JAX graphs to HLO text (see
+# python/compile/aot.py and rust/src/runtime).
+
+.PHONY: artifacts test
+
+# HLO text artifacts + manifest.json for the XLA runtime
+# (`--features xla`). Requires a Python env with jax installed.
+artifacts:
+	cd python && python -m compile.aot --out ../artifacts
+
+# Tier-1 verification.
+test:
+	cargo build --release && cargo test -q

@@ -34,6 +34,14 @@ SUBCOMMANDS:
              [--parties 4] [--rounds 5] [--seed 42] [--dim 512]
              [--epoch-secs 0.4] [--scripted] [--backend synth|xla]
              (--strategy all sweeps every strategy -> BENCH_live.json)
+  live-broker  the broker's job mix on the LIVE platform: trace replay
+             with admission control + policy-arbitrated preemption,
+             per-job MQ topics/checkpoints/models
+             --policy <deadline|least-slack|wfs|all>
+             [--jobs 4] [--rounds 2] [--max-parties 8] [--capacity 4]
+             [--budget 8] [--interarrival 5] [--seed N] [--dim 32]
+             [--trace t.json] [--save-trace t.json] [--wall]
+             (writes BENCH_live_broker.json dump)
   zoo                              list zoo models
 ";
 
@@ -46,6 +54,7 @@ pub fn dispatch(args: &Args) -> i32 {
         Some("calibrate") => cmd_calibrate(args),
         Some("run") => cmd_run(args),
         Some("live") => cmd_live(args),
+        Some("live-broker") => cmd_live_broker(args),
         Some("zoo") => cmd_zoo(),
         _ => {
             print!("{USAGE}");
@@ -190,6 +199,32 @@ fn cmd_broker(args: &Args) -> i32 {
     }
     crate::bench::dump("BENCH_broker", &json);
     0
+}
+
+fn cmd_live_broker(args: &Args) -> i32 {
+    use crate::broker::arbitration;
+    let cfg = crate::bench::live_broker::LiveBrokerSweepConfig::from_args(args);
+    if cfg.policy != "all" && arbitration::by_name(&cfg.policy).is_none() {
+        eprintln!(
+            "unknown policy {:?}; expected one of {:?} or 'all'",
+            cfg.policy,
+            arbitration::all_policies()
+        );
+        return 2;
+    }
+    match crate::bench::live_broker::run_sweep(&cfg) {
+        Ok((tables, json)) => {
+            for t in tables {
+                t.print();
+            }
+            crate::bench::dump("BENCH_live_broker", &json);
+            0
+        }
+        Err(e) => {
+            eprintln!("live-broker sweep failed: {e:#}");
+            1
+        }
+    }
 }
 
 fn cmd_calibrate(args: &Args) -> i32 {
@@ -423,6 +458,31 @@ mod tests {
         }
         assert_eq!(dispatch(&args("live --strategy nope")), 2);
         assert_eq!(dispatch(&args("live --strategy jit --backend bogus")), 2);
+    }
+
+    #[test]
+    fn live_broker_tiny_grid_runs_per_policy_and_all() {
+        // acceptance: `fljit live-broker --policy <each>` replays a trace
+        // with ≥2 concurrent live jobs and emits BENCH_live_broker.json
+        for policy in crate::broker::arbitration::all_policies() {
+            assert_eq!(
+                dispatch(&args(&format!(
+                    "live-broker --policy {policy} --jobs 2 --max-parties 4 \
+                     --capacity 2 --interarrival 2 --dim 16 --seed 9"
+                ))),
+                0,
+                "{policy}"
+            );
+        }
+        assert_eq!(
+            dispatch(&args(
+                "live-broker --policy all --jobs 2 --max-parties 4 \
+                 --capacity 2 --interarrival 2 --dim 16 --seed 9"
+            )),
+            0
+        );
+        assert!(crate::bench::repro_dir().join("BENCH_live_broker.json").exists());
+        assert_eq!(dispatch(&args("live-broker --policy nope")), 2);
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Figure/table regeneration (§6): Fig 3 (periodicity), Fig 4 (linearity),
 //! Fig 7/8 (aggregation latency), Fig 9 (container-seconds + cost).
+//! `fljit bench-table <fig>` dumps each as `target/repro/<fig>.json`.
 //!
 //! Grid sweeps fan the independent scenario cells out across the global
 //! fusion [`WorkerPool`](crate::fusion::WorkerPool): each cell owns its

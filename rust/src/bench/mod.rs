@@ -2,11 +2,23 @@
 //! evaluation regenerates through this module (used by the `fljit` CLI and
 //! the `cargo bench` binaries). Results print as aligned tables mirroring
 //! the paper's rows, and are dumped as JSON under `target/repro/`.
+//!
+//! | module | reproduces | emits |
+//! |---|---|---|
+//! | [`figs`] | Fig 3/4 (estimator), Fig 7/8 (latency), Fig 9 (cost) | `fig3.json` … `fig9.json` |
+//! | [`broker`] | §6.3 multi-job economics, simulated | `BENCH_broker.json` |
+//! | [`live`] | Fig 7/9 analogue on the wall-clock path | `BENCH_live.json` |
+//! | [`live_broker`] | §6.3 job mix on the *live* platform | `BENCH_live_broker.json` |
+//!
+//! The perf benches (`cargo bench --bench fusion_hot_path` /
+//! `scheduler_hot_path`) additionally emit `BENCH_fusion.json` /
+//! `BENCH_scheduler.json`; EXPERIMENTS.md tracks all of them.
 
 pub mod broker;
 pub mod cli;
 pub mod figs;
 pub mod live;
+pub mod live_broker;
 
 use crate::util::json::Json;
 use std::path::PathBuf;

@@ -23,9 +23,18 @@
 //! score improves without bound, so it is eventually picked — the
 //! no-starvation property pinned by this module's tests.
 //!
-//! The policy only reorders *starts*; preemption stays in §5.5 deadline
-//! order (see `Cluster::on_tick`), so the JIT FORCE_TRIGGER guarantee is
-//! identical under every policy.
+//! Policies order both sides of the scheduling decision: *starts*
+//! ([`ArbitrationPolicy::pick`]) and *preemption*
+//! ([`ArbitrationPolicy::preempt_victim`], the victim chosen when a
+//! pending task needs a slot on a full cluster). The default victim
+//! order is the §5.5 baseline — evict the latest-deadline running task —
+//! and `DeadlinePriority` keeps it, so the no-policy scheduler is
+//! reproduced exactly; `least-slack` evicts the slackest running task
+//! and `wfs` the most-overserved tenant's task, each with a guard so a
+//! δ-tick preemption only happens when the victim genuinely scores
+//! worse than the intruder. A JIT FORCE_TRIGGER (`Cluster::force_start`)
+//! must deploy *now*, so there the policy only chooses the victim's
+//! identity, never whether to evict.
 
 use crate::cluster::{Priority, TaskId};
 use crate::sim::Time;
@@ -70,6 +79,30 @@ pub trait ArbitrationPolicy: Send + std::fmt::Debug {
     /// Pick the next pending task to deploy, or `None` to leave the free
     /// capacity idle this tick.
     fn pick(&mut self, view: &ArbitrationView) -> Option<TaskId>;
+
+    /// Choose which running task to evict so a pending one can start.
+    /// `view.candidates` are the *preemptible* (Running/Idle) tasks in
+    /// ascending `(priority, task)` order; `intruder` is the pending task
+    /// that wants the slot, or `None` for a FORCE_TRIGGER deploy (the
+    /// deadline is *now*, so a victim must be named whenever one exists —
+    /// the policy only decides *who*, not *whether*). Return `None` to
+    /// decline preemption this tick (δ-tick path only).
+    ///
+    /// The default is the §5.5 baseline: evict the latest-deadline task,
+    /// and on the δ-tick path only if it is strictly lower priority than
+    /// the intruder. Implementations must be deterministic functions of
+    /// the view so preemption order replays bit-identically.
+    fn preempt_victim(
+        &mut self,
+        view: &ArbitrationView,
+        intruder: Option<&Candidate>,
+    ) -> Option<TaskId> {
+        let victim = view.candidates.last()?;
+        match intruder {
+            Some(i) if victim.priority <= i.priority => None,
+            _ => Some(victim.task),
+        }
+    }
 }
 
 /// §5.5 baseline: earliest aggregation deadline first. With this policy
@@ -103,6 +136,15 @@ impl Default for LeastSlackFirst {
     }
 }
 
+impl LeastSlackFirst {
+    /// Effective slack: `deadline − now − queued_work − aging·waited` µs.
+    fn slack(&self, c: &Candidate, now: Time) -> i128 {
+        let work = crate::sim::secs(c.queued_secs) as i128;
+        let age_credit = crate::sim::secs(self.aging * c.waited_secs) as i128;
+        c.priority as i128 - now as i128 - work - age_credit
+    }
+}
+
 impl ArbitrationPolicy for LeastSlackFirst {
     fn name(&self) -> &'static str {
         "least-slack"
@@ -111,9 +153,7 @@ impl ArbitrationPolicy for LeastSlackFirst {
     fn pick(&mut self, view: &ArbitrationView) -> Option<TaskId> {
         let mut best: Option<(i128, TaskId)> = None;
         for c in view.candidates {
-            let work = crate::sim::secs(c.queued_secs) as i128;
-            let age_credit = crate::sim::secs(self.aging * c.waited_secs) as i128;
-            let slack = c.priority as i128 - view.now as i128 - work - age_credit;
+            let slack = self.slack(c, view.now);
             let replace = match best {
                 None => true,
                 // strict <: first-seen wins ties, and candidates arrive in
@@ -125,6 +165,34 @@ impl ArbitrationPolicy for LeastSlackFirst {
             }
         }
         best.map(|(_, t)| t)
+    }
+
+    /// Evict the *slackest* running task — the mirror image of `pick`.
+    /// On the δ-tick path the victim must have strictly more effective
+    /// slack than the intruder, else nobody is preempted.
+    fn preempt_victim(
+        &mut self,
+        view: &ArbitrationView,
+        intruder: Option<&Candidate>,
+    ) -> Option<TaskId> {
+        let mut worst: Option<(i128, TaskId)> = None;
+        for c in view.candidates {
+            let slack = self.slack(c, view.now);
+            // >= so ties resolve to the latest-deadline candidate (the
+            // §5.5 baseline victim order)
+            let replace = match worst {
+                None => true,
+                Some((s, _)) => slack >= s,
+            };
+            if replace {
+                worst = Some((slack, c.task));
+            }
+        }
+        let (slack, task) = worst?;
+        match intruder {
+            Some(i) if slack <= self.slack(i, view.now) => None,
+            _ => Some(task),
+        }
     }
 }
 
@@ -145,6 +213,22 @@ impl Default for WeightedFairShare {
     }
 }
 
+impl WeightedFairShare {
+    /// Raw tenant share: `usage_cs / weight` — the aging-free fairness
+    /// position of a job.
+    fn tenant_share(view: &ArbitrationView, job: usize) -> f64 {
+        let w = view.weights.get(job).copied().unwrap_or(1.0).max(1e-9);
+        let used = view.usage_cs.get(job).copied().unwrap_or(0.0);
+        used / w
+    }
+
+    /// Fair-share score: `usage_cs / weight − aging_cs·waited` (smaller =
+    /// more underserved = runs sooner, survives preemption longer).
+    fn score(&self, view: &ArbitrationView, c: &Candidate) -> f64 {
+        Self::tenant_share(view, c.job) - self.aging_cs * c.waited_secs
+    }
+}
+
 impl ArbitrationPolicy for WeightedFairShare {
     fn name(&self) -> &'static str {
         "wfs"
@@ -153,9 +237,7 @@ impl ArbitrationPolicy for WeightedFairShare {
     fn pick(&mut self, view: &ArbitrationView) -> Option<TaskId> {
         let mut best: Option<(f64, TaskId)> = None;
         for c in view.candidates {
-            let w = view.weights.get(c.job).copied().unwrap_or(1.0).max(1e-9);
-            let used = view.usage_cs.get(c.job).copied().unwrap_or(0.0);
-            let score = used / w - self.aging_cs * c.waited_secs;
+            let score = self.score(view, c);
             let replace = match best {
                 None => true,
                 Some((r, _)) => score < r,
@@ -165,6 +247,42 @@ impl ArbitrationPolicy for WeightedFairShare {
             }
         }
         best.map(|(_, t)| t)
+    }
+
+    /// Evict the most-overserved tenant's task (largest fair-share
+    /// score). The δ-tick guard compares *raw* tenant shares — not the
+    /// aged score — so fair share never evicts to admit an equally (or
+    /// more) served tenant: an aged intruder from the victim's own job
+    /// would otherwise buy a pointless checkpoint + redeploy with zero
+    /// fairness gain.
+    fn preempt_victim(
+        &mut self,
+        view: &ArbitrationView,
+        intruder: Option<&Candidate>,
+    ) -> Option<TaskId> {
+        let mut worst: Option<(f64, TaskId, usize)> = None;
+        for c in view.candidates {
+            let score = self.score(view, c);
+            // >= so ties resolve to the latest-deadline candidate (the
+            // §5.5 baseline victim order)
+            let replace = match worst {
+                None => true,
+                Some((s, _, _)) => score >= s,
+            };
+            if replace {
+                worst = Some((score, c.task, c.job));
+            }
+        }
+        let (_, task, victim_job) = worst?;
+        match intruder {
+            Some(i)
+                if Self::tenant_share(view, victim_job)
+                    <= Self::tenant_share(view, i.job) =>
+            {
+                None
+            }
+            _ => Some(task),
+        }
     }
 }
 
@@ -318,6 +436,89 @@ mod tests {
             weights: &[1.0, 1.0],
         };
         assert_eq!(WeightedFairShare::default().pick(&even), Some(0));
+    }
+
+    #[test]
+    fn deadline_preempt_victim_is_the_baseline_worst_running() {
+        let cands = [cand(0, 0, 10.0, 1.0), cand(1, 1, 50.0, 1.0)];
+        let view = ArbitrationView {
+            now: 0,
+            candidates: &cands,
+            usage_cs: &[0.0, 0.0],
+            weights: &[1.0, 1.0],
+        };
+        let mut p = DeadlinePriority;
+        // δ-tick: latest-deadline victim, guarded by strict priority order
+        let urgent = cand(9, 2, 5.0, 1.0);
+        assert_eq!(p.preempt_victim(&view, Some(&urgent)), Some(1));
+        let lax = cand(9, 2, 99.0, 1.0);
+        assert_eq!(p.preempt_victim(&view, Some(&lax)), None, "guard holds");
+        // FORCE_TRIGGER: a victim must be named unconditionally
+        assert_eq!(p.preempt_victim(&view, None), Some(1));
+        let empty = ArbitrationView {
+            now: 0,
+            candidates: &[],
+            usage_cs: &[],
+            weights: &[],
+        };
+        assert_eq!(p.preempt_victim(&empty, None), None, "nobody to evict");
+    }
+
+    #[test]
+    fn least_slack_evicts_the_slackest_victim() {
+        // deep queued work erodes task 1's slack below the earlier-
+        // deadline task 0's, so the slack-ordered victim diverges from
+        // the deadline baseline's latest-deadline choice
+        let mut p = LeastSlackFirst { aging: 0.5 };
+        let cands = [cand(0, 0, 10.0, 1.0), cand(1, 1, 50.0, 45.0)];
+        let view = ArbitrationView {
+            now: 0,
+            candidates: &cands,
+            usage_cs: &[0.0, 0.0],
+            weights: &[1.0, 1.0],
+        };
+        // slacks: task 0 = 9s, task 1 = 5s → victim is task 0, NOT the
+        // baseline's latest-deadline task 1
+        assert_eq!(p.preempt_victim(&view, None), Some(0));
+        // guard: an intruder with more slack than the victim preempts no one
+        let rich = cand(9, 2, 100.0, 1.0);
+        assert_eq!(p.preempt_victim(&view, Some(&rich)), None);
+        // an intruder with less slack than the victim does
+        let poor = cand(9, 2, 3.0, 1.0);
+        assert_eq!(p.preempt_victim(&view, Some(&poor)), Some(0));
+    }
+
+    #[test]
+    fn wfs_evicts_the_most_overserved_tenant() {
+        // job 1 consumed far more than its share, so its *earlier-
+        // deadline* task is the victim — the deadline baseline would
+        // have evicted job 0's later-deadline task instead
+        let mut p = WeightedFairShare { aging_cs: 2.0 };
+        let cands = [cand(0, 1, 10.0, 1.0), cand(1, 0, 50.0, 1.0)];
+        let view = ArbitrationView {
+            now: 0,
+            candidates: &cands,
+            usage_cs: &[5.0, 500.0],
+            weights: &[1.0, 1.0],
+        };
+        // job 1 (task 0) is overserved → victim is task 0, not the
+        // baseline's latest-deadline task 1
+        assert_eq!(p.preempt_victim(&view, None), Some(0));
+        // guard: an intruder from an equally overserved tenant is refused
+        let same_tenant = cand(9, 1, 1.0, 1.0);
+        assert_eq!(p.preempt_victim(&view, Some(&same_tenant)), None);
+        // …even when that intruder has aged: waiting improves its *start*
+        // score but buys no fairness from evicting its own tenant's task
+        let mut aged_same_tenant = cand(9, 1, 1.0, 1.0);
+        aged_same_tenant.waited_secs = 1e6;
+        assert_eq!(
+            p.preempt_victim(&view, Some(&aged_same_tenant)),
+            None,
+            "aging must not defeat the equal-tenant guard"
+        );
+        // an underserved tenant's intruder evicts the overserved one
+        let fresh = cand(9, 0, 99.0, 1.0);
+        assert_eq!(p.preempt_victim(&view, Some(&fresh)), Some(0));
     }
 
     #[test]

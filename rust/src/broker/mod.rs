@@ -1,29 +1,54 @@
 //! Multi-tenant job broker — the control plane between job submission and
-//! [`coordinator::platform`](crate::coordinator::platform).
+//! the execution platforms (the virtual-time
+//! [`coordinator::platform`](crate::coordinator::platform) and the
+//! wall-clock [`coordinator::live`](crate::coordinator::live)).
 //!
-//! The paper's economics argument (§1, §6.2) is about *fleets* of FL jobs
-//! sharing cloud aggregation capacity. This subsystem turns the repo's
-//! platform from "several independent jobs admitted at t = 0" into that
-//! shared cluster:
+//! The paper's economics argument (§1, §6.2–6.3) is about *fleets* of FL
+//! jobs sharing cloud aggregation capacity. This subsystem turns the
+//! repo's platform from "several independent jobs admitted at t = 0"
+//! into that shared cluster:
 //!
 //! * [`workload`] — job-arrival generation: Poisson/trace-driven
 //!   submissions over the three §6.3 workload profiles, mixed
 //!   active/intermittent fleets, party counts up to 10k, SLO classes.
+//!   Traces persist as JSON ([`JobTrace::save`]/[`JobTrace::load`]), the
+//!   on-disk format live resumes re-admit queued jobs from.
 //! * [`admission`] — admission control: per-job container-demand quotas
 //!   against a budget with SLO-ordered queueing/backpressure, so jobs wait
 //!   for headroom instead of oversubscribing the cluster unboundedly.
 //! * [`arbitration`] — the pluggable [`ArbitrationPolicy`]
 //!   (deadline-priority §5.5 baseline, least-slack-first, weighted fair
-//!   share of container-seconds) wired into the cluster's pending queue:
-//!   the policy decides which job's aggregation task starts when capacity
-//!   frees.
+//!   share of container-seconds) wired into the cluster's scheduling
+//!   decisions on **both sides**: `pick` chooses which job's aggregation
+//!   task starts when capacity frees, and `preempt_victim` chooses which
+//!   running task is evicted when a pending one needs the slot
+//!   (arbitration-aware preemption — deadline keeps the §5.5
+//!   latest-deadline victim order, least-slack evicts the slackest task,
+//!   wfs the most-overserved tenant's). The non-baseline policies *age*
+//!   waiting candidates (`Candidate::waited_secs`), so no tenant starves
+//!   behind a stream of fresher, better-scoring tasks; every preemption
+//!   decision lands in `Cluster::preemption_log`, pinning bit-identical
+//!   replay per (seed, trace, policy).
 //!
-//! [`run_trace`] replays one [`JobTrace`](workload::JobTrace) under one
-//! policy and reports per-job queue waits, latency inflation vs an
-//! uncontended solo run, and cluster utilization; `bench::broker` sweeps
-//! the same trace across all policies (`BENCH_broker.json`).
+//! Two replay paths share this control plane:
+//!
+//! * **Simulated** — [`run_trace`] replays one
+//!   [`JobTrace`](workload::JobTrace) under one policy in virtual time
+//!   and reports per-job queue waits, latency inflation vs an
+//!   uncontended solo run, and cluster utilization; `bench::broker`
+//!   sweeps the same trace across all policies (`BENCH_broker.json`).
+//! * **Live** — `coordinator::live::run_live_broker` replays the same
+//!   trace under the wall-clock driver: jobs arrive at their trace
+//!   times, pass this module's admission control, share one arbitrated
+//!   cluster, and fold *real* updates through per-job MQ topics with
+//!   per-job §5.5 checkpoints and model topics; `bench::live_broker`
+//!   sweeps it (`BENCH_live_broker.json`, CLI `fljit live-broker`).
+//!   Sim and live multi-job reports are bit-identical under an instant
+//!   clock with scripted parties (`tests/live_broker_equivalence.rs`).
 //!
 //! [`ArbitrationPolicy`]: arbitration::ArbitrationPolicy
+//! [`JobTrace::save`]: workload::JobTrace::save
+//! [`JobTrace::load`]: workload::JobTrace::load
 
 pub mod admission;
 pub mod arbitration;
@@ -36,6 +61,28 @@ use crate::util::json::Json;
 
 use admission::{AdmissionConfig, AdmissionController};
 use workload::{JobArrival, JobTrace};
+
+/// Peak number of simultaneously active jobs given `(start, end)`
+/// activity intervals in seconds — the "N-concurrent-job" figure of the
+/// sweeps, shared by the sim and live broker reports.
+pub fn peak_concurrency<I: IntoIterator<Item = (f64, f64)>>(intervals: I) -> usize {
+    let mut events: Vec<(f64, i32)> = Vec::new();
+    for (start, end) in intervals {
+        if end > start {
+            events.push((start, 1));
+            events.push((end, -1));
+        }
+    }
+    // -1 sorts before +1 at equal times: back-to-back jobs don't overlap
+    events.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut cur = 0i32;
+    let mut peak = 0i32;
+    for (_, d) in events {
+        cur += d;
+        peak = peak.max(cur);
+    }
+    peak.max(0) as usize
+}
 
 /// Service classes the broker offers (admission order + fair-share weight).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -171,6 +218,9 @@ pub struct BrokerReport {
     pub cluster_utilization: f64,
     pub total_container_seconds: f64,
     pub span_secs: f64,
+    /// Preemption decisions `(secs, victim task)` in decision order —
+    /// the policy-determinism pin for arbitration-aware preemption.
+    pub preemptions: Vec<(f64, usize)>,
 }
 
 impl BrokerReport {
@@ -190,27 +240,11 @@ impl BrokerReport {
         }
     }
 
-    /// Peak number of jobs simultaneously admitted (running) — the
-    /// "N-concurrent-job" figure of the sweeps.
+    /// Peak number of jobs simultaneously admitted (running).
     pub fn max_concurrent_jobs(&self) -> usize {
-        let mut events: Vec<(f64, i32)> = Vec::new();
-        for o in &self.jobs {
-            let start = o.arrival_secs + o.queue_wait_secs;
-            let end = o.report.makespan_secs;
-            if end > start {
-                events.push((start, 1));
-                events.push((end, -1));
-            }
-        }
-        // -1 sorts before +1 at equal times: back-to-back jobs don't overlap
-        events.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let mut cur = 0i32;
-        let mut peak = 0i32;
-        for (_, d) in events {
-            cur += d;
-            peak = peak.max(cur);
-        }
-        peak.max(0) as usize
+        peak_concurrency(self.jobs.iter().map(|o| {
+            (o.arrival_secs + o.queue_wait_secs, o.report.makespan_secs)
+        }))
     }
 
     pub fn to_json(&self) -> Json {
@@ -223,6 +257,7 @@ impl BrokerReport {
                 Json::num(self.total_container_seconds),
             ),
             ("span_secs", Json::num(self.span_secs)),
+            ("preemptions", Json::num(self.preemptions.len() as f64)),
             (
                 "max_concurrent_jobs",
                 Json::num(self.max_concurrent_jobs() as f64),
@@ -314,6 +349,7 @@ pub fn run_trace(trace: &JobTrace, cfg: &BrokerConfig) -> BrokerReport {
         cluster_utilization: util,
         total_container_seconds: stats.total_container_seconds,
         span_secs: span,
+        preemptions: stats.preemptions,
     }
 }
 

@@ -18,7 +18,13 @@
 //! * **Preemption with work conservation**: a preempted task checkpoints
 //!   its partial aggregate (completed merges are conserved at work-item
 //!   granularity; the in-flight merge is redone on resume) and re-enters
-//!   the pending queue with its priority retained.
+//!   the pending queue with its priority retained. With an arbitration
+//!   policy installed, the *victim* is the policy's choice too
+//!   (`ArbitrationPolicy::preempt_victim`): deadline keeps the §5.5
+//!   latest-deadline order, least-slack evicts the slackest running
+//!   task, wfs the most-overserved tenant's. Every preemption decision
+//!   is appended to [`Cluster::preemption_log`], so the order replays
+//!   bit-identically for a given seed + trace.
 //! * **Ledger**: every container incarnation's [start, end) interval with
 //!   job attribution — container-seconds, the paper's §6.2 metric.
 //!
@@ -179,6 +185,9 @@ pub struct Cluster {
     weights: Vec<f64>,
     /// Cross-job arbitration policy; `None` = §5.5 deadline-priority order.
     policy: Option<Box<dyn ArbitrationPolicy>>,
+    /// Every preemption decision `(when, victim)` in the order it was
+    /// made — the determinism pin for arbitration-aware preemption.
+    preemptions: Vec<(Time, TaskId)>,
 }
 
 impl Cluster {
@@ -195,6 +204,7 @@ impl Cluster {
             usage: Vec::new(),
             weights: Vec::new(),
             policy: None,
+            preemptions: Vec::new(),
         }
     }
 
@@ -206,10 +216,18 @@ impl Cluster {
     }
 
     /// Install a cross-job arbitration policy (broker control plane):
-    /// pending starts then follow the policy; preemption stays in §5.5
-    /// deadline order so FORCE_TRIGGER semantics are policy-independent.
+    /// pending starts *and* preemption victims then follow the policy
+    /// (`pick` / `preempt_victim`). `DeadlinePriority` reproduces the
+    /// no-policy §5.5 scheduler exactly, on both sides of the decision.
     pub fn set_policy(&mut self, policy: Box<dyn ArbitrationPolicy>) {
         self.policy = Some(policy);
+    }
+
+    /// Preemption decisions `(time, victim task)` in decision order —
+    /// deterministic for a given seed + trace + policy (pinned by the
+    /// broker's policy-determinism tests).
+    pub fn preemption_log(&self) -> &[(Time, TaskId)] {
+        &self.preemptions
     }
 
     /// Fair-share weight for a job (broker SLO class; ignored unless a
@@ -364,9 +382,9 @@ impl Cluster {
     }
 
     /// δ-tick: start pending tasks while capacity lasts — in §5.5 priority
-    /// order, or by the installed arbitration policy — then, if a pending
-    /// task outranks a running one, preempt the victim (always deadline-
-    /// ordered, policy or not).
+    /// order, or by the installed arbitration policy — then, at capacity,
+    /// preempt a victim: the §5.5 latest-deadline task when no policy is
+    /// installed, otherwise whoever the policy's `preempt_victim` names.
     pub fn on_tick(&mut self, q: &mut EventQueue) {
         if self.policy.is_some() {
             self.on_tick_arbitrated(q);
@@ -424,12 +442,34 @@ impl Cluster {
                 self.deploy(q, task);
                 continue;
             }
-            let Some(best) = self.best_pending() else { break };
-            let Some(victim) = self.worst_running() else { break };
-            if self.tasks[victim].spec.priority <= self.tasks[best].spec.priority {
+            // At capacity: the policy names the intruder (who should run)
+            // and the victim (who gets evicted) — arbitration-aware
+            // preemption, not hard-coded deadline order.
+            let intruder_view = ArbitrationView {
+                now,
+                candidates: &candidates,
+                usage_cs: &usage_cs,
+                weights: &self.weights,
+            };
+            let Some(want) = policy.pick(&intruder_view) else { break };
+            let Some(intruder) = candidates.iter().find(|c| c.task == want).copied()
+            else {
                 break;
-            }
+            };
+            let running = self.preemptible_candidates(now);
+            let victim_view = ArbitrationView {
+                now,
+                candidates: &running,
+                usage_cs: &usage_cs,
+                weights: &self.weights,
+            };
+            let Some(victim) = policy.preempt_victim(&victim_view, Some(&intruder))
+            else {
+                break;
+            };
             self.begin_checkpoint(q, victim, true);
+            // Capacity frees only when the victim's checkpoint completes;
+            // the pending task starts on a later tick.
             break;
         }
         self.policy = Some(policy);
@@ -456,6 +496,44 @@ impl Cluster {
             .collect()
     }
 
+    /// Snapshot of preemptible (Running/Idle) tasks in ascending
+    /// (priority, id) order — the candidate list for
+    /// `ArbitrationPolicy::preempt_victim`. Running tasks are never
+    /// "waiting startable", so `waited_secs` is 0.
+    fn preemptible_candidates(&self, _now: Time) -> Vec<Candidate> {
+        self.active_idx
+            .iter()
+            .map(|&(priority, task)| {
+                let t = &self.tasks[task];
+                Candidate {
+                    task,
+                    job: t.spec.job,
+                    priority,
+                    queued_secs: crate::sim::to_secs(t.queued_time),
+                    waited_secs: 0.0,
+                }
+            })
+            .collect()
+    }
+
+    /// Pick a preemption victim for a FORCE_TRIGGER deploy: the policy's
+    /// unconditional choice when one is installed, the §5.5
+    /// latest-deadline task otherwise.
+    fn forced_victim(&mut self, now: Time) -> Option<TaskId> {
+        let mut policy = self.policy.take()?;
+        let running = self.preemptible_candidates(now);
+        let usage_cs: Vec<f64> = self.usage.iter().map(|u| u.cs(now)).collect();
+        let view = ArbitrationView {
+            now,
+            candidates: &running,
+            usage_cs: &usage_cs,
+            weights: &self.weights,
+        };
+        let victim = policy.preempt_victim(&view, None);
+        self.policy = Some(policy);
+        victim
+    }
+
     /// FORCE_TRIGGER (Fig 6 line 21): deadline reached — deploy now,
     /// preempting if necessary.
     pub fn force_start(&mut self, q: &mut EventQueue, task: TaskId) {
@@ -463,7 +541,12 @@ impl Cluster {
             return;
         }
         if !self.has_capacity() {
-            if let Some(victim) = self.worst_running() {
+            let victim = if self.policy.is_some() {
+                self.forced_victim(q.now())
+            } else {
+                self.worst_running()
+            };
+            if let Some(victim) = victim {
                 if victim != task {
                     self.begin_checkpoint(q, victim, true);
                 }
@@ -536,6 +619,9 @@ impl Cluster {
     }
 
     fn begin_checkpoint(&mut self, q: &mut EventQueue, task: TaskId, preempting: bool) {
+        if preempting {
+            self.preemptions.push((q.now(), task));
+        }
         let dur = self.tasks[task].spec.checkpoint;
         let t = &mut self.tasks[task];
         t.phase = Phase::Checkpointing;
@@ -975,6 +1061,62 @@ mod tests {
         assert_eq!(n0, n1, "notifications diverged");
         assert_eq!(l0, l1, "ledger diverged");
         assert_eq!(t0, t1, "clock diverged");
+    }
+
+    #[test]
+    fn policy_chooses_the_preemption_victim() {
+        // An overserved job's *earlier-deadline* running task: the §5.5
+        // baseline (and DeadlinePriority) refuses to preempt it for a
+        // later-deadline newcomer, while wfs evicts it — preemption order
+        // is the policy's call now, not hard-coded deadline order.
+        use crate::broker::arbitration::{DeadlinePriority, WeightedFairShare};
+        let run = |wfs: bool| {
+            let mut q = EventQueue::new();
+            let mut c = Cluster::new(ClusterConfig {
+                capacity: 1,
+                ..Default::default()
+            });
+            if wfs {
+                c.set_policy(Box::new(WeightedFairShare::default()));
+            } else {
+                c.set_policy(Box::new(DeadlinePriority));
+            }
+            let hog = c.submit(spec(0, 10)); // earliest deadline, job 0
+            c.push_work(&mut q, hog, &[secs(30.0)]);
+            c.on_tick(&mut q);
+            while c.phase(hog) != Phase::Running {
+                let Some((_, EventKind::ContainerDone { container })) = q.next() else {
+                    panic!("hog never deployed");
+                };
+                c.advance(&mut q, container);
+            }
+            // an underserved job's later-deadline task arrives
+            let newcomer = c.submit(spec(1, 1000));
+            c.push_work(&mut q, newcomer, &[secs(1.0)]);
+            // advance virtual time so job 0 accrues container-seconds
+            q.schedule_at(secs(10.0), EventKind::Custom { tag: 0 });
+            while let Some((t, _)) = q.next() {
+                if t >= secs(10.0) {
+                    break;
+                }
+            }
+            c.on_tick(&mut q);
+            (c.phase(hog), c.preemption_log().to_vec())
+        };
+        let (phase_deadline, log_deadline) = run(false);
+        assert_eq!(
+            phase_deadline,
+            Phase::Running,
+            "deadline policy must not evict the earlier-deadline task"
+        );
+        assert!(log_deadline.is_empty());
+        let (phase_wfs, log_wfs) = run(true);
+        assert_eq!(
+            phase_wfs,
+            Phase::Checkpointing,
+            "wfs must evict the overserved tenant's task"
+        );
+        assert_eq!(log_wfs, vec![(secs(10.0), 0)], "preemption logged");
     }
 
     #[test]

@@ -15,13 +15,22 @@
 //!   `UpdateArrival` events, so the same `Strategy` code observes live
 //!   traffic exactly the way it observes simulated traffic.
 //!
+//! The wall driver *multiplexes jobs*: it keeps one topic watch per
+//! admitted job ([`WallDriver::watch_round`] is keyed by job id), so N
+//! concurrent live jobs share a single sleep-to-deadline loop — every
+//! party publish, whichever job's topic it lands in, wakes the same
+//! condvar and is routed to the owning engine as an `UpdateArrival`
+//! tagged with its job id. `coordinator::live` drives one engine this
+//! way (`run_live`) or a whole broker-admitted job mix
+//! (`run_live_broker`).
+//!
 //! [`JobEngine`] is the single-job state machine both regimes drive: round
 //! estimation (§4–§5.4), arrival bookkeeping, estimator feeding, strategy
 //! dispatch and round completion. `coordinator::platform` wraps a vector
 //! of engines (multi-tenant, virtual time); `coordinator::live` wraps one
-//! engine plus a real fusion data plane (wall time). The five `Strategy`
-//! implementations run unmodified under either driver — that is the whole
-//! point of the redesign.
+//! or more engines plus a real fusion data plane (wall time). The five
+//! `Strategy` implementations run unmodified under either driver — that
+//! is the whole point of the redesign.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -179,12 +188,15 @@ impl Driver for VirtualDriver {
 /// thread-backed sources ignore them and publish when real local training
 /// finishes.
 pub trait UpdateSource {
-    /// A round began: deliver the global model to `parties` (a subset on
-    /// §5.5 resume — parties whose update already sits in the topic log
-    /// are replayed from it, not re-trained). `offsets` is indexed by
-    /// party id.
+    /// A round began for `job`: deliver the global model to `parties` (a
+    /// subset on §5.5 resume — parties whose update already sits in the
+    /// topic log are replayed from it, not re-trained). `offsets` is
+    /// indexed by party id. Multi-job sources route publishes to
+    /// `mq::update_topic(job, round)`; single-job sources receive 0.
+    #[allow(clippy::too_many_arguments)]
     fn begin_round(
         &mut self,
+        job: usize,
         round: u32,
         model: &Arc<Vec<f32>>,
         parties: &[usize],
@@ -217,19 +229,28 @@ pub trait UpdateSource {
     fn shutdown(&mut self, _mq: &MessageQueue) {}
 }
 
+/// One job's topic-watch cursor inside a [`WallDriver`].
+#[derive(Clone, Copy, Debug)]
+struct RoundWatch {
+    round: u32,
+    /// Topic offset up to which this round's messages were ingested.
+    ingested: usize,
+}
+
 /// Wall-clock driver: sleeps to the next deadline (queued event or
 /// scripted publish), ingesting externally produced MQ updates as
 /// `UpdateArrival` events the moment they land.
+///
+/// The driver watches one round topic *per job* — `watch_round(job, r)`
+/// points job `job`'s cursor at `mq::update_topic(job, r)` — so several
+/// concurrent live jobs multiplex over a single sleep/wake loop. Until a
+/// job's first `watch_round` there is no topic to ingest for it
+/// (prevents double-ingesting a resumed round's log).
 pub struct WallDriver<C: Clock, S: UpdateSource> {
     pub clock: C,
     pub source: S,
-    job: usize,
-    round: u32,
-    /// Set by the first `watch_round`; before that there is no round
-    /// topic to ingest (prevents double-ingesting a resumed round's log).
-    watching: bool,
-    /// Topic offset up to which this round's messages were ingested.
-    ingested: usize,
+    /// Per-job round watches, iterated in job order at each ingest.
+    watches: std::collections::BTreeMap<usize, RoundWatch>,
     /// MQ produce counter at the last ingest (condvar wake threshold).
     seen: u64,
     /// Consecutive idle wait accumulated while neither the queue nor the
@@ -240,58 +261,57 @@ pub struct WallDriver<C: Clock, S: UpdateSource> {
 }
 
 impl<C: Clock, S: UpdateSource> WallDriver<C, S> {
-    pub fn new(clock: C, source: S, job: usize) -> WallDriver<C, S> {
+    pub fn new(clock: C, source: S) -> WallDriver<C, S> {
         WallDriver {
             clock,
             source,
-            job,
-            round: 0,
-            watching: false,
-            ingested: 0,
+            watches: std::collections::BTreeMap::new(),
             seen: 0,
             idle: Duration::ZERO,
             idle_budget: Duration::from_secs(60),
         }
     }
 
-    /// Point the ingest cursor at a (new or resumed) round's topic. On
-    /// resume the whole topic log replays into arrival events — exactly
-    /// the §5.5 story: updates persist in the MQ across aggregator
-    /// restarts, so a fresh deployment reconstructs the round from the
-    /// log.
-    pub fn watch_round(&mut self, round: u32) {
-        self.round = round;
-        self.watching = true;
-        self.ingested = 0;
+    /// Point `job`'s ingest cursor at a (new or resumed) round's topic.
+    /// On resume the whole topic log replays into arrival events —
+    /// exactly the §5.5 story: updates persist in the MQ across
+    /// aggregator restarts, so a fresh deployment reconstructs the round
+    /// from the log.
+    pub fn watch_round(&mut self, job: usize, round: u32) {
+        self.watches.insert(job, RoundWatch { round, ingested: 0 });
+    }
+
+    /// Stop watching a finished job's topics (its engine is done; any
+    /// straggler re-publish is garbage-collected, not dispatched).
+    pub fn unwatch(&mut self, job: usize) {
+        self.watches.remove(&job);
     }
 
     /// Schedule `UpdateArrival` events for every not-yet-ingested message
-    /// in the current round topic. Events carry the message's enqueue
-    /// time (clamped to the queue's now), so with an [`InstantClock`] and
-    /// a scripted source the arrival times are bit-identical to the
-    /// simulator's pre-scheduled ones.
+    /// in every watched round topic. Events carry the message's enqueue
+    /// time, so with an [`InstantClock`] and a scripted source the
+    /// arrival times are bit-identical to the simulator's pre-scheduled
+    /// ones.
     fn ingest(&mut self, q: &mut EventQueue, mq: &MessageQueue) {
-        if !self.watching {
-            self.seen = mq.produced();
-            return;
-        }
-        let topic = mq::update_topic(self.job, self.round);
-        loop {
-            let batch = mq.fetch(&topic, self.ingested, 64);
-            if batch.is_empty() {
-                break;
+        for (&job, w) in self.watches.iter_mut() {
+            let topic = mq::update_topic(job, w.round);
+            loop {
+                let batch = mq.fetch(&topic, w.ingested, 64);
+                if batch.is_empty() {
+                    break;
+                }
+                for m in &batch {
+                    q.schedule_at(
+                        m.enqueued_at,
+                        EventKind::UpdateArrival {
+                            job,
+                            round: m.round,
+                            party: m.party,
+                        },
+                    );
+                }
+                w.ingested += batch.len();
             }
-            for m in &batch {
-                q.schedule_at(
-                    m.enqueued_at,
-                    EventKind::UpdateArrival {
-                        job: self.job,
-                        round: m.round,
-                        party: m.party,
-                    },
-                );
-            }
-            self.ingested += batch.len();
         }
         self.seen = mq.produced();
     }

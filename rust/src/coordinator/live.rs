@@ -30,6 +30,18 @@
 //! [`mq::model_topic`], which doubles as the job's durable state: a
 //! restarted aggregator derives the current round and global model from
 //! that log.
+//!
+//! **Multi-tenancy** (§6.3 economics): [`run_live_broker`] replays a
+//! whole [`JobTrace`] under the *same* wall-clock driver — jobs arrive
+//! at their trace times, pass the broker's admission control, share one
+//! emulated cluster arbitrated by the configured
+//! [`ArbitrationPolicy`](crate::broker::arbitration::ArbitrationPolicy),
+//! and each keep an independent data plane (per-job round topics,
+//! per-job checkpoints, per-job model topics). The driver multiplexes
+//! every admitted job's update topic through one sleep/wake loop. Kill
+//! the aggregator at any instant and a resume reconstructs *every* job
+//! from the MQ — including jobs that were still queued for admission,
+//! which are re-admitted from the persisted trace rather than dropped.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -38,6 +50,9 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::broker::admission::{AdmissionConfig, AdmissionController};
+use crate::broker::workload::JobTrace;
+use crate::broker::{arbitration, SloClass};
 use crate::cluster::{Cluster, ClusterConfig, Notification};
 use crate::coordinator::driver::{
     ArrivalMode, Clock, Driver, InstantClock, JobEngine, UpdateSource, WallClock, WallDriver,
@@ -49,7 +64,7 @@ use crate::fusion::{Aggregator, Algorithm};
 use crate::metrics::RoundRecord;
 use crate::mq::{self, CheckpointState, Message, MessageQueue, Payload};
 use crate::party::FleetKind;
-use crate::sim::{EventKind, EventQueue, Time};
+use crate::sim::{secs, to_secs, EventKind, EventQueue, Time};
 use crate::util::rng::Rng;
 use crate::workloads::Workload;
 
@@ -291,25 +306,41 @@ impl Folder {
 /// One scheduled scripted publish.
 struct ScriptedPublish {
     due: Time,
+    job: usize,
     party: usize,
     round: u32,
     model: Arc<Vec<f32>>,
 }
 
+/// Per-job synth-update seed: job 0 keeps the raw seed (single-job runs
+/// and their resume tests stay bit-identical), other jobs fold the job id
+/// in so concurrent jobs with identical fleets train distinct models.
+fn job_seed(seed: u64, job: usize) -> u64 {
+    seed ^ (job as u64).wrapping_mul(0xD1B5_4A32_D192_ED03)
+}
+
 /// Deterministic parties: publish synthetic updates at exactly the
 /// engine's fleet-drawn offsets. Paired with an [`InstantClock`] this
-/// replays the simulator's arrival process through the real MQ path.
+/// replays the simulator's arrival process through the real MQ path —
+/// for one job (`new`) or a whole broker job mix (`multi_job`).
 pub struct ScriptedParties {
     seed: u64,
     lr: f32,
-    weights: Vec<f32>,
-    /// Pending publishes, ascending by (due, party); drained from the
-    /// front (O(1) per publish even at 10k parties).
+    /// Aggregation weights indexed `[job][party]`.
+    weights: Vec<Vec<f32>>,
+    /// Pending publishes, ascending by (due, job, party); drained from
+    /// the front (O(1) per publish even at 10k parties).
     pending: std::collections::VecDeque<ScriptedPublish>,
 }
 
 impl ScriptedParties {
+    /// Single-job parties (job id 0).
     pub fn new(seed: u64, lr: f32, weights: Vec<f32>) -> ScriptedParties {
+        ScriptedParties::multi_job(seed, lr, vec![weights])
+    }
+
+    /// Multi-job parties: `weights[job][party]` per admitted job.
+    pub fn multi_job(seed: u64, lr: f32, weights: Vec<Vec<f32>>) -> ScriptedParties {
         ScriptedParties {
             seed,
             lr,
@@ -320,8 +351,10 @@ impl ScriptedParties {
 }
 
 impl UpdateSource for ScriptedParties {
+    #[allow(clippy::too_many_arguments)]
     fn begin_round(
         &mut self,
+        job: usize,
         round: u32,
         model: &Arc<Vec<f32>>,
         parties: &[usize],
@@ -332,29 +365,30 @@ impl UpdateSource for ScriptedParties {
         for &party in parties {
             self.pending.push_back(ScriptedPublish {
                 due: now + offsets[party],
+                job,
                 party,
                 round,
                 model: Arc::clone(model),
             });
         }
-        // ties at the same µs publish in party order — exactly the
+        // ties at the same µs publish in (job, party) order — exactly the
         // simulator's scheduling order for equal-time arrivals
         self.pending
             .make_contiguous()
-            .sort_by_key(|p| (p.due, p.party));
+            .sort_by_key(|p| (p.due, p.job, p.party));
         Ok(())
     }
 
     fn pump(&mut self, now: Time, mq: &MessageQueue) -> Result<()> {
         while self.pending.front().is_some_and(|p| p.due <= now) {
             let p = self.pending.pop_front().expect("front checked");
-            let update = synth_update(&p.model, self.seed, p.party, self.lr);
+            let update = synth_update(&p.model, job_seed(self.seed, p.job), p.party, self.lr);
             mq.produce(
-                &mq::update_topic(0, p.round),
+                &mq::update_topic(p.job, p.round),
                 Message {
                     party: p.party,
                     round: p.round,
-                    weight: self.weights[p.party],
+                    weight: self.weights[p.job][p.party],
                     enqueued_at: p.due,
                     payload: Payload::Inline(update),
                 },
@@ -374,6 +408,7 @@ impl UpdateSource for ScriptedParties {
 
 /// One message per round handed to a party thread.
 struct PartyCmd {
+    job: usize,
     round: u32,
     model: Arc<Vec<f32>>,
     /// Wall deadline the synthetic party publishes at (drawn from the
@@ -445,7 +480,7 @@ impl ThreadParties {
                     let update = synth_update(&cmd.model, seed, party, lr);
                     timer.sleep_until(cmd.due);
                     mqc.produce(
-                        &mq::update_topic(0, cmd.round),
+                        &mq::update_topic(cmd.job, cmd.round),
                         Message {
                             party,
                             round: cmd.round,
@@ -506,7 +541,7 @@ impl ThreadParties {
                         trainer.unflatten(&cmd.model);
                         let loss = trainer.epoch(minibatches, &xs, &ys, lr)?;
                         mqc.produce(
-                            &mq::metrics_topic(0),
+                            &mq::metrics_topic(cmd.job),
                             Message {
                                 party,
                                 round: cmd.round,
@@ -516,7 +551,7 @@ impl ThreadParties {
                             },
                         );
                         mqc.produce(
-                            &mq::update_topic(0, cmd.round),
+                            &mq::update_topic(cmd.job, cmd.round),
                             Message {
                                 party,
                                 round: cmd.round,
@@ -550,8 +585,10 @@ impl ThreadParties {
 }
 
 impl UpdateSource for ThreadParties {
+    #[allow(clippy::too_many_arguments)]
     fn begin_round(
         &mut self,
+        job: usize,
         round: u32,
         model: &Arc<Vec<f32>>,
         parties: &[usize],
@@ -562,6 +599,7 @@ impl UpdateSource for ThreadParties {
         for &party in parties {
             self.txs[party]
                 .send(PartyCmd {
+                    job,
                     round,
                     model: Arc::clone(model),
                     due: now + offsets.get(party).copied().unwrap_or(0),
@@ -652,13 +690,13 @@ pub fn run_live_on(
     match cfg.backend {
         PartyBackend::Scripted => {
             let source = ScriptedParties::new(cfg.seed, cfg.lr, weights);
-            let driver = WallDriver::new(InstantClock::default(), source, 0);
+            let driver = WallDriver::new(InstantClock::default(), source);
             run_loop(cfg, mq, engine, driver, resume, init_model(cfg.dim, cfg.seed), None)
         }
         PartyBackend::SynthThreads => {
             let clock = WallClock::new();
             let source = ThreadParties::synth(mq, clock.timer, cfg.seed, cfg.lr, &weights);
-            let driver = WallDriver::new(clock, source, 0);
+            let driver = WallDriver::new(clock, source);
             run_loop(cfg, mq, engine, driver, resume, init_model(cfg.dim, cfg.seed), None)
         }
         PartyBackend::XlaThreads => run_live_xla(cfg, mq, engine, resume),
@@ -701,7 +739,7 @@ fn run_live_xla(
         synth_party_dataset(usize::MAX - 1, 256, MLP_IN, MLP_CLASSES, 50.0, cfg.seed);
     let clock = WallClock::new();
     let source = ThreadParties::xla(mq, clock.timer, cfg)?;
-    let driver = WallDriver::new(clock, source, 0);
+    let driver = WallDriver::new(clock, source);
     let mut eval = move |model: &[f32]| -> Result<(f32, f32)> {
         eval_trainer.unflatten(model);
         eval_trainer.eval(&eval_x, &eval_y)
@@ -811,7 +849,7 @@ fn run_loop<C: Clock, S: UpdateSource>(
                 if engine.done || engine.round != round {
                     continue;
                 }
-                driver.watch_round(round);
+                driver.watch_round(0, round);
                 folder = if resume && Some(round) == resumed_round {
                     Folder::resume(mq, 0, round, dim)
                 } else {
@@ -840,7 +878,7 @@ fn run_loop<C: Clock, S: UpdateSource>(
                 if !parties.is_empty() {
                     let now = q.now();
                     if let Err(e) =
-                        driver.source.begin_round(round, &global, &parties, &offsets, now, mq)
+                        driver.source.begin_round(0, round, &global, &parties, &offsets, now, mq)
                     {
                         fatal = Some(e);
                         break 'outer;
@@ -997,6 +1035,515 @@ fn mean_metric(mq: &MessageQueue, round: u32) -> f32 {
         return 0.0;
     }
     latest.values().sum::<f32>() / latest.len() as f32
+}
+
+// ---------------------------------------------------------------------------
+// live multi-tenancy: the broker's job mix under the wall-clock driver
+// ---------------------------------------------------------------------------
+
+/// Configuration for a live multi-job trace replay ([`run_live_broker`]).
+#[derive(Clone, Debug)]
+pub struct LiveBrokerConfig {
+    /// Shared cluster container capacity.
+    pub capacity: usize,
+    pub admission: AdmissionConfig,
+    /// Arbitration policy name (see `broker::arbitration::by_name`).
+    pub policy: String,
+    pub seed: u64,
+    /// Update vector length of every job's data plane.
+    pub dim: usize,
+    /// Synthetic local-training pull toward the party target.
+    pub lr: f32,
+    /// Pace the replay on the real wall clock instead of the instant
+    /// clock (slow: trace arrival gaps play out in real time).
+    pub wall: bool,
+    /// Fault injection: abort the aggregator after this many data-plane
+    /// folds *across all jobs*, leaving the MQ intact for a resume.
+    pub kill_after_fuses: Option<u64>,
+}
+
+impl Default for LiveBrokerConfig {
+    fn default() -> Self {
+        LiveBrokerConfig {
+            capacity: 16,
+            admission: AdmissionConfig::default(),
+            policy: "deadline".to_string(),
+            seed: 0xB40C,
+            dim: 32,
+            lr: 0.3,
+            wall: false,
+            kill_after_fuses: None,
+        }
+    }
+}
+
+/// One job's outcome in a live broker run.
+#[derive(Clone, Debug)]
+pub struct LiveJobOutcome {
+    pub job: usize,
+    pub name: String,
+    pub class: SloClass,
+    pub arrival_secs: f64,
+    /// Admission backpressure: seconds queued before the job started.
+    pub queue_wait_secs: f64,
+    /// Strategy round records (§6.2 latency semantics, same as sim).
+    pub records: Vec<RoundRecord>,
+    /// Aggregation container-seconds from the shared cluster ledger.
+    pub container_seconds: f64,
+    pub deployments: u64,
+    /// Emulated update merges (the simulator-comparable count).
+    pub updates_fused: u64,
+    /// Real data-plane folds this incarnation performed for the job.
+    pub updates_folded: u64,
+    /// Absolute instant the job finished (0.0 if it did not).
+    pub makespan_secs: f64,
+    /// Latest published global model for the job.
+    pub final_model: Vec<f32>,
+    /// Set on resumed runs: the round reconstructed from the job's MQ
+    /// state (model-topic offset).
+    pub resumed_round: Option<u32>,
+}
+
+impl LiveJobOutcome {
+    pub fn mean_latency_secs(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.latency_secs).sum::<f64>() / self.records.len() as f64
+    }
+}
+
+/// A whole live broker run's report (one policy over one trace).
+#[derive(Clone, Debug)]
+pub struct LiveBrokerReport {
+    pub policy: String,
+    pub capacity: usize,
+    pub jobs: Vec<LiveJobOutcome>,
+    /// Σ container-seconds / (capacity × span).
+    pub cluster_utilization: f64,
+    pub total_container_seconds: f64,
+    pub span_secs: f64,
+    /// Real data-plane folds across all jobs.
+    pub updates_folded: u64,
+    /// Preemption decisions `(secs, victim task)` in decision order —
+    /// the policy-determinism pin.
+    pub preemptions: Vec<(f64, usize)>,
+    pub wall_secs: f64,
+    /// True when `kill_after_fuses` fired: the run aborted mid-round and
+    /// the MQ holds every job's durable state for a resume.
+    pub crashed: bool,
+}
+
+impl LiveBrokerReport {
+    pub fn mean_queue_wait_secs(&self) -> f64 {
+        if self.jobs.is_empty() {
+            return 0.0;
+        }
+        self.jobs.iter().map(|j| j.queue_wait_secs).sum::<f64>() / self.jobs.len() as f64
+    }
+
+    /// Peak number of jobs simultaneously running.
+    pub fn max_concurrent_jobs(&self) -> usize {
+        crate::broker::peak_concurrency(
+            self.jobs
+                .iter()
+                .map(|o| (o.arrival_secs + o.queue_wait_secs, o.makespan_secs)),
+        )
+    }
+}
+
+/// Replay a [`JobTrace`] on the live platform: jobs arrive at their
+/// trace times, pass the broker's admission control, and share one
+/// emulated cluster whose starts *and preemptions* follow the configured
+/// arbitration policy, while each job's data plane folds real updates
+/// from its own MQ topics with per-fold §5.5 checkpoints and publishes
+/// fused models to its own model topic.
+///
+/// With `resume = true` the runner reconstructs every job's position
+/// from the shared MQ instead of starting fresh: completed rounds come
+/// from each job's model-topic offset, in-progress partial aggregates
+/// from each job's checkpoint slot, and the round topics replay into the
+/// strategies as arrival events. Jobs that were still *queued* for
+/// admission when the previous aggregator died have no MQ state at all —
+/// they are re-admitted from the trace (which is why resume takes the
+/// trace, not just the MQ) rather than silently dropped.
+pub fn run_live_broker(
+    trace: &JobTrace,
+    cfg: &LiveBrokerConfig,
+    mq: &Arc<MessageQueue>,
+    resume: bool,
+) -> Result<LiveBrokerReport> {
+    if arbitration::by_name(&cfg.policy).is_none() {
+        return Err(anyhow!(
+            "unknown arbitration policy {:?}; expected one of {:?}",
+            cfg.policy,
+            arbitration::all_policies()
+        ));
+    }
+    if trace.is_empty() {
+        return Err(anyhow!("live broker replay needs a non-empty trace"));
+    }
+    // One engine per trace job — also the source of the scripted parties'
+    // aggregation weights, so the fleets are generated exactly once.
+    let mut engines: Vec<JobEngine> = Vec::with_capacity(trace.len());
+    let mut weights: Vec<Vec<f32>> = Vec::with_capacity(trace.len());
+    for (job, arr) in trace.arrivals.iter().enumerate() {
+        if crate::coordinator::strategies::by_name(&arr.strategy).is_none() {
+            return Err(anyhow!("job {job}: unknown strategy {:?}", arr.strategy));
+        }
+        let mut engine = JobEngine::new(job, arr.spec.clone(), &arr.strategy, cfg.seed);
+        engine.deferred = true;
+        weights.push(
+            engine
+                .fleet
+                .parties
+                .iter()
+                .map(|p| p.dataset_items as f32)
+                .collect(),
+        );
+        engines.push(engine);
+    }
+    let source = ScriptedParties::multi_job(cfg.seed, cfg.lr, weights);
+    if cfg.wall {
+        let driver = WallDriver::new(WallClock::new(), source);
+        broker_loop(trace, cfg, mq, resume, driver, engines)
+    } else {
+        let driver = WallDriver::new(InstantClock::default(), source);
+        broker_loop(trace, cfg, mq, resume, driver, engines)
+    }
+}
+
+/// The multi-job control loop: the platform's event routing (admission,
+/// per-job engines, shared arbitrated cluster) fused with the live data
+/// plane (per-job folders, checkpoints, model publication), pulled by a
+/// wall driver that watches every admitted job's topics.
+fn broker_loop<C: Clock, S: UpdateSource>(
+    trace: &JobTrace,
+    cfg: &LiveBrokerConfig,
+    mq: &Arc<MessageQueue>,
+    resume: bool,
+    mut driver: WallDriver<C, S>,
+    mut engines: Vec<JobEngine>,
+) -> Result<LiveBrokerReport> {
+    let dim = cfg.dim.max(1);
+    let policy =
+        arbitration::by_name(&cfg.policy).expect("validated by run_live_broker");
+    let mut cluster = Cluster::new(ClusterConfig {
+        capacity: cfg.capacity.max(1),
+        ..Default::default()
+    });
+    cluster.set_policy(policy);
+    let mut ctrl = AdmissionController::new(cfg.admission.clone());
+    let mut q = EventQueue::new();
+    let wall_start = Instant::now();
+
+    let mut globals: Vec<Arc<Vec<f32>>> = Vec::with_capacity(trace.len());
+    let mut folders: Vec<Folder> = Vec::with_capacity(trace.len());
+    let mut folded: Vec<u64> = vec![0; trace.len()];
+    let mut resumed_rounds: Vec<Option<u32>> = vec![None; trace.len()];
+    let mut skip_broadcast: Vec<Option<u32>> = vec![None; trace.len()];
+    for (job, arr) in trace.arrivals.iter().enumerate() {
+        let engine = &mut engines[job];
+        let demand = arr.spec.workload.n_agg(arr.spec.n_parties) as usize;
+        ctrl.register(job, demand, arr.class);
+        cluster.set_job_weight(job, arr.class.weight());
+        let init = init_model(dim, job_seed(cfg.seed, job));
+        // §5.5 resume, per job: completed rounds = the job's model-topic
+        // offset; the current global = the last published model; queued
+        // jobs (offset 0, empty topics) replay from scratch — their
+        // admission happens again through the trace's JobArrival events.
+        let mut global = init;
+        if resume {
+            let completed = mq.end_offset(&mq::model_topic(job));
+            if completed > 0 {
+                if let Some(m) = mq.fetch(&mq::model_topic(job), completed - 1, 1).first()
+                {
+                    if let Some(d) = m.payload.data() {
+                        global = d.to_vec();
+                    }
+                }
+            }
+            let start_round = (completed as u32).min(arr.spec.rounds);
+            resumed_rounds[job] = Some(start_round);
+            skip_broadcast[job] = Some(start_round);
+            if start_round >= arr.spec.rounds {
+                engine.done = true;
+            } else {
+                engine.round = start_round;
+                // fast-forward the engine's rng stream past completed
+                // rounds so re-delivered parties publish on the original
+                // schedule (see the single-job resume notes)
+                let model_bytes = engine.spec.workload.model.size_bytes();
+                let t_wait = engine.spec.t_wait_secs;
+                for _ in 0..start_round {
+                    let _ = engine.estimate();
+                    let _ = engine
+                        .fleet
+                        .arrival_offsets(model_bytes, t_wait, &mut engine.rng);
+                }
+            }
+        }
+        globals.push(Arc::new(global));
+        folders.push(Folder::fresh(dim));
+        q.schedule_at(secs(arr.at_secs), EventKind::JobArrival { job });
+    }
+
+    let mut kill = cfg.kill_after_fuses;
+    let mut crashed = false;
+    let mut fatal: Option<anyhow::Error> = None;
+    let mut tick_scheduled = false;
+
+    let mut safety: u64 = 0;
+    'outer: while let Some((_, ev)) = driver.next_event(&mut q, mq) {
+        safety += 1;
+        debug_assert!(safety < 500_000_000, "runaway live broker run");
+        // `touched` = the job whose strategy may have completed a round
+        // in this dispatch (mirrors `Platform::poll_round_completion`).
+        let touched: Option<usize> = match ev {
+            EventKind::JobArrival { job } => {
+                // resume: a job whose rounds all completed before the
+                // kill needs no admission (it would never release)
+                if !engines[job].done {
+                    let now = q.now();
+                    for j in ctrl.arrive(job, now) {
+                        q.schedule_at(
+                            now,
+                            EventKind::RoundStart {
+                                job: j,
+                                round: engines[j].round,
+                            },
+                        );
+                    }
+                }
+                None
+            }
+            EventKind::RoundStart { job, round } => {
+                if engines[job].done || engines[job].round != round {
+                    continue;
+                }
+                driver.watch_round(job, round);
+                folders[job] = if resume && resumed_rounds[job] == Some(round) {
+                    Folder::resume(mq, job, round, dim)
+                } else {
+                    Folder::fresh(dim)
+                };
+                let offsets =
+                    engines[job].start_round(&mut q, &mut cluster, mq, ArrivalMode::External);
+                // resumed round: re-deliver only the parties missing from
+                // the topic log (logged updates replay from the MQ)
+                let parties: Vec<usize> = if skip_broadcast[job].take() == Some(round) {
+                    let logged: std::collections::HashSet<usize> = mq
+                        .fetch(&mq::update_topic(job, round), 0, usize::MAX)
+                        .iter()
+                        .map(|m| m.party)
+                        .collect();
+                    (0..engines[job].spec.n_parties)
+                        .filter(|p| !logged.contains(p))
+                        .collect()
+                } else {
+                    (0..engines[job].spec.n_parties).collect()
+                };
+                if !parties.is_empty() {
+                    let now = q.now();
+                    if let Err(e) = driver.source.begin_round(
+                        job,
+                        round,
+                        &globals[job],
+                        &parties,
+                        &offsets,
+                        now,
+                        mq,
+                    ) {
+                        fatal = Some(e);
+                        break 'outer;
+                    }
+                }
+                if !tick_scheduled {
+                    tick_scheduled = true;
+                    q.schedule_in(cluster.cfg.delta_tick, EventKind::SchedTick);
+                }
+                None
+            }
+            EventKind::UpdateArrival { job, round, party } => {
+                engines[job].handle_update(
+                    &mut q,
+                    &mut cluster,
+                    mq,
+                    round,
+                    party,
+                    ArrivalMode::External,
+                );
+                Some(job)
+            }
+            EventKind::TimerAlert { job, round } => {
+                engines[job].on_timer(&mut q, &mut cluster, mq, round);
+                Some(job)
+            }
+            EventKind::ContainerDone { container } => {
+                match cluster.advance(&mut q, container) {
+                    Some(note) => {
+                        let task = match &note {
+                            Notification::Deployed { task }
+                            | Notification::WorkItemDone { task }
+                            | Notification::WorkDrained { task }
+                            | Notification::TaskExited { task }
+                            | Notification::TaskPreempted { task } => *task,
+                        };
+                        let job = cluster.job_of(task);
+                        let fold_now = matches!(
+                            note,
+                            Notification::WorkItemDone { .. }
+                                | Notification::WorkDrained { .. }
+                        );
+                        engines[job].on_note(&mut q, &mut cluster, mq, &note);
+                        if fold_now
+                            && folders[job].catch_up(
+                                mq,
+                                job,
+                                engines[job].round,
+                                q.now(),
+                                &mut kill,
+                                &mut folded[job],
+                            ) == FoldOutcome::Killed
+                        {
+                            crashed = true;
+                            break 'outer;
+                        }
+                        Some(job)
+                    }
+                    None => None,
+                }
+            }
+            EventKind::Custom { tag } => {
+                let task = tag as usize;
+                let job = cluster.job_of(task);
+                engines[job].on_linger(&mut q, &mut cluster, mq, task);
+                Some(job)
+            }
+            EventKind::SchedTick => {
+                cluster.on_tick(&mut q);
+                tick_scheduled = false;
+                if !engines.iter().all(|e| e.done) {
+                    tick_scheduled = true;
+                    q.schedule_in(cluster.cfg.delta_tick, EventKind::SchedTick);
+                }
+                None
+            }
+            EventKind::RoundTimeout { .. } => None,
+        };
+        // round completion for the touched job: fold the stragglers,
+        // publish the fused model to the job's own topic, GC, advance
+        let Some(job) = touched else { continue };
+        let Some(rec) = engines[job].take_completed() else {
+            continue;
+        };
+        let round = rec.round;
+        if folders[job].catch_up(mq, job, round, q.now(), &mut kill, &mut folded[job])
+            == FoldOutcome::Killed
+        {
+            crashed = true;
+            break 'outer;
+        }
+        let fused_model = folders[job].finalize(engines[job].spec.algorithm(), &globals[job]);
+        mq.produce(
+            &mq::model_topic(job),
+            Message {
+                party: 0,
+                round,
+                weight: folders[job].agg.weight,
+                enqueued_at: q.now(),
+                payload: Payload::Inline(fused_model.clone()),
+            },
+        );
+        mq.clear_checkpoint(&mq::checkpoint_slot(job, round));
+        mq.drop_topic(&mq::update_topic(job, round));
+        if round > 0 {
+            mq.drop_topic(&mq::update_topic(job, round - 1));
+        }
+        globals[job] = Arc::new(fused_model);
+        let now = q.now();
+        let finished = engines[job].finish_round(&mut q, &mut cluster, mq, rec);
+        if finished {
+            driver.unwatch(job);
+            // freed admission demand releases queued jobs (backpressure)
+            for j in ctrl.finish(job, now) {
+                q.schedule_at(
+                    now,
+                    EventKind::RoundStart {
+                        job: j,
+                        round: engines[j].round,
+                    },
+                );
+            }
+        }
+    }
+
+    let party_failure = driver.source.failure();
+    driver.source.shutdown(mq);
+    let all_done = engines.iter().all(|e| e.done);
+    if all_done {
+        // final GC: straggler-recreated round topics. A crashed run keeps
+        // everything — resume needs the logs.
+        for (job, e) in engines.iter().enumerate() {
+            for r in 0..e.spec.rounds {
+                mq.drop_topic(&mq::update_topic(job, r));
+            }
+        }
+    }
+    if let Some(e) = fatal {
+        return Err(e);
+    }
+    if !all_done && !crashed {
+        let stuck: Vec<String> = engines
+            .iter()
+            .filter(|e| !e.done)
+            .map(|e| format!("job {} in round {}", e.params.job, e.round))
+            .collect();
+        let why = party_failure.map(|m| format!(": {m}")).unwrap_or_default();
+        return Err(anyhow!(
+            "live broker run stalled ({}){why}",
+            stuck.join(", ")
+        ));
+    }
+    let now = q.now();
+    let span = to_secs(now);
+    let total_cs = cluster.total_container_seconds(now);
+    let jobs: Vec<LiveJobOutcome> = trace
+        .arrivals
+        .iter()
+        .enumerate()
+        .map(|(job, arr)| LiveJobOutcome {
+            job,
+            name: arr.spec.name.clone(),
+            class: arr.class,
+            arrival_secs: arr.at_secs,
+            queue_wait_secs: ctrl.queue_wait_secs(job),
+            records: engines[job].records.clone(),
+            container_seconds: cluster.container_seconds(job, now),
+            deployments: cluster.job_deployments(job),
+            updates_fused: cluster.job_work_done(job),
+            updates_folded: folded[job],
+            makespan_secs: to_secs(engines[job].finished_at),
+            final_model: globals[job].as_ref().clone(),
+            resumed_round: resumed_rounds[job],
+        })
+        .collect();
+    Ok(LiveBrokerReport {
+        policy: cfg.policy.clone(),
+        capacity: cfg.capacity,
+        jobs,
+        cluster_utilization: total_cs / (cfg.capacity.max(1) as f64 * span.max(1e-9)),
+        total_container_seconds: total_cs,
+        span_secs: span,
+        updates_folded: folded.iter().sum(),
+        preemptions: cluster
+            .preemption_log()
+            .iter()
+            .map(|&(t, task)| (to_secs(t), task))
+            .collect(),
+        wall_secs: wall_start.elapsed().as_secs_f64(),
+        crashed,
+    })
 }
 
 #[cfg(test)]
@@ -1250,5 +1797,238 @@ mod tests {
         assert_eq!(a, b);
         let c = synth_update(&g, 9, 3, 0.3);
         assert_ne!(a, c, "parties must differ");
+    }
+
+    // -----------------------------------------------------------------
+    // live multi-tenancy
+    // -----------------------------------------------------------------
+
+    use crate::broker::workload::JobArrival;
+
+    fn arrival(i: usize, at: f64, parties: usize, strategy: &str, class: SloClass) -> JobArrival {
+        let mut spec = FlJobSpec::new(
+            Workload::mlp_live(),
+            FleetKind::ActiveHomogeneous,
+            parties,
+            2,
+        );
+        spec.name = format!("t{i}");
+        JobArrival {
+            at_secs: at,
+            spec,
+            strategy: strategy.to_string(),
+            class,
+        }
+    }
+
+    fn two_job_trace() -> JobTrace {
+        JobTrace::from_arrivals(vec![
+            arrival(0, 0.0, 3, "jit", SloClass::Standard),
+            arrival(1, 0.5, 4, "jit", SloClass::Premium),
+        ])
+    }
+
+    fn broker_cfg(policy: &str) -> LiveBrokerConfig {
+        LiveBrokerConfig {
+            capacity: 8,
+            policy: policy.to_string(),
+            seed: 0x11FE,
+            dim: 24,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn live_broker_runs_concurrent_jobs_with_independent_data_planes() {
+        let trace = two_job_trace();
+        let mq = Arc::new(MessageQueue::new());
+        let rep = run_live_broker(&trace, &broker_cfg("deadline"), &mq, false)
+            .expect("live broker run");
+        assert_eq!(rep.jobs.len(), 2);
+        assert!(!rep.crashed);
+        for (job, o) in rep.jobs.iter().enumerate() {
+            assert_eq!(o.records.len(), 2, "job {job} rounds");
+            assert_eq!(o.final_model.len(), 24, "job {job} model");
+            assert!(o.container_seconds > 0.0, "job {job} busy");
+            assert!(o.deployments > 0, "job {job} deployments");
+            assert_eq!(
+                mq.end_offset(&mq::model_topic(job)),
+                2,
+                "job {job} publishes one model per round to its own topic"
+            );
+        }
+        // every update folded exactly once: 3·2 + 4·2
+        assert_eq!(rep.updates_folded, 14);
+        assert!(
+            rep.max_concurrent_jobs() >= 2,
+            "jobs 0.5s apart with multi-second spans must overlap"
+        );
+        // the two jobs train different models (per-job synth seeds)
+        assert_ne!(rep.jobs[0].final_model, rep.jobs[1].final_model);
+        assert!(rep.cluster_utilization > 0.0);
+        assert!(rep.span_secs > 0.0);
+    }
+
+    /// Contended trace: an always-on job hogs the single container, so a
+    /// JIT job's FORCE_TRIGGER *must* preempt — exercising the
+    /// policy-driven victim selection on every policy.
+    fn contended_trace() -> JobTrace {
+        JobTrace::from_arrivals(vec![
+            arrival(0, 0.0, 3, "eager-ao", SloClass::BestEffort),
+            arrival(1, 0.2, 3, "jit", SloClass::Premium),
+        ])
+    }
+
+    #[test]
+    fn live_broker_preemption_is_deterministic_per_policy_and_starves_nobody() {
+        for policy in arbitration::all_policies() {
+            let mut cfg = broker_cfg(policy);
+            cfg.capacity = 1; // one slot: preemption is the only way in
+            let trace = contended_trace();
+            let a = run_live_broker(&trace, &cfg, &Arc::new(MessageQueue::new()), false)
+                .unwrap_or_else(|e| panic!("{policy}: {e:#}"));
+            let b = run_live_broker(&trace, &cfg, &Arc::new(MessageQueue::new()), false)
+                .unwrap_or_else(|e| panic!("{policy} rerun: {e:#}"));
+            // no-starvation: every job finishes all rounds under every
+            // policy even when preemption is the only path to capacity
+            for o in &a.jobs {
+                assert_eq!(o.records.len(), 2, "{policy}: job {} starved", o.job);
+            }
+            assert!(
+                !a.preemptions.is_empty(),
+                "{policy}: the contended trace must preempt at least once"
+            );
+            // policy determinism: same seed + trace ⇒ bit-identical
+            // preemption order and round records
+            assert_eq!(a.preemptions, b.preemptions, "{policy}: preemption order");
+            for (x, y) in a.jobs.iter().zip(&b.jobs) {
+                assert_eq!(x.records.len(), y.records.len());
+                for (r, s) in x.records.iter().zip(&y.records) {
+                    assert_eq!(r.latency_secs.to_bits(), s.latency_secs.to_bits());
+                    assert_eq!(r.complete_secs.to_bits(), s.complete_secs.to_bits());
+                }
+                assert_eq!(x.final_model, y.final_model, "{policy}: model bits");
+            }
+        }
+    }
+
+    #[test]
+    fn live_broker_kill_resumes_running_and_queued_jobs() {
+        // Three jobs, single-admission budget: job 0 runs while jobs 1–2
+        // queue. Kill the aggregator mid-fold of job 0's first round —
+        // jobs 1–2 have NO MQ state at that instant. Resume must (a)
+        // rebuild job 0 from its topic log + checkpoint to bit-identical
+        // models and (b) re-admit the queued jobs from the trace instead
+        // of dropping them.
+        let trace = JobTrace::from_arrivals(vec![
+            arrival(0, 0.0, 3, "jit", SloClass::Standard),
+            arrival(1, 0.3, 3, "jit", SloClass::Standard),
+            arrival(2, 0.6, 4, "jit", SloClass::BestEffort),
+        ]);
+        let mut cfg = broker_cfg("deadline");
+        cfg.admission = AdmissionConfig {
+            budget: 64,
+            max_jobs: 1,
+        };
+
+        let mq_full = Arc::new(MessageQueue::new());
+        let full = run_live_broker(&trace, &cfg, &mq_full, false).expect("uninterrupted");
+        assert!(!full.crashed);
+        assert!(
+            full.jobs[1].queue_wait_secs > 0.0 && full.jobs[2].queue_wait_secs > 0.0,
+            "max_jobs 1 must serialize admission"
+        );
+
+        let mq_kill = Arc::new(MessageQueue::new());
+        let mut cfg_kill = cfg.clone();
+        cfg_kill.kill_after_fuses = Some(2);
+        let dead = run_live_broker(&trace, &cfg_kill, &mq_kill, false).expect("killed");
+        assert!(dead.crashed, "fault injection must trip");
+        assert_eq!(dead.updates_folded, 2);
+        assert_eq!(
+            mq_kill.end_offset(&mq::model_topic(0)),
+            0,
+            "job 0 died before publishing round 0"
+        );
+        for job in 1..3 {
+            assert!(
+                dead.jobs[job].records.is_empty(),
+                "job {job} must still be queued at the kill"
+            );
+            assert_eq!(mq_kill.end_offset(&mq::model_topic(job)), 0);
+        }
+
+        let resumed = run_live_broker(&trace, &cfg, &mq_kill, true).expect("resumed");
+        assert!(!resumed.crashed);
+        assert_eq!(resumed.jobs[0].resumed_round, Some(0));
+        for job in 0..3 {
+            assert_eq!(
+                mq_kill.end_offset(&mq::model_topic(job)),
+                2,
+                "job {job} must complete all rounds after resume (queued \
+                 jobs re-admitted from the trace)"
+            );
+            for round in 0..2usize {
+                let a = mq_full.fetch(&mq::model_topic(job), round, 1);
+                let b = mq_kill.fetch(&mq::model_topic(job), round, 1);
+                assert_eq!(
+                    a[0].payload.data().unwrap(),
+                    b[0].payload.data().unwrap(),
+                    "job {job} round {round} model must be bit-identical"
+                );
+            }
+            assert_eq!(resumed.jobs[job].final_model, full.jobs[job].final_model);
+        }
+        assert_eq!(
+            dead.updates_folded + resumed.updates_folded,
+            full.updates_folded,
+            "every update folds exactly once across the two incarnations"
+        );
+    }
+
+    #[test]
+    fn live_broker_resume_of_a_finished_run_is_a_noop() {
+        let trace = two_job_trace();
+        let cfg = broker_cfg("wfs");
+        let mq = Arc::new(MessageQueue::new());
+        run_live_broker(&trace, &cfg, &mq, false).expect("run");
+        let r = run_live_broker(&trace, &cfg, &mq, true).expect("resume");
+        assert!(!r.crashed);
+        assert_eq!(r.updates_folded, 0, "nothing refolds");
+        for (job, o) in r.jobs.iter().enumerate() {
+            assert!(o.records.is_empty());
+            assert_eq!(o.resumed_round, Some(2));
+            assert_eq!(mq.end_offset(&mq::model_topic(job)), 2, "job {job}");
+        }
+    }
+
+    #[test]
+    fn live_broker_rejects_bad_inputs() {
+        let trace = two_job_trace();
+        let mut cfg = broker_cfg("bogus");
+        assert!(run_live_broker(&trace, &cfg, &Arc::new(MessageQueue::new()), false).is_err());
+        cfg.policy = "deadline".into();
+        let empty = JobTrace::default();
+        assert!(run_live_broker(&empty, &cfg, &Arc::new(MessageQueue::new()), false).is_err());
+    }
+
+    #[test]
+    fn live_broker_wall_clock_smoke() {
+        // real wall pacing, scaled down to stay fast
+        let mut trace = two_job_trace();
+        for a in &mut trace.arrivals {
+            a.spec.workload.base_epoch_secs = 0.08;
+            a.spec.rounds = 1;
+        }
+        trace.arrivals[1].at_secs = 0.1;
+        let mut cfg = broker_cfg("least-slack");
+        cfg.wall = true;
+        let rep = run_live_broker(&trace, &cfg, &Arc::new(MessageQueue::new()), false)
+            .expect("wall run");
+        assert!(!rep.crashed);
+        assert!(rep.wall_secs > 0.0);
+        for o in &rep.jobs {
+            assert_eq!(o.records.len(), 1);
+        }
     }
 }

@@ -4,8 +4,10 @@
 //!
 //! One event-driven implementation, two time regimes ([`driver`]):
 //! [`platform`] pulls the per-job [`driver::JobEngine`]s with the virtual
-//! driver (simulation grids, multi-tenant broker), [`live`] pulls one
-//! engine with the wall-clock driver over real MQ traffic. The five
+//! driver (simulation grids, multi-tenant broker), [`live`] pulls them
+//! with the wall-clock driver over real MQ traffic — one engine
+//! (`live::run_live`) or a whole broker-admitted job mix sharing one
+//! arbitrated cluster (`live::run_live_broker`). The five
 //! [`strategies`] run unmodified under both.
 
 pub mod driver;

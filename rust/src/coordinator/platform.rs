@@ -71,6 +71,9 @@ pub struct RunStats {
     pub total_container_seconds: f64,
     /// The admission controller handed back (queue-wait metrics).
     pub admission: Option<AdmissionController>,
+    /// Preemption decisions `(secs, victim task)` in decision order —
+    /// deterministic per (seed, trace, policy).
+    pub preemptions: Vec<(f64, usize)>,
 }
 
 impl Platform {
@@ -287,6 +290,12 @@ impl Platform {
             end_secs: to_secs(now),
             total_container_seconds: self.cluster.total_container_seconds(now),
             admission: self.admission.take(),
+            preemptions: self
+                .cluster
+                .preemption_log()
+                .iter()
+                .map(|&(t, task)| (to_secs(t), task))
+                .collect(),
         };
         (reports, stats)
     }

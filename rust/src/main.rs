@@ -11,6 +11,11 @@
 //!   * `zoo`       — list zoo models.
 //!   * `run`       — run an FL job spec (JSON) on the live platform with
 //!                   real XLA aggregation.
+//!   * `live`      — wall-clock run of any strategy on the zero-copy MQ.
+//!   * `broker`    — multi-tenant arbitration sweep in simulated time.
+//!   * `live-broker` — the broker's job mix on the live platform
+//!                   (admission + policy-arbitrated preemption + per-job
+//!                   data planes).
 
 use fljit::util::cli::Args;
 

@@ -1,0 +1,213 @@
+//! Sim/live **multi-job** equivalence: the wall-clock driver with a
+//! mocked instant clock, scripted parties and per-job topic watching must
+//! produce the *same* multi-tenant schedule as the virtual-time platform
+//! for the same trace, seed and arbitration policy.
+//!
+//! Both regimes run identical `JobEngine` + `Strategy` + admission +
+//! arbitration code; what differs is only event delivery — the simulator
+//! pre-schedules every arrival, while the live path publishes real
+//! updates into per-job MQ topics and the driver ingests them back as
+//! arrival events. If anything diverges — arrival times, cross-job event
+//! routing, admission release order, policy-driven preemption — these
+//! bit-for-bit comparisons break.
+
+use std::sync::Arc;
+
+use fljit::broker::admission::AdmissionConfig;
+use fljit::broker::arbitration;
+use fljit::broker::workload::{poisson_trace, JobTrace, TraceConfig};
+use fljit::broker::{run_trace, BrokerConfig};
+use fljit::coordinator::live::{run_live_broker, LiveBrokerConfig};
+use fljit::mq::MessageQueue;
+
+fn trace(seed: u64) -> JobTrace {
+    poisson_trace(&TraceConfig {
+        n_jobs: 4,
+        mean_interarrival_secs: 8.0,
+        party_mix: vec![(4, 0.6), (8, 0.4)],
+        intermittent_frac: 0.25,
+        rounds_lo: 2,
+        rounds_hi: 2,
+        t_wait_secs: 60.0,
+        seed,
+        ..Default::default()
+    })
+}
+
+fn assert_equivalent(policy: &str, seed: u64, capacity: usize, budget: usize) {
+    let t = trace(seed);
+    let admission = AdmissionConfig {
+        budget,
+        max_jobs: 0,
+    };
+    let sim = run_trace(
+        &t,
+        &BrokerConfig {
+            capacity,
+            admission: admission.clone(),
+            policy: policy.to_string(),
+            seed,
+            with_solo: false,
+        },
+    );
+    let live = run_live_broker(
+        &t,
+        &LiveBrokerConfig {
+            capacity,
+            admission,
+            policy: policy.to_string(),
+            seed,
+            dim: 16,
+            ..Default::default()
+        },
+        &Arc::new(MessageQueue::new()),
+        false,
+    )
+    .unwrap_or_else(|e| panic!("{policy}: live broker run: {e:#}"));
+
+    assert_eq!(sim.jobs.len(), live.jobs.len(), "{policy}: job count");
+    for (s, l) in sim.jobs.iter().zip(&live.jobs) {
+        let job = s.job;
+        assert_eq!(s.name, l.name, "{policy} job {job}");
+        assert_eq!(
+            s.report.rounds.len(),
+            l.records.len(),
+            "{policy} job {job}: round count"
+        );
+        for (a, b) in s.report.rounds.iter().zip(&l.records) {
+            assert_eq!(a.round, b.round, "{policy} job {job}: round index");
+            assert_eq!(
+                a.latency_secs.to_bits(),
+                b.latency_secs.to_bits(),
+                "{policy} job {job} round {}: latency {} vs {}",
+                a.round,
+                a.latency_secs,
+                b.latency_secs
+            );
+            assert_eq!(
+                a.last_arrival_secs.to_bits(),
+                b.last_arrival_secs.to_bits(),
+                "{policy} job {job} round {}: last arrival",
+                a.round
+            );
+            assert_eq!(
+                a.complete_secs.to_bits(),
+                b.complete_secs.to_bits(),
+                "{policy} job {job} round {}: completion",
+                a.round
+            );
+        }
+        assert_eq!(
+            s.queue_wait_secs.to_bits(),
+            l.queue_wait_secs.to_bits(),
+            "{policy} job {job}: admission queue wait {} vs {}",
+            s.queue_wait_secs,
+            l.queue_wait_secs
+        );
+        assert_eq!(
+            s.report.updates_fused, l.updates_fused,
+            "{policy} job {job}: emulated merge count"
+        );
+        assert_eq!(
+            s.report.deployments, l.deployments,
+            "{policy} job {job}: deployments"
+        );
+        assert_eq!(
+            s.report.makespan_secs.to_bits(),
+            l.makespan_secs.to_bits(),
+            "{policy} job {job}: makespan {} vs {}",
+            s.report.makespan_secs,
+            l.makespan_secs
+        );
+        // the live path additionally folded every expected update for real
+        let expected: u64 =
+            (t.arrivals[job].spec.n_parties as u64) * t.arrivals[job].spec.rounds as u64;
+        assert_eq!(l.updates_folded, expected, "{policy} job {job}: real folds");
+    }
+    assert_eq!(
+        sim.span_secs.to_bits(),
+        live.span_secs.to_bits(),
+        "{policy}: span {} vs {}",
+        sim.span_secs,
+        live.span_secs
+    );
+    assert_eq!(
+        sim.total_container_seconds.to_bits(),
+        live.total_container_seconds.to_bits(),
+        "{policy}: total container-seconds"
+    );
+    assert_eq!(
+        sim.preemptions, live.preemptions,
+        "{policy}: preemption decision order"
+    );
+}
+
+#[test]
+fn deadline_multijob_matches_sim() {
+    assert_equivalent("deadline", 0xA1, 8, 64);
+}
+
+#[test]
+fn least_slack_multijob_matches_sim() {
+    assert_equivalent("least-slack", 0xA2, 8, 64);
+}
+
+#[test]
+fn wfs_multijob_matches_sim() {
+    assert_equivalent("wfs", 0xA3, 8, 64);
+}
+
+#[test]
+fn scarce_capacity_with_backpressure_matches_sim() {
+    // a single-slot admission budget serializes jobs (queue waits > 0 on
+    // both sides, bit-identical) and a scarce cluster forces arbitrated
+    // starts — the harshest cross-job interleaving
+    for policy in arbitration::all_policies() {
+        assert_equivalent(policy, 0xA4, 2, 1);
+    }
+}
+
+#[test]
+fn concurrent_jobs_overlap_in_both_regimes() {
+    let t = trace(0xA5);
+    let sim = run_trace(
+        &t,
+        &BrokerConfig {
+            capacity: 8,
+            admission: AdmissionConfig {
+                budget: 64,
+                max_jobs: 0,
+            },
+            policy: "deadline".to_string(),
+            seed: 0xA5,
+            with_solo: false,
+        },
+    );
+    let live = run_live_broker(
+        &t,
+        &LiveBrokerConfig {
+            capacity: 8,
+            admission: AdmissionConfig {
+                budget: 64,
+                max_jobs: 0,
+            },
+            policy: "deadline".to_string(),
+            seed: 0xA5,
+            dim: 16,
+            ..Default::default()
+        },
+        &Arc::new(MessageQueue::new()),
+        false,
+    )
+    .expect("live run");
+    assert!(
+        sim.max_concurrent_jobs() >= 2,
+        "trace must overlap jobs (sim peak {})",
+        sim.max_concurrent_jobs()
+    );
+    assert_eq!(
+        sim.max_concurrent_jobs(),
+        live.max_concurrent_jobs(),
+        "peak concurrency"
+    );
+}
