@@ -15,8 +15,12 @@
 //! Flags: --parties N --rounds N --minibatches {2,4,8,16,32}
 //!        --alpha A --seed S --backend {xla|synth}
 
-use fljit::coordinator::live::{run_live, LiveConfig, PartyBackend};
+use fljit::coordinator::job::FlJobSpec;
+use fljit::coordinator::live::PartyBackend;
+use fljit::coordinator::session::{JobOutcome, Session};
+use fljit::party::FleetKind;
 use fljit::util::json::Json;
+use fljit::workloads::Workload;
 
 fn main() {
     fljit::util::logging::init_from_env();
@@ -41,30 +45,42 @@ fn main() {
         println!("(artifacts not available — using the synthetic-training backend)");
         PartyBackend::SynthThreads
     };
-    let base = LiveConfig {
-        strategy: "jit".to_string(),
-        n_parties: args.get_usize("parties", 8),
-        rounds: args.get_u64("rounds", if want_xla { 40 } else { 6 }) as u32,
-        minibatches: args.get_usize("minibatches", 8),
-        lr: args.get_f64("lr", if want_xla { 0.08 } else { 0.3 }) as f32,
-        alpha: args.get_f64("alpha", 0.5),
-        seed: args.get_u64("seed", 42),
-        backend,
-        ..Default::default()
+    let n_parties = args.get_usize("parties", 8);
+    let rounds = args.get_u64("rounds", if want_xla { 40 } else { 6 }) as u32;
+    let minibatches = args.get_usize("minibatches", 8);
+    let lr = args.get_f64("lr", if want_xla { 0.08 } else { 0.3 }) as f32;
+    let alpha = args.get_f64("alpha", 0.5);
+    let seed = args.get_u64("seed", 42);
+
+    // one wall-clock session per strategy, identical job spec
+    let run_strategy = |strategy: &str| -> JobOutcome {
+        let spec = FlJobSpec::new(
+            Workload::mlp_live(),
+            FleetKind::ActiveHomogeneous,
+            n_parties,
+            rounds,
+        );
+        let mut s = Session::wall()
+            .backend(backend)
+            .minibatches(minibatches)
+            .lr(lr)
+            .alpha(alpha)
+            .seed(seed);
+        let h = s.job(spec, strategy);
+        match s.run() {
+            Ok(rep) => rep.job(h).clone(),
+            Err(e) => {
+                eprintln!("live run failed: {e:#}");
+                std::process::exit(1);
+            }
+        }
     };
 
     println!(
-        "federated_train: {} parties × {} rounds under 'jit', live MQ path",
-        base.n_parties, base.rounds
+        "federated_train: {n_parties} parties × {rounds} rounds under 'jit', live MQ path"
     );
 
-    let jit = match run_live(&base) {
-        Ok(r) => r,
-        Err(e) => {
-            eprintln!("live run failed: {e:#}");
-            std::process::exit(1);
-        }
-    };
+    let jit = run_strategy("jit");
 
     println!("\nround  latency(ms)  complete(s)");
     for r in &jit.records {
@@ -96,11 +112,7 @@ fn main() {
     }
 
     println!("\nre-running the identical job under 'eager-ao'…");
-    let ao = run_live(&LiveConfig {
-        strategy: "eager-ao".to_string(),
-        ..base.clone()
-    })
-    .expect("always-on run");
+    let ao = run_strategy("eager-ao");
 
     let savings = (1.0 - jit.container_seconds / ao.container_seconds.max(1e-12)) * 100.0;
     println!(

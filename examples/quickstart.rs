@@ -11,8 +11,12 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use fljit::coordinator::live::{run_live, LiveConfig, PartyBackend};
+use fljit::coordinator::job::FlJobSpec;
+use fljit::coordinator::live::PartyBackend;
+use fljit::coordinator::session::{Session, SessionEvent};
 use fljit::coordinator::timeline;
+use fljit::party::FleetKind;
+use fljit::workloads::Workload;
 
 fn main() {
     fljit::util::logging::init_from_env();
@@ -33,19 +37,40 @@ fn main() {
         Some("xla") => PartyBackend::XlaThreads,
         _ => PartyBackend::SynthThreads,
     };
-    let cfg = LiveConfig {
-        strategy: args.get_or("strategy", "jit").to_string(),
-        n_parties: args.get_usize("parties", 4),
-        rounds: args.get_u64("rounds", 6) as u32,
-        minibatches: 4,
-        backend,
-        seed,
-        ..Default::default()
-    };
-    match run_live(&cfg) {
+    let spec = FlJobSpec::new(
+        Workload::mlp_live(),
+        FleetKind::ActiveHomogeneous,
+        args.get_usize("parties", 4),
+        args.get_u64("rounds", 6) as u32,
+    );
+    let mut session = Session::wall()
+        .backend(backend)
+        .minibatches(4)
+        .seed(seed);
+    let job = session.job(spec, args.get_or("strategy", "jit"));
+    // the streaming observer channel: rounds print as they fuse, while
+    // the session runs on a worker thread
+    let events = session.events();
+    let worker = std::thread::spawn(move || session.run());
+    for ev in events.iter() {
+        if let SessionEvent::RoundFused {
+            round,
+            latency_secs,
+            at_secs,
+            ..
+        } = ev
+        {
+            println!(
+                "round {round} fused at t={at_secs:.2}s (agg latency {:.1} ms)",
+                latency_secs * 1e3
+            );
+        }
+    }
+    match worker.join().expect("session thread") {
         Ok(report) => {
-            println!("round  agg-latency(ms)  complete(s)");
-            for r in &report.records {
+            let o = report.job(job);
+            println!("\nround  agg-latency(ms)  complete(s)");
+            for r in &o.records {
                 println!(
                     "{:>5}  {:>15.1}  {:>11.2}",
                     r.round,
@@ -53,7 +78,7 @@ fn main() {
                     r.complete_secs
                 );
             }
-            for s in &report.stats {
+            for s in &o.stats {
                 println!(
                     "round {}: eval_loss={:.4} eval_acc={:.3}",
                     s.round, s.eval_loss, s.eval_acc
@@ -62,7 +87,8 @@ fn main() {
             println!(
                 "\naggregator busy {:.3} container-seconds over {:.2} s wall — \
                  the rest was JIT-deferred and free for other jobs.",
-                report.container_seconds, report.wall_secs
+                o.container_seconds,
+                report.summary().wall_secs
             );
         }
         Err(e) => {

@@ -8,9 +8,10 @@
 //! and a small-grid smoke under `cargo test`).
 
 use crate::broker::admission::AdmissionConfig;
+use crate::broker::arbitration;
 use crate::broker::workload::{poisson_trace, JobTrace, TraceConfig};
-use crate::broker::{self, arbitration, BrokerConfig};
 use crate::coordinator::job::FlJobSpec;
+use crate::coordinator::session::Session;
 use crate::party::FleetKind;
 use crate::util::cli::Args;
 use crate::util::json::Json;
@@ -135,17 +136,19 @@ pub fn run_sweep(cfg: &SweepConfig) -> (Vec<Table>, Json) {
         ],
     );
     for &policy in arbitration::all_policies() {
-        let bcfg = BrokerConfig {
-            capacity: cfg.capacity,
-            admission: AdmissionConfig {
+        let rep = Session::sim()
+            .trace(&trace)
+            .policy(policy)
+            .admission(AdmissionConfig {
                 budget: admission_budget(cfg),
                 max_jobs: 0,
-            },
-            policy: policy.to_string(),
-            seed: cfg.seed,
-            with_solo: cfg.with_solo,
-        };
-        let rep = broker::run_trace(&trace, &bcfg);
+            })
+            .capacity(cfg.capacity)
+            .seed(cfg.seed)
+            .solo_baselines(cfg.with_solo)
+            .run()
+            .unwrap_or_else(|e| panic!("policy {policy}: {e:#}"));
+        let sum = rep.summary();
         let mut t = Table::new(
             &format!("broker sweep — policy '{policy}'"),
             &[
@@ -159,29 +162,29 @@ pub fn run_sweep(cfg: &SweepConfig) -> (Vec<Table>, Json) {
                 "cs",
             ],
         );
-        for o in &rep.jobs {
+        for o in &sum.jobs {
             t.row(vec![
                 o.name.clone(),
                 o.class.name().to_string(),
-                o.report.parties.to_string(),
+                o.parties.to_string(),
                 format!("{:.1}", o.arrival_secs),
                 format!("{:.1}", o.queue_wait_secs),
-                format!("{:.3}", o.report.mean_latency_secs()),
+                format!("{:.3}", o.mean_latency_secs()),
                 match o.latency_inflation() {
                     Some(v) => format!("{v:.2}x"),
                     None => "-".to_string(),
                 },
-                format!("{:.1}", o.report.container_seconds),
+                format!("{:.1}", o.container_seconds),
             ]);
         }
         tables.push(t);
         summary.row(vec![
             policy.to_string(),
-            format!("{:.1}", rep.cluster_utilization * 100.0),
-            format!("{:.1}", rep.total_container_seconds),
-            rep.max_concurrent_jobs().to_string(),
-            format!("{:.1}", rep.mean_queue_wait_secs()),
-            match rep.mean_latency_inflation() {
+            format!("{:.1}", sum.cluster_utilization * 100.0),
+            format!("{:.1}", sum.total_container_seconds),
+            sum.max_concurrent_jobs().to_string(),
+            format!("{:.1}", sum.mean_queue_wait_secs()),
+            match sum.mean_latency_inflation() {
                 Some(v) => format!("{v:.2}x"),
                 None => "-".to_string(),
             },
@@ -211,7 +214,7 @@ mod tests {
             .as_arr()
             .unwrap()
             .iter()
-            .map(|j| j.get("report").get("container_seconds").as_f64().unwrap())
+            .map(|j| j.get("container_seconds").as_f64().unwrap())
             .collect()
     }
 
@@ -240,7 +243,7 @@ mod tests {
             let jobs = p.get("jobs").as_arr().unwrap();
             assert_eq!(jobs.len(), 8, "every job reported");
             for j in jobs {
-                let rounds = j.get("report").get("rounds").as_u64().unwrap();
+                let rounds = j.get("rounds").as_u64().unwrap();
                 assert!(rounds >= 2, "job must finish its rounds");
             }
             assert!(p.get("cluster_utilization").as_f64().unwrap() > 0.0);
@@ -250,7 +253,7 @@ mod tests {
             // the pinned 10k-party job is present
             let top = jobs
                 .iter()
-                .map(|j| j.get("report").get("parties").as_u64().unwrap())
+                .map(|j| j.get("parties").as_u64().unwrap())
                 .max()
                 .unwrap();
             assert_eq!(top, 10_000);

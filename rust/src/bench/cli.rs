@@ -2,7 +2,7 @@
 
 use crate::bench::figs::{self, LatencyGrid, ResourceGrid};
 use crate::coordinator::job::FlJobSpec;
-use crate::coordinator::platform::run_scenario;
+use crate::coordinator::session::{Session, SessionEvent};
 use crate::coordinator::timeline;
 use crate::model::zoo;
 use crate::party::FleetKind;
@@ -92,12 +92,21 @@ fn cmd_simulate(args: &Args) -> i32 {
     let mut spec = FlJobSpec::new(workload, fleet, parties, rounds);
     spec.t_wait_secs = args.get_f64("twait", crate::workloads::T_WAIT_SECS);
     spec.report_prob = args.get_f64("report-prob", 1.0);
-    let r = run_scenario(&spec, &strategy, args.get_u64("seed", 7));
+    let mut s = Session::sim().seed(args.get_u64("seed", 7));
+    let h = s.job(spec, &strategy);
+    let rep = match s.run() {
+        Ok(rep) => rep,
+        Err(e) => {
+            eprintln!("simulate failed: {e:#}");
+            return 1;
+        }
+    };
+    let r = rep.job(h);
     let mut t = Table::new(
         &format!("simulate {} / {} / {}p / {}", r.workload, r.fleet, parties, strategy),
         &["metric", "value"],
     );
-    t.row(vec!["rounds".into(), r.rounds.len().to_string()]);
+    t.row(vec!["rounds".into(), r.records.len().to_string()]);
     t.row(vec![
         "mean agg latency (s)".into(),
         format!("{:.3}", r.mean_latency_secs()),
@@ -115,7 +124,7 @@ fn cmd_simulate(args: &Args) -> i32 {
     t.row(vec!["updates fused".into(), r.updates_fused.to_string()]);
     t.row(vec!["makespan (s)".into(), format!("{:.1}", r.makespan_secs)]);
     t.print();
-    crate::bench::dump("simulate", &r.to_json());
+    crate::bench::dump("simulate", &rep.to_json());
     0
 }
 
@@ -272,13 +281,22 @@ fn cmd_run(args: &Args) -> i32 {
         return 1;
     };
     let strategy = args.get_or("strategy", "jit").to_string();
-    let r = run_scenario(&spec, &strategy, args.get_u64("seed", 7));
-    println!("{}", r.to_json().pretty());
-    0
+    let mut s = Session::sim().seed(args.get_u64("seed", 7));
+    s.job(spec, &strategy);
+    match s.run() {
+        Ok(rep) => {
+            println!("{}", rep.to_json().pretty());
+            0
+        }
+        Err(e) => {
+            eprintln!("run failed: {e:#}");
+            1
+        }
+    }
 }
 
 fn cmd_live(args: &Args) -> i32 {
-    use crate::coordinator::live::{run_live, LiveConfig, PartyBackend};
+    use crate::coordinator::live::PartyBackend;
     use crate::coordinator::strategies;
     let strategy = args.get_or("strategy", "jit").to_string();
     if strategy == "all" {
@@ -322,57 +340,91 @@ fn cmd_live(args: &Args) -> i32 {
     };
     let mut workload = crate::workloads::Workload::mlp_live();
     workload.base_epoch_secs = args.get_f64("epoch-secs", workload.base_epoch_secs);
-    let cfg = LiveConfig {
-        strategy,
-        n_parties: args.get_usize("parties", 4),
-        rounds: args.get_u64("rounds", 5) as u32,
-        seed: args.get_u64("seed", 42),
-        dim: args.get_usize("dim", 512),
-        minibatches: args.get_usize("minibatches", 4),
-        lr: args.get_f64("lr", 0.3) as f32,
-        alpha: args.get_f64("alpha", 0.5),
+    let spec = FlJobSpec::new(
         workload,
-        backend,
-        ..Default::default()
-    };
-    match run_live(&cfg) {
-        Ok(report) => {
-            let mut t = Table::new(
-                &format!("live federated run ({} strategy, MQ-backed)", report.strategy),
-                &["round", "agg lat (ms)", "complete (s)"],
-            );
-            for r in &report.records {
-                t.row(vec![
-                    r.round.to_string(),
-                    format!("{:.1}", r.latency_secs * 1e3),
-                    format!("{:.2}", r.complete_secs),
-                ]);
-            }
-            t.print();
-            for s in &report.stats {
-                println!(
-                    "round {}: train_loss={:.4} eval_loss={:.4} eval_acc={:.3}",
-                    s.round, s.train_loss, s.eval_loss, s.eval_acc
-                );
-            }
-            println!(
-                "busy={:.3}cs  deployments={}  fused={}  mean_lat={:.1}ms  wall={:.2}s",
-                report.container_seconds,
-                report.deployments,
-                report.updates_fused,
-                report.mean_latency_secs() * 1e3,
-                report.wall_secs
-            );
-            if report.t_pair_secs > 0.0 {
-                println!("t_pair (XLA fusion path, §5.4): {:.3}ms", report.t_pair_secs * 1e3);
-            }
-            0
+        FleetKind::ActiveHomogeneous,
+        args.get_usize("parties", 4),
+        args.get_u64("rounds", 5) as u32,
+    );
+    let mut s = match backend {
+        PartyBackend::Scripted => Session::live(),
+        PartyBackend::SynthThreads | PartyBackend::XlaThreads => {
+            Session::wall().backend(backend)
         }
-        Err(e) => {
-            eprintln!("live run failed: {e:#}");
-            1
+    };
+    s = s
+        .seed(args.get_u64("seed", 42))
+        .dim(args.get_usize("dim", 512))
+        .minibatches(args.get_usize("minibatches", 4))
+        .lr(args.get_f64("lr", 0.3) as f32)
+        .alpha(args.get_f64("alpha", 0.5));
+    let h = s.job(spec, &strategy);
+    // consume the session's event stream live from a worker thread: each
+    // round prints the moment its model is fused, not after the run
+    let events = s.events();
+    let worker = std::thread::spawn(move || s.run());
+    for ev in events.iter() {
+        match ev {
+            SessionEvent::RoundFused {
+                round,
+                latency_secs,
+                at_secs,
+                ..
+            } => println!(
+                "round {round} fused at t={at_secs:.2}s  (agg latency {:.1} ms)",
+                latency_secs * 1e3
+            ),
+            SessionEvent::Preempted { task, at_secs } => {
+                println!("task {task} preempted at t={at_secs:.2}s")
+            }
+            SessionEvent::Crashed { at_secs } => {
+                println!("aggregator crashed at t={at_secs:.2}s (MQ state kept)")
+            }
+            _ => {}
         }
     }
+    let report = match worker.join() {
+        Ok(Ok(report)) => report,
+        Ok(Err(e)) => {
+            eprintln!("live run failed: {e:#}");
+            return 1;
+        }
+        Err(_) => {
+            eprintln!("live run panicked");
+            return 1;
+        }
+    };
+    let o = report.job(h);
+    let mut t = Table::new(
+        &format!("live federated run ({} strategy, MQ-backed)", o.strategy),
+        &["round", "agg lat (ms)", "complete (s)"],
+    );
+    for r in &o.records {
+        t.row(vec![
+            r.round.to_string(),
+            format!("{:.1}", r.latency_secs * 1e3),
+            format!("{:.2}", r.complete_secs),
+        ]);
+    }
+    t.print();
+    for s in &o.stats {
+        println!(
+            "round {}: train_loss={:.4} eval_loss={:.4} eval_acc={:.3}",
+            s.round, s.train_loss, s.eval_loss, s.eval_acc
+        );
+    }
+    println!(
+        "busy={:.3}cs  deployments={}  fused={}  mean_lat={:.1}ms  wall={:.2}s",
+        o.container_seconds,
+        o.deployments,
+        o.updates_folded,
+        o.mean_latency_secs() * 1e3,
+        report.summary().wall_secs
+    );
+    if o.t_pair_secs > 0.0 {
+        println!("t_pair (XLA fusion path, §5.4): {:.3}ms", o.t_pair_secs * 1e3);
+    }
+    0
 }
 
 fn cmd_zoo() -> i32 {

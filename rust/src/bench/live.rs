@@ -7,8 +7,10 @@
 //! time. Dumped to `BENCH_live.json` via `fljit live --strategy all` (or
 //! the scripted variant under `cargo test`).
 
-use crate::coordinator::live::{run_live, LiveConfig, PartyBackend};
+use crate::coordinator::job::FlJobSpec;
+use crate::coordinator::session::{Session, SessionEvent};
 use crate::coordinator::strategies;
+use crate::party::FleetKind;
 use crate::util::json::Json;
 use crate::util::table::Table;
 use crate::workloads::Workload;
@@ -54,27 +56,29 @@ impl LiveSweepConfig {
         }
     }
 
-    fn live_config(&self, strategy: &str) -> LiveConfig {
+    fn session(&self, strategy: &str) -> Session {
         let mut workload = Workload::mlp_live();
         workload.base_epoch_secs = self.epoch_secs;
-        LiveConfig {
-            strategy: strategy.to_string(),
-            n_parties: self.n_parties,
-            rounds: self.rounds,
-            seed: self.seed,
-            dim: self.dim,
+        let spec = FlJobSpec::new(
             workload,
-            backend: if self.wall {
-                PartyBackend::SynthThreads
-            } else {
-                PartyBackend::Scripted
-            },
-            ..Default::default()
-        }
+            FleetKind::ActiveHomogeneous,
+            self.n_parties,
+            self.rounds,
+        );
+        let mut s = if self.wall {
+            Session::wall()
+        } else {
+            Session::live()
+        };
+        s = s.seed(self.seed).dim(self.dim);
+        s.job(spec, strategy);
+        s
     }
 }
 
 /// Run every strategy on the identical live job; table + JSON rows.
+/// Round latencies and fold counts come from the streaming
+/// [`SessionEvent`] channel rather than post-hoc report scraping.
 pub fn run_sweep(cfg: &LiveSweepConfig) -> (Table, Json) {
     let mut t = Table::new(
         &format!(
@@ -95,25 +99,48 @@ pub fn run_sweep(cfg: &LiveSweepConfig) -> (Table, Json) {
     );
     let mut rows = Vec::new();
     for name in strategies::all_strategies() {
-        let lc = cfg.live_config(name);
-        match run_live(&lc) {
-            Ok(r) => {
+        let mut s = cfg.session(name);
+        let events = s.events();
+        match s.run() {
+            Ok(rep) => {
+                // the §6.2 metrics, read off the event stream as the run
+                // produced them
+                let mut fused_rounds = 0u64;
+                let mut latency_sum = 0.0f64;
+                let mut folds = 0u64;
+                for ev in events.try_iter() {
+                    match ev {
+                        SessionEvent::RoundFused { latency_secs, .. } => {
+                            fused_rounds += 1;
+                            latency_sum += latency_secs;
+                        }
+                        SessionEvent::CheckpointWritten { folds: n, .. } => folds += n,
+                        _ => {}
+                    }
+                }
+                let mean_latency = if fused_rounds > 0 {
+                    latency_sum / fused_rounds as f64
+                } else {
+                    0.0
+                };
+                let o = rep.single();
+                let sum = rep.summary();
                 t.row(vec![
                     name.to_string(),
-                    format!("{:.3}", r.container_seconds),
-                    format!("{:.1}", r.mean_latency_secs() * 1e3),
-                    r.deployments.to_string(),
-                    r.updates_fused.to_string(),
-                    format!("{:.2}", r.wall_secs),
+                    format!("{:.3}", o.container_seconds),
+                    format!("{:.1}", mean_latency * 1e3),
+                    o.deployments.to_string(),
+                    folds.to_string(),
+                    format!("{:.2}", sum.wall_secs),
                 ]);
                 rows.push(Json::obj(vec![
                     ("strategy", Json::str(name)),
-                    ("busy_secs", Json::num(r.container_seconds)),
-                    ("mean_latency_secs", Json::num(r.mean_latency_secs())),
-                    ("deployments", Json::num(r.deployments as f64)),
-                    ("updates_fused", Json::num(r.updates_fused as f64)),
-                    ("wall_secs", Json::num(r.wall_secs)),
-                    ("rounds", Json::num(r.records.len() as f64)),
+                    ("busy_secs", Json::num(o.container_seconds)),
+                    ("mean_latency_secs", Json::num(mean_latency)),
+                    ("deployments", Json::num(o.deployments as f64)),
+                    ("updates_fused", Json::num(folds as f64)),
+                    ("wall_secs", Json::num(sum.wall_secs)),
+                    ("rounds", Json::num(fused_rounds as f64)),
                 ]));
             }
             Err(e) => {

@@ -13,15 +13,13 @@
 //! `BENCH_live_broker.json` via `fljit live-broker` and the tiny-grid CI
 //! smoke; the sim-side analogue is `bench::broker` (`BENCH_broker.json`).
 
-use std::sync::Arc;
-
 use anyhow::{Context, Result};
 
 use crate::broker::admission::AdmissionConfig;
 use crate::broker::arbitration;
 use crate::broker::workload::{poisson_trace, JobTrace, TraceConfig};
-use crate::coordinator::live::{run_live_broker, LiveBrokerConfig, LiveBrokerReport};
-use crate::mq::MessageQueue;
+use crate::coordinator::live::PartyBackend;
+use crate::coordinator::session::{Session, SessionEvent};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::util::table::Table;
@@ -93,19 +91,23 @@ impl LiveBrokerSweepConfig {
         }
     }
 
-    fn broker_config(&self, policy: &str) -> LiveBrokerConfig {
-        LiveBrokerConfig {
-            capacity: self.capacity,
-            admission: AdmissionConfig {
+    fn session(&self, trace: &JobTrace, policy: &str) -> Session {
+        let s = if self.wall {
+            // scripted even at --jobs 1: the sweep is a *trace replay*,
+            // wall mode only changes the pacing, never the party model
+            Session::wall().backend(PartyBackend::Scripted)
+        } else {
+            Session::live()
+        };
+        s.trace(trace)
+            .policy(policy)
+            .admission(AdmissionConfig {
                 budget: self.budget.max(1),
                 max_jobs: 0,
-            },
-            policy: policy.to_string(),
-            seed: self.seed,
-            dim: self.dim,
-            wall: self.wall,
-            ..Default::default()
-        }
+            })
+            .capacity(self.capacity)
+            .seed(self.seed)
+            .dim(self.dim)
     }
 }
 
@@ -131,57 +133,10 @@ pub fn build_trace(cfg: &LiveBrokerSweepConfig) -> Result<JobTrace> {
     }))
 }
 
-fn report_json(rep: &LiveBrokerReport) -> Json {
-    Json::obj(vec![
-        ("policy", Json::str(&rep.policy)),
-        ("capacity", Json::num(rep.capacity as f64)),
-        ("cluster_utilization", Json::num(rep.cluster_utilization)),
-        (
-            "total_container_seconds",
-            Json::num(rep.total_container_seconds),
-        ),
-        ("span_secs", Json::num(rep.span_secs)),
-        ("updates_folded", Json::num(rep.updates_folded as f64)),
-        ("preemptions", Json::num(rep.preemptions.len() as f64)),
-        (
-            "max_concurrent_jobs",
-            Json::num(rep.max_concurrent_jobs() as f64),
-        ),
-        (
-            "mean_queue_wait_secs",
-            Json::num(rep.mean_queue_wait_secs()),
-        ),
-        (
-            "jobs",
-            Json::Arr(
-                rep.jobs
-                    .iter()
-                    .map(|o| {
-                        Json::obj(vec![
-                            ("job", Json::num(o.job as f64)),
-                            ("name", Json::str(&o.name)),
-                            ("class", Json::str(o.class.name())),
-                            ("arrival_secs", Json::num(o.arrival_secs)),
-                            ("queue_wait_secs", Json::num(o.queue_wait_secs)),
-                            ("rounds", Json::num(o.records.len() as f64)),
-                            (
-                                "mean_latency_secs",
-                                Json::num(o.mean_latency_secs()),
-                            ),
-                            ("busy_secs", Json::num(o.container_seconds)),
-                            ("deployments", Json::num(o.deployments as f64)),
-                            ("updates_folded", Json::num(o.updates_folded as f64)),
-                            ("makespan_secs", Json::num(o.makespan_secs)),
-                        ])
-                    })
-                    .collect(),
-            ),
-        ),
-    ])
-}
-
 /// Replay the trace under the requested policy (or all of them); one
-/// per-policy table, a cross-policy summary, and the JSON dump rows.
+/// per-policy table, a cross-policy summary, and the JSON dump rows
+/// (the unified `Report::to_json` schema). Preemption counts come from
+/// the streaming [`SessionEvent`] channel.
 pub fn run_sweep(cfg: &LiveBrokerSweepConfig) -> Result<(Vec<Table>, Json)> {
     let policies: Vec<String> = if cfg.policy == "all" {
         arbitration::all_policies()
@@ -218,9 +173,14 @@ pub fn run_sweep(cfg: &LiveBrokerSweepConfig) -> Result<(Vec<Table>, Json)> {
         ],
     );
     for policy in &policies {
-        let mq = Arc::new(MessageQueue::new());
-        let rep = run_live_broker(&trace, &cfg.broker_config(policy), &mq, false)
-            .with_context(|| format!("policy {policy}"))?;
+        let mut s = cfg.session(&trace, policy);
+        let events = s.events();
+        let rep = s.run().with_context(|| format!("policy {policy}"))?;
+        let preempts = events
+            .try_iter()
+            .filter(|e| matches!(e, SessionEvent::Preempted { .. }))
+            .count();
+        let sum = rep.summary();
         let mut t = Table::new(
             &format!("live broker — policy '{policy}'"),
             &[
@@ -234,7 +194,7 @@ pub fn run_sweep(cfg: &LiveBrokerSweepConfig) -> Result<(Vec<Table>, Json)> {
                 "folds",
             ],
         );
-        for o in &rep.jobs {
+        for o in &sum.jobs {
             t.row(vec![
                 o.name.clone(),
                 o.class.name().to_string(),
@@ -249,14 +209,14 @@ pub fn run_sweep(cfg: &LiveBrokerSweepConfig) -> Result<(Vec<Table>, Json)> {
         tables.push(t);
         summary.row(vec![
             policy.clone(),
-            format!("{:.1}", rep.cluster_utilization * 100.0),
-            format!("{:.1}", rep.total_container_seconds),
-            rep.max_concurrent_jobs().to_string(),
-            rep.preemptions.len().to_string(),
-            format!("{:.1}", rep.mean_queue_wait_secs()),
-            rep.updates_folded.to_string(),
+            format!("{:.1}", sum.cluster_utilization * 100.0),
+            format!("{:.1}", sum.total_container_seconds),
+            sum.max_concurrent_jobs().to_string(),
+            preempts.to_string(),
+            format!("{:.1}", sum.mean_queue_wait_secs()),
+            sum.updates_folded.to_string(),
         ]);
-        policies_json.push(report_json(&rep));
+        policies_json.push(rep.to_json());
     }
     tables.push(summary);
     let json = Json::obj(vec![

@@ -56,10 +56,9 @@ pub mod workload;
 
 use crate::coordinator::platform::{Platform, PlatformConfig};
 use crate::metrics::JobReport;
-use crate::sim::secs;
 use crate::util::json::Json;
 
-use admission::{AdmissionConfig, AdmissionController};
+use admission::AdmissionConfig;
 use workload::{JobArrival, JobTrace};
 
 /// Peak number of simultaneously active jobs given `(start, end)`
@@ -285,8 +284,9 @@ fn solo_seed(seed: u64, job: usize) -> u64 {
     seed ^ (job as u64).wrapping_mul(0x9E3779B9)
 }
 
-/// Uncontended baseline: the same job alone on an amply sized cluster.
-fn solo_mean_latency(arr: &JobArrival, seed: u64, job: usize) -> f64 {
+/// Uncontended baseline: the same job alone on an amply sized cluster
+/// (used by `Session::solo_baselines` and the `run_trace` shim).
+pub(crate) fn solo_mean_latency(arr: &JobArrival, seed: u64, job: usize) -> f64 {
     let mut pcfg = PlatformConfig {
         seed: solo_seed(seed, job),
         ..Default::default()
@@ -301,55 +301,55 @@ fn solo_mean_latency(arr: &JobArrival, seed: u64, job: usize) -> f64 {
 /// Replay `trace` under `cfg`: jobs arrive over time, pass admission
 /// control, and share one cluster whose pending queue is ordered by the
 /// configured arbitration policy.
+#[deprecated(
+    since = "0.3.0",
+    note = "use coordinator::session::Session::sim() with .trace(..) — this shim maps onto it"
+)]
 pub fn run_trace(trace: &JobTrace, cfg: &BrokerConfig) -> BrokerReport {
-    let policy = arbitration::by_name(&cfg.policy)
-        .unwrap_or_else(|| panic!("unknown arbitration policy '{}'", cfg.policy));
-    let mut pcfg = PlatformConfig {
-        seed: cfg.seed,
-        ..Default::default()
-    };
-    pcfg.cluster.capacity = cfg.capacity.max(1);
-    let mut platform = Platform::new(pcfg);
-    let mut ctrl = AdmissionController::new(cfg.admission.clone());
-    for arr in &trace.arrivals {
-        let demand = arr.spec.workload.n_agg(arr.spec.n_parties) as usize;
-        let job = platform.submit_at(arr.spec.clone(), &arr.strategy, secs(arr.at_secs));
-        ctrl.register(job, demand, arr.class);
-        platform.cluster_mut().set_job_weight(job, arr.class.weight());
+    use crate::coordinator::session::{Report, Session};
+    if trace.is_empty() {
+        // preserved legacy behavior: an empty trace is an empty report,
+        // not an error (Session::run rejects job-less sessions)
+        return BrokerReport {
+            policy: cfg.policy.clone(),
+            capacity: cfg.capacity,
+            jobs: Vec::new(),
+            cluster_utilization: 0.0,
+            total_container_seconds: 0.0,
+            span_secs: 0.0,
+            preemptions: Vec::new(),
+        };
     }
-    platform.cluster_mut().set_policy(policy);
-    platform.set_admission(ctrl);
-    let (reports, stats) = platform.run_with_stats();
-    let ctrl = stats.admission.expect("admission controller returned");
-    let span = stats.end_secs;
-    let util =
-        stats.total_container_seconds / (cfg.capacity.max(1) as f64 * span.max(1e-9));
-    let jobs = reports
-        .into_iter()
-        .enumerate()
-        .map(|(job, report)| {
-            let arr = &trace.arrivals[job];
-            BrokerJobOutcome {
-                job,
-                name: arr.spec.name.clone(),
-                class: arr.class,
-                arrival_secs: arr.at_secs,
-                queue_wait_secs: ctrl.queue_wait_secs(job),
-                solo_mean_latency_secs: cfg
-                    .with_solo
-                    .then(|| solo_mean_latency(arr, cfg.seed, job)),
-                report,
-            }
-        })
-        .collect();
+    let rep = Session::sim()
+        .trace(trace)
+        .policy(&cfg.policy)
+        .admission(cfg.admission.clone())
+        .capacity(cfg.capacity)
+        .seed(cfg.seed)
+        .solo_baselines(cfg.with_solo)
+        .run()
+        .unwrap_or_else(|e| panic!("broker trace replay failed: {e:#}"));
+    let (Report::Sim(sum) | Report::Live(sum) | Report::Wall(sum)) = rep;
     BrokerReport {
-        policy: cfg.policy.clone(),
+        policy: sum.policy,
         capacity: cfg.capacity,
-        jobs,
-        cluster_utilization: util,
-        total_container_seconds: stats.total_container_seconds,
-        span_secs: span,
-        preemptions: stats.preemptions,
+        jobs: sum
+            .jobs
+            .into_iter()
+            .map(|o| BrokerJobOutcome {
+                job: o.job,
+                name: o.name.clone(),
+                class: o.class,
+                arrival_secs: o.arrival_secs,
+                queue_wait_secs: o.queue_wait_secs,
+                solo_mean_latency_secs: o.solo_mean_latency_secs,
+                report: o.to_job_report(),
+            })
+            .collect(),
+        cluster_utilization: sum.cluster_utilization,
+        total_container_seconds: sum.total_container_seconds,
+        span_secs: sum.span_secs,
+        preemptions: sum.preemptions,
     }
 }
 
@@ -372,8 +372,71 @@ mod tests {
         })
     }
 
+    use crate::coordinator::session::Session;
+
     #[test]
     fn broker_run_completes_every_job() {
+        let trace = tiny_trace(5);
+        let rep = Session::sim()
+            .trace(&trace)
+            .policy("deadline")
+            .admission(AdmissionConfig {
+                budget: 32,
+                max_jobs: 0,
+            })
+            .capacity(8)
+            .seed(77)
+            .solo_baselines(true)
+            .run()
+            .expect("sim trace replay");
+        let sum = rep.summary();
+        assert_eq!(sum.jobs.len(), 4);
+        for o in &sum.jobs {
+            assert_eq!(
+                o.records.len() as u32,
+                trace.arrivals[o.job].spec.rounds,
+                "job {} must finish all rounds",
+                o.name
+            );
+            assert!(o.latency_inflation().is_some());
+        }
+        assert!(sum.cluster_utilization > 0.0);
+        assert!(sum.span_secs > 0.0);
+        assert!(sum.max_concurrent_jobs() >= 1);
+    }
+
+    #[test]
+    fn tight_budget_queues_jobs_and_releases_them() {
+        let trace = tiny_trace(9);
+        // budget 1 admits one job at a time: later arrivals must wait
+        let rep = Session::sim()
+            .trace(&trace)
+            .policy("deadline")
+            .admission(AdmissionConfig {
+                budget: 1,
+                max_jobs: 1,
+            })
+            .capacity(8)
+            .seed(78)
+            .run()
+            .expect("sim trace replay");
+        let sum = rep.summary();
+        assert_eq!(sum.jobs.len(), 4);
+        for o in &sum.jobs {
+            assert_eq!(o.records.len() as u32, trace.arrivals[o.job].spec.rounds);
+        }
+        assert!(
+            sum.jobs.iter().any(|o| o.queue_wait_secs > 1.0),
+            "serialized admission must produce queue waits"
+        );
+        assert_eq!(sum.max_concurrent_jobs(), 1, "max_jobs quota of 1");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn run_trace_shim_matches_the_session_facade() {
+        // the one sanctioned in-tree run_trace call: pin that the shim's
+        // legacy BrokerReport projection matches the Session results
         let trace = tiny_trace(5);
         let cfg = BrokerConfig {
             capacity: 8,
@@ -381,50 +444,32 @@ mod tests {
                 budget: 32,
                 max_jobs: 0,
             },
-            policy: "deadline".into(),
+            policy: "wfs".into(),
             seed: 77,
-            with_solo: true,
-        };
-        let rep = run_trace(&trace, &cfg);
-        assert_eq!(rep.jobs.len(), 4);
-        for o in &rep.jobs {
-            assert_eq!(
-                o.report.rounds.len() as u32,
-                trace.arrivals[o.job].spec.rounds,
-                "job {} must finish all rounds",
-                o.name
-            );
-            assert!(o.latency_inflation().is_some());
-        }
-        assert!(rep.cluster_utilization > 0.0);
-        assert!(rep.span_secs > 0.0);
-        assert!(rep.max_concurrent_jobs() >= 1);
-    }
-
-    #[test]
-    fn tight_budget_queues_jobs_and_releases_them() {
-        let trace = tiny_trace(9);
-        // budget 1 admits one job at a time: later arrivals must wait
-        let cfg = BrokerConfig {
-            capacity: 8,
-            admission: AdmissionConfig {
-                budget: 1,
-                max_jobs: 1,
-            },
-            policy: "deadline".into(),
-            seed: 78,
             with_solo: false,
         };
-        let rep = run_trace(&trace, &cfg);
-        assert_eq!(rep.jobs.len(), 4);
-        for o in &rep.jobs {
-            assert_eq!(o.report.rounds.len() as u32, trace.arrivals[o.job].spec.rounds);
+        let shim = run_trace(&trace, &cfg);
+        let rep = Session::sim()
+            .trace(&trace)
+            .policy("wfs")
+            .admission(cfg.admission.clone())
+            .capacity(8)
+            .seed(77)
+            .run()
+            .expect("session run");
+        let sum = rep.summary();
+        assert_eq!(shim.jobs.len(), sum.jobs.len());
+        for (a, b) in shim.jobs.iter().zip(&sum.jobs) {
+            assert_eq!(a.report.rounds.len(), b.records.len());
+            assert_eq!(a.queue_wait_secs.to_bits(), b.queue_wait_secs.to_bits());
+            assert_eq!(a.report.updates_fused, b.updates_fused);
+            assert_eq!(a.report.makespan_secs.to_bits(), b.makespan_secs.to_bits());
         }
-        assert!(
-            rep.jobs.iter().any(|o| o.queue_wait_secs > 1.0),
-            "serialized admission must produce queue waits"
+        assert_eq!(
+            shim.total_container_seconds.to_bits(),
+            sum.total_container_seconds.to_bits()
         );
-        assert_eq!(rep.max_concurrent_jobs(), 1, "max_jobs quota of 1");
+        assert_eq!(shim.preemptions, sum.preemptions);
     }
 
     #[test]

@@ -31,6 +31,15 @@
 //! restarted aggregator derives the current round and global model from
 //! that log.
 //!
+//! **Entry point**: construct runs through
+//! [`Session`](crate::coordinator::session::Session) (`::live()` for the
+//! instant clock, `::wall()` for the real one). This module houses the
+//! execution machinery — party sources, the fold-and-checkpoint data
+//! plane, and `session_loop`, the one multi-job control loop of which
+//! a single live job is simply the N = 1 case. The old free functions
+//! (`run_live`, `run_live_on`, `run_live_broker`) survive one PR as
+//! `#[deprecated]` shims delegating to `Session`.
+//!
 //! **Multi-tenancy** (§6.3 economics): [`run_live_broker`] replays a
 //! whole [`JobTrace`] under the *same* wall-clock driver — jobs arrive
 //! at their trace times, pass the broker's admission control, share one
@@ -51,15 +60,14 @@ use std::time::Instant;
 use anyhow::{anyhow, Context, Result};
 
 use crate::broker::admission::{AdmissionConfig, AdmissionController};
-use crate::broker::workload::JobTrace;
+use crate::broker::workload::{JobArrival, JobTrace};
 use crate::broker::{arbitration, SloClass};
 use crate::cluster::{Cluster, ClusterConfig, Notification};
 use crate::coordinator::driver::{
-    ArrivalMode, Clock, Driver, InstantClock, JobEngine, UpdateSource, WallClock, WallDriver,
-    WallTimer,
+    ArrivalMode, Clock, Driver, JobEngine, UpdateSource, WallClock, WallDriver, WallTimer,
 };
 use crate::coordinator::job::FlJobSpec;
-use crate::coordinator::platform::scenario_capacity;
+use crate::coordinator::session::{EventSink, JobOutcome, Report, RunSummary, Session, SessionEvent};
 use crate::fusion::{Aggregator, Algorithm};
 use crate::metrics::RoundRecord;
 use crate::mq::{self, CheckpointState, Message, MessageQueue, Payload};
@@ -248,7 +256,10 @@ impl Folder {
 
     /// Fold every not-yet-consumed message in the round topic, saving a
     /// checkpoint after each fold. `budget` is the fault-injection
-    /// countdown; `fused` counts this run's real folds.
+    /// countdown; `fused` counts this run's real folds. Folds performed
+    /// by this pass are reported through `sink` as one
+    /// [`SessionEvent::CheckpointWritten`].
+    #[allow(clippy::too_many_arguments)]
     fn catch_up(
         &mut self,
         mq: &MessageQueue,
@@ -257,18 +268,20 @@ impl Folder {
         now: Time,
         budget: &mut Option<u64>,
         fused: &mut u64,
+        sink: &EventSink,
     ) -> FoldOutcome {
         let topic = mq::update_topic(job, round);
         let slot = mq::checkpoint_slot(job, round);
-        loop {
+        let before = *fused;
+        let outcome = 'fold: loop {
             let batch = mq.fetch(&topic, self.consumed_to, 64);
             if batch.is_empty() {
-                return FoldOutcome::Ok;
+                break FoldOutcome::Ok;
             }
             for m in &batch {
                 if let Some(b) = budget {
                     if *b == 0 {
-                        return FoldOutcome::Killed;
+                        break 'fold FoldOutcome::Killed;
                     }
                     *b -= 1;
                 }
@@ -288,7 +301,16 @@ impl Folder {
                     },
                 );
             }
+        };
+        if *fused > before {
+            sink.emit(SessionEvent::CheckpointWritten {
+                job,
+                round,
+                folds: *fused - before,
+                at_secs: to_secs(now),
+            });
         }
+        outcome
     }
 
     fn finalize(&self, alg: Algorithm, prev_global: &[f32]) -> Vec<f32> {
@@ -320,7 +342,8 @@ fn job_seed(seed: u64, job: usize) -> u64 {
 }
 
 /// Deterministic parties: publish synthetic updates at exactly the
-/// engine's fleet-drawn offsets. Paired with an [`InstantClock`] this
+/// engine's fleet-drawn offsets. Paired with an
+/// [`InstantClock`](crate::coordinator::driver::InstantClock) this
 /// replays the simulator's arrival process through the real MQ path —
 /// for one job (`new`) or a whole broker job mix (`multi_job`).
 pub struct ScriptedParties {
@@ -505,10 +528,10 @@ impl ThreadParties {
     /// PJRT runtime + trainer on its non-IID shard, publishes its update
     /// when the epoch actually finishes, and reports its training loss to
     /// the metrics topic.
-    pub fn xla(
+    pub(crate) fn xla(
         mq: &Arc<MessageQueue>,
         timer: WallTimer,
-        cfg: &LiveConfig,
+        cfg: &XlaSessionConfig,
     ) -> Result<ThreadParties> {
         use crate::party::synth_party_dataset;
         use crate::runtime::{Runtime, Trainer, MLP_CLASSES, MLP_IN};
@@ -655,61 +678,81 @@ fn live_spec(cfg: &LiveConfig) -> FlJobSpec {
     }
 }
 
-/// Run a live job on a fresh private MQ (no resume possible afterwards —
-/// use [`run_live_on`] with a shared MQ for the checkpoint/resume paths).
+/// Run a live job on a fresh private MQ (no resume possible afterwards).
+#[deprecated(
+    since = "0.3.0",
+    note = "use coordinator::session::Session::live()/::wall() — this shim maps onto it"
+)]
 pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
+    // no #[allow] needed: deprecation warnings are suppressed inside
+    // items that are themselves deprecated
     run_live_on(cfg, &Arc::new(MessageQueue::new()), false)
 }
 
-/// Run a live job against an explicit MQ. With `resume = true` the runner
-/// reconstructs its position from the MQ instead of starting at round 0:
-/// completed rounds = the model-topic offset, the current global = the
-/// last published model, and the in-progress round's partial aggregate =
-/// the §5.5 checkpoint slot; the round topic's log replays into the
-/// strategy as arrival events.
+/// Run a live job against an explicit MQ; `resume = true` reconstructs
+/// the job's position from it (§5.5).
+#[deprecated(
+    since = "0.3.0",
+    note = "use coordinator::session::Session::live()/::wall() with .on(mq).resume(..)"
+)]
 pub fn run_live_on(
     cfg: &LiveConfig,
     mq: &Arc<MessageQueue>,
     resume: bool,
 ) -> Result<LiveReport> {
-    if crate::coordinator::strategies::by_name(&cfg.strategy).is_none() {
-        return Err(anyhow!(
-            "unknown strategy {:?}; expected one of {:?}",
-            cfg.strategy,
-            crate::coordinator::strategies::all_strategies()
-        ));
-    }
-    let spec = live_spec(cfg);
-    let engine = JobEngine::new(0, spec, &cfg.strategy, cfg.seed);
-    let weights: Vec<f32> = engine
-        .fleet
-        .parties
-        .iter()
-        .map(|p| p.dataset_items as f32)
-        .collect();
-    match cfg.backend {
-        PartyBackend::Scripted => {
-            let source = ScriptedParties::new(cfg.seed, cfg.lr, weights);
-            let driver = WallDriver::new(InstantClock::default(), source);
-            run_loop(cfg, mq, engine, driver, resume, init_model(cfg.dim, cfg.seed), None)
+    let mut s = match cfg.backend {
+        PartyBackend::Scripted => Session::live(),
+        PartyBackend::SynthThreads | PartyBackend::XlaThreads => {
+            Session::wall().backend(cfg.backend)
         }
-        PartyBackend::SynthThreads => {
-            let clock = WallClock::new();
-            let source = ThreadParties::synth(mq, clock.timer, cfg.seed, cfg.lr, &weights);
-            let driver = WallDriver::new(clock, source);
-            run_loop(cfg, mq, engine, driver, resume, init_model(cfg.dim, cfg.seed), None)
-        }
-        PartyBackend::XlaThreads => run_live_xla(cfg, mq, engine, resume),
-    }
+    };
+    s = s
+        .seed(cfg.seed)
+        .dim(cfg.dim)
+        .lr(cfg.lr)
+        .minibatches(cfg.minibatches)
+        .alpha(cfg.alpha)
+        .kill_after_fuses(cfg.kill_after_fuses)
+        .on(mq)
+        .resume(resume);
+    s.job(live_spec(cfg), &cfg.strategy);
+    let (Report::Sim(mut sum) | Report::Live(mut sum) | Report::Wall(mut sum)) = s.run()?;
+    let o = sum.jobs.swap_remove(0);
+    Ok(LiveReport {
+        strategy: cfg.strategy.clone(),
+        records: o.records,
+        container_seconds: o.container_seconds,
+        deployments: o.deployments,
+        updates_fused: o.updates_folded,
+        wall_secs: sum.wall_secs,
+        crashed: sum.crashed,
+        resumed_round: o.resumed_round,
+        final_model: o.final_model,
+        stats: o.stats,
+        t_pair_secs: o.t_pair_secs,
+    })
 }
 
-/// XLA backend: real training threads + an aggregator-side eval trainer.
-fn run_live_xla(
-    cfg: &LiveConfig,
+/// XLA wall-session knobs ([`Session`] forwards these from its builder).
+pub(crate) struct XlaSessionConfig {
+    pub(crate) n_parties: usize,
+    pub(crate) minibatches: usize,
+    pub(crate) alpha: f64,
+    pub(crate) seed: u64,
+    pub(crate) lr: f32,
+}
+
+/// XLA backend (single job): real training threads + an aggregator-side
+/// eval trainer, run through the same [`session_loop`] as every other
+/// session — the initial global model is overridden by the trainer's
+/// flattened init, and the §5.4 t_pair calibration attaches to job 0's
+/// outcome.
+pub(crate) fn run_session_xla(
+    mut params: LoopParams<'_>,
     mq: &Arc<MessageQueue>,
-    engine: JobEngine,
-    resume: bool,
-) -> Result<LiveReport> {
+    engines: Vec<JobEngine>,
+    xla: XlaSessionConfig,
+) -> Result<RunSummary> {
     use crate::party::synth_party_dataset;
     use crate::runtime::{Runtime, Trainer, XlaFusion, MLP_CLASSES, MLP_IN};
     let dir = crate::runtime::default_artifact_dir();
@@ -722,7 +765,7 @@ fn run_live_xla(
     let fusion = XlaFusion::new(&rt);
     let t_pair = {
         let spec = crate::model::zoo::mlp_default();
-        let mut rng = Rng::new(cfg.seed ^ 0xCA11B);
+        let mut rng = Rng::new(xla.seed ^ 0xCA11B);
         let a = crate::model::ModelUpdate::random(&spec, &mut rng, 1.0);
         let b = crate::model::ModelUpdate::random(&spec, &mut rng, 1.0);
         let mut acc = a.data.clone();
@@ -733,298 +776,34 @@ fn run_live_xla(
         }
         t0.elapsed().as_secs_f64() / 3.0
     };
-    let init = Trainer::init(&rt, cfg.seed).flatten();
-    let mut eval_trainer = Trainer::init(&rt, cfg.seed);
+    params.init_override = Some(Trainer::init(&rt, xla.seed).flatten());
+    let mut eval_trainer = Trainer::init(&rt, xla.seed);
     let (eval_x, eval_y) =
-        synth_party_dataset(usize::MAX - 1, 256, MLP_IN, MLP_CLASSES, 50.0, cfg.seed);
+        synth_party_dataset(usize::MAX - 1, 256, MLP_IN, MLP_CLASSES, 50.0, xla.seed);
     let clock = WallClock::new();
-    let source = ThreadParties::xla(mq, clock.timer, cfg)?;
-    let driver = WallDriver::new(clock, source);
+    let source = ThreadParties::xla(mq, clock.timer, &xla)?;
     let mut eval = move |model: &[f32]| -> Result<(f32, f32)> {
         eval_trainer.unflatten(model);
         eval_trainer.eval(&eval_x, &eval_y)
     };
-    let mut report = run_loop(cfg, mq, engine, driver, resume, init, Some(&mut eval))?;
-    report.t_pair_secs = t_pair;
-    Ok(report)
+    let mut summary = session_loop(
+        params,
+        mq,
+        WallDriver::new(clock, source),
+        engines,
+        Some(&mut eval),
+    )?;
+    summary.jobs[0].t_pair_secs = t_pair;
+    Ok(summary)
 }
 
-type EvalFn<'a> = &'a mut dyn FnMut(&[f32]) -> Result<(f32, f32)>;
+pub(crate) type EvalFn<'a> = &'a mut dyn FnMut(&[f32]) -> Result<(f32, f32)>;
 
-/// The shared control loop: identical event dispatch to the simulation
-/// platform, plus the real-fusion data plane and model publication.
-fn run_loop<C: Clock, S: UpdateSource>(
-    cfg: &LiveConfig,
-    mq: &Arc<MessageQueue>,
-    mut engine: JobEngine,
-    mut driver: WallDriver<C, S>,
-    resume: bool,
-    init: Vec<f32>,
-    mut eval: Option<EvalFn<'_>>,
-) -> Result<LiveReport> {
-    let alg = engine.spec.algorithm();
-    let capacity = scenario_capacity(&engine.spec);
-    let mut cluster = Cluster::new(ClusterConfig {
-        capacity,
-        ..Default::default()
-    });
-    let mut q = EventQueue::new();
-    let wall_start = Instant::now();
-
-    // resume: reconstruct position from the durable MQ state
-    let dim = init.len();
-    let (mut global, start_round, resumed_round) = if resume {
-        let completed = mq.end_offset(&mq::model_topic(0));
-        let g = if completed > 0 {
-            mq.fetch(&mq::model_topic(0), completed - 1, 1)
-                .first()
-                .and_then(|m| m.payload.data().map(|d| d.to_vec()))
-                .unwrap_or(init)
-        } else {
-            init
-        };
-        (Arc::new(g), completed as u32, Some(completed as u32))
-    } else {
-        (Arc::new(init), 0, None)
-    };
-    if start_round >= cfg.rounds {
-        driver.source.shutdown(mq);
-        return Ok(LiveReport {
-            strategy: cfg.strategy.clone(),
-            records: Vec::new(),
-            container_seconds: 0.0,
-            deployments: 0,
-            updates_fused: 0,
-            wall_secs: 0.0,
-            crashed: false,
-            resumed_round,
-            final_model: global.as_ref().clone(),
-            stats: Vec::new(),
-            t_pair_secs: 0.0,
-        });
-    }
-    engine.round = start_round;
-    // Fast-forward the engine's rng stream past the completed rounds:
-    // each round consumed one infos draw (inside estimate) and one
-    // arrival-offsets draw, so a resumed round k draws exactly the
-    // offsets the original run drew for k — re-delivered parties publish
-    // on the original schedule and fold order is preserved. (Histories
-    // stay empty, so the resumed round's *estimate* — and hence its
-    // latency record — may differ; the published model does not, for
-    // full-quorum jobs where the folded update set is the whole fleet.)
-    for _ in 0..start_round {
-        let _ = engine.estimate();
-        let model_bytes = engine.spec.workload.model.size_bytes();
-        let _ = engine
-            .fleet
-            .arrival_offsets(model_bytes, engine.spec.t_wait_secs, &mut engine.rng);
-    }
-    // (re)initialized in the RoundStart arm before any fold can happen;
-    // the resume branch there reloads the §5.5 checkpoint slot
-    let mut folder = Folder::fresh(dim);
-    // the resumed round's updates are already in the topic log; the
-    // driver replays them, so the source must not re-publish them
-    let mut skip_broadcast = resumed_round;
-
-    let mut kill = cfg.kill_after_fuses;
-    let mut fused: u64 = 0;
-    let mut crashed = false;
-    // first unrecoverable error; party threads are still shut down
-    // before it propagates
-    let mut fatal: Option<anyhow::Error> = None;
-    let mut stats = Vec::new();
-    let mut tick_scheduled = false;
-
-    q.schedule_at(0, EventKind::RoundStart {
-        job: 0,
-        round: start_round,
-    });
-
-    let mut safety: u64 = 0;
-    'outer: while let Some((_, ev)) = driver.next_event(&mut q, mq) {
-        safety += 1;
-        debug_assert!(safety < 100_000_000, "runaway live run");
-        match ev {
-            EventKind::RoundStart { round, .. } => {
-                if engine.done || engine.round != round {
-                    continue;
-                }
-                driver.watch_round(0, round);
-                folder = if resume && Some(round) == resumed_round {
-                    Folder::resume(mq, 0, round, dim)
-                } else {
-                    Folder::fresh(dim)
-                };
-                let offsets =
-                    engine.start_round(&mut q, &mut cluster, mq, ArrivalMode::External);
-                // §5.5 resume: parties outlive the aggregator. Updates
-                // already in the topic log replay from it; parties whose
-                // update never landed are re-delivered the round and
-                // publish as originally scheduled (same rng stream ⇒
-                // same offsets ⇒ the combined log keeps the full run's
-                // offset order, preserving bit-identical folding).
-                let parties: Vec<usize> = if skip_broadcast.take() == Some(round) {
-                    let logged: std::collections::HashSet<usize> = mq
-                        .fetch(&mq::update_topic(0, round), 0, usize::MAX)
-                        .iter()
-                        .map(|m| m.party)
-                        .collect();
-                    (0..engine.spec.n_parties)
-                        .filter(|p| !logged.contains(p))
-                        .collect()
-                } else {
-                    (0..engine.spec.n_parties).collect()
-                };
-                if !parties.is_empty() {
-                    let now = q.now();
-                    if let Err(e) =
-                        driver.source.begin_round(0, round, &global, &parties, &offsets, now, mq)
-                    {
-                        fatal = Some(e);
-                        break 'outer;
-                    }
-                }
-                if !tick_scheduled {
-                    tick_scheduled = true;
-                    q.schedule_in(cluster.cfg.delta_tick, EventKind::SchedTick);
-                }
-            }
-            EventKind::UpdateArrival { round, party, .. } => {
-                engine.handle_update(
-                    &mut q,
-                    &mut cluster,
-                    mq,
-                    round,
-                    party,
-                    ArrivalMode::External,
-                );
-            }
-            EventKind::TimerAlert { round, .. } => {
-                engine.on_timer(&mut q, &mut cluster, mq, round);
-            }
-            EventKind::ContainerDone { container } => {
-                if let Some(note) = cluster.advance(&mut q, container) {
-                    let fold_now = matches!(
-                        note,
-                        Notification::WorkItemDone { .. } | Notification::WorkDrained { .. }
-                    );
-                    engine.on_note(&mut q, &mut cluster, mq, &note);
-                    if fold_now
-                        && folder.catch_up(mq, 0, engine.round, q.now(), &mut kill, &mut fused)
-                            == FoldOutcome::Killed
-                    {
-                        crashed = true;
-                        break 'outer;
-                    }
-                }
-            }
-            EventKind::Custom { tag } => {
-                engine.on_linger(&mut q, &mut cluster, mq, tag as usize);
-            }
-            EventKind::SchedTick => {
-                cluster.on_tick(&mut q);
-                tick_scheduled = false;
-                if !engine.done {
-                    tick_scheduled = true;
-                    q.schedule_in(cluster.cfg.delta_tick, EventKind::SchedTick);
-                }
-            }
-            _ => {}
-        }
-        // round completion: fold the stragglers, publish the fused model,
-        // GC the round topic, advance the engine
-        if let Some(rec) = engine.take_completed() {
-            let round = rec.round;
-            if folder.catch_up(mq, 0, round, q.now(), &mut kill, &mut fused)
-                == FoldOutcome::Killed
-            {
-                crashed = true;
-                break 'outer;
-            }
-            let fused_model = folder.finalize(alg, &global);
-            if let Some(eval) = eval.as_mut() {
-                let train_loss = mean_metric(mq, round);
-                let (eval_loss, eval_acc) = match eval(&fused_model) {
-                    Ok(v) => v,
-                    Err(e) => {
-                        fatal = Some(e);
-                        break 'outer;
-                    }
-                };
-                stats.push(LiveRoundStats {
-                    round,
-                    train_loss,
-                    eval_loss,
-                    eval_acc,
-                });
-            }
-            mq.produce(
-                &mq::model_topic(0),
-                Message {
-                    party: 0,
-                    round,
-                    weight: folder.agg.weight,
-                    enqueued_at: q.now(),
-                    payload: Payload::Inline(fused_model.clone()),
-                },
-            );
-            mq.clear_checkpoint(&mq::checkpoint_slot(0, round));
-            mq.drop_topic(&mq::update_topic(0, round));
-            // a sub-quorum straggler may re-create the previous round's
-            // topic after its drop — sweep it again one round later
-            if round > 0 {
-                mq.drop_topic(&mq::update_topic(0, round - 1));
-            }
-            global = Arc::new(fused_model);
-            engine.finish_round(&mut q, &mut cluster, mq, rec);
-            if engine.done {
-                break;
-            }
-        }
-    }
-    let party_failure = driver.source.failure();
-    driver.source.shutdown(mq);
-    if engine.done {
-        // final GC: straggler-recreated round topics (sub-quorum jobs).
-        // A crashed run keeps everything — resume needs the logs.
-        for r in 0..cfg.rounds {
-            mq.drop_topic(&mq::update_topic(0, r));
-        }
-    }
-    if let Some(e) = fatal {
-        return Err(e);
-    }
-    if !engine.done && !crashed {
-        let why = party_failure
-            .map(|m| format!(": {m}"))
-            .unwrap_or_default();
-        return Err(anyhow!(
-            "live run stalled in round {} ({} arrivals seen){why}",
-            engine.round,
-            engine.arrived
-        ));
-    }
-    let now = q.now();
-    Ok(LiveReport {
-        strategy: cfg.strategy.clone(),
-        records: engine.records.clone(),
-        container_seconds: cluster.container_seconds(0, now),
-        deployments: cluster.job_deployments(0),
-        updates_fused: fused,
-        wall_secs: wall_start.elapsed().as_secs_f64(),
-        crashed,
-        resumed_round,
-        final_model: global.as_ref().clone(),
-        stats,
-        t_pair_secs: 0.0,
-    })
-}
-
-/// Mean of the round's party-reported metrics (train losses), keeping
+/// Mean of a job's round party-reported metrics (train losses), keeping
 /// only each party's *latest* report — a party re-trained after a §5.5
 /// resume may have published twice for the same round.
-fn mean_metric(mq: &MessageQueue, round: u32) -> f32 {
-    let msgs = mq.fetch_round(&mq::metrics_topic(0), round);
+fn mean_metric(mq: &MessageQueue, job: usize, round: u32) -> f32 {
+    let msgs = mq.fetch_round(&mq::metrics_topic(job), round);
     let mut latest: std::collections::BTreeMap<usize, f32> = std::collections::BTreeMap::new();
     for m in &msgs {
         if let Some(&loss) = m.payload.data().and_then(|d| d.first()) {
@@ -1167,91 +946,141 @@ impl LiveBrokerReport {
 /// admission when the previous aggregator died have no MQ state at all —
 /// they are re-admitted from the trace (which is why resume takes the
 /// trace, not just the MQ) rather than silently dropped.
+#[deprecated(
+    since = "0.3.0",
+    note = "use coordinator::session::Session::live()/::wall() with .trace(..) — this shim maps onto it"
+)]
 pub fn run_live_broker(
     trace: &JobTrace,
     cfg: &LiveBrokerConfig,
     mq: &Arc<MessageQueue>,
     resume: bool,
 ) -> Result<LiveBrokerReport> {
-    if arbitration::by_name(&cfg.policy).is_none() {
-        return Err(anyhow!(
-            "unknown arbitration policy {:?}; expected one of {:?}",
-            cfg.policy,
-            arbitration::all_policies()
-        ));
-    }
     if trace.is_empty() {
         return Err(anyhow!("live broker replay needs a non-empty trace"));
     }
-    // One engine per trace job — also the source of the scripted parties'
-    // aggregation weights, so the fleets are generated exactly once.
-    let mut engines: Vec<JobEngine> = Vec::with_capacity(trace.len());
-    let mut weights: Vec<Vec<f32>> = Vec::with_capacity(trace.len());
-    for (job, arr) in trace.arrivals.iter().enumerate() {
-        if crate::coordinator::strategies::by_name(&arr.strategy).is_none() {
-            return Err(anyhow!("job {job}: unknown strategy {:?}", arr.strategy));
-        }
-        let mut engine = JobEngine::new(job, arr.spec.clone(), &arr.strategy, cfg.seed);
-        engine.deferred = true;
-        weights.push(
-            engine
-                .fleet
-                .parties
-                .iter()
-                .map(|p| p.dataset_items as f32)
-                .collect(),
-        );
-        engines.push(engine);
-    }
-    let source = ScriptedParties::multi_job(cfg.seed, cfg.lr, weights);
-    if cfg.wall {
-        let driver = WallDriver::new(WallClock::new(), source);
-        broker_loop(trace, cfg, mq, resume, driver, engines)
+    let s = if cfg.wall {
+        Session::wall().backend(PartyBackend::Scripted)
     } else {
-        let driver = WallDriver::new(InstantClock::default(), source);
-        broker_loop(trace, cfg, mq, resume, driver, engines)
-    }
+        Session::live()
+    };
+    let s = s
+        .trace(trace)
+        .policy(&cfg.policy)
+        .admission(cfg.admission.clone())
+        .capacity(cfg.capacity)
+        .seed(cfg.seed)
+        .dim(cfg.dim)
+        .lr(cfg.lr)
+        .kill_after_fuses(cfg.kill_after_fuses)
+        .on(mq)
+        .resume(resume);
+    let (Report::Sim(sum) | Report::Live(sum) | Report::Wall(sum)) = s.run()?;
+    Ok(LiveBrokerReport {
+        policy: sum.policy,
+        capacity: cfg.capacity,
+        jobs: sum
+            .jobs
+            .into_iter()
+            .map(|o| LiveJobOutcome {
+                job: o.job,
+                name: o.name,
+                class: o.class,
+                arrival_secs: o.arrival_secs,
+                queue_wait_secs: o.queue_wait_secs,
+                records: o.records,
+                container_seconds: o.container_seconds,
+                deployments: o.deployments,
+                updates_fused: o.updates_fused,
+                updates_folded: o.updates_folded,
+                makespan_secs: o.makespan_secs,
+                final_model: o.final_model,
+                resumed_round: o.resumed_round,
+            })
+            .collect(),
+        cluster_utilization: sum.cluster_utilization,
+        total_container_seconds: sum.total_container_seconds,
+        span_secs: sum.span_secs,
+        updates_folded: sum.updates_folded,
+        preemptions: sum.preemptions,
+        wall_secs: sum.wall_secs,
+        crashed: sum.crashed,
+    })
 }
 
-/// The multi-job control loop: the platform's event routing (admission,
-/// per-job engines, shared arbitrated cluster) fused with the live data
-/// plane (per-job folders, checkpoints, model publication), pulled by a
-/// wall driver that watches every admitted job's topics.
-fn broker_loop<C: Clock, S: UpdateSource>(
-    trace: &JobTrace,
-    cfg: &LiveBrokerConfig,
+/// Per-run knobs of [`session_loop`], assembled by [`Session`].
+pub(crate) struct LoopParams<'a> {
+    pub(crate) arrivals: &'a [JobArrival],
+    pub(crate) capacity: usize,
+    pub(crate) admission: AdmissionConfig,
+    pub(crate) policy: String,
+    pub(crate) seed: u64,
+    /// Update vector length of the synthetic data planes (`init_override`
+    /// sets job 0's real dimension when present).
+    pub(crate) dim: usize,
+    pub(crate) kill_after_fuses: Option<u64>,
+    pub(crate) resume: bool,
+    /// Job 0's initial global model (XLA wall sessions: the trainer's
+    /// flattened init instead of `init_model`).
+    pub(crate) init_override: Option<Vec<f32>>,
+    pub(crate) sink: EventSink,
+}
+
+/// The one live control loop — every session runs through here, a
+/// single job being simply the N = 1 case of the broker job mix (the
+/// old separate `run_loop` is gone): the platform's event routing
+/// (admission, per-job engines, shared arbitrated cluster) fused with
+/// the live data plane (per-job folders, §5.5 checkpoints, model
+/// publication), pulled by a wall driver that watches every admitted
+/// job's topics, streaming [`SessionEvent`]s to any listener. `eval` is
+/// the aggregator-side model-quality hook, applied to job 0 (the XLA
+/// wall session).
+pub(crate) fn session_loop<C: Clock, S: UpdateSource>(
+    mut p: LoopParams<'_>,
     mq: &Arc<MessageQueue>,
-    resume: bool,
     mut driver: WallDriver<C, S>,
     mut engines: Vec<JobEngine>,
-) -> Result<LiveBrokerReport> {
-    let dim = cfg.dim.max(1);
-    let policy =
-        arbitration::by_name(&cfg.policy).expect("validated by run_live_broker");
+    mut eval: Option<EvalFn<'_>>,
+) -> Result<RunSummary> {
+    let arrivals = p.arrivals;
+    let n_jobs = arrivals.len();
+    let resume = p.resume;
+    let sink = p.sink.clone();
+    let policy = arbitration::by_name(&p.policy).ok_or_else(|| {
+        anyhow!(
+            "unknown arbitration policy {:?}; expected one of {:?}",
+            p.policy,
+            arbitration::all_policies()
+        )
+    })?;
     let mut cluster = Cluster::new(ClusterConfig {
-        capacity: cfg.capacity.max(1),
+        capacity: p.capacity.max(1),
         ..Default::default()
     });
     cluster.set_policy(policy);
-    let mut ctrl = AdmissionController::new(cfg.admission.clone());
+    let mut ctrl = AdmissionController::new(p.admission.clone());
     let mut q = EventQueue::new();
     let wall_start = Instant::now();
 
-    let mut globals: Vec<Arc<Vec<f32>>> = Vec::with_capacity(trace.len());
-    let mut folders: Vec<Folder> = Vec::with_capacity(trace.len());
-    let mut folded: Vec<u64> = vec![0; trace.len()];
-    let mut resumed_rounds: Vec<Option<u32>> = vec![None; trace.len()];
-    let mut skip_broadcast: Vec<Option<u32>> = vec![None; trace.len()];
-    for (job, arr) in trace.arrivals.iter().enumerate() {
+    let mut globals: Vec<Arc<Vec<f32>>> = Vec::with_capacity(n_jobs);
+    let mut dims: Vec<usize> = Vec::with_capacity(n_jobs);
+    let mut folders: Vec<Folder> = Vec::with_capacity(n_jobs);
+    let mut folded: Vec<u64> = vec![0; n_jobs];
+    let mut stats: Vec<Vec<LiveRoundStats>> = vec![Vec::new(); n_jobs];
+    let mut resumed_rounds: Vec<Option<u32>> = vec![None; n_jobs];
+    let mut skip_broadcast: Vec<Option<u32>> = vec![None; n_jobs];
+    for (job, arr) in arrivals.iter().enumerate() {
         let engine = &mut engines[job];
         let demand = arr.spec.workload.n_agg(arr.spec.n_parties) as usize;
         ctrl.register(job, demand, arr.class);
         cluster.set_job_weight(job, arr.class.weight());
-        let init = init_model(dim, job_seed(cfg.seed, job));
+        let init = if job == 0 { p.init_override.take() } else { None }
+            .unwrap_or_else(|| init_model(p.dim, job_seed(p.seed, job)));
+        let dim = init.len();
         // §5.5 resume, per job: completed rounds = the job's model-topic
         // offset; the current global = the last published model; queued
         // jobs (offset 0, empty topics) replay from scratch — their
-        // admission happens again through the trace's JobArrival events.
+        // admission happens again through the session's JobArrival events.
         let mut global = init;
         if resume {
             let completed = mq.end_offset(&mq::model_topic(job));
@@ -1270,9 +1099,12 @@ fn broker_loop<C: Clock, S: UpdateSource>(
                 engine.done = true;
             } else {
                 engine.round = start_round;
-                // fast-forward the engine's rng stream past completed
-                // rounds so re-delivered parties publish on the original
-                // schedule (see the single-job resume notes)
+                // Fast-forward the engine's rng stream past the completed
+                // rounds: each round consumed one infos draw (inside
+                // estimate) and one arrival-offsets draw, so a resumed
+                // round k draws exactly the offsets the original run drew
+                // for k — re-delivered parties publish on the original
+                // schedule and fold order is preserved.
                 let model_bytes = engine.spec.workload.model.size_bytes();
                 let t_wait = engine.spec.t_wait_secs;
                 for _ in 0..start_round {
@@ -1283,29 +1115,47 @@ fn broker_loop<C: Clock, S: UpdateSource>(
                 }
             }
         }
+        dims.push(dim);
         globals.push(Arc::new(global));
         folders.push(Folder::fresh(dim));
         q.schedule_at(secs(arr.at_secs), EventKind::JobArrival { job });
     }
 
-    let mut kill = cfg.kill_after_fuses;
+    let mut kill = p.kill_after_fuses;
     let mut crashed = false;
     let mut fatal: Option<anyhow::Error> = None;
     let mut tick_scheduled = false;
+    // preemption decisions already streamed as events
+    let mut preempt_seen: usize = 0;
 
     let mut safety: u64 = 0;
     'outer: while let Some((_, ev)) = driver.next_event(&mut q, mq) {
         safety += 1;
-        debug_assert!(safety < 500_000_000, "runaway live broker run");
+        debug_assert!(safety < 500_000_000, "runaway live session");
         // `touched` = the job whose strategy may have completed a round
         // in this dispatch (mirrors `Platform::poll_round_completion`).
         let touched: Option<usize> = match ev {
             EventKind::JobArrival { job } => {
+                sink.emit(SessionEvent::JobSubmitted {
+                    job,
+                    at_secs: to_secs(q.now()),
+                });
                 // resume: a job whose rounds all completed before the
                 // kill needs no admission (it would never release)
                 if !engines[job].done {
                     let now = q.now();
-                    for j in ctrl.arrive(job, now) {
+                    let started = ctrl.arrive(job, now);
+                    if !started.contains(&job) {
+                        sink.emit(SessionEvent::JobQueued {
+                            job,
+                            at_secs: to_secs(now),
+                        });
+                    }
+                    for j in started {
+                        sink.emit(SessionEvent::JobAdmitted {
+                            job: j,
+                            at_secs: to_secs(now),
+                        });
                         q.schedule_at(
                             now,
                             EventKind::RoundStart {
@@ -1319,50 +1169,65 @@ fn broker_loop<C: Clock, S: UpdateSource>(
             }
             EventKind::RoundStart { job, round } => {
                 if engines[job].done || engines[job].round != round {
-                    continue;
-                }
-                driver.watch_round(job, round);
-                folders[job] = if resume && resumed_rounds[job] == Some(round) {
-                    Folder::resume(mq, job, round, dim)
+                    None // stale start from a quorum-completed round
                 } else {
-                    Folder::fresh(dim)
-                };
-                let offsets =
-                    engines[job].start_round(&mut q, &mut cluster, mq, ArrivalMode::External);
-                // resumed round: re-deliver only the parties missing from
-                // the topic log (logged updates replay from the MQ)
-                let parties: Vec<usize> = if skip_broadcast[job].take() == Some(round) {
-                    let logged: std::collections::HashSet<usize> = mq
-                        .fetch(&mq::update_topic(job, round), 0, usize::MAX)
-                        .iter()
-                        .map(|m| m.party)
-                        .collect();
-                    (0..engines[job].spec.n_parties)
-                        .filter(|p| !logged.contains(p))
-                        .collect()
-                } else {
-                    (0..engines[job].spec.n_parties).collect()
-                };
-                if !parties.is_empty() {
-                    let now = q.now();
-                    if let Err(e) = driver.source.begin_round(
+                    sink.emit(SessionEvent::RoundStarted {
                         job,
                         round,
-                        &globals[job],
-                        &parties,
-                        &offsets,
-                        now,
+                        at_secs: to_secs(q.now()),
+                    });
+                    driver.watch_round(job, round);
+                    folders[job] = if resume && resumed_rounds[job] == Some(round) {
+                        Folder::resume(mq, job, round, dims[job])
+                    } else {
+                        Folder::fresh(dims[job])
+                    };
+                    let offsets = engines[job].start_round(
+                        &mut q,
+                        &mut cluster,
                         mq,
-                    ) {
-                        fatal = Some(e);
+                        ArrivalMode::External,
+                    );
+                    // resumed round: re-deliver only the parties missing
+                    // from the topic log (logged updates replay from the
+                    // MQ)
+                    let parties: Vec<usize> = if skip_broadcast[job].take() == Some(round) {
+                        let logged: std::collections::HashSet<usize> = mq
+                            .fetch(&mq::update_topic(job, round), 0, usize::MAX)
+                            .iter()
+                            .map(|m| m.party)
+                            .collect();
+                        (0..engines[job].spec.n_parties)
+                            .filter(|p| !logged.contains(p))
+                            .collect()
+                    } else {
+                        (0..engines[job].spec.n_parties).collect()
+                    };
+                    let mut failed = false;
+                    if !parties.is_empty() {
+                        let now = q.now();
+                        if let Err(e) = driver.source.begin_round(
+                            job,
+                            round,
+                            &globals[job],
+                            &parties,
+                            &offsets,
+                            now,
+                            mq,
+                        ) {
+                            fatal = Some(e);
+                            failed = true;
+                        }
+                    }
+                    if failed {
                         break 'outer;
                     }
+                    if !tick_scheduled {
+                        tick_scheduled = true;
+                        q.schedule_in(cluster.cfg.delta_tick, EventKind::SchedTick);
+                    }
+                    None
                 }
-                if !tick_scheduled {
-                    tick_scheduled = true;
-                    q.schedule_in(cluster.cfg.delta_tick, EventKind::SchedTick);
-                }
-                None
             }
             EventKind::UpdateArrival { job, round, party } => {
                 engines[job].handle_update(
@@ -1404,6 +1269,7 @@ fn broker_loop<C: Clock, S: UpdateSource>(
                                 q.now(),
                                 &mut kill,
                                 &mut folded[job],
+                                &sink,
                             ) == FoldOutcome::Killed
                         {
                             crashed = true;
@@ -1431,55 +1297,123 @@ fn broker_loop<C: Clock, S: UpdateSource>(
             }
             EventKind::RoundTimeout { .. } => None,
         };
+        // stream any preemption decisions this dispatch produced
+        sink.stream_preemptions(&cluster, &mut preempt_seen);
         // round completion for the touched job: fold the stragglers,
         // publish the fused model to the job's own topic, GC, advance
-        let Some(job) = touched else { continue };
-        let Some(rec) = engines[job].take_completed() else {
-            continue;
-        };
-        let round = rec.round;
-        if folders[job].catch_up(mq, job, round, q.now(), &mut kill, &mut folded[job])
-            == FoldOutcome::Killed
-        {
-            crashed = true;
-            break 'outer;
-        }
-        let fused_model = folders[job].finalize(engines[job].spec.algorithm(), &globals[job]);
-        mq.produce(
-            &mq::model_topic(job),
-            Message {
-                party: 0,
-                round,
-                weight: folders[job].agg.weight,
-                enqueued_at: q.now(),
-                payload: Payload::Inline(fused_model.clone()),
-            },
-        );
-        mq.clear_checkpoint(&mq::checkpoint_slot(job, round));
-        mq.drop_topic(&mq::update_topic(job, round));
-        if round > 0 {
-            mq.drop_topic(&mq::update_topic(job, round - 1));
-        }
-        globals[job] = Arc::new(fused_model);
-        let now = q.now();
-        let finished = engines[job].finish_round(&mut q, &mut cluster, mq, rec);
-        if finished {
-            driver.unwatch(job);
-            // freed admission demand releases queued jobs (backpressure)
-            for j in ctrl.finish(job, now) {
-                q.schedule_at(
-                    now,
-                    EventKind::RoundStart {
-                        job: j,
-                        round: engines[j].round,
+        if let Some(job) = touched {
+            if let Some(rec) = engines[job].take_completed() {
+                let round = rec.round;
+                if folders[job].catch_up(
+                    mq,
+                    job,
+                    round,
+                    q.now(),
+                    &mut kill,
+                    &mut folded[job],
+                    &sink,
+                ) == FoldOutcome::Killed
+                {
+                    crashed = true;
+                    break 'outer;
+                }
+                let fused_model =
+                    folders[job].finalize(engines[job].spec.algorithm(), &globals[job]);
+                // aggregator-side model-quality hook (XLA wall sessions)
+                if job == 0 {
+                    if let Some(eval) = eval.as_mut() {
+                        let train_loss = mean_metric(mq, job, round);
+                        let mut failed = false;
+                        match eval(&fused_model) {
+                            Ok((eval_loss, eval_acc)) => stats[job].push(LiveRoundStats {
+                                round,
+                                train_loss,
+                                eval_loss,
+                                eval_acc,
+                            }),
+                            Err(e) => {
+                                fatal = Some(e);
+                                failed = true;
+                            }
+                        }
+                        if failed {
+                            break 'outer;
+                        }
+                    }
+                }
+                mq.produce(
+                    &mq::model_topic(job),
+                    Message {
+                        party: 0,
+                        round,
+                        weight: folders[job].agg.weight,
+                        enqueued_at: q.now(),
+                        payload: Payload::Inline(fused_model.clone()),
                     },
                 );
+                sink.emit(SessionEvent::RoundFused {
+                    job,
+                    round,
+                    latency_secs: rec.latency_secs,
+                    at_secs: to_secs(q.now()),
+                });
+                mq.clear_checkpoint(&mq::checkpoint_slot(job, round));
+                mq.drop_topic(&mq::update_topic(job, round));
+                if round > 0 {
+                    mq.drop_topic(&mq::update_topic(job, round - 1));
+                }
+                globals[job] = Arc::new(fused_model);
+                let now = q.now();
+                let finished = engines[job].finish_round(&mut q, &mut cluster, mq, rec);
+                if finished {
+                    driver.unwatch(job);
+                    sink.emit(SessionEvent::JobFinished {
+                        job,
+                        at_secs: to_secs(now),
+                    });
+                    // freed admission demand releases queued jobs
+                    // (backpressure)
+                    for j in ctrl.finish(job, now) {
+                        sink.emit(SessionEvent::JobAdmitted {
+                            job: j,
+                            at_secs: to_secs(now),
+                        });
+                        q.schedule_at(
+                            now,
+                            EventKind::RoundStart {
+                                job: j,
+                                round: engines[j].round,
+                            },
+                        );
+                    }
+                }
             }
+        }
+        // Thread-backed sources never report "exhausted" while their
+        // parties live, so once every engine is done and no event or
+        // scripted publish remains there is nothing left to drive —
+        // break instead of idling on the MQ condvar. (With pending
+        // scripted straggler publishes the loop keeps draining them,
+        // exactly like the virtual-time platform drains its
+        // pre-scheduled arrivals, so sim/live spans stay bit-identical.)
+        if q.is_empty()
+            && driver.source.next_due().is_none()
+            && engines.iter().all(|e| e.done)
+        {
+            break;
         }
     }
 
     let party_failure = driver.source.failure();
     driver.source.shutdown(mq);
+    // decisions made by the loop's final dispatch: the crash/fatal
+    // breaks exit before the in-loop streaming call, so flush here
+    sink.stream_preemptions(&cluster, &mut preempt_seen);
+    if crashed {
+        sink.emit(SessionEvent::Crashed {
+            at_secs: to_secs(q.now()),
+        });
+    }
     let all_done = engines.iter().all(|e| e.done);
     if all_done {
         // final GC: straggler-recreated round topics. A crashed run keeps
@@ -1501,38 +1435,47 @@ fn broker_loop<C: Clock, S: UpdateSource>(
             .collect();
         let why = party_failure.map(|m| format!(": {m}")).unwrap_or_default();
         return Err(anyhow!(
-            "live broker run stalled ({}){why}",
+            "live session stalled ({}){why}",
             stuck.join(", ")
         ));
     }
     let now = q.now();
     let span = to_secs(now);
     let total_cs = cluster.total_container_seconds(now);
-    let jobs: Vec<LiveJobOutcome> = trace
-        .arrivals
+    let jobs: Vec<JobOutcome> = arrivals
         .iter()
         .enumerate()
-        .map(|(job, arr)| LiveJobOutcome {
+        .map(|(job, arr)| JobOutcome {
             job,
             name: arr.spec.name.clone(),
+            strategy: arr.strategy.clone(),
+            workload: arr.spec.workload.name.to_string(),
+            fleet: arr.spec.fleet_kind.name().to_string(),
             class: arr.class,
+            parties: arr.spec.n_parties,
             arrival_secs: arr.at_secs,
             queue_wait_secs: ctrl.queue_wait_secs(job),
             records: engines[job].records.clone(),
             container_seconds: cluster.container_seconds(job, now),
+            ancillary_seconds: arr.spec.workload.ancillary_cs_per_round
+                * engines[job].records.len() as f64,
             deployments: cluster.job_deployments(job),
             updates_fused: cluster.job_work_done(job),
             updates_folded: folded[job],
             makespan_secs: to_secs(engines[job].finished_at),
             final_model: globals[job].as_ref().clone(),
             resumed_round: resumed_rounds[job],
+            stats: std::mem::take(&mut stats[job]),
+            t_pair_secs: 0.0,
+            solo_mean_latency_secs: None,
         })
         .collect();
-    Ok(LiveBrokerReport {
-        policy: cfg.policy.clone(),
-        capacity: cfg.capacity,
+    Ok(RunSummary {
+        policy: p.policy.clone(),
+        capacity: p.capacity.max(1),
+        seed: p.seed,
         jobs,
-        cluster_utilization: total_cs / (cfg.capacity.max(1) as f64 * span.max(1e-9)),
+        cluster_utilization: total_cs / (p.capacity.max(1) as f64 * span.max(1e-9)),
         total_container_seconds: total_cs,
         span_secs: span,
         updates_folded: folded.iter().sum(),
@@ -1546,35 +1489,42 @@ fn broker_loop<C: Clock, S: UpdateSource>(
     })
 }
 
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::session::JobHandle;
     use crate::coordinator::strategies;
 
-    fn scripted_cfg(strategy: &str) -> LiveConfig {
-        LiveConfig {
-            strategy: strategy.to_string(),
-            n_parties: 4,
-            rounds: 2,
-            seed: 11,
-            backend: PartyBackend::Scripted,
-            dim: 32,
-            workload: Workload::mlp_live(),
-            ..Default::default()
-        }
+    fn scripted_spec(parties: usize, rounds: u32) -> FlJobSpec {
+        FlJobSpec::new(
+            Workload::mlp_live(),
+            FleetKind::ActiveHomogeneous,
+            parties,
+            rounds,
+        )
+    }
+
+    /// The standard single-job live session of the old unit tests:
+    /// 4 parties × 2 rounds, dim 32, seed 11, scripted instant clock.
+    fn live_session(strategy: &str) -> (Session, JobHandle) {
+        let mut s = Session::live().seed(11).dim(32);
+        let h = s.job(scripted_spec(4, 2), strategy);
+        (s, h)
     }
 
     #[test]
     fn all_five_strategies_run_live_scripted() {
         for name in strategies::all_strategies() {
-            let cfg = scripted_cfg(name);
-            let r = run_live(&cfg).unwrap_or_else(|e| panic!("{name}: {e:#}"));
-            assert_eq!(r.records.len(), 2, "{name} rounds");
-            assert_eq!(r.updates_fused, 8, "{name} folds every update once");
-            assert!(!r.crashed, "{name}");
-            assert_eq!(r.final_model.len(), 32, "{name}");
-            assert!(r.container_seconds > 0.0, "{name}");
-            assert!(r.deployments > 0, "{name}");
+            let (s, h) = live_session(name);
+            let r = s.run().unwrap_or_else(|e| panic!("{name}: {e:#}"));
+            let o = r.job(h);
+            assert_eq!(o.records.len(), 2, "{name} rounds");
+            assert_eq!(o.updates_folded, 8, "{name} folds every update once");
+            assert!(!r.summary().crashed, "{name}");
+            assert_eq!(o.final_model.len(), 32, "{name}");
+            assert!(o.container_seconds > 0.0, "{name}");
+            assert!(o.deployments > 0, "{name}");
         }
     }
 
@@ -1582,23 +1532,46 @@ mod tests {
     fn published_model_is_the_weighted_mean_of_updates() {
         // one round, fedavg: the model topic must hold exactly the
         // weighted mean of the four synthetic updates
-        let mut cfg = scripted_cfg("lazy");
-        cfg.rounds = 1;
+        let (seed, dim, lr) = (11u64, 32usize, 0.3f32);
         let mq = Arc::new(MessageQueue::new());
-        let r = run_live_on(&cfg, &mq, false).expect("run");
+        let mut s = Session::live().seed(seed).dim(dim).lr(lr).on(&mq);
+        let h = s.job(scripted_spec(4, 1), "lazy");
+        let r = s.run().expect("run");
         assert_eq!(mq.end_offset(&mq::model_topic(0)), 1);
 
-        let spec = live_spec(&cfg);
-        let engine = JobEngine::new(0, spec, "lazy", cfg.seed);
-        let g0 = init_model(cfg.dim, cfg.seed);
-        let mut oracle = Aggregator::new(cfg.dim);
+        let engine = JobEngine::new(0, scripted_spec(4, 1), "lazy", seed);
+        let g0 = init_model(dim, seed);
+        let mut oracle = Aggregator::new(dim);
         for (party, p) in engine.fleet.parties.iter().enumerate() {
-            let u = synth_update(&g0, cfg.seed, party, cfg.lr);
+            let u = synth_update(&g0, seed, party, lr);
             oracle.add(&u, p.dataset_items as f32);
         }
-        for (a, b) in r.final_model.iter().zip(oracle.acc.iter()) {
+        for (a, b) in r.job(h).final_model.iter().zip(oracle.acc.iter()) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
         }
+    }
+
+    /// Build the kill/resume triple for one strategy + fleet: an
+    /// uninterrupted run, a killed run on a fresh MQ, and a resumed run
+    /// on the killed MQ — all through the `Session` façade.
+    fn kill_resume_session(
+        strategy: &str,
+        fleet: FleetKind,
+        mq: &Arc<MessageQueue>,
+        kill: Option<u64>,
+        resume: bool,
+    ) -> (Report, JobHandle) {
+        let mut s = Session::live()
+            .seed(11)
+            .dim(32)
+            .on(mq)
+            .kill_after_fuses(kill)
+            .resume(resume);
+        let h = s.job(
+            FlJobSpec::new(Workload::mlp_live(), fleet, 4, 2),
+            strategy,
+        );
+        (s.run().expect("session run"), h)
     }
 
     #[test]
@@ -1606,19 +1579,16 @@ mod tests {
         // §5.5 acceptance: kill the live aggregator mid-round, resume a
         // fresh one from the MQ topic log + checkpoint, and the published
         // model must be bit-identical to the uninterrupted run's.
-        let cfg = scripted_cfg("jit");
-
+        let fleet = FleetKind::ActiveHomogeneous;
         let mq_full = Arc::new(MessageQueue::new());
-        let full = run_live_on(&cfg, &mq_full, false).expect("uninterrupted run");
-        assert!(!full.crashed);
+        let (full, hf) = kill_resume_session("jit", fleet, &mq_full, None, false);
+        assert!(!full.summary().crashed);
         assert_eq!(mq_full.end_offset(&mq::model_topic(0)), 2);
 
         let mq_kill = Arc::new(MessageQueue::new());
-        let mut cfg_kill = cfg.clone();
-        cfg_kill.kill_after_fuses = Some(2);
-        let dead = run_live_on(&cfg_kill, &mq_kill, false).expect("killed run");
-        assert!(dead.crashed, "fault injection must trip");
-        assert_eq!(dead.updates_fused, 2);
+        let (dead, hd) = kill_resume_session("jit", fleet, &mq_kill, Some(2), false);
+        assert!(dead.summary().crashed, "fault injection must trip");
+        assert_eq!(dead.job(hd).updates_folded, 2);
         assert_eq!(
             mq_kill.end_offset(&mq::model_topic(0)),
             0,
@@ -1632,10 +1602,14 @@ mod tests {
         assert_eq!(ck.n_merged, 2);
         assert_eq!(ck.consumed_to, 2);
 
-        let resumed = run_live_on(&cfg, &mq_kill, true).expect("resumed run");
-        assert_eq!(resumed.resumed_round, Some(0));
-        assert!(!resumed.crashed);
-        assert_eq!(resumed.updates_fused, 8 - 2, "only the remainder refolds");
+        let (resumed, hr) = kill_resume_session("jit", fleet, &mq_kill, None, true);
+        assert_eq!(resumed.job(hr).resumed_round, Some(0));
+        assert!(!resumed.summary().crashed);
+        assert_eq!(
+            resumed.job(hr).updates_folded,
+            8 - 2,
+            "only the remainder refolds"
+        );
         assert_eq!(mq_kill.end_offset(&mq::model_topic(0)), 2);
 
         for round in 0..2u32 {
@@ -1644,7 +1618,7 @@ mod tests {
             let (a, b) = (a[0].payload.data().unwrap(), b[0].payload.data().unwrap());
             assert_eq!(a, b, "round {round} model must be bit-identical");
         }
-        assert_eq!(resumed.final_model, full.final_model);
+        assert_eq!(resumed.job(hr).final_model, full.job(hf).final_model);
     }
 
     #[test]
@@ -1655,25 +1629,24 @@ mod tests {
         // runner re-delivers the round to exactly the parties missing
         // from the topic log, and the combined log keeps the full run's
         // offset order — the final models stay bit-identical.
-        let mut cfg = scripted_cfg("eager-serverless");
-        cfg.fleet = FleetKind::ActiveHeterogeneous; // spread the arrivals
-
+        let fleet = FleetKind::ActiveHeterogeneous; // spread the arrivals
         let mq_full = Arc::new(MessageQueue::new());
-        let full = run_live_on(&cfg, &mq_full, false).expect("uninterrupted run");
-        assert_eq!(full.updates_fused, 8);
+        let (full, hf) =
+            kill_resume_session("eager-serverless", fleet, &mq_full, None, false);
+        assert_eq!(full.job(hf).updates_folded, 8);
 
         let mq_kill = Arc::new(MessageQueue::new());
-        let mut cfg_kill = cfg.clone();
-        cfg_kill.kill_after_fuses = Some(1);
-        let dead = run_live_on(&cfg_kill, &mq_kill, false).expect("killed run");
-        assert!(dead.crashed);
-        assert_eq!(dead.updates_fused, 1);
+        let (dead, hd) =
+            kill_resume_session("eager-serverless", fleet, &mq_kill, Some(1), false);
+        assert!(dead.summary().crashed);
+        assert_eq!(dead.job(hd).updates_folded, 1);
 
-        let resumed = run_live_on(&cfg, &mq_kill, true).expect("resumed run");
-        assert!(!resumed.crashed);
-        assert_eq!(resumed.resumed_round, Some(0));
+        let (resumed, hr) =
+            kill_resume_session("eager-serverless", fleet, &mq_kill, None, true);
+        assert!(!resumed.summary().crashed);
+        assert_eq!(resumed.job(hr).resumed_round, Some(0));
         assert_eq!(
-            dead.updates_fused + resumed.updates_fused,
+            dead.job(hd).updates_folded + resumed.job(hr).updates_folded,
             8,
             "every update folds exactly once across the two incarnations"
         );
@@ -1687,7 +1660,7 @@ mod tests {
                 "round {round} model must be bit-identical"
             );
         }
-        assert_eq!(resumed.final_model, full.final_model);
+        assert_eq!(resumed.job(hr).final_model, full.job(hf).final_model);
     }
 
     #[test]
@@ -1695,28 +1668,31 @@ mod tests {
         // pins the resume rng fast-forward: a kill in round 1 must
         // re-deliver that round's missing parties at the offsets the
         // original run drew for round 1, not round 0's
-        let mut cfg = scripted_cfg("eager-serverless");
-        cfg.fleet = FleetKind::ActiveHeterogeneous;
-
+        let fleet = FleetKind::ActiveHeterogeneous;
         let mq_full = Arc::new(MessageQueue::new());
-        let full = run_live_on(&cfg, &mq_full, false).expect("uninterrupted run");
+        let (full, hf) =
+            kill_resume_session("eager-serverless", fleet, &mq_full, None, false);
 
         let mq_kill = Arc::new(MessageQueue::new());
-        let mut cfg_kill = cfg.clone();
-        cfg_kill.kill_after_fuses = Some(5); // round 0 folds 4; dies in round 1
-        let dead = run_live_on(&cfg_kill, &mq_kill, false).expect("killed run");
-        assert!(dead.crashed);
-        assert_eq!(dead.updates_fused, 5);
+        // round 0 folds 4; dies in round 1
+        let (dead, hd) =
+            kill_resume_session("eager-serverless", fleet, &mq_kill, Some(5), false);
+        assert!(dead.summary().crashed);
+        assert_eq!(dead.job(hd).updates_folded, 5);
         assert_eq!(
             mq_kill.end_offset(&mq::model_topic(0)),
             1,
             "round 0 published before the round-1 kill"
         );
 
-        let resumed = run_live_on(&cfg, &mq_kill, true).expect("resumed run");
-        assert!(!resumed.crashed);
-        assert_eq!(resumed.resumed_round, Some(1));
-        assert_eq!(dead.updates_fused + resumed.updates_fused, 8);
+        let (resumed, hr) =
+            kill_resume_session("eager-serverless", fleet, &mq_kill, None, true);
+        assert!(!resumed.summary().crashed);
+        assert_eq!(resumed.job(hr).resumed_round, Some(1));
+        assert_eq!(
+            dead.job(hd).updates_folded + resumed.job(hr).updates_folded,
+            8
+        );
         for round in 0..2u32 {
             let a = mq_full.fetch(&mq::model_topic(0), round as usize, 1);
             let b = mq_kill.fetch(&mq::model_topic(0), round as usize, 1);
@@ -1726,18 +1702,22 @@ mod tests {
                 "round {round} model must be bit-identical"
             );
         }
-        assert_eq!(resumed.final_model, full.final_model);
+        assert_eq!(resumed.job(hr).final_model, full.job(hf).final_model);
     }
 
     #[test]
     fn resume_of_a_finished_job_is_a_noop() {
-        let cfg = scripted_cfg("eager-ao");
         let mq = Arc::new(MessageQueue::new());
-        run_live_on(&cfg, &mq, false).expect("run");
-        let r = run_live_on(&cfg, &mq, true).expect("resume");
-        assert!(r.records.is_empty());
-        assert_eq!(r.resumed_round, Some(2));
-        assert_eq!(r.final_model.len(), cfg.dim);
+        let mut s = Session::live().seed(11).dim(32).on(&mq);
+        s.job(scripted_spec(4, 2), "eager-ao");
+        s.run().expect("run");
+        let mut s = Session::live().seed(11).dim(32).on(&mq).resume(true);
+        let h = s.job(scripted_spec(4, 2), "eager-ao");
+        let r = s.run().expect("resume");
+        assert!(r.job(h).records.is_empty());
+        assert_eq!(r.job(h).resumed_round, Some(2));
+        assert_eq!(r.job(h).final_model.len(), 32);
+        assert_eq!(r.job(h).updates_folded, 0, "nothing refolds");
     }
 
     #[test]
@@ -1745,43 +1725,39 @@ mod tests {
         // real OS threads + real wall clock, scaled down to stay fast
         let mut w = Workload::mlp_live();
         w.base_epoch_secs = 0.08;
-        let cfg = LiveConfig {
-            strategy: "jit".to_string(),
-            n_parties: 3,
-            rounds: 2,
-            seed: 5,
-            backend: PartyBackend::SynthThreads,
-            dim: 16,
-            workload: w,
-            ..Default::default()
-        };
-        let r = run_live(&cfg).expect("wall run");
-        assert_eq!(r.records.len(), 2);
-        assert_eq!(r.updates_fused, 6);
-        assert!(r.wall_secs > 0.0);
-        assert!(!r.crashed);
+        let mut s = Session::wall().seed(5).dim(16);
+        let h = s.job(
+            FlJobSpec::new(w, FleetKind::ActiveHomogeneous, 3, 2),
+            "jit",
+        );
+        let r = s.run().expect("wall run");
+        assert_eq!(r.mode_name(), "wall");
+        assert_eq!(r.job(h).records.len(), 2);
+        assert_eq!(r.job(h).updates_folded, 6);
+        assert!(r.summary().wall_secs > 0.0);
+        assert!(!r.summary().crashed);
     }
 
     #[test]
     fn xla_backend_trains_or_reports_missing_artifacts() {
-        let cfg = LiveConfig {
-            strategy: "jit".to_string(),
-            n_parties: 3,
-            rounds: 2,
-            minibatches: 2,
-            backend: PartyBackend::XlaThreads,
-            ..Default::default()
-        };
+        let mut s = Session::wall()
+            .backend(PartyBackend::XlaThreads)
+            .minibatches(2)
+            .seed(42);
+        let h = s.job(scripted_spec(3, 2), "jit");
         let artifacts = crate::runtime::xla_enabled()
             && crate::runtime::default_artifact_dir()
                 .join("manifest.json")
                 .exists();
-        match run_live(&cfg) {
+        match s.run() {
             Ok(r) => {
                 assert!(artifacts, "must not succeed without artifacts");
-                assert_eq!(r.records.len(), 2);
-                assert_eq!(r.stats.len(), 2, "eval stats per round");
-                assert!(r.t_pair_secs > 0.0, "§5.4 XLA t_pair calibration ran");
+                assert_eq!(r.job(h).records.len(), 2);
+                assert_eq!(r.job(h).stats.len(), 2, "eval stats per round");
+                assert!(
+                    r.job(h).t_pair_secs > 0.0,
+                    "§5.4 XLA t_pair calibration ran"
+                );
             }
             Err(e) => {
                 assert!(!artifacts, "artifacts present but live run failed: {e:#}");
@@ -1799,11 +1775,33 @@ mod tests {
         assert_ne!(a, c, "parties must differ");
     }
 
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_delegate_to_the_session_facade() {
+        // the one sanctioned in-tree use of the legacy entry points: pin
+        // that the shims reproduce the façade's results exactly
+        let cfg = LiveConfig {
+            strategy: "jit".to_string(),
+            n_parties: 4,
+            rounds: 2,
+            seed: 11,
+            backend: PartyBackend::Scripted,
+            dim: 32,
+            workload: Workload::mlp_live(),
+            ..Default::default()
+        };
+        let shim = run_live(&cfg).expect("shim run");
+        let (s, h) = live_session("jit");
+        let rep = s.run().expect("session run");
+        assert_eq!(shim.final_model, rep.job(h).final_model);
+        assert_eq!(shim.updates_fused, rep.job(h).updates_folded);
+        assert_eq!(shim.records.len(), rep.job(h).records.len());
+        assert_eq!(shim.deployments, rep.job(h).deployments);
+    }
+
     // -----------------------------------------------------------------
     // live multi-tenancy
     // -----------------------------------------------------------------
-
-    use crate::broker::workload::JobArrival;
 
     fn arrival(i: usize, at: f64, parties: usize, strategy: &str, class: SloClass) -> JobArrival {
         let mut spec = FlJobSpec::new(
@@ -1828,25 +1826,28 @@ mod tests {
         ])
     }
 
-    fn broker_cfg(policy: &str) -> LiveBrokerConfig {
-        LiveBrokerConfig {
-            capacity: 8,
-            policy: policy.to_string(),
-            seed: 0x11FE,
-            dim: 24,
-            ..Default::default()
-        }
+    /// The standard multi-job live session of the old broker tests.
+    fn broker_session(trace: &JobTrace, policy: &str) -> Session {
+        Session::live()
+            .trace(trace)
+            .policy(policy)
+            .capacity(8)
+            .seed(0x11FE)
+            .dim(24)
     }
 
     #[test]
     fn live_broker_runs_concurrent_jobs_with_independent_data_planes() {
         let trace = two_job_trace();
         let mq = Arc::new(MessageQueue::new());
-        let rep = run_live_broker(&trace, &broker_cfg("deadline"), &mq, false)
+        let rep = broker_session(&trace, "deadline")
+            .on(&mq)
+            .run()
             .expect("live broker run");
-        assert_eq!(rep.jobs.len(), 2);
-        assert!(!rep.crashed);
-        for (job, o) in rep.jobs.iter().enumerate() {
+        let sum = rep.summary();
+        assert_eq!(sum.jobs.len(), 2);
+        assert!(!sum.crashed);
+        for (job, o) in sum.jobs.iter().enumerate() {
             assert_eq!(o.records.len(), 2, "job {job} rounds");
             assert_eq!(o.final_model.len(), 24, "job {job} model");
             assert!(o.container_seconds > 0.0, "job {job} busy");
@@ -1858,15 +1859,15 @@ mod tests {
             );
         }
         // every update folded exactly once: 3·2 + 4·2
-        assert_eq!(rep.updates_folded, 14);
+        assert_eq!(sum.updates_folded, 14);
         assert!(
-            rep.max_concurrent_jobs() >= 2,
+            sum.max_concurrent_jobs() >= 2,
             "jobs 0.5s apart with multi-second spans must overlap"
         );
         // the two jobs train different models (per-job synth seeds)
-        assert_ne!(rep.jobs[0].final_model, rep.jobs[1].final_model);
-        assert!(rep.cluster_utilization > 0.0);
-        assert!(rep.span_secs > 0.0);
+        assert_ne!(sum.jobs[0].final_model, sum.jobs[1].final_model);
+        assert!(sum.cluster_utilization > 0.0);
+        assert!(sum.span_secs > 0.0);
     }
 
     /// Contended trace: an always-on job hogs the single container, so a
@@ -1882,13 +1883,17 @@ mod tests {
     #[test]
     fn live_broker_preemption_is_deterministic_per_policy_and_starves_nobody() {
         for policy in arbitration::all_policies() {
-            let mut cfg = broker_cfg(policy);
-            cfg.capacity = 1; // one slot: preemption is the only way in
             let trace = contended_trace();
-            let a = run_live_broker(&trace, &cfg, &Arc::new(MessageQueue::new()), false)
+            // one slot: preemption is the only way in
+            let a = broker_session(&trace, policy)
+                .capacity(1)
+                .run()
                 .unwrap_or_else(|e| panic!("{policy}: {e:#}"));
-            let b = run_live_broker(&trace, &cfg, &Arc::new(MessageQueue::new()), false)
+            let b = broker_session(&trace, policy)
+                .capacity(1)
+                .run()
                 .unwrap_or_else(|e| panic!("{policy} rerun: {e:#}"));
+            let (a, b) = (a.summary(), b.summary());
             // no-starvation: every job finishes all rounds under every
             // policy even when preemption is the only path to capacity
             for o in &a.jobs {
@@ -1925,14 +1930,18 @@ mod tests {
             arrival(1, 0.3, 3, "jit", SloClass::Standard),
             arrival(2, 0.6, 4, "jit", SloClass::BestEffort),
         ]);
-        let mut cfg = broker_cfg("deadline");
-        cfg.admission = AdmissionConfig {
+        let admission = AdmissionConfig {
             budget: 64,
             max_jobs: 1,
         };
 
         let mq_full = Arc::new(MessageQueue::new());
-        let full = run_live_broker(&trace, &cfg, &mq_full, false).expect("uninterrupted");
+        let full = broker_session(&trace, "deadline")
+            .admission(admission.clone())
+            .on(&mq_full)
+            .run()
+            .expect("uninterrupted");
+        let full = full.summary();
         assert!(!full.crashed);
         assert!(
             full.jobs[1].queue_wait_secs > 0.0 && full.jobs[2].queue_wait_secs > 0.0,
@@ -1940,9 +1949,13 @@ mod tests {
         );
 
         let mq_kill = Arc::new(MessageQueue::new());
-        let mut cfg_kill = cfg.clone();
-        cfg_kill.kill_after_fuses = Some(2);
-        let dead = run_live_broker(&trace, &cfg_kill, &mq_kill, false).expect("killed");
+        let dead = broker_session(&trace, "deadline")
+            .admission(admission.clone())
+            .kill_after_fuses(Some(2))
+            .on(&mq_kill)
+            .run()
+            .expect("killed");
+        let dead = dead.summary();
         assert!(dead.crashed, "fault injection must trip");
         assert_eq!(dead.updates_folded, 2);
         assert_eq!(
@@ -1958,7 +1971,13 @@ mod tests {
             assert_eq!(mq_kill.end_offset(&mq::model_topic(job)), 0);
         }
 
-        let resumed = run_live_broker(&trace, &cfg, &mq_kill, true).expect("resumed");
+        let resumed = broker_session(&trace, "deadline")
+            .admission(admission)
+            .on(&mq_kill)
+            .resume(true)
+            .run()
+            .expect("resumed");
+        let resumed = resumed.summary();
         assert!(!resumed.crashed);
         assert_eq!(resumed.jobs[0].resumed_round, Some(0));
         for job in 0..3 {
@@ -1989,10 +2008,14 @@ mod tests {
     #[test]
     fn live_broker_resume_of_a_finished_run_is_a_noop() {
         let trace = two_job_trace();
-        let cfg = broker_cfg("wfs");
         let mq = Arc::new(MessageQueue::new());
-        run_live_broker(&trace, &cfg, &mq, false).expect("run");
-        let r = run_live_broker(&trace, &cfg, &mq, true).expect("resume");
+        broker_session(&trace, "wfs").on(&mq).run().expect("run");
+        let r = broker_session(&trace, "wfs")
+            .on(&mq)
+            .resume(true)
+            .run()
+            .expect("resume");
+        let r = r.summary();
         assert!(!r.crashed);
         assert_eq!(r.updates_folded, 0, "nothing refolds");
         for (job, o) in r.jobs.iter().enumerate() {
@@ -2005,11 +2028,12 @@ mod tests {
     #[test]
     fn live_broker_rejects_bad_inputs() {
         let trace = two_job_trace();
-        let mut cfg = broker_cfg("bogus");
-        assert!(run_live_broker(&trace, &cfg, &Arc::new(MessageQueue::new()), false).is_err());
-        cfg.policy = "deadline".into();
+        assert!(broker_session(&trace, "bogus").run().is_err());
         let empty = JobTrace::default();
-        assert!(run_live_broker(&empty, &cfg, &Arc::new(MessageQueue::new()), false).is_err());
+        assert!(
+            broker_session(&empty, "deadline").run().is_err(),
+            "empty trace = session with no jobs"
+        );
     }
 
     #[test]
@@ -2021,13 +2045,19 @@ mod tests {
             a.spec.rounds = 1;
         }
         trace.arrivals[1].at_secs = 0.1;
-        let mut cfg = broker_cfg("least-slack");
-        cfg.wall = true;
-        let rep = run_live_broker(&trace, &cfg, &Arc::new(MessageQueue::new()), false)
+        let rep = Session::wall()
+            .trace(&trace)
+            .policy("least-slack")
+            .capacity(8)
+            .seed(0x11FE)
+            .dim(24)
+            .run()
             .expect("wall run");
-        assert!(!rep.crashed);
-        assert!(rep.wall_secs > 0.0);
-        for o in &rep.jobs {
+        assert_eq!(rep.mode_name(), "wall");
+        let sum = rep.summary();
+        assert!(!sum.crashed);
+        assert!(sum.wall_secs > 0.0);
+        for o in &sum.jobs {
             assert_eq!(o.records.len(), 1);
         }
     }

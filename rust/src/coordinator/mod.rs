@@ -2,17 +2,25 @@
 //! the platform drivers. This is the paper's system contribution (§3, §5)
 //! — everything else in the crate is substrate.
 //!
-//! One event-driven implementation, two time regimes ([`driver`]):
-//! [`platform`] pulls the per-job [`driver::JobEngine`]s with the virtual
-//! driver (simulation grids, multi-tenant broker), [`live`] pulls them
-//! with the wall-clock driver over real MQ traffic — one engine
-//! (`live::run_live`) or a whole broker-admitted job mix sharing one
-//! arbitrated cluster (`live::run_live_broker`). The five
-//! [`strategies`] run unmodified under both.
+//! **Run things through [`session::Session`]** — the single builder-style
+//! façade over every execution regime: `Session::sim()` (virtual time,
+//! the Fig 7/8/9 grids), `Session::live()` (the real MQ data plane on an
+//! instant clock — deterministic, bit-identical to sim) and
+//! `Session::wall()` (the real wall clock with thread-backed parties).
+//! One job or a whole broker-admitted job mix, one unified
+//! [`session::Report`], and a streaming [`session::SessionEvent`] channel.
+//!
+//! Underneath: one event-driven implementation, two time regimes
+//! ([`driver`]) — [`platform`] pulls the per-job [`driver::JobEngine`]s
+//! with the virtual driver, [`live`] pulls them with the wall-clock
+//! driver over real MQ traffic through one multi-job control loop (a
+//! single live job is its N = 1 case). The five [`strategies`] run
+//! unmodified under both.
 
 pub mod driver;
 pub mod job;
 pub mod live;
 pub mod platform;
+pub mod session;
 pub mod strategies;
 pub mod timeline;

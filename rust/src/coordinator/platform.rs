@@ -18,6 +18,7 @@ use crate::broker::admission::AdmissionController;
 use crate::cluster::{Cluster, ClusterConfig};
 use crate::coordinator::driver::{ArrivalMode, Driver, JobEngine, VirtualDriver};
 use crate::coordinator::job::FlJobSpec;
+use crate::coordinator::session::{EventSink, SessionEvent};
 use crate::coordinator::strategies::Strategy;
 use crate::metrics::JobReport;
 use crate::mq::{self, MessageQueue};
@@ -60,6 +61,9 @@ pub struct Platform {
     tick_scheduled: bool,
     /// Broker admission control; `None` = every job starts unconditionally.
     admission: Option<AdmissionController>,
+    /// Streaming observer channel (`Session::events()`); inactive by
+    /// default, so the grid hot paths pay one `Option` check per emit.
+    events: EventSink,
 }
 
 /// End-of-run aggregates for the broker (`run_with_stats`).
@@ -85,6 +89,7 @@ impl Platform {
             jobs: Vec::new(),
             tick_scheduled: false,
             admission: None,
+            events: EventSink::none(),
             cfg,
         }
     }
@@ -124,25 +129,51 @@ impl Platform {
         &mut self.cluster
     }
 
+    /// Install the session's streaming observer channel: the run emits
+    /// [`SessionEvent`]s (job admitted/queued, round started/fused,
+    /// preemption decisions) as it executes.
+    pub fn set_event_sink(&mut self, sink: EventSink) {
+        self.events = sink;
+    }
+
     /// A job cleared admission (or has no controller): start round 0 now.
     fn release_job(&mut self, job: usize) {
         let now = self.q.now();
+        self.events.emit(SessionEvent::JobAdmitted {
+            job,
+            at_secs: to_secs(now),
+        });
         self.q
             .schedule_at(now, EventKind::RoundStart { job, round: 0 });
     }
 
     fn on_job_arrival(&mut self, job: usize) {
         let now = self.q.now();
+        self.events.emit(SessionEvent::JobSubmitted {
+            job,
+            at_secs: to_secs(now),
+        });
         let started = match self.admission.as_mut() {
             Some(ctrl) => ctrl.arrive(job, now),
             None => vec![job],
         };
+        if self.admission.is_some() && !started.contains(&job) {
+            self.events.emit(SessionEvent::JobQueued {
+                job,
+                at_secs: to_secs(now),
+            });
+        }
         for j in started {
             self.release_job(j);
         }
     }
 
     fn start_round(&mut self, job: usize) {
+        self.events.emit(SessionEvent::RoundStarted {
+            job,
+            round: self.jobs[job].round,
+            at_secs: to_secs(self.q.now()),
+        });
         self.jobs[job].start_round(
             &mut self.q,
             &mut self.cluster,
@@ -165,11 +196,21 @@ impl Platform {
             return;
         };
         let now = self.q.now();
+        self.events.emit(SessionEvent::RoundFused {
+            job,
+            round: rec.round,
+            latency_secs: rec.latency_secs,
+            at_secs: to_secs(now),
+        });
         // GC the round's MQ topic
         self.mq.drop_topic(&mq::update_topic(job, rec.round));
         let finished =
             self.jobs[job].finish_round(&mut self.q, &mut self.cluster, &self.mq, rec);
         if finished {
+            self.events.emit(SessionEvent::JobFinished {
+                job,
+                at_secs: to_secs(now),
+            });
             // a finished job frees committed admission demand: queued
             // jobs may start now (broker backpressure path)
             if let Some(ctrl) = self.admission.as_mut() {
@@ -209,6 +250,8 @@ impl Platform {
             }
         }
         let mut safety: u64 = 0;
+        // preemption decisions already streamed as events
+        let mut preempt_seen: usize = 0;
         while let Some((_, ev)) = driver.next_event(&mut self.q, &self.mq) {
             safety += 1;
             debug_assert!(safety < 500_000_000, "runaway simulation");
@@ -266,6 +309,8 @@ impl Platform {
                 }
                 EventKind::RoundTimeout { .. } => {}
             }
+            // stream any preemption decisions this dispatch produced
+            self.events.stream_preemptions(&self.cluster, &mut preempt_seen);
         }
         let now = self.q.now();
         let reports: Vec<JobReport> = self

@@ -1,0 +1,1153 @@
+//! `Session` — the one way to run anything on this platform.
+//!
+//! The paper's claim is that JIT aggregation is a *drop-in* scheduling
+//! discipline for an FL platform (§3, §5); the repo had grown five
+//! divergent entry points (`Platform::run`, `run_scenario`,
+//! `broker::run_trace`, `run_live`/`run_live_on`, `run_live_broker`)
+//! with three incompatible report types. This module collapses them into
+//! one builder-style façade:
+//!
+//! ```no_run
+//! use fljit::coordinator::session::Session;
+//! use fljit::coordinator::job::FlJobSpec;
+//! use fljit::party::FleetKind;
+//! use fljit::workloads::Workload;
+//!
+//! let spec = FlJobSpec::new(Workload::mlp_live(), FleetKind::ActiveHomogeneous, 4, 3);
+//! let mut s = Session::live().seed(7).dim(64);
+//! let job = s.job(spec, "jit");
+//! let events = s.events();
+//! let report = s.run().unwrap();
+//! println!("{} rounds", report.job(job).records.len());
+//! for ev in events.try_iter() {
+//!     println!("{ev:?}");
+//! }
+//! ```
+//!
+//! ## The three time regimes (builder constructors)
+//!
+//! | constructor | clock | parties | data plane | paper section |
+//! |---|---|---|---|---|
+//! | [`Session::sim`] | virtual (event-driven) | fleet model arrivals | emulated merges | §6 grids, Fig 7/8/9 |
+//! | [`Session::live`] | instant mock of the wall clock | scripted publishes into the MQ | real folds + §5.5 checkpoints | sim/live equivalence |
+//! | [`Session::wall`] | real wall clock | OS threads (synthetic or XLA training) or scripted | real folds + §5.5 checkpoints | §5 end-to-end |
+//!
+//! All three drive the *same* [`JobEngine`](crate::coordinator::driver::JobEngine)
+//! + `Strategy` code; `live` and `wall` share one multi-job control loop
+//! (`coordinator::live`), of which a single job is simply the N = 1 case.
+//!
+//! ## Builder knobs → paper sections
+//!
+//! | knob | meaning | paper |
+//! |---|---|---|
+//! | [`job`](Session::job) / [`job_at`](Session::job_at) | admit an [`FlJobSpec`] under a strategy (returns a [`JobHandle`]) | §5.1 job spec, §3 designs |
+//! | [`trace`](Session::trace) | replay a whole [`JobTrace`] (arrivals over time) | §6.3 job-mix economics |
+//! | [`policy`](Session::policy) | cross-job arbitration (`deadline` \| `least-slack` \| `wfs`) | §5.5 priorities |
+//! | [`admission`](Session::admission) | container-demand quotas + SLO queueing | §6.3 shared cluster |
+//! | [`resume`](Session::resume) | reconstruct every job from the MQ after an aggregator death | §5.5 checkpointing |
+//! | [`quorum` (on the spec)](crate::coordinator::job::FlJobSpec::with_quorum) | minimum updates per round | §5.1 |
+//! | [`backend`](Session::backend) | who plays the parties in a `wall` session | §4 party model |
+//! | [`kill_after_fuses`](Session::kill_after_fuses) | fault injection for the resume tests | §5.5 |
+//! | [`events`](Session::events) | stream typed [`SessionEvent`]s while the run executes | §5.5 observability |
+//!
+//! Every variant returns the same unified [`Report`] (one enum over a
+//! shared [`RunSummary`] body), which subsumes the legacy
+//! `JobReport`/`RunStats`/`BrokerReport`/`LiveReport`/`LiveBrokerReport`
+//! quintet. The legacy free functions survive one more PR as
+//! `#[deprecated]` shims delegating here.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::broker::admission::{AdmissionConfig, AdmissionController};
+use crate::broker::workload::{JobArrival, JobTrace};
+use crate::broker::{arbitration, SloClass};
+use crate::coordinator::driver::{InstantClock, JobEngine, WallClock, WallDriver};
+use crate::coordinator::job::FlJobSpec;
+use crate::coordinator::live::{
+    self, LiveRoundStats, PartyBackend, ScriptedParties, ThreadParties,
+};
+use crate::coordinator::platform::{scenario_capacity, Platform, PlatformConfig};
+use crate::metrics::{JobReport, RoundRecord, AZURE_USD_PER_CONTAINER_SECOND};
+use crate::mq::MessageQueue;
+use crate::sim::secs;
+use crate::util::json::Json;
+use crate::util::stats::percentile;
+
+// ---------------------------------------------------------------------------
+// events
+// ---------------------------------------------------------------------------
+
+/// A typed observation from a running session, streamed through the
+/// channel handed out by [`Session::events`]. The sequence is a
+/// deterministic function of (mode, jobs, seed) for `sim` and `live`
+/// sessions (pinned by test); `wall` sessions order events by real time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SessionEvent {
+    /// A job's submission reached the broker (its `JobArrival` fired).
+    JobSubmitted { job: usize, at_secs: f64 },
+    /// Admission control had no headroom: the job waits in the SLO queue.
+    JobQueued { job: usize, at_secs: f64 },
+    /// The job cleared admission (immediately, or released by a finishing
+    /// job's freed demand) and its next round was scheduled.
+    JobAdmitted { job: usize, at_secs: f64 },
+    /// A round began: the global model went out to the round's parties.
+    RoundStarted { job: usize, round: u32, at_secs: f64 },
+    /// The data plane folded `folds` updates and checkpointed the partial
+    /// aggregate to the MQ after each one (§5.5). Live/wall only.
+    CheckpointWritten {
+        job: usize,
+        round: u32,
+        folds: u64,
+        at_secs: f64,
+    },
+    /// A round completed: the fused model is available (and, on the live
+    /// paths, published to the job's model topic).
+    RoundFused {
+        job: usize,
+        round: u32,
+        latency_secs: f64,
+        at_secs: f64,
+    },
+    /// The cluster preempted a running aggregation task (victim chosen by
+    /// the arbitration policy, §5.5).
+    Preempted { task: usize, at_secs: f64 },
+    /// A job finished its last round.
+    JobFinished { job: usize, at_secs: f64 },
+    /// Fault injection tripped (`kill_after_fuses`): the aggregator died
+    /// mid-round, leaving the MQ intact for a `resume` session.
+    Crashed { at_secs: f64 },
+}
+
+/// Cheap cloneable handle the runners emit events through. Inactive by
+/// default (every emit is a no-op until [`Session::events`] installs a
+/// channel), so the hot paths pay one `Option` check.
+#[derive(Clone, Default)]
+pub struct EventSink(Option<Sender<SessionEvent>>);
+
+impl EventSink {
+    /// A sink that drops everything.
+    pub fn none() -> EventSink {
+        EventSink(None)
+    }
+
+    /// Is anyone listening? Lets callers skip event assembly entirely.
+    pub fn active(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Emit an event (no-op without a listener; send errors — a dropped
+    /// receiver — are deliberately ignored so a consumer may hang up).
+    pub fn emit(&self, ev: SessionEvent) {
+        if let Some(tx) = &self.0 {
+            let _ = tx.send(ev);
+        }
+    }
+
+    /// Stream every preemption decision the cluster logged since `*seen`
+    /// as a [`SessionEvent::Preempted`], advancing the cursor. Both
+    /// runners (sim platform and live loop) call this after each event
+    /// dispatch — and the live loop once more after its loop exits, so
+    /// decisions made by a crashing dispatch still reach the stream; the
+    /// event sequence and the report's `preemptions` list must agree.
+    pub(crate) fn stream_preemptions(
+        &self,
+        cluster: &crate::cluster::Cluster,
+        seen: &mut usize,
+    ) {
+        if !self.active() {
+            return;
+        }
+        let log = cluster.preemption_log();
+        while *seen < log.len() {
+            let (t, task) = log[*seen];
+            self.emit(SessionEvent::Preempted {
+                task,
+                at_secs: crate::sim::to_secs(t),
+            });
+            *seen += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the unified report
+// ---------------------------------------------------------------------------
+
+/// Opaque per-job handle returned by [`Session::job`]; index it into the
+/// run's [`Report`] with [`Report::job`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct JobHandle(pub(crate) usize);
+
+impl JobHandle {
+    /// The dense platform job id (also the job's index in
+    /// [`RunSummary::jobs`] and its MQ topic namespace).
+    pub fn id(self) -> usize {
+        self.0
+    }
+}
+
+/// One job's outcome, identical in shape across every session mode —
+/// the union of the legacy `JobReport`, `BrokerJobOutcome`,
+/// `LiveReport` and `LiveJobOutcome` fields. Sim-only fields are zero /
+/// empty on the live paths and vice versa (`final_model` is empty in
+/// sim; `updates_folded` is 0 in sim).
+#[derive(Clone, Debug)]
+pub struct JobOutcome {
+    pub job: usize,
+    pub name: String,
+    pub strategy: String,
+    pub workload: String,
+    pub fleet: String,
+    pub class: SloClass,
+    pub parties: usize,
+    /// Submission time (virtual seconds from session start).
+    pub arrival_secs: f64,
+    /// Admission backpressure: seconds queued before the job started.
+    pub queue_wait_secs: f64,
+    /// Strategy round records (§6.2 latency semantics, same everywhere).
+    pub records: Vec<RoundRecord>,
+    /// Aggregation container-seconds from the cluster ledger.
+    pub container_seconds: f64,
+    /// Ancillary-service container-seconds (MongoDB/Kafka/COS share).
+    pub ancillary_seconds: f64,
+    pub deployments: u64,
+    /// Emulated update merges (the simulator-comparable count).
+    pub updates_fused: u64,
+    /// Real data-plane folds this run performed for the job (0 in sim).
+    pub updates_folded: u64,
+    /// Absolute virtual-time instant the job finished (0.0 if it did not).
+    pub makespan_secs: f64,
+    /// Latest published global model (live/wall; empty in sim).
+    pub final_model: Vec<f32>,
+    /// Set on resumed runs: the round reconstructed from the job's MQ
+    /// state (model-topic offset).
+    pub resumed_round: Option<u32>,
+    /// XLA backend: per-round train/eval stats.
+    pub stats: Vec<LiveRoundStats>,
+    /// XLA backend: measured pair-fusion time (§5.4 calibration).
+    pub t_pair_secs: f64,
+    /// Sim with [`Session::solo_baselines`]: the same job's mean latency
+    /// alone on an uncontended cluster.
+    pub solo_mean_latency_secs: Option<f64>,
+}
+
+impl JobOutcome {
+    /// Mean aggregation latency over rounds — the Fig 7/8 metric.
+    pub fn mean_latency_secs(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.latency_secs).sum::<f64>() / self.records.len() as f64
+    }
+
+    pub fn latency_p95(&self) -> f64 {
+        if self.records.is_empty() {
+            // percentile() of nothing is NaN, which would poison the
+            // schema-stable JSON export (NaN is not valid JSON)
+            return 0.0;
+        }
+        percentile(
+            &self.records.iter().map(|r| r.latency_secs).collect::<Vec<_>>(),
+            95.0,
+        )
+    }
+
+    /// Total container-seconds (aggregation + ancillary) — the Fig 9 metric.
+    pub fn total_container_seconds(&self) -> f64 {
+        self.container_seconds + self.ancillary_seconds
+    }
+
+    /// Projected cost in USD (Fig 9).
+    pub fn cost_usd(&self) -> f64 {
+        self.total_container_seconds() * AZURE_USD_PER_CONTAINER_SECOND
+    }
+
+    /// Contended / solo mean-latency ratio (1.0 = no inflation).
+    pub fn latency_inflation(&self) -> Option<f64> {
+        let solo = self.solo_mean_latency_secs?;
+        if solo <= 0.0 {
+            return None;
+        }
+        Some(self.mean_latency_secs() / solo)
+    }
+
+    /// Project onto the legacy `JobReport` shape (the deprecated-shim
+    /// bridge; new code reads `JobOutcome` directly).
+    pub fn to_job_report(&self) -> JobReport {
+        JobReport {
+            strategy: self.strategy.clone(),
+            workload: self.workload.clone(),
+            fleet: self.fleet.clone(),
+            parties: self.parties,
+            rounds: self.records.clone(),
+            container_seconds: self.container_seconds,
+            ancillary_seconds: self.ancillary_seconds,
+            deployments: self.deployments,
+            updates_fused: self.updates_fused,
+            makespan_secs: self.makespan_secs,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("job", Json::num(self.job as f64)),
+            ("name", Json::str(&self.name)),
+            ("strategy", Json::str(&self.strategy)),
+            ("workload", Json::str(&self.workload)),
+            ("fleet", Json::str(&self.fleet)),
+            ("class", Json::str(self.class.name())),
+            ("parties", Json::num(self.parties as f64)),
+            ("arrival_secs", Json::num(self.arrival_secs)),
+            ("queue_wait_secs", Json::num(self.queue_wait_secs)),
+            ("rounds", Json::num(self.records.len() as f64)),
+            (
+                "records",
+                Json::Arr(
+                    self.records
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("round", Json::num(r.round as f64)),
+                                ("latency_secs", Json::num(r.latency_secs)),
+                                ("last_arrival_secs", Json::num(r.last_arrival_secs)),
+                                ("complete_secs", Json::num(r.complete_secs)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("mean_latency_secs", Json::num(self.mean_latency_secs())),
+            ("latency_p95_secs", Json::num(self.latency_p95())),
+            ("container_seconds", Json::num(self.container_seconds)),
+            ("ancillary_seconds", Json::num(self.ancillary_seconds)),
+            (
+                "total_container_seconds",
+                Json::num(self.total_container_seconds()),
+            ),
+            ("cost_usd", Json::num(self.cost_usd())),
+            ("deployments", Json::num(self.deployments as f64)),
+            ("updates_fused", Json::num(self.updates_fused as f64)),
+            ("updates_folded", Json::num(self.updates_folded as f64)),
+            ("makespan_secs", Json::num(self.makespan_secs)),
+            ("final_model_dim", Json::num(self.final_model.len() as f64)),
+            (
+                "resumed_round",
+                match self.resumed_round {
+                    Some(r) => Json::num(r as f64),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "solo_mean_latency_secs",
+                match self.solo_mean_latency_secs {
+                    Some(v) => Json::num(v),
+                    None => Json::Null,
+                },
+            ),
+            ("t_pair_secs", Json::num(self.t_pair_secs)),
+            (
+                "eval_stats",
+                Json::Arr(
+                    self.stats
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("round", Json::num(s.round as f64)),
+                                ("train_loss", Json::num(s.train_loss as f64)),
+                                ("eval_loss", Json::num(s.eval_loss as f64)),
+                                ("eval_acc", Json::num(s.eval_acc as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// The shared body of every [`Report`] variant: per-job outcomes plus
+/// run-level cluster aggregates.
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    /// Arbitration policy the shared cluster ran under.
+    pub policy: String,
+    /// Cluster container capacity.
+    pub capacity: usize,
+    pub seed: u64,
+    pub jobs: Vec<JobOutcome>,
+    /// Σ container-seconds / (capacity × span).
+    pub cluster_utilization: f64,
+    pub total_container_seconds: f64,
+    /// Virtual-time span of the run (seconds).
+    pub span_secs: f64,
+    /// Real data-plane folds across all jobs (0 in sim).
+    pub updates_folded: u64,
+    /// Preemption decisions `(secs, victim task)` in decision order —
+    /// the policy-determinism pin.
+    pub preemptions: Vec<(f64, usize)>,
+    /// Real elapsed time of the run itself.
+    pub wall_secs: f64,
+    /// True when `kill_after_fuses` fired: the run aborted mid-round and
+    /// the MQ holds every job's durable state for a `resume` session.
+    pub crashed: bool,
+}
+
+impl RunSummary {
+    pub fn mean_queue_wait_secs(&self) -> f64 {
+        if self.jobs.is_empty() {
+            return 0.0;
+        }
+        self.jobs.iter().map(|j| j.queue_wait_secs).sum::<f64>() / self.jobs.len() as f64
+    }
+
+    pub fn mean_latency_inflation(&self) -> Option<f64> {
+        let vals: Vec<f64> = self
+            .jobs
+            .iter()
+            .filter_map(|j| j.latency_inflation())
+            .collect();
+        if vals.is_empty() {
+            None
+        } else {
+            Some(vals.iter().sum::<f64>() / vals.len() as f64)
+        }
+    }
+
+    /// Peak number of jobs simultaneously running.
+    pub fn max_concurrent_jobs(&self) -> usize {
+        crate::broker::peak_concurrency(self.jobs.iter().map(|o| {
+            (o.arrival_secs + o.queue_wait_secs, o.makespan_secs)
+        }))
+    }
+}
+
+/// The unified run report: one variant per time regime, all sharing the
+/// [`RunSummary`] body — this enum subsumes the legacy
+/// `JobReport`/`RunStats`/`BrokerReport`/`LiveReport`/`LiveBrokerReport`.
+#[derive(Clone, Debug)]
+pub enum Report {
+    /// Virtual-time simulation ([`Session::sim`]).
+    Sim(RunSummary),
+    /// Live data plane on the instant clock ([`Session::live`]).
+    Live(RunSummary),
+    /// Live data plane on the real wall clock ([`Session::wall`]).
+    Wall(RunSummary),
+}
+
+impl Report {
+    pub fn summary(&self) -> &RunSummary {
+        match self {
+            Report::Sim(s) | Report::Live(s) | Report::Wall(s) => s,
+        }
+    }
+
+    pub fn mode_name(&self) -> &'static str {
+        match self {
+            Report::Sim(_) => "sim",
+            Report::Live(_) => "live",
+            Report::Wall(_) => "wall",
+        }
+    }
+
+    pub fn jobs(&self) -> &[JobOutcome] {
+        &self.summary().jobs
+    }
+
+    /// The outcome of the job admitted under `h`.
+    pub fn job(&self, h: JobHandle) -> &JobOutcome {
+        &self.summary().jobs[h.0]
+    }
+
+    /// Single-job convenience: the first (only) job's outcome.
+    pub fn single(&self) -> &JobOutcome {
+        &self.summary().jobs[0]
+    }
+
+    /// Schema-stable JSON export (pinned by the golden-file test): the
+    /// same key set for every mode, with mode-inapplicable fields zeroed
+    /// or null rather than omitted.
+    pub fn to_json(&self) -> Json {
+        let s = self.summary();
+        Json::obj(vec![
+            ("mode", Json::str(self.mode_name())),
+            ("policy", Json::str(&s.policy)),
+            ("capacity", Json::num(s.capacity as f64)),
+            ("seed", Json::num(s.seed as f64)),
+            ("crashed", Json::Bool(s.crashed)),
+            ("span_secs", Json::num(s.span_secs)),
+            ("wall_secs", Json::num(s.wall_secs)),
+            ("cluster_utilization", Json::num(s.cluster_utilization)),
+            (
+                "total_container_seconds",
+                Json::num(s.total_container_seconds),
+            ),
+            ("updates_folded", Json::num(s.updates_folded as f64)),
+            ("mean_queue_wait_secs", Json::num(s.mean_queue_wait_secs())),
+            (
+                "max_concurrent_jobs",
+                Json::num(s.max_concurrent_jobs() as f64),
+            ),
+            (
+                "preemptions",
+                Json::Arr(
+                    s.preemptions
+                        .iter()
+                        .map(|&(t, task)| {
+                            Json::obj(vec![
+                                ("at_secs", Json::num(t)),
+                                ("task", Json::num(task as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "jobs",
+                Json::Arr(s.jobs.iter().map(|j| j.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+/// Flatten a JSON value into sorted `path: type` lines — the schema the
+/// golden-file test pins (values change run to run, the shape must not).
+pub fn json_schema_lines(v: &Json) -> Vec<String> {
+    fn walk(prefix: &str, v: &Json, out: &mut Vec<String>) {
+        if let Some(obj) = v.as_obj() {
+            for (k, child) in obj {
+                walk(&format!("{prefix}.{k}"), child, out);
+            }
+        } else if let Some(arr) = v.as_arr() {
+            match arr.first() {
+                Some(first) => walk(&format!("{prefix}[]"), first, out),
+                None => out.push(format!("{prefix}[]: (empty)")),
+            }
+        } else {
+            let ty = if v.as_str().is_some() {
+                "str"
+            } else if v.as_bool().is_some() {
+                "bool"
+            } else if v.as_f64().is_some() {
+                "num"
+            } else {
+                "null"
+            };
+            out.push(format!("{prefix}: {ty}"));
+        }
+    }
+    let mut out = Vec::new();
+    walk("", v, &mut out);
+    out.sort();
+    out
+}
+
+// ---------------------------------------------------------------------------
+// the builder
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Mode {
+    Sim,
+    Live,
+    Wall,
+}
+
+/// Builder-style façade over every execution regime. See the module docs
+/// for the knob table; construct with [`Session::sim`], [`Session::live`]
+/// or [`Session::wall`], add jobs, then [`run`](Session::run).
+pub struct Session {
+    mode: Mode,
+    arrivals: Vec<JobArrival>,
+    policy: String,
+    admission: Option<AdmissionConfig>,
+    capacity: Option<usize>,
+    seed: u64,
+    dim: usize,
+    lr: f32,
+    backend: Option<PartyBackend>,
+    minibatches: usize,
+    alpha: f64,
+    kill_after_fuses: Option<u64>,
+    mq: Option<Arc<MessageQueue>>,
+    resume: bool,
+    solo_baselines: bool,
+    sink: EventSink,
+}
+
+impl Session {
+    fn with_mode(mode: Mode) -> Session {
+        Session {
+            mode,
+            arrivals: Vec::new(),
+            policy: "deadline".to_string(),
+            admission: None,
+            capacity: None,
+            seed: 42,
+            dim: 512,
+            lr: 0.3,
+            backend: None,
+            minibatches: 4,
+            alpha: 0.5,
+            kill_after_fuses: None,
+            mq: None,
+            resume: false,
+            solo_baselines: false,
+            sink: EventSink::none(),
+        }
+    }
+
+    /// Virtual-time simulation: fleet-model arrivals, emulated merges —
+    /// the Fig 7/8/9 grid regime (10k parties × 50 rounds in
+    /// milliseconds of wall time).
+    pub fn sim() -> Session {
+        Session::with_mode(Mode::Sim)
+    }
+
+    /// The live data plane on an instant clock: scripted parties publish
+    /// real update vectors into the zero-copy MQ at the fleet model's
+    /// drawn offsets and the aggregator folds them with per-fold §5.5
+    /// checkpoints — deterministic, bit-identical to `sim` (pinned by
+    /// `tests/live_equivalence.rs`), and the regime every resume test
+    /// runs in.
+    pub fn live() -> Session {
+        Session::with_mode(Mode::Live)
+    }
+
+    /// The live data plane on the real wall clock: the driver sleeps to
+    /// the next deadline and wakes on MQ publishes from party threads
+    /// (synthetic local training by default, real XLA training with
+    /// [`backend(PartyBackend::XlaThreads)`](Session::backend)).
+    pub fn wall() -> Session {
+        Session::with_mode(Mode::Wall)
+    }
+
+    /// Admit a job at t = 0 under `strategy` (any of the five §3
+    /// designs). Returns a [`JobHandle`] to index the [`Report`] with.
+    pub fn job(&mut self, spec: FlJobSpec, strategy: &str) -> JobHandle {
+        self.job_at(spec, strategy, 0.0, SloClass::Standard)
+    }
+
+    /// Admit a job arriving at `at_secs` (virtual seconds) in `class` —
+    /// the broker path: the job passes admission control and shares the
+    /// arbitrated cluster.
+    pub fn job_at(
+        &mut self,
+        spec: FlJobSpec,
+        strategy: &str,
+        at_secs: f64,
+        class: SloClass,
+    ) -> JobHandle {
+        self.arrivals.push(JobArrival {
+            at_secs,
+            spec,
+            strategy: strategy.to_string(),
+            class,
+        });
+        JobHandle(self.arrivals.len() - 1)
+    }
+
+    /// Replace the session's job list with a whole [`JobTrace`] (§6.3):
+    /// jobs arrive at their trace times in trace order. Job `i` of the
+    /// trace is job `i` of the report.
+    pub fn trace(mut self, trace: &JobTrace) -> Session {
+        self.arrivals = trace.arrivals.clone();
+        self
+    }
+
+    /// Cross-job arbitration policy (`deadline` — the §5.5 baseline,
+    /// default — `least-slack`, or `wfs`). Drives both task starts and
+    /// preemption-victim choice.
+    pub fn policy(mut self, name: &str) -> Session {
+        self.policy = name.to_string();
+        self
+    }
+
+    /// Admission control (container-demand budget + SLO queueing). The
+    /// default config admits effectively everything.
+    pub fn admission(mut self, cfg: AdmissionConfig) -> Session {
+        self.admission = Some(cfg);
+        self
+    }
+
+    /// Shared cluster container capacity. Default: a single job gets the
+    /// amply-sized `scenario_capacity` of its spec; a multi-job session
+    /// gets 16 (scarce on purpose — arbitration needs contention).
+    pub fn capacity(mut self, capacity: usize) -> Session {
+        self.capacity = Some(capacity);
+        self
+    }
+
+    /// Platform seed: fleets, arrival draws and synthetic updates are a
+    /// deterministic function of (seed, job id).
+    pub fn seed(mut self, seed: u64) -> Session {
+        self.seed = seed;
+        self
+    }
+
+    /// Update vector length of the live data plane (ignored in sim and
+    /// by the XLA backend, whose model sets the dimension).
+    pub fn dim(mut self, dim: usize) -> Session {
+        self.dim = dim;
+        self
+    }
+
+    /// Synthetic local-training pull toward the party target.
+    ///
+    /// Knob scoping: data-plane knobs (`dim`, `lr`, `minibatches`,
+    /// `alpha`) are quietly inert where no data plane exists (sim), and
+    /// `solo_baselines` is quietly inert outside sim — they tune a
+    /// regime rather than select one. Knobs that *select* behavior the
+    /// mode cannot provide (`resume`/`kill_after_fuses` in sim, thread
+    /// `backend`s without a wall clock) are hard errors in
+    /// [`run`](Session::run).
+    pub fn lr(mut self, lr: f32) -> Session {
+        self.lr = lr;
+        self
+    }
+
+    /// Who plays the parties in a [`wall`](Session::wall) session
+    /// (default: synthetic training threads for one job, scripted
+    /// parties for a multi-job trace). `live` sessions are always
+    /// scripted — thread backends need the real clock.
+    pub fn backend(mut self, backend: PartyBackend) -> Session {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// XLA backend: minibatches per epoch (2/4/8/16/32 artifacts).
+    pub fn minibatches(mut self, minibatches: usize) -> Session {
+        self.minibatches = minibatches;
+        self
+    }
+
+    /// XLA backend: Dirichlet alpha for non-IID label skew.
+    pub fn alpha(mut self, alpha: f64) -> Session {
+        self.alpha = alpha;
+        self
+    }
+
+    /// Fault injection: abort the aggregator after this many data-plane
+    /// folds across all jobs, leaving the MQ intact for a resume (§5.5
+    /// test hook; live/wall only).
+    pub fn kill_after_fuses(mut self, folds: Option<u64>) -> Session {
+        self.kill_after_fuses = folds;
+        self
+    }
+
+    /// Run against an explicit shared MQ — required for resume (a fresh
+    /// private MQ is created otherwise, so nothing survives the run).
+    pub fn on(mut self, mq: &Arc<MessageQueue>) -> Session {
+        self.mq = Some(Arc::clone(mq));
+        self
+    }
+
+    /// Reconstruct every job's position from the MQ instead of starting
+    /// fresh (§5.5): completed rounds from each job's model-topic offset,
+    /// in-progress partial aggregates from its checkpoint slot, round
+    /// topics replayed into the strategies as arrival events. Jobs that
+    /// were still queued at the crash are re-admitted from the session's
+    /// job list (which is why resume takes the same jobs/trace, not just
+    /// the MQ).
+    pub fn resume(mut self, resume: bool) -> Session {
+        self.resume = resume;
+        self
+    }
+
+    /// Sim only (inert elsewhere): also run each job solo on an
+    /// uncontended cluster and report `solo_mean_latency_secs` / latency
+    /// inflation (doubles the work).
+    pub fn solo_baselines(mut self, with_solo: bool) -> Session {
+        self.solo_baselines = with_solo;
+        self
+    }
+
+    /// Install and return the event stream: the run emits typed
+    /// [`SessionEvent`]s through it as they happen. Consume live from
+    /// another thread (wall sessions), or drain after [`run`](Session::run)
+    /// returns — the channel is unbounded and buffers everything.
+    pub fn events(&mut self) -> Receiver<SessionEvent> {
+        let (tx, rx) = channel();
+        self.sink = EventSink(Some(tx));
+        rx
+    }
+
+    // -- execution ---------------------------------------------------------
+
+    fn default_capacity(&self) -> usize {
+        if self.arrivals.len() == 1 {
+            scenario_capacity(&self.arrivals[0].spec)
+        } else {
+            16
+        }
+    }
+
+    /// Run every job to completion (or to the injected kill) and return
+    /// the unified [`Report`].
+    pub fn run(self) -> Result<Report> {
+        if self.arrivals.is_empty() {
+            return Err(anyhow!(
+                "session has no jobs: add .job(..)/.job_at(..) or .trace(..)"
+            ));
+        }
+        if arbitration::by_name(&self.policy).is_none() {
+            return Err(anyhow!(
+                "unknown arbitration policy {:?}; expected one of {:?}",
+                self.policy,
+                arbitration::all_policies()
+            ));
+        }
+        for (job, arr) in self.arrivals.iter().enumerate() {
+            if crate::coordinator::strategies::by_name(&arr.strategy).is_none() {
+                return Err(anyhow!(
+                    "job {job}: unknown strategy {:?}; expected one of {:?}",
+                    arr.strategy,
+                    crate::coordinator::strategies::all_strategies()
+                ));
+            }
+        }
+        match self.mode {
+            Mode::Sim => self.run_sim(),
+            Mode::Live | Mode::Wall => self.run_live_mode(),
+        }
+    }
+
+    /// Virtual-time regime: the multi-tenant `Platform` under the
+    /// virtual driver, with broker admission + arbitration installed.
+    fn run_sim(self) -> Result<Report> {
+        if self.resume {
+            return Err(anyhow!(
+                "resume needs a live or wall session (sim has no durable MQ state)"
+            ));
+        }
+        if self.backend.is_some() {
+            return Err(anyhow!(
+                "party backends apply to wall sessions only (sim emulates arrivals)"
+            ));
+        }
+        if self.kill_after_fuses.is_some() {
+            return Err(anyhow!(
+                "kill_after_fuses applies to live/wall sessions (sim has no data plane)"
+            ));
+        }
+        let capacity = self.capacity.unwrap_or_else(|| self.default_capacity()).max(1);
+        let wall_start = Instant::now();
+        let mut pcfg = PlatformConfig {
+            seed: self.seed,
+            ..Default::default()
+        };
+        pcfg.cluster.capacity = capacity;
+        let mut platform = Platform::new(pcfg);
+        let mut ctrl = AdmissionController::new(self.admission.clone().unwrap_or_default());
+        for arr in &self.arrivals {
+            let demand = arr.spec.workload.n_agg(arr.spec.n_parties) as usize;
+            let job = platform.submit_at(arr.spec.clone(), &arr.strategy, secs(arr.at_secs));
+            ctrl.register(job, demand, arr.class);
+            platform.cluster_mut().set_job_weight(job, arr.class.weight());
+        }
+        platform
+            .cluster_mut()
+            .set_policy(arbitration::by_name(&self.policy).expect("validated in run"));
+        platform.set_admission(ctrl);
+        platform.set_event_sink(self.sink.clone());
+        let (reports, stats) = platform.run_with_stats();
+        let ctrl = stats.admission.expect("admission controller returned");
+        let span = stats.end_secs;
+        let jobs: Vec<JobOutcome> = reports
+            .into_iter()
+            .enumerate()
+            .map(|(job, report)| {
+                let arr = &self.arrivals[job];
+                JobOutcome {
+                    job,
+                    name: arr.spec.name.clone(),
+                    strategy: arr.strategy.clone(),
+                    workload: report.workload,
+                    fleet: report.fleet,
+                    class: arr.class,
+                    parties: arr.spec.n_parties,
+                    arrival_secs: arr.at_secs,
+                    queue_wait_secs: ctrl.queue_wait_secs(job),
+                    records: report.rounds,
+                    container_seconds: report.container_seconds,
+                    ancillary_seconds: report.ancillary_seconds,
+                    deployments: report.deployments,
+                    updates_fused: report.updates_fused,
+                    updates_folded: 0,
+                    makespan_secs: report.makespan_secs,
+                    final_model: Vec::new(),
+                    resumed_round: None,
+                    stats: Vec::new(),
+                    t_pair_secs: 0.0,
+                    solo_mean_latency_secs: self
+                        .solo_baselines
+                        .then(|| crate::broker::solo_mean_latency(arr, self.seed, job)),
+                }
+            })
+            .collect();
+        Ok(Report::Sim(RunSummary {
+            policy: self.policy,
+            capacity,
+            seed: self.seed,
+            jobs,
+            cluster_utilization: stats.total_container_seconds
+                / (capacity as f64 * span.max(1e-9)),
+            total_container_seconds: stats.total_container_seconds,
+            span_secs: span,
+            updates_folded: 0,
+            preemptions: stats.preemptions,
+            wall_secs: wall_start.elapsed().as_secs_f64(),
+            crashed: false,
+        }))
+    }
+
+    /// Wall-driver regimes: the unified multi-job control loop of
+    /// `coordinator::live` — a single job is its N = 1 case.
+    fn run_live_mode(self) -> Result<Report> {
+        let wall = self.mode == Mode::Wall;
+        let backend = self.backend.unwrap_or(match (wall, self.arrivals.len()) {
+            (false, _) => PartyBackend::Scripted,
+            (true, 1) => PartyBackend::SynthThreads,
+            (true, _) => PartyBackend::Scripted,
+        });
+        if !wall && backend != PartyBackend::Scripted {
+            return Err(anyhow!(
+                "thread party backends need the real clock: use Session::wall()"
+            ));
+        }
+        if self.arrivals.len() > 1 && backend != PartyBackend::Scripted {
+            return Err(anyhow!(
+                "multi-job sessions run scripted parties (thread backends are single-job)"
+            ));
+        }
+        if self.resume && self.mq.is_none() {
+            return Err(anyhow!(
+                "resume needs the MQ the crashed run wrote to: pass it with .on(&mq) \
+                 (a fresh private MQ has no §5.5 state to restore)"
+            ));
+        }
+        let capacity = self.capacity.unwrap_or_else(|| self.default_capacity()).max(1);
+        let mq = self
+            .mq
+            .clone()
+            .unwrap_or_else(|| Arc::new(MessageQueue::new()));
+        let mut engines: Vec<JobEngine> = Vec::with_capacity(self.arrivals.len());
+        let mut weights: Vec<Vec<f32>> = Vec::with_capacity(self.arrivals.len());
+        for (job, arr) in self.arrivals.iter().enumerate() {
+            let mut engine = JobEngine::new(job, arr.spec.clone(), &arr.strategy, self.seed);
+            engine.deferred = true;
+            weights.push(
+                engine
+                    .fleet
+                    .parties
+                    .iter()
+                    .map(|p| p.dataset_items as f32)
+                    .collect(),
+            );
+            engines.push(engine);
+        }
+        let params = live::LoopParams {
+            arrivals: &self.arrivals,
+            capacity,
+            admission: self.admission.clone().unwrap_or_default(),
+            policy: self.policy.clone(),
+            seed: self.seed,
+            dim: self.dim.max(1),
+            kill_after_fuses: self.kill_after_fuses,
+            resume: self.resume,
+            init_override: None,
+            sink: self.sink.clone(),
+        };
+        let summary = match backend {
+            PartyBackend::Scripted => {
+                let source = ScriptedParties::multi_job(self.seed, self.lr, weights);
+                if wall {
+                    live::session_loop(
+                        params,
+                        &mq,
+                        WallDriver::new(WallClock::new(), source),
+                        engines,
+                        None,
+                    )?
+                } else {
+                    live::session_loop(
+                        params,
+                        &mq,
+                        WallDriver::new(InstantClock::default(), source),
+                        engines,
+                        None,
+                    )?
+                }
+            }
+            PartyBackend::SynthThreads => {
+                let clock = WallClock::new();
+                let source =
+                    ThreadParties::synth(&mq, clock.timer, self.seed, self.lr, &weights[0]);
+                live::session_loop(params, &mq, WallDriver::new(clock, source), engines, None)?
+            }
+            PartyBackend::XlaThreads => live::run_session_xla(
+                params,
+                &mq,
+                engines,
+                live::XlaSessionConfig {
+                    n_parties: self.arrivals[0].spec.n_parties,
+                    minibatches: self.minibatches,
+                    alpha: self.alpha,
+                    seed: self.seed,
+                    lr: self.lr,
+                },
+            )?,
+        };
+        Ok(if wall {
+            Report::Wall(summary)
+        } else {
+            Report::Live(summary)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::party::FleetKind;
+    use crate::workloads::Workload;
+
+    fn spec(parties: usize, rounds: u32) -> FlJobSpec {
+        FlJobSpec::new(
+            Workload::mlp_live(),
+            FleetKind::ActiveHomogeneous,
+            parties,
+            rounds,
+        )
+    }
+
+    #[test]
+    fn empty_session_and_bad_knobs_are_rejected() {
+        assert!(Session::sim().run().is_err(), "no jobs");
+        let mut s = Session::sim().policy("bogus");
+        s.job(spec(3, 1), "jit");
+        assert!(s.run().is_err(), "bad policy");
+        let mut s = Session::sim();
+        s.job(spec(3, 1), "frobnicate");
+        assert!(s.run().is_err(), "bad strategy");
+        let mut s = Session::sim().resume(true);
+        s.job(spec(3, 1), "jit");
+        assert!(s.run().is_err(), "sim cannot resume");
+        let mut s = Session::sim().kill_after_fuses(Some(1));
+        s.job(spec(3, 1), "jit");
+        assert!(s.run().is_err(), "sim has no data plane to kill");
+        let mut s = Session::live().backend(PartyBackend::SynthThreads);
+        s.job(spec(3, 1), "jit");
+        assert!(s.run().is_err(), "threads need the wall clock");
+        let mut s = Session::live().resume(true); // no .on(&mq)
+        s.job(spec(3, 1), "jit");
+        assert!(
+            s.run().is_err(),
+            "resume without the crashed run's MQ has nothing to restore"
+        );
+    }
+
+    #[test]
+    fn sim_session_runs_and_reports() {
+        let mut s = Session::sim().seed(3);
+        let h = s.job(spec(6, 2), "jit");
+        let rep = s.run().expect("sim run");
+        assert_eq!(rep.mode_name(), "sim");
+        let o = rep.job(h);
+        assert_eq!(o.records.len(), 2);
+        assert_eq!(o.updates_fused, 12);
+        assert_eq!(o.updates_folded, 0, "sim folds nothing for real");
+        assert!(o.final_model.is_empty());
+        assert!(o.container_seconds > 0.0);
+        assert!(!rep.summary().crashed);
+    }
+
+    #[test]
+    fn live_session_runs_the_real_data_plane() {
+        let mut s = Session::live().seed(3).dim(16);
+        let h = s.job(spec(4, 2), "jit");
+        let rep = s.run().expect("live run");
+        assert_eq!(rep.mode_name(), "live");
+        let o = rep.job(h);
+        assert_eq!(o.records.len(), 2);
+        assert_eq!(o.updates_folded, 8, "every update folds exactly once");
+        assert_eq!(o.final_model.len(), 16);
+    }
+
+    #[test]
+    fn job_handles_index_multi_job_reports() {
+        let mut s = Session::sim().seed(9).capacity(8);
+        let a = s.job_at(spec(3, 1), "jit", 0.0, SloClass::Standard);
+        let b = s.job_at(spec(4, 1), "lazy", 0.5, SloClass::Premium);
+        let rep = s.run().expect("two jobs");
+        assert_eq!(rep.jobs().len(), 2);
+        assert_eq!(rep.job(a).parties, 3);
+        assert_eq!(rep.job(b).parties, 4);
+        assert_eq!(rep.job(b).strategy, "lazy");
+        assert_eq!(rep.job(b).class, SloClass::Premium);
+    }
+
+    #[test]
+    fn events_stream_covers_the_round_lifecycle() {
+        let mut s = Session::live().seed(5).dim(8);
+        let h = s.job(spec(3, 2), "jit");
+        let rx = s.events();
+        let rep = s.run().expect("live run");
+        let events: Vec<SessionEvent> = rx.try_iter().collect();
+        let submitted = events
+            .iter()
+            .filter(|e| matches!(e, SessionEvent::JobSubmitted { .. }))
+            .count();
+        let started = events
+            .iter()
+            .filter(|e| matches!(e, SessionEvent::RoundStarted { .. }))
+            .count();
+        let fused: Vec<u32> = events
+            .iter()
+            .filter_map(|e| match e {
+                SessionEvent::RoundFused { round, .. } => Some(*round),
+                _ => None,
+            })
+            .collect();
+        let folds: u64 = events
+            .iter()
+            .filter_map(|e| match e {
+                SessionEvent::CheckpointWritten { folds, .. } => Some(*folds),
+                _ => None,
+            })
+            .sum();
+        assert_eq!(submitted, 1);
+        assert_eq!(started, 2);
+        assert_eq!(fused, vec![0, 1]);
+        assert_eq!(folds, rep.job(h).updates_folded);
+        assert!(matches!(
+            events.last(),
+            Some(SessionEvent::JobFinished { .. })
+        ));
+    }
+
+    #[test]
+    fn schema_lines_flatten_objects_arrays_and_nulls() {
+        let v = Json::obj(vec![
+            ("b", Json::num(1.0)),
+            ("a", Json::str("x")),
+            ("c", Json::Arr(vec![Json::obj(vec![("k", Json::Null)])])),
+            ("d", Json::Arr(vec![])),
+            ("e", Json::Bool(true)),
+        ]);
+        let lines = json_schema_lines(&v);
+        assert_eq!(
+            lines,
+            vec![
+                ".a: str",
+                ".b: num",
+                ".c[].k: null",
+                ".d[]: (empty)",
+                ".e: bool",
+            ]
+        );
+    }
+}

@@ -17,6 +17,12 @@
 //!   executing fusion through PJRT ([`runtime`]) or pure Rust ([`fusion`]).
 //!
 //! Python never runs on the request path.
+//!
+//! **Entry point**: [`coordinator::session::Session`] — the one
+//! builder-style façade over simulation, live and wall-clock execution
+//! (single jobs and broker job mixes alike), returning one unified
+//! [`Report`](coordinator::session::Report) and a streaming
+//! [`SessionEvent`](coordinator::session::SessionEvent) channel.
 
 pub mod bench;
 pub mod broker;

@@ -1,5 +1,10 @@
 //! `fljit` CLI — leader entrypoint for the JIT-aggregation platform.
 //!
+//! Every subcommand that runs jobs goes through the one
+//! `coordinator::session::Session` façade (sim, live and wall-clock
+//! regimes alike) and consumes its streaming event channel where live
+//! progress is useful (`live` prints each round as it fuses).
+//!
 //! Subcommands:
 //!   * `timeline`  — the Fig 2 scenario: four design options on a 6-party
 //!                   round; prints the busy/idle/overhead timeline.

@@ -1,7 +1,8 @@
-//! Sim/live **multi-job** equivalence: the wall-clock driver with a
-//! mocked instant clock, scripted parties and per-job topic watching must
-//! produce the *same* multi-tenant schedule as the virtual-time platform
-//! for the same trace, seed and arbitration policy.
+//! Sim/live **multi-job** equivalence through the `Session` façade: a
+//! live session (wall-clock driver with a mocked instant clock, scripted
+//! parties, per-job topic watching) must produce the *same* multi-tenant
+//! schedule as a sim session for the same trace, seed and arbitration
+//! policy.
 //!
 //! Both regimes run identical `JobEngine` + `Strategy` + admission +
 //! arbitration code; what differs is only event delivery — the simulator
@@ -11,14 +12,10 @@
 //! routing, admission release order, policy-driven preemption — these
 //! bit-for-bit comparisons break.
 
-use std::sync::Arc;
-
 use fljit::broker::admission::AdmissionConfig;
 use fljit::broker::arbitration;
 use fljit::broker::workload::{poisson_trace, JobTrace, TraceConfig};
-use fljit::broker::{run_trace, BrokerConfig};
-use fljit::coordinator::live::{run_live_broker, LiveBrokerConfig};
-use fljit::mq::MessageQueue;
+use fljit::coordinator::session::{Report, Session};
 
 fn trace(seed: u64) -> JobTrace {
     poisson_trace(&TraceConfig {
@@ -34,47 +31,47 @@ fn trace(seed: u64) -> JobTrace {
     })
 }
 
-fn assert_equivalent(policy: &str, seed: u64, capacity: usize, budget: usize) {
+fn run_pair(policy: &str, seed: u64, capacity: usize, budget: usize) -> (Report, Report) {
     let t = trace(seed);
     let admission = AdmissionConfig {
         budget,
         max_jobs: 0,
     };
-    let sim = run_trace(
-        &t,
-        &BrokerConfig {
-            capacity,
-            admission: admission.clone(),
-            policy: policy.to_string(),
-            seed,
-            with_solo: false,
-        },
-    );
-    let live = run_live_broker(
-        &t,
-        &LiveBrokerConfig {
-            capacity,
-            admission,
-            policy: policy.to_string(),
-            seed,
-            dim: 16,
-            ..Default::default()
-        },
-        &Arc::new(MessageQueue::new()),
-        false,
-    )
-    .unwrap_or_else(|e| panic!("{policy}: live broker run: {e:#}"));
+    let sim = Session::sim()
+        .trace(&t)
+        .policy(policy)
+        .admission(admission.clone())
+        .capacity(capacity)
+        .seed(seed)
+        .run()
+        .unwrap_or_else(|e| panic!("{policy}: sim broker run: {e:#}"));
+    let live = Session::live()
+        .trace(&t)
+        .policy(policy)
+        .admission(admission)
+        .capacity(capacity)
+        .seed(seed)
+        .dim(16)
+        .run()
+        .unwrap_or_else(|e| panic!("{policy}: live broker run: {e:#}"));
+    (sim, live)
+}
+
+fn assert_equivalent(policy: &str, seed: u64, capacity: usize, budget: usize) {
+    let t = trace(seed);
+    let (sim, live) = run_pair(policy, seed, capacity, budget);
+    let (sim, live) = (sim.summary(), live.summary());
 
     assert_eq!(sim.jobs.len(), live.jobs.len(), "{policy}: job count");
     for (s, l) in sim.jobs.iter().zip(&live.jobs) {
         let job = s.job;
         assert_eq!(s.name, l.name, "{policy} job {job}");
         assert_eq!(
-            s.report.rounds.len(),
+            s.records.len(),
             l.records.len(),
             "{policy} job {job}: round count"
         );
-        for (a, b) in s.report.rounds.iter().zip(&l.records) {
+        for (a, b) in s.records.iter().zip(&l.records) {
             assert_eq!(a.round, b.round, "{policy} job {job}: round index");
             assert_eq!(
                 a.latency_secs.to_bits(),
@@ -105,18 +102,18 @@ fn assert_equivalent(policy: &str, seed: u64, capacity: usize, budget: usize) {
             l.queue_wait_secs
         );
         assert_eq!(
-            s.report.updates_fused, l.updates_fused,
+            s.updates_fused, l.updates_fused,
             "{policy} job {job}: emulated merge count"
         );
         assert_eq!(
-            s.report.deployments, l.deployments,
+            s.deployments, l.deployments,
             "{policy} job {job}: deployments"
         );
         assert_eq!(
-            s.report.makespan_secs.to_bits(),
+            s.makespan_secs.to_bits(),
             l.makespan_secs.to_bits(),
             "{policy} job {job}: makespan {} vs {}",
-            s.report.makespan_secs,
+            s.makespan_secs,
             l.makespan_secs
         );
         // the live path additionally folded every expected update for real
@@ -169,37 +166,8 @@ fn scarce_capacity_with_backpressure_matches_sim() {
 
 #[test]
 fn concurrent_jobs_overlap_in_both_regimes() {
-    let t = trace(0xA5);
-    let sim = run_trace(
-        &t,
-        &BrokerConfig {
-            capacity: 8,
-            admission: AdmissionConfig {
-                budget: 64,
-                max_jobs: 0,
-            },
-            policy: "deadline".to_string(),
-            seed: 0xA5,
-            with_solo: false,
-        },
-    );
-    let live = run_live_broker(
-        &t,
-        &LiveBrokerConfig {
-            capacity: 8,
-            admission: AdmissionConfig {
-                budget: 64,
-                max_jobs: 0,
-            },
-            policy: "deadline".to_string(),
-            seed: 0xA5,
-            dim: 16,
-            ..Default::default()
-        },
-        &Arc::new(MessageQueue::new()),
-        false,
-    )
-    .expect("live run");
+    let (sim, live) = run_pair("deadline", 0xA5, 8, 64);
+    let (sim, live) = (sim.summary(), live.summary());
     assert!(
         sim.max_concurrent_jobs() >= 2,
         "trace must overlap jobs (sim peak {})",

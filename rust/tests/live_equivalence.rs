@@ -1,6 +1,7 @@
-//! Sim/live equivalence: the wall-clock driver with a mocked instant
-//! clock must produce the *same* fuse-count and round-record sequence as
-//! the simulator for the same seed, spec and strategy.
+//! Sim/live equivalence **through the `Session` façade**: a live session
+//! (wall-clock driver with a mocked instant clock, scripted parties)
+//! must produce the *same* fuse-count and round-record sequence as a sim
+//! session for the same seed, spec and strategy.
 //!
 //! Both regimes run the identical `JobEngine` + `Strategy` code; the sim
 //! pre-schedules arrival events from the fleet model while the live path
@@ -9,40 +10,33 @@
 //! streams diverge anywhere — times, ordering, estimator feeding, round
 //! completion — these comparisons break bit-for-bit.
 
-use std::sync::Arc;
-
 use fljit::coordinator::job::FlJobSpec;
-use fljit::coordinator::live::{run_live_on, LiveConfig, PartyBackend};
-use fljit::coordinator::platform::run_scenario;
-use fljit::mq::MessageQueue;
+use fljit::coordinator::session::Session;
 use fljit::party::FleetKind;
 use fljit::workloads::Workload;
 
 fn assert_equivalent(strategy: &str, fleet: FleetKind, parties: usize, rounds: u32, seed: u64) {
     let workload = Workload::cifar100_effnet();
-    let spec = FlJobSpec::new(workload.clone(), fleet, parties, rounds);
-    let sim = run_scenario(&spec, strategy, seed);
+    let spec = FlJobSpec::new(workload, fleet, parties, rounds);
 
-    let cfg = LiveConfig {
-        strategy: strategy.to_string(),
-        n_parties: parties,
-        rounds,
-        seed,
-        workload,
-        fleet,
-        backend: PartyBackend::Scripted,
-        dim: 64,
-        ..Default::default()
-    };
-    let live = run_live_on(&cfg, &Arc::new(MessageQueue::new()), false)
+    let mut s = Session::sim().seed(seed);
+    let hs = s.job(spec.clone(), strategy);
+    let sim_rep = s.run().unwrap_or_else(|e| panic!("{strategy}/{fleet:?} sim run: {e:#}"));
+    let sim = sim_rep.job(hs);
+
+    let mut l = Session::live().seed(seed).dim(64);
+    let hl = l.job(spec, strategy);
+    let live_rep = l
+        .run()
         .unwrap_or_else(|e| panic!("{strategy}/{fleet:?} live run: {e:#}"));
+    let live = live_rep.job(hl);
 
     assert_eq!(
-        sim.rounds.len(),
+        sim.records.len(),
         live.records.len(),
         "{strategy}/{fleet:?}: round count"
     );
-    for (a, b) in sim.rounds.iter().zip(&live.records) {
+    for (a, b) in sim.records.iter().zip(&live.records) {
         assert_eq!(a.round, b.round, "{strategy}: round index");
         assert_eq!(
             a.latency_secs.to_bits(),
@@ -71,7 +65,11 @@ fn assert_equivalent(strategy: &str, fleet: FleetKind, parties: usize, rounds: u
     }
     assert_eq!(
         sim.updates_fused, live.updates_fused,
-        "{strategy}/{fleet:?}: fuse count"
+        "{strategy}/{fleet:?}: emulated fuse count"
+    );
+    assert_eq!(
+        sim.updates_fused, live.updates_folded,
+        "{strategy}/{fleet:?}: the live path folds every emulated merge for real"
     );
     assert_eq!(
         sim.deployments, live.deployments,
@@ -114,4 +112,35 @@ fn jit_intermittent_matches_sim() {
     // intermittent fleets pace rounds by t_wait; both sides use the
     // workload-default window so the specs are identical
     assert_equivalent("jit", FleetKind::IntermittentHeterogeneous, 6, 2, 0xE7);
+}
+
+/// The façade must add no behavior of its own on the sim side: a
+/// single-job `Session::sim()` reproduces `run_scenario` bit-for-bit
+/// (the deadline arbitration policy it installs is pinned ≡ the
+/// no-policy scheduler elsewhere).
+#[test]
+fn sim_session_matches_run_scenario_bit_for_bit() {
+    let spec = FlJobSpec::new(
+        Workload::cifar100_effnet(),
+        FleetKind::ActiveHeterogeneous,
+        10,
+        3,
+    );
+    let legacy = fljit::coordinator::platform::run_scenario(&spec, "jit", 0xE8);
+    let mut s = Session::sim().seed(0xE8);
+    let h = s.job(spec, "jit");
+    let rep = s.run().expect("sim session");
+    let o = rep.job(h);
+    assert_eq!(legacy.rounds.len(), o.records.len());
+    for (a, b) in legacy.rounds.iter().zip(&o.records) {
+        assert_eq!(a.latency_secs.to_bits(), b.latency_secs.to_bits());
+        assert_eq!(a.complete_secs.to_bits(), b.complete_secs.to_bits());
+    }
+    assert_eq!(legacy.updates_fused, o.updates_fused);
+    assert_eq!(legacy.deployments, o.deployments);
+    assert_eq!(legacy.makespan_secs.to_bits(), o.makespan_secs.to_bits());
+    assert_eq!(
+        legacy.container_seconds.to_bits(),
+        o.container_seconds.to_bits()
+    );
 }

@@ -145,7 +145,7 @@ fn broker_multi_job_determinism_per_policy() {
     // two replays may not diverge in a single reported number.
     use fljit::broker::admission::AdmissionConfig;
     use fljit::broker::workload::{poisson_trace, TraceConfig};
-    use fljit::broker::{run_trace, BrokerConfig};
+    use fljit::coordinator::session::Session;
 
     let trace = poisson_trace(&TraceConfig {
         n_jobs: 5,
@@ -159,26 +159,43 @@ fn broker_multi_job_determinism_per_policy() {
         ..Default::default()
     });
     for policy in ["deadline", "least-slack", "wfs"] {
-        let cfg = BrokerConfig {
-            capacity: 4, // scarce: arbitration decisions actually happen
-            admission: AdmissionConfig {
-                budget: 16,
-                max_jobs: 0,
-            },
-            policy: policy.to_string(),
-            seed: 4242,
-            with_solo: false,
+        let replay = || {
+            Session::sim()
+                .trace(&trace)
+                .policy(policy)
+                .admission(AdmissionConfig {
+                    budget: 16,
+                    max_jobs: 0,
+                })
+                .capacity(4) // scarce: arbitration decisions actually happen
+                .seed(4242)
+                .run()
+                .unwrap_or_else(|e| panic!("policy '{policy}': {e:#}"))
         };
-        let a = run_trace(&trace, &cfg);
-        let b = run_trace(&trace, &cfg);
+        let a = replay();
+        let b = replay();
+        let (a, b) = (a.summary(), b.summary());
+        // every reported number must replay bit-identically (wall_secs is
+        // the one genuinely non-deterministic field — real elapsed time)
+        assert_eq!(a.preemptions, b.preemptions, "policy '{policy}'");
         assert_eq!(
-            a.to_json().print(),
-            b.to_json().print(),
-            "policy '{policy}' replay diverged"
+            a.total_container_seconds.to_bits(),
+            b.total_container_seconds.to_bits(),
+            "policy '{policy}'"
         );
+        assert_eq!(a.span_secs.to_bits(), b.span_secs.to_bits(), "policy '{policy}'");
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.queue_wait_secs.to_bits(), y.queue_wait_secs.to_bits());
+            assert_eq!(x.container_seconds.to_bits(), y.container_seconds.to_bits());
+            assert_eq!(x.records.len(), y.records.len());
+            for (r, s) in x.records.iter().zip(&y.records) {
+                assert_eq!(r.latency_secs.to_bits(), s.latency_secs.to_bits());
+                assert_eq!(r.complete_secs.to_bits(), s.complete_secs.to_bits());
+            }
+        }
         for o in &a.jobs {
             assert_eq!(
-                o.report.rounds.len() as u32,
+                o.records.len() as u32,
                 trace.arrivals[o.job].spec.rounds,
                 "policy '{policy}' left job {} unfinished",
                 o.name

@@ -1,0 +1,227 @@
+//! The `Session` façade's public contract:
+//!
+//! 1. **Report JSON schema stability** — `Report::to_json()` exposes one
+//!    key set across the sim / live / broker-trace variants, pinned by a
+//!    golden file. Values change run to run; the *shape* must not,
+//!    because downstream tooling (BENCH_*.json consumers, EXPERIMENTS.md
+//!    tables) parses these dumps. Regenerate with
+//!    `UPDATE_GOLDEN=1 cargo test -q --test session_api`.
+//! 2. **Event-stream determinism** — `Session::events()` yields a
+//!    bit-identical `SessionEvent` sequence for the same (mode, jobs,
+//!    seed) in the instant-clock regimes.
+//! 3. **Crash + resume through the façade** — the §5.5 story driven
+//!    entirely through `Session` knobs (`kill_after_fuses`, `.on(mq)`,
+//!    `.resume(true)`), with the crash visible on the event stream.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use fljit::broker::workload::{JobArrival, JobTrace};
+use fljit::broker::SloClass;
+use fljit::coordinator::job::FlJobSpec;
+use fljit::coordinator::session::{json_schema_lines, Report, Session, SessionEvent};
+use fljit::mq::MessageQueue;
+use fljit::party::FleetKind;
+use fljit::workloads::Workload;
+
+fn spec(parties: usize, rounds: u32) -> FlJobSpec {
+    FlJobSpec::new(
+        Workload::mlp_live(),
+        FleetKind::ActiveHomogeneous,
+        parties,
+        rounds,
+    )
+}
+
+fn two_job_trace() -> JobTrace {
+    let arrival = |i: usize, at: f64, parties: usize| {
+        let mut s = spec(parties, 2);
+        s.name = format!("t{i}");
+        JobArrival {
+            at_secs: at,
+            spec: s,
+            strategy: "jit".to_string(),
+            class: SloClass::Standard,
+        }
+    };
+    JobTrace::from_arrivals(vec![arrival(0, 0.0, 3), arrival(1, 0.5, 4)])
+}
+
+// ---------------------------------------------------------------------------
+// 1. Report JSON schema golden
+// ---------------------------------------------------------------------------
+
+fn schema_section(name: &str, rep: &Report) -> String {
+    let mut out = format!("# {name}\n");
+    for line in json_schema_lines(&rep.to_json()) {
+        out.push_str(&line);
+        out.push('\n');
+    }
+    out
+}
+
+#[test]
+fn report_json_schema_is_pinned_by_golden_file() {
+    let sim_single = {
+        let mut s = Session::sim().seed(7);
+        s.job(spec(4, 2), "jit");
+        s.run().expect("sim single")
+    };
+    let sim_trace_solo = Session::sim()
+        .trace(&two_job_trace())
+        .capacity(16)
+        .seed(7)
+        .solo_baselines(true)
+        .run()
+        .expect("sim trace");
+    let live_single = {
+        let mut s = Session::live().seed(7).dim(8);
+        s.job(spec(4, 2), "jit");
+        s.run().expect("live single")
+    };
+    let live_trace = Session::live()
+        .trace(&two_job_trace())
+        .capacity(16)
+        .seed(7)
+        .dim(8)
+        .run()
+        .expect("live trace");
+
+    let actual = [
+        schema_section("sim-single", &sim_single),
+        schema_section("sim-trace-solo", &sim_trace_solo),
+        schema_section("live-single", &live_single),
+        schema_section("live-trace", &live_trace),
+    ]
+    .join("\n");
+
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/data/report_schema.golden.txt");
+    if std::env::var("UPDATE_GOLDEN").is_ok() {
+        std::fs::write(&path, &actual).expect("write golden");
+        return;
+    }
+    let golden = std::fs::read_to_string(&path).expect("golden file present");
+    assert_eq!(
+        golden.trim(),
+        actual.trim(),
+        "Report::to_json schema drifted from {path:?}; if the change is \
+         deliberate, regenerate with UPDATE_GOLDEN=1 and review the diff"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 2. Event-stream determinism
+// ---------------------------------------------------------------------------
+
+fn live_trace_events(seed: u64) -> Vec<SessionEvent> {
+    let mut s = Session::live()
+        .trace(&two_job_trace())
+        .capacity(8)
+        .seed(seed)
+        .dim(8);
+    let rx = s.events();
+    s.run().expect("live trace run");
+    rx.try_iter().collect()
+}
+
+fn sim_events(seed: u64) -> Vec<SessionEvent> {
+    let mut s = Session::sim().seed(seed);
+    s.job(spec(4, 2), "jit");
+    let rx = s.events();
+    s.run().expect("sim run");
+    rx.try_iter().collect()
+}
+
+#[test]
+fn event_ordering_is_deterministic_per_seed() {
+    let a = live_trace_events(0x5E55);
+    let b = live_trace_events(0x5E55);
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "live event stream must be a function of the seed");
+
+    let c = sim_events(0x5E55);
+    let d = sim_events(0x5E55);
+    assert!(!c.is_empty());
+    assert_eq!(c, d, "sim event stream must be a function of the seed");
+
+    // a different seed shifts timings, so the streams must differ
+    let e = live_trace_events(0x5E56);
+    assert_ne!(a, e, "seed must influence the event stream");
+}
+
+#[test]
+fn event_stream_respects_the_job_lifecycle() {
+    let events = live_trace_events(0x5E57);
+    for job in 0..2usize {
+        let idx = |pred: &dyn Fn(&SessionEvent) -> bool| {
+            events.iter().position(|e| pred(e)).unwrap_or(usize::MAX)
+        };
+        let submitted = idx(&|e| matches!(e, SessionEvent::JobSubmitted { job: j, .. } if *j == job));
+        let admitted = idx(&|e| matches!(e, SessionEvent::JobAdmitted { job: j, .. } if *j == job));
+        let started = idx(&|e| matches!(e, SessionEvent::RoundStarted { job: j, round: 0, .. } if *j == job));
+        let finished = idx(&|e| matches!(e, SessionEvent::JobFinished { job: j, .. } if *j == job));
+        assert!(
+            submitted < admitted && admitted < started && started < finished,
+            "job {job}: lifecycle order (submitted {submitted} < admitted \
+             {admitted} < started {started} < finished {finished})"
+        );
+    }
+    // every fold is accounted for on the stream: 3·2 + 4·2 updates
+    let folds: u64 = events
+        .iter()
+        .filter_map(|e| match e {
+            SessionEvent::CheckpointWritten { folds, .. } => Some(*folds),
+            _ => None,
+        })
+        .sum();
+    assert_eq!(folds, 14);
+}
+
+// ---------------------------------------------------------------------------
+// 3. Crash + resume, entirely through Session knobs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn killed_session_streams_crash_and_resume_restores_bit_identical_models() {
+    let run = |mq: &Arc<MessageQueue>, kill: Option<u64>, resume: bool| {
+        let mut s = Session::live()
+            .seed(11)
+            .dim(16)
+            .on(mq)
+            .kill_after_fuses(kill)
+            .resume(resume);
+        let h = s.job(spec(4, 2), "jit");
+        let rx = s.events();
+        let rep = s.run().expect("session run");
+        let events: Vec<SessionEvent> = rx.try_iter().collect();
+        (rep, h, events)
+    };
+
+    let mq_full = Arc::new(MessageQueue::new());
+    let (full, hf, full_events) = run(&mq_full, None, false);
+    assert!(!full.summary().crashed);
+    assert!(!full_events
+        .iter()
+        .any(|e| matches!(e, SessionEvent::Crashed { .. })));
+
+    let mq_kill = Arc::new(MessageQueue::new());
+    let (dead, _, dead_events) = run(&mq_kill, Some(3), false);
+    assert!(dead.summary().crashed);
+    assert!(
+        matches!(dead_events.last(), Some(SessionEvent::Crashed { .. })),
+        "the crash must be the final event on the stream"
+    );
+
+    let (resumed, hr, _) = run(&mq_kill, None, true);
+    assert!(!resumed.summary().crashed);
+    assert_eq!(
+        resumed.job(hr).final_model,
+        full.job(hf).final_model,
+        "§5.5: resume from the MQ must reproduce the uninterrupted model bit-for-bit"
+    );
+    assert_eq!(
+        dead.single().updates_folded + resumed.single().updates_folded,
+        full.single().updates_folded,
+        "every update folds exactly once across the two incarnations"
+    );
+}

@@ -6,7 +6,8 @@
 use std::path::PathBuf;
 
 use fljit::broker::workload::{poisson_trace, JobTrace, TraceConfig};
-use fljit::broker::{run_trace, BrokerConfig, SloClass};
+use fljit::broker::SloClass;
+use fljit::coordinator::session::Session;
 use fljit::party::FleetKind;
 
 fn golden_path() -> PathBuf {
@@ -76,21 +77,25 @@ fn saved_trace_replays_identically_to_the_original() {
     trace.save(&path).unwrap();
     let reloaded = JobTrace::load(&path).unwrap();
 
-    let cfg = BrokerConfig {
-        capacity: 8,
-        seed: 77,
-        ..Default::default()
+    let replay = |t: &JobTrace| {
+        Session::sim()
+            .trace(t)
+            .capacity(8)
+            .seed(77)
+            .run()
+            .expect("trace replay")
     };
-    let a = run_trace(&trace, &cfg);
-    let b = run_trace(&reloaded, &cfg);
+    let a = replay(&trace);
+    let b = replay(&reloaded);
+    let (a, b) = (a.summary(), b.summary());
     assert_eq!(a.jobs.len(), b.jobs.len());
     for (x, y) in a.jobs.iter().zip(&b.jobs) {
         assert_eq!(x.queue_wait_secs.to_bits(), y.queue_wait_secs.to_bits());
         assert_eq!(
-            x.report.container_seconds.to_bits(),
-            y.report.container_seconds.to_bits()
+            x.container_seconds.to_bits(),
+            y.container_seconds.to_bits()
         );
-        assert_eq!(x.report.rounds.len(), y.report.rounds.len());
+        assert_eq!(x.records.len(), y.records.len());
     }
     assert_eq!(a.span_secs.to_bits(), b.span_secs.to_bits());
 }
