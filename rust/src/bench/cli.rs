@@ -30,10 +30,19 @@ SUBCOMMANDS:
   calibrate  [--reps 5]            offline t_pair per zoo model (§5.4)
   run        --spec job.json       run a JSON job spec end to end (sim)
   live       wall-clock run of ANY strategy on the zero-copy MQ
-             --strategy <jit|batched|eager-serverless|eager-ao|lazy|all>
+             --strategy <jit|batched|eager-serverless|eager-ao|lazy|
+                         async-stale|all>
              [--parties 4] [--rounds 5] [--seed 42] [--dim 512]
              [--epoch-secs 0.4] [--scripted] [--backend synth|xla]
              (--strategy all sweeps every strategy -> BENCH_live.json)
+  robustness strategy × fault-scenario matrix: every strategy on the
+             scripted live platform under injected stragglers / dropout /
+             diurnal waves / weight skew; per-cell fidelity-vs-baseline,
+             latency inflation, dropped-vs-decayed counts
+             [--strategies jit,async-stale,...] (default: all six)
+             [--scenarios baseline,stragglers,dropout,diurnal,skew]
+             [--parties 10] [--rounds 4] [--seed 42] [--dim 64]
+             [--epoch-secs 0.4]   (writes BENCH_robustness.json dump)
   live-broker  the broker's job mix on the LIVE platform: trace replay
              with admission control + policy-arbitrated preemption,
              per-job MQ topics/checkpoints/models
@@ -55,6 +64,7 @@ pub fn dispatch(args: &Args) -> i32 {
         Some("run") => cmd_run(args),
         Some("live") => cmd_live(args),
         Some("live-broker") => cmd_live_broker(args),
+        Some("robustness") => cmd_robustness(args),
         Some("zoo") => cmd_zoo(),
         _ => {
             print!("{USAGE}");
@@ -234,6 +244,24 @@ fn cmd_live_broker(args: &Args) -> i32 {
             1
         }
     }
+}
+
+fn cmd_robustness(args: &Args) -> i32 {
+    use crate::coordinator::strategies;
+    let cfg = crate::bench::robustness::RobustnessSweepConfig::from_args(args);
+    for s in &cfg.strategies {
+        if strategies::by_name(s).is_none() {
+            eprintln!(
+                "unknown strategy {s:?}; expected a comma list drawn from {:?}",
+                strategies::all_strategies()
+            );
+            return 2;
+        }
+    }
+    let (t, json) = crate::bench::robustness::run_sweep(&cfg);
+    t.print();
+    crate::bench::dump("BENCH_robustness", &json);
+    0
 }
 
 fn cmd_calibrate(args: &Args) -> i32 {
@@ -498,7 +526,7 @@ mod tests {
 
     #[test]
     fn live_accepts_every_strategy_name() {
-        // acceptance: all five Strategy names run through `fljit live`
+        // acceptance: all six Strategy names run through `fljit live`
         for n in crate::coordinator::strategies::all_strategies() {
             assert_eq!(
                 dispatch(&args(&format!(
@@ -535,6 +563,21 @@ mod tests {
         );
         assert!(crate::bench::repro_dir().join("BENCH_live_broker.json").exists());
         assert_eq!(dispatch(&args("live-broker --policy nope")), 2);
+    }
+
+    #[test]
+    fn robustness_tiny_grid_runs_and_dumps() {
+        // the CI smoke invocation, verbatim
+        assert_eq!(
+            dispatch(&args(
+                "robustness --strategies jit,async-stale \
+                 --scenarios baseline,stragglers --parties 4 --rounds 2 \
+                 --dim 32 --seed 7"
+            )),
+            0
+        );
+        assert!(crate::bench::repro_dir().join("BENCH_robustness.json").exists());
+        assert_eq!(dispatch(&args("robustness --strategies nope")), 2);
     }
 
     #[test]

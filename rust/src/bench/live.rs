@@ -186,7 +186,7 @@ mod tests {
         };
         let (_t, json) = run_sweep(&cfg);
         let rows = json.get("strategies").as_arr().unwrap();
-        assert_eq!(rows.len(), 5);
+        assert_eq!(rows.len(), 6);
         for row in rows {
             assert!(
                 row.get("error").as_str().is_none(),

@@ -9,6 +9,7 @@
 //! | [`broker`] | §6.3 multi-job economics, simulated | `BENCH_broker.json` |
 //! | [`live`] | Fig 7/9 analogue on the wall-clock path | `BENCH_live.json` |
 //! | [`live_broker`] | §6.3 job mix on the *live* platform | `BENCH_live_broker.json` |
+//! | [`robustness`] | strategy × fault-scenario degradation matrix | `BENCH_robustness.json` |
 //!
 //! The perf benches (`cargo bench --bench fusion_hot_path` /
 //! `scheduler_hot_path`) additionally emit `BENCH_fusion.json` /
@@ -19,6 +20,7 @@ pub mod cli;
 pub mod figs;
 pub mod live;
 pub mod live_broker;
+pub mod robustness;
 
 use crate::util::json::Json;
 use std::path::PathBuf;

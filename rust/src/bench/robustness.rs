@@ -1,0 +1,383 @@
+//! Robustness matrix — every §3 strategy × the named fault scenarios.
+//!
+//! Runs the identical scripted live job (instant clock, MQ data plane)
+//! under each `(strategy, scenario)` cell, where the scenario is a
+//! [`FleetFaults`] preset: heavy-tailed stragglers with a reporting
+//! deadline, dropout-with-rejoin churn, diurnal availability waves, and
+//! non-IID weight skew. Per cell it reports:
+//!
+//! * **fidelity** — L2 distance of the cell's final global model to the
+//!   *same strategy's* fault-free (baseline-scenario) final model. Lower
+//!   is better: it measures how much fleet hostility bent the model away
+//!   from the model the strategy would have learned on a healthy fleet.
+//! * **latency inflation** — mean round aggregation latency relative to
+//!   the strategy's baseline cell.
+//! * the engine's degradation counters — updates cut at the straggler
+//!   deadline (drop-policy strategies), deadline-missers folded with
+//!   decayed weight (`async-stale`), and rounds skipped on starvation.
+//!
+//! The matrix is the issue's acceptance harness for `async-stale`: in the
+//! straggler-heavy cell the drop-at-deadline strategies lose the late
+//! parties' data (fidelity grows), while `async-stale` folds it decayed
+//! and lands closer to its healthy-fleet model. Dumped to
+//! `BENCH_robustness.json` via `fljit robustness`.
+
+use crate::coordinator::job::FlJobSpec;
+use crate::coordinator::session::Session;
+use crate::coordinator::strategies;
+use crate::party::{FleetFaults, FleetKind};
+use crate::util::json::Json;
+use crate::util::table::Table;
+use crate::workloads::Workload;
+
+#[derive(Clone, Debug)]
+pub struct RobustnessSweepConfig {
+    pub n_parties: usize,
+    pub rounds: u32,
+    pub seed: u64,
+    pub dim: usize,
+    /// Mean synthetic epoch time (virtual seconds under the instant
+    /// clock; the straggler cutoff scales from it).
+    pub epoch_secs: f64,
+    /// Strategy names to sweep (default: all six).
+    pub strategies: Vec<String>,
+    /// Scenario names to sweep (default: all five, see
+    /// [`FleetFaults::all_scenarios`]).
+    pub scenarios: Vec<String>,
+}
+
+impl Default for RobustnessSweepConfig {
+    fn default() -> Self {
+        RobustnessSweepConfig {
+            n_parties: 10,
+            rounds: 4,
+            seed: 42,
+            dim: 64,
+            epoch_secs: 0.4,
+            strategies: strategies::all_strategies()
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            scenarios: FleetFaults::all_scenarios()
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+        }
+    }
+}
+
+fn parse_list(raw: Option<&str>, default: &[String]) -> Vec<String> {
+    match raw {
+        Some(s) => s
+            .split(',')
+            .map(|x| x.trim().to_string())
+            .filter(|x| !x.is_empty())
+            .collect(),
+        None => default.to_vec(),
+    }
+}
+
+impl RobustnessSweepConfig {
+    pub fn from_args(args: &crate::util::cli::Args) -> RobustnessSweepConfig {
+        let d = RobustnessSweepConfig::default();
+        RobustnessSweepConfig {
+            n_parties: args.get_usize("parties", d.n_parties),
+            rounds: args.get_u64("rounds", d.rounds as u64) as u32,
+            seed: args.get_u64("seed", d.seed),
+            dim: args.get_usize("dim", d.dim),
+            epoch_secs: args.get_f64("epoch-secs", d.epoch_secs),
+            strategies: parse_list(args.get("strategies"), &d.strategies),
+            scenarios: parse_list(args.get("scenarios"), &d.scenarios),
+        }
+    }
+}
+
+/// One cell's raw outcome (before baseline-relative metrics).
+#[derive(Clone, Debug)]
+struct Cell {
+    rounds_done: usize,
+    rounds_skipped: u32,
+    mean_latency_secs: f64,
+    updates_fused: u64,
+    updates_dropped: usize,
+    updates_decayed: usize,
+    final_model: Vec<f32>,
+}
+
+fn l2(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+fn run_cell(
+    cfg: &RobustnessSweepConfig,
+    strategy: &str,
+    faults: FleetFaults,
+) -> Result<Cell, String> {
+    let mut workload = Workload::mlp_live();
+    workload.base_epoch_secs = cfg.epoch_secs;
+    let spec = FlJobSpec::new(
+        workload,
+        FleetKind::ActiveHomogeneous,
+        cfg.n_parties,
+        cfg.rounds,
+    );
+    let mut s = Session::live().seed(cfg.seed).dim(cfg.dim).faults(faults);
+    s.job(spec, strategy);
+    let rep = s.run().map_err(|e| format!("{e:#}"))?;
+    let o = rep.single();
+    Ok(Cell {
+        rounds_done: o.records.len(),
+        rounds_skipped: o.rounds_skipped,
+        mean_latency_secs: o.mean_latency_secs(),
+        updates_fused: o.updates_fused,
+        updates_dropped: o.updates_dropped,
+        updates_decayed: o.updates_decayed,
+        final_model: o.final_model.clone(),
+    })
+}
+
+/// Run the strategy × scenario grid; table + JSON. Every strategy's
+/// baseline (fault-free) cell runs even when `baseline` is not in the
+/// requested scenario list — it is the fidelity/inflation reference.
+pub fn run_sweep(cfg: &RobustnessSweepConfig) -> (Table, Json) {
+    let mut t = Table::new(
+        &format!(
+            "robustness matrix — {} parties × {} rounds, dim {}, seed {}",
+            cfg.n_parties, cfg.rounds, cfg.dim, cfg.seed
+        ),
+        &[
+            "strategy",
+            "scenario",
+            "rounds",
+            "skipped",
+            "mean lat (ms)",
+            "lat ×base",
+            "dropped",
+            "decayed",
+            "fidelity (L2)",
+        ],
+    );
+    let mut cells = Vec::new();
+    for strategy in &cfg.strategies {
+        let base = run_cell(cfg, strategy, FleetFaults::none());
+        for scenario in &cfg.scenarios {
+            let outcome = match FleetFaults::scenario(scenario, cfg.epoch_secs) {
+                None => Err(format!("unknown scenario {scenario:?}")),
+                Some(_) if scenario == "baseline" => base.clone(),
+                Some(faults) => run_cell(cfg, strategy, faults),
+            };
+            match (&outcome, &base) {
+                (Ok(c), base) => {
+                    // baseline-relative metrics need the reference run
+                    let (fidelity, inflation) = match base {
+                        Ok(b) => (
+                            Some(l2(&c.final_model, &b.final_model)),
+                            if b.mean_latency_secs > 0.0 {
+                                Some(c.mean_latency_secs / b.mean_latency_secs)
+                            } else {
+                                None
+                            },
+                        ),
+                        Err(_) => (None, None),
+                    };
+                    t.row(vec![
+                        strategy.clone(),
+                        scenario.clone(),
+                        c.rounds_done.to_string(),
+                        c.rounds_skipped.to_string(),
+                        format!("{:.1}", c.mean_latency_secs * 1e3),
+                        inflation.map(|x| format!("{x:.2}")).unwrap_or_default(),
+                        c.updates_dropped.to_string(),
+                        c.updates_decayed.to_string(),
+                        fidelity.map(|x| format!("{x:.4}")).unwrap_or_default(),
+                    ]);
+                    cells.push(Json::obj(vec![
+                        ("strategy", Json::str(strategy)),
+                        ("scenario", Json::str(scenario)),
+                        ("rounds_done", Json::num(c.rounds_done as f64)),
+                        ("rounds_skipped", Json::num(c.rounds_skipped as f64)),
+                        ("mean_latency_secs", Json::num(c.mean_latency_secs)),
+                        (
+                            "latency_inflation",
+                            inflation.map(Json::num).unwrap_or(Json::Null),
+                        ),
+                        ("updates_fused", Json::num(c.updates_fused as f64)),
+                        ("updates_dropped", Json::num(c.updates_dropped as f64)),
+                        ("updates_decayed", Json::num(c.updates_decayed as f64)),
+                        (
+                            "fidelity_l2",
+                            fidelity.map(Json::num).unwrap_or(Json::Null),
+                        ),
+                    ]));
+                }
+                (Err(e), _) => {
+                    t.row(vec![
+                        strategy.clone(),
+                        scenario.clone(),
+                        format!("failed: {e}"),
+                        String::new(),
+                        String::new(),
+                        String::new(),
+                        String::new(),
+                        String::new(),
+                        String::new(),
+                    ]);
+                    cells.push(Json::obj(vec![
+                        ("strategy", Json::str(strategy)),
+                        ("scenario", Json::str(scenario)),
+                        ("error", Json::str(e)),
+                    ]));
+                }
+            }
+        }
+    }
+    // the issue's acceptance check, embedded in the dump: in the
+    // straggler-heavy cell async-stale must land closer to its healthy
+    // model than drop-at-deadline jit does to its own
+    let fidelity_of = |strategy: &str, scenario: &str| -> Option<f64> {
+        cells.iter().find_map(|c| {
+            (c.get("strategy").as_str() == Some(strategy)
+                && c.get("scenario").as_str() == Some(scenario))
+            .then(|| c.get("fidelity_l2").as_f64())
+            .flatten()
+        })
+    };
+    let check = match (fidelity_of("jit", "stragglers"), fidelity_of("async-stale", "stragglers")) {
+        (Some(jit), Some(stale)) => Json::obj(vec![
+            ("jit_fidelity_l2", Json::num(jit)),
+            ("async_stale_fidelity_l2", Json::num(stale)),
+            ("async_stale_beats_drop", Json::Bool(stale < jit)),
+        ]),
+        _ => Json::Null,
+    };
+    let json = Json::obj(vec![
+        ("parties", Json::num(cfg.n_parties as f64)),
+        ("rounds", Json::num(cfg.rounds as f64)),
+        ("seed", Json::num(cfg.seed as f64)),
+        ("dim", Json::num(cfg.dim as f64)),
+        ("epoch_secs", Json::num(cfg.epoch_secs)),
+        (
+            "strategies",
+            Json::arr(cfg.strategies.iter().map(|s| Json::str(s))),
+        ),
+        (
+            "scenarios",
+            Json::arr(cfg.scenarios.iter().map(|s| Json::str(s))),
+        ),
+        ("cells", Json::Arr(cells)),
+        ("stragglers_check", check),
+    ]);
+    (t, json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell<'a>(json: &'a Json, strategy: &str, scenario: &str) -> &'a Json {
+        json.get("cells")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|c| {
+                c.get("strategy").as_str() == Some(strategy)
+                    && c.get("scenario").as_str() == Some(scenario)
+            })
+            .unwrap_or_else(|| panic!("missing cell {strategy}/{scenario}"))
+    }
+
+    #[test]
+    fn full_matrix_covers_six_strategies_by_five_scenarios() {
+        let cfg = RobustnessSweepConfig {
+            n_parties: 10,
+            rounds: 3,
+            dim: 32,
+            ..Default::default()
+        };
+        let (_t, json) = run_sweep(&cfg);
+        let cells = json.get("cells").as_arr().unwrap();
+        assert_eq!(cells.len(), 6 * 5, "six strategies × five scenarios");
+        for c in cells {
+            assert!(
+                c.get("error").as_str().is_none(),
+                "cell {:?}/{:?} failed: {:?}",
+                c.get("strategy").as_str(),
+                c.get("scenario").as_str(),
+                c.get("error")
+            );
+            assert!(c.get("fidelity_l2").as_f64().unwrap() >= 0.0);
+        }
+        // baseline cells ARE the reference: fidelity is exactly zero
+        for s in strategies::all_strategies() {
+            assert_eq!(cell(&json, s, "baseline").get("fidelity_l2").as_f64(), Some(0.0));
+        }
+        crate::bench::dump("BENCH_robustness", &json);
+        let text = std::fs::read_to_string(
+            crate::bench::repro_dir().join("BENCH_robustness.json"),
+        )
+        .unwrap();
+        assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn async_stale_beats_drop_at_deadline_in_the_straggler_cell() {
+        let cfg = RobustnessSweepConfig {
+            n_parties: 12,
+            rounds: 3,
+            dim: 32,
+            strategies: vec!["jit".into(), "async-stale".into()],
+            scenarios: vec!["stragglers".into()],
+            ..Default::default()
+        };
+        let (_t, json) = run_sweep(&cfg);
+        let jit = cell(&json, "jit", "stragglers");
+        let stale = cell(&json, "async-stale", "stragglers");
+        let jit_fid = jit.get("fidelity_l2").as_f64().unwrap();
+        let stale_fid = stale.get("fidelity_l2").as_f64().unwrap();
+        // identical seed => identical fault draws: jit cuts the late
+        // parties at the deadline, async-stale folds them decayed
+        assert!(
+            jit.get("updates_dropped").as_u64().unwrap() > 0,
+            "straggler scenario must cut deadline-missers for jit"
+        );
+        assert!(
+            stale_fid <= jit_fid + 1e-12,
+            "decayed folds must not hurt fidelity: async-stale {stale_fid} vs jit {jit_fid}"
+        );
+        if stale.get("updates_decayed").as_u64().unwrap() > 0 {
+            assert!(
+                stale_fid < jit_fid,
+                "folding late data decayed must beat dropping it: \
+                 async-stale {stale_fid} vs jit {jit_fid}"
+            );
+        }
+        let check = json.get("stragglers_check");
+        assert_eq!(check.get("async_stale_beats_drop").as_bool(), Some(stale_fid < jit_fid));
+    }
+
+    #[test]
+    fn arg_lists_parse_and_unknown_scenarios_error_cleanly() {
+        let args = crate::util::cli::Args::parse(
+            "robustness --strategies jit,async-stale --scenarios baseline,nope \
+             --parties 4 --rounds 2 --dim 16 --seed 7"
+                .split_whitespace()
+                .map(|x| x.to_string()),
+        );
+        let cfg = RobustnessSweepConfig::from_args(&args);
+        assert_eq!(cfg.strategies, vec!["jit", "async-stale"]);
+        assert_eq!(cfg.scenarios, vec!["baseline", "nope"]);
+        assert_eq!((cfg.n_parties, cfg.rounds, cfg.dim, cfg.seed), (4, 2, 16, 7));
+        let (_t, json) = run_sweep(&cfg);
+        let bad = cell(&json, "jit", "nope");
+        assert!(bad.get("error").as_str().unwrap().contains("unknown scenario"));
+        // the well-formed cells still ran
+        assert!(cell(&json, "jit", "baseline").get("error").as_str().is_none());
+    }
+}

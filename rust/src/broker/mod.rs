@@ -32,12 +32,12 @@
 //!
 //! Two replay paths share this control plane:
 //!
-//! * **Simulated** — [`run_trace`] replays one
+//! * **Simulated** — `Session::sim().trace(..)` replays one
 //!   [`JobTrace`](workload::JobTrace) under one policy in virtual time
 //!   and reports per-job queue waits, latency inflation vs an
 //!   uncontended solo run, and cluster utilization; `bench::broker`
 //!   sweeps the same trace across all policies (`BENCH_broker.json`).
-//! * **Live** — `coordinator::live::run_live_broker` replays the same
+//! * **Live** — `Session::live().trace(..)` replays the same
 //!   trace under the wall-clock driver: jobs arrive at their trace
 //!   times, pass this module's admission control, share one arbitrated
 //!   cluster, and fold *real* updates through per-job MQ topics with
@@ -55,8 +55,6 @@ pub mod arbitration;
 pub mod workload;
 
 use crate::coordinator::platform::{Platform, PlatformConfig};
-use crate::metrics::JobReport;
-use crate::util::json::Json;
 
 use admission::AdmissionConfig;
 use workload::{JobArrival, JobTrace};
@@ -129,154 +127,6 @@ impl SloClass {
     }
 }
 
-/// One broker run's configuration.
-#[derive(Clone, Debug)]
-pub struct BrokerConfig {
-    /// Cluster container capacity shared by every admitted job.
-    pub capacity: usize,
-    pub admission: AdmissionConfig,
-    /// Arbitration policy name (see [`arbitration::by_name`]).
-    pub policy: String,
-    pub seed: u64,
-    /// Also run each job solo on an uncontended cluster to measure
-    /// latency inflation (doubles the work; off for quick runs).
-    pub with_solo: bool,
-}
-
-impl Default for BrokerConfig {
-    fn default() -> Self {
-        BrokerConfig {
-            capacity: 96,
-            admission: AdmissionConfig::default(),
-            policy: "deadline".to_string(),
-            seed: 0xB40C,
-            with_solo: false,
-        }
-    }
-}
-
-/// One job's outcome in a broker run.
-#[derive(Clone, Debug)]
-pub struct BrokerJobOutcome {
-    pub job: usize,
-    pub name: String,
-    pub class: SloClass,
-    pub arrival_secs: f64,
-    /// Admission backpressure: seconds queued before the job started.
-    pub queue_wait_secs: f64,
-    pub report: JobReport,
-    /// Mean aggregation latency of the same job (same fleet, same arrival
-    /// randomness) run alone on an uncontended cluster.
-    pub solo_mean_latency_secs: Option<f64>,
-}
-
-impl BrokerJobOutcome {
-    /// Contended / solo mean-latency ratio (1.0 = no inflation).
-    pub fn latency_inflation(&self) -> Option<f64> {
-        let solo = self.solo_mean_latency_secs?;
-        if solo <= 0.0 {
-            return None;
-        }
-        Some(self.report.mean_latency_secs() / solo)
-    }
-
-    pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("job", Json::num(self.job as f64)),
-            ("name", Json::str(&self.name)),
-            ("class", Json::str(self.class.name())),
-            ("arrival_secs", Json::num(self.arrival_secs)),
-            ("queue_wait_secs", Json::num(self.queue_wait_secs)),
-            (
-                "solo_mean_latency_secs",
-                match self.solo_mean_latency_secs {
-                    Some(v) => Json::num(v),
-                    None => Json::Null,
-                },
-            ),
-            (
-                "latency_inflation",
-                match self.latency_inflation() {
-                    Some(v) => Json::num(v),
-                    None => Json::Null,
-                },
-            ),
-            ("report", self.report.to_json()),
-        ])
-    }
-}
-
-/// A whole broker run's report (one policy over one trace).
-#[derive(Clone, Debug)]
-pub struct BrokerReport {
-    pub policy: String,
-    pub capacity: usize,
-    pub jobs: Vec<BrokerJobOutcome>,
-    /// Σ container-seconds / (capacity × span): how busy the shared
-    /// cluster was over the run.
-    pub cluster_utilization: f64,
-    pub total_container_seconds: f64,
-    pub span_secs: f64,
-    /// Preemption decisions `(secs, victim task)` in decision order —
-    /// the policy-determinism pin for arbitration-aware preemption.
-    pub preemptions: Vec<(f64, usize)>,
-}
-
-impl BrokerReport {
-    pub fn mean_queue_wait_secs(&self) -> f64 {
-        if self.jobs.is_empty() {
-            return 0.0;
-        }
-        self.jobs.iter().map(|j| j.queue_wait_secs).sum::<f64>() / self.jobs.len() as f64
-    }
-
-    pub fn mean_latency_inflation(&self) -> Option<f64> {
-        let vals: Vec<f64> = self.jobs.iter().filter_map(|j| j.latency_inflation()).collect();
-        if vals.is_empty() {
-            None
-        } else {
-            Some(vals.iter().sum::<f64>() / vals.len() as f64)
-        }
-    }
-
-    /// Peak number of jobs simultaneously admitted (running).
-    pub fn max_concurrent_jobs(&self) -> usize {
-        peak_concurrency(self.jobs.iter().map(|o| {
-            (o.arrival_secs + o.queue_wait_secs, o.report.makespan_secs)
-        }))
-    }
-
-    pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("policy", Json::str(&self.policy)),
-            ("capacity", Json::num(self.capacity as f64)),
-            ("cluster_utilization", Json::num(self.cluster_utilization)),
-            (
-                "total_container_seconds",
-                Json::num(self.total_container_seconds),
-            ),
-            ("span_secs", Json::num(self.span_secs)),
-            ("preemptions", Json::num(self.preemptions.len() as f64)),
-            (
-                "max_concurrent_jobs",
-                Json::num(self.max_concurrent_jobs() as f64),
-            ),
-            ("mean_queue_wait_secs", Json::num(self.mean_queue_wait_secs())),
-            (
-                "mean_latency_inflation",
-                match self.mean_latency_inflation() {
-                    Some(v) => Json::num(v),
-                    None => Json::Null,
-                },
-            ),
-            (
-                "jobs",
-                Json::Arr(self.jobs.iter().map(|j| j.to_json()).collect()),
-            ),
-        ])
-    }
-}
-
 /// The platform derives each job's fleet RNG as `seed ^ job·φ`; folding
 /// the broker job index into a solo platform's seed reproduces the exact
 /// fleet and arrival randomness for job 0 of that platform.
@@ -285,7 +135,7 @@ fn solo_seed(seed: u64, job: usize) -> u64 {
 }
 
 /// Uncontended baseline: the same job alone on an amply sized cluster
-/// (used by `Session::solo_baselines` and the `run_trace` shim).
+/// (used by `Session::solo_baselines`).
 pub(crate) fn solo_mean_latency(arr: &JobArrival, seed: u64, job: usize) -> f64 {
     let mut pcfg = PlatformConfig {
         seed: solo_seed(seed, job),
@@ -296,61 +146,6 @@ pub(crate) fn solo_mean_latency(arr: &JobArrival, seed: u64, job: usize) -> f64 
     let mut p = Platform::new(pcfg);
     p.admit(arr.spec.clone(), &arr.strategy);
     p.run().remove(0).mean_latency_secs()
-}
-
-/// Replay `trace` under `cfg`: jobs arrive over time, pass admission
-/// control, and share one cluster whose pending queue is ordered by the
-/// configured arbitration policy.
-#[deprecated(
-    since = "0.3.0",
-    note = "use coordinator::session::Session::sim() with .trace(..) — this shim maps onto it"
-)]
-pub fn run_trace(trace: &JobTrace, cfg: &BrokerConfig) -> BrokerReport {
-    use crate::coordinator::session::{Report, Session};
-    if trace.is_empty() {
-        // preserved legacy behavior: an empty trace is an empty report,
-        // not an error (Session::run rejects job-less sessions)
-        return BrokerReport {
-            policy: cfg.policy.clone(),
-            capacity: cfg.capacity,
-            jobs: Vec::new(),
-            cluster_utilization: 0.0,
-            total_container_seconds: 0.0,
-            span_secs: 0.0,
-            preemptions: Vec::new(),
-        };
-    }
-    let rep = Session::sim()
-        .trace(trace)
-        .policy(&cfg.policy)
-        .admission(cfg.admission.clone())
-        .capacity(cfg.capacity)
-        .seed(cfg.seed)
-        .solo_baselines(cfg.with_solo)
-        .run()
-        .unwrap_or_else(|e| panic!("broker trace replay failed: {e:#}"));
-    let (Report::Sim(sum) | Report::Live(sum) | Report::Wall(sum)) = rep;
-    BrokerReport {
-        policy: sum.policy,
-        capacity: cfg.capacity,
-        jobs: sum
-            .jobs
-            .into_iter()
-            .map(|o| BrokerJobOutcome {
-                job: o.job,
-                name: o.name.clone(),
-                class: o.class,
-                arrival_secs: o.arrival_secs,
-                queue_wait_secs: o.queue_wait_secs,
-                solo_mean_latency_secs: o.solo_mean_latency_secs,
-                report: o.to_job_report(),
-            })
-            .collect(),
-        cluster_utilization: sum.cluster_utilization,
-        total_container_seconds: sum.total_container_seconds,
-        span_secs: sum.span_secs,
-        preemptions: sum.preemptions,
-    }
 }
 
 #[cfg(test)]
@@ -430,46 +225,6 @@ mod tests {
             "serialized admission must produce queue waits"
         );
         assert_eq!(sum.max_concurrent_jobs(), 1, "max_jobs quota of 1");
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn run_trace_shim_matches_the_session_facade() {
-        // the one sanctioned in-tree run_trace call: pin that the shim's
-        // legacy BrokerReport projection matches the Session results
-        let trace = tiny_trace(5);
-        let cfg = BrokerConfig {
-            capacity: 8,
-            admission: AdmissionConfig {
-                budget: 32,
-                max_jobs: 0,
-            },
-            policy: "wfs".into(),
-            seed: 77,
-            with_solo: false,
-        };
-        let shim = run_trace(&trace, &cfg);
-        let rep = Session::sim()
-            .trace(&trace)
-            .policy("wfs")
-            .admission(cfg.admission.clone())
-            .capacity(8)
-            .seed(77)
-            .run()
-            .expect("session run");
-        let sum = rep.summary();
-        assert_eq!(shim.jobs.len(), sum.jobs.len());
-        for (a, b) in shim.jobs.iter().zip(&sum.jobs) {
-            assert_eq!(a.report.rounds.len(), b.records.len());
-            assert_eq!(a.queue_wait_secs.to_bits(), b.queue_wait_secs.to_bits());
-            assert_eq!(a.report.updates_fused, b.updates_fused);
-            assert_eq!(a.report.makespan_secs.to_bits(), b.makespan_secs.to_bits());
-        }
-        assert_eq!(
-            shim.total_container_seconds.to_bits(),
-            sum.total_container_seconds.to_bits()
-        );
-        assert_eq!(shim.preemptions, sum.preemptions);
     }
 
     #[test]

@@ -20,17 +20,24 @@
 //! concurrent live jobs share a single sleep-to-deadline loop — every
 //! party publish, whichever job's topic it lands in, wakes the same
 //! condvar and is routed to the owning engine as an `UpdateArrival`
-//! tagged with its job id. `coordinator::live` drives one engine this
-//! way (`run_live`) or a whole broker-admitted job mix
-//! (`run_live_broker`).
+//! tagged with its job id. `coordinator::live` drives one engine or a
+//! whole broker-admitted job mix this way
+//! (`Session::live()` / `Session::live().trace(..)`).
 //!
 //! [`JobEngine`] is the single-job state machine both regimes drive: round
 //! estimation (§4–§5.4), arrival bookkeeping, estimator feeding, strategy
 //! dispatch and round completion. `coordinator::platform` wraps a vector
 //! of engines (multi-tenant, virtual time); `coordinator::live` wraps one
-//! or more engines plus a real fusion data plane (wall time). The five
+//! or more engines plus a real fusion data plane (wall time). The six
 //! `Strategy` implementations run unmodified under either driver — that
 //! is the whole point of the redesign.
+//!
+//! The engine also owns the **fault/degradation state machine**
+//! ([`crate::party::FleetFaults`]): per-round fault-aware arrival draws,
+//! the quorum floor + round-skip-on-starvation rules, the straggler
+//! cutoff, and the [`StalePolicy`] routing of deadline-missers (drop vs
+//! exponentially decayed fold). Both drivers call the same
+//! `start_round`/`handle_update`, so sim and live degrade identically.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -39,13 +46,13 @@ use anyhow::Result;
 
 use crate::cluster::{Cluster, Notification};
 use crate::coordinator::job::{FlJobSpec, JobParams};
-use crate::coordinator::strategies::{self, Ctx, Strategy};
+use crate::coordinator::strategies::{self, Ctx, StalePolicy, Strategy};
 use crate::estimator::{
     estimate_round, LinearityModel, PeriodicityTracker, RoundEstimate,
 };
 use crate::metrics::RoundRecord;
 use crate::mq::{self, Message, MessageQueue, Payload};
-use crate::party::Fleet;
+use crate::party::{FaultState, Fleet, FleetFaults, RoundDraw};
 use crate::sim::{to_secs, EventKind, EventQueue, Time};
 use crate::util::rng::Rng;
 
@@ -387,6 +394,22 @@ pub enum ArrivalMode {
     External,
 }
 
+/// One round's start plan, as handed to the driver by
+/// [`JobEngine::start_round`].
+#[derive(Clone, Debug, Default)]
+pub struct RoundPlan {
+    /// Drawn arrival offsets (µs from round start), indexed by party id —
+    /// including absent parties (their slot is drawn but undelivered so
+    /// the rng stream stays state-independent).
+    pub offsets: Vec<Time>,
+    /// Parties that will actually publish this round: present ones, minus
+    /// deadline-missers under [`StalePolicy::Drop`] (those are cut at the
+    /// source and counted in `updates_dropped`). Under `Decay` the late
+    /// parties stay in — they publish at their true late time and fold
+    /// with decayed weight.
+    pub parties: Vec<usize>,
+}
+
 /// One FL job's runtime state machine — shared verbatim between the
 /// multi-tenant simulation platform and the live runner.
 pub struct JobEngine {
@@ -407,6 +430,27 @@ pub struct JobEngine {
     /// Broker path: round 0 is gated on a JobArrival event + admission
     /// control instead of starting at t = 0.
     pub deferred: bool,
+    /// Fault-injection knobs (default: all off — bit-compat fast path).
+    pub faults: FleetFaults,
+    /// Round-to-round fault bookkeeping (who is dropped out until when).
+    pub fault_state: FaultState,
+    /// The spec quorum before any per-round degradation shrink.
+    pub base_quorum: usize,
+    /// Updates cut at the straggler deadline under [`StalePolicy::Drop`],
+    /// or lost because their payload vanished before a decayed fold.
+    pub updates_dropped: usize,
+    /// Deadline-missers folded with decayed weight (`async-stale`).
+    pub updates_decayed: usize,
+    /// Rounds skipped because expected on-time arrivals starved below the
+    /// quorum floor.
+    pub rounds_skipped: u32,
+    /// (round, party) pairs already delivered to the strategy — dedupes
+    /// the engine's self-scheduled stale deliveries against the driver's
+    /// ingested ones.
+    delivered: std::collections::HashSet<(u32, usize)>,
+    /// Whether `on_job_start` ran (guards `on_job_end` when every round
+    /// starved before round 0 ever started).
+    started: bool,
 }
 
 impl JobEngine {
@@ -414,17 +458,34 @@ impl JobEngine {
     /// rng folds the job id in exactly like the pre-driver platform did,
     /// so existing seeds reproduce bit-identically.
     pub fn new(job: usize, spec: FlJobSpec, strategy_name: &str, seed: u64) -> JobEngine {
+        JobEngine::with_faults(job, spec, strategy_name, seed, FleetFaults::none())
+    }
+
+    /// Build a job engine with fault injection. The weight-skew knob is
+    /// applied to the fleet right after generation, from the same engine
+    /// rng, so a resumed engine reconstructs the identical skewed fleet.
+    pub fn with_faults(
+        job: usize,
+        spec: FlJobSpec,
+        strategy_name: &str,
+        seed: u64,
+        faults: FleetFaults,
+    ) -> JobEngine {
         let params = JobParams::derive(job, &spec);
         let mut rng = Rng::new(seed ^ (job as u64).wrapping_mul(0x9E3779B9));
-        let fleet = Fleet::generate(
+        let mut fleet = Fleet::generate(
             spec.fleet_kind,
             spec.n_parties,
             spec.workload.fleet_params(),
             &mut rng,
         );
+        if let Some(alpha) = faults.weight_skew_alpha {
+            fleet.apply_weight_skew(alpha, &mut rng);
+        }
         let strategy = strategies::by_name(strategy_name)
             .unwrap_or_else(|| panic!("unknown strategy '{strategy_name}'"));
         let histories = vec![PeriodicityTracker::new(8); spec.n_parties];
+        let base_quorum = params.quorum;
         JobEngine {
             params,
             fleet,
@@ -439,6 +500,14 @@ impl JobEngine {
             done: false,
             finished_at: 0,
             deferred: false,
+            faults,
+            fault_state: FaultState::new(spec.n_parties),
+            base_quorum,
+            updates_dropped: 0,
+            updates_decayed: 0,
+            rounds_skipped: 0,
+            delivered: std::collections::HashSet::new(),
+            started: false,
             spec,
         }
     }
@@ -457,32 +526,119 @@ impl JobEngine {
         )
     }
 
+    /// One fault-aware arrival draw for the engine's current round —
+    /// *the* single draw point shared by sim, live and the §5.5 resume
+    /// replay, so all three consume the identical rng stream.
+    fn draw_round(&mut self) -> RoundDraw {
+        let model_bytes = self.spec.workload.model.size_bytes();
+        self.fleet.faulty_arrival_offsets(
+            model_bytes,
+            self.spec.t_wait_secs,
+            &self.faults,
+            self.round,
+            &mut self.fault_state,
+            &mut self.rng,
+        )
+    }
+
+    /// Minimum on-time arrivals for a round to be worth running: the
+    /// quorum floor (fraction of the spec quorum, never below 1).
+    fn quorum_floor(&self) -> usize {
+        ((self.base_quorum as f64 * self.faults.quorum_floor_frac).ceil() as usize)
+            .clamp(1, self.base_quorum)
+    }
+
     /// Begin the engine's current round at `q.now()`: estimate, draw the
-    /// fleet's arrival offsets, dispatch the strategy hooks. Returns the
-    /// drawn offsets — [`ArrivalMode::Schedule`] also queues them as
-    /// events; [`ArrivalMode::External`] leaves delivery to the caller's
-    /// party source (which may ignore them: real threads publish when
-    /// their actual training finishes).
+    /// fleet's fault-aware arrival offsets, apply the degradation rules
+    /// (quorum shrink / round skip on starvation), dispatch the strategy
+    /// hooks. Returns the round plan — [`ArrivalMode::Schedule`] also
+    /// queues the deliverable arrivals as events; [`ArrivalMode::External`]
+    /// leaves publishing to the caller's party source (which may ignore
+    /// the offsets: real threads publish when actual training finishes).
+    ///
+    /// Starved rounds (expected on-time arrivals below the quorum floor)
+    /// are skipped *inside* this call, deterministically: the skipped
+    /// round consumes its estimate + draw and the loop retries the next
+    /// index at the same instant. If every remaining round starves, the
+    /// engine marks itself `done` and returns an empty plan — callers
+    /// must check [`JobEngine::done`] after this returns.
     pub fn start_round(
         &mut self,
         q: &mut EventQueue,
         cluster: &mut Cluster,
         mq: &MessageQueue,
         mode: ArrivalMode,
-    ) -> Vec<Time> {
+    ) -> RoundPlan {
         let now = q.now();
-        let est = self.estimate();
+        let (est, draw) = loop {
+            let est = self.estimate();
+            let draw = self.draw_round();
+            if self.faults.is_none() {
+                break (est, draw);
+            }
+            let expected = draw.expected_on_time();
+            if expected >= self.quorum_floor() {
+                // graceful degradation: wait only for what can arrive
+                self.params.quorum = expected.min(self.base_quorum);
+                break (est, draw);
+            }
+            // starvation: skip this round rather than hang on a quorum
+            // that cannot be met
+            self.rounds_skipped += 1;
+            if self.round + 1 >= self.spec.rounds {
+                self.done = true;
+                self.finished_at = now;
+                if self.started {
+                    let params = self.params.clone();
+                    let mut ctx = Ctx {
+                        q,
+                        cluster,
+                        mq,
+                        params: &params,
+                    };
+                    self.strategy.on_job_end(&mut ctx);
+                }
+                return RoundPlan::default();
+            }
+            self.round += 1;
+        };
         let round = self.round;
         self.round_start = now;
         self.arrived = 0;
-        let model_bytes = self.spec.workload.model.size_bytes();
-        let offsets = self
-            .fleet
-            .arrival_offsets(model_bytes, self.spec.t_wait_secs, &mut self.rng);
-        if mode == ArrivalMode::Schedule {
-            let job = self.params.job;
-            for (party, &off) in offsets.iter().enumerate() {
-                q.schedule_at(now + off, EventKind::UpdateArrival { job, round, party });
+        let job = self.params.job;
+        let decay = matches!(self.strategy.stale_policy(), StalePolicy::Decay { .. });
+        let mut parties = Vec::new();
+        for party in 0..draw.offsets.len() {
+            if !draw.present[party] {
+                continue; // dropped out: neither trains nor publishes
+            }
+            if !draw.on_time[party] && !decay {
+                // misses the reporting deadline and the strategy drops
+                // deadline-missers: cut at the source, in both regimes
+                self.updates_dropped += 1;
+                continue;
+            }
+            parties.push(party);
+            let off = draw.offsets[party];
+            match mode {
+                ArrivalMode::Schedule => {
+                    q.schedule_at(now + off, EventKind::UpdateArrival { job, round, party });
+                }
+                ArrivalMode::External => {
+                    if !draw.on_time[party] {
+                        // The fuse drops the round topic, so the wall
+                        // driver will never ingest this late publish —
+                        // self-schedule its delivery 1µs after the
+                        // publish lands (at exact ties the driver
+                        // releases queue events before pumping the due
+                        // publish; the epsilon guarantees the payload is
+                        // in the log when the stale fold fetches it).
+                        q.schedule_at(
+                            now + off + 1,
+                            EventKind::UpdateArrival { job, round, party },
+                        );
+                    }
+                }
             }
         }
         let params = self.params.clone();
@@ -492,18 +648,127 @@ impl JobEngine {
             mq,
             params: &params,
         };
-        if round == 0 {
+        if !self.started {
+            self.started = true;
             self.strategy.on_job_start(&mut ctx);
         }
         self.strategy.on_round_start(&mut ctx, round, &est);
-        offsets
+        RoundPlan {
+            offsets: draw.offsets,
+            parties,
+        }
+    }
+
+    /// §5.5 resume fast-forward: consume exactly the rng draws the
+    /// pre-kill engine consumed for its `completed` *fused* rounds —
+    /// including any starved rounds it skipped along the way (skips
+    /// consume an estimate + draw but publish no model, so the completed
+    /// count from the model-topic log is not a round index). Leaves
+    /// `round` at the first not-yet-fused round.
+    pub fn replay_completed(&mut self, completed: u32) {
+        let mut fused = 0;
+        while fused < completed && self.round < self.spec.rounds {
+            let _ = self.estimate();
+            let draw = self.draw_round();
+            if self.faults.is_none() || draw.expected_on_time() >= self.quorum_floor() {
+                if !self.faults.is_none() {
+                    self.params.quorum = draw.expected_on_time().min(self.base_quorum);
+                }
+                fused += 1;
+            } else {
+                self.rounds_skipped += 1;
+            }
+            self.round += 1;
+        }
+    }
+
+    /// A deadline-missed update from an already-fused `round` arrived at
+    /// `now`: drop it or fold it into the *current* round with
+    /// exponentially decayed weight, per the strategy's [`StalePolicy`].
+    fn handle_stale(
+        &mut self,
+        q: &mut EventQueue,
+        cluster: &mut Cluster,
+        mq: &MessageQueue,
+        round: u32,
+        party: usize,
+        mode: ArrivalMode,
+        now: Time,
+    ) {
+        let lambda = match self.strategy.stale_policy() {
+            StalePolicy::Drop => {
+                self.updates_dropped += 1;
+                return;
+            }
+            StalePolicy::Decay { lambda } => lambda,
+        };
+        if !self.delivered.insert((round, party)) {
+            return; // already delivered (normal-path ingest beat us here)
+        }
+        let age = (self.round - round) as f64;
+        let weight =
+            (self.fleet.parties[party].dataset_items * (-lambda * age).exp()) as f32;
+        let job = self.params.job;
+        let cur_topic = mq::update_topic(job, self.round);
+        match mode {
+            ArrivalMode::Schedule => {
+                mq.produce(
+                    &cur_topic,
+                    Message {
+                        party,
+                        round,
+                        weight,
+                        enqueued_at: now,
+                        payload: Payload::Sim {
+                            size_bytes: self.spec.workload.model.size_bytes(),
+                        },
+                    },
+                );
+            }
+            ArrivalMode::External => {
+                // The real payload sits in the original round's topic log
+                // (the late publish recreated it after the fuse dropped
+                // it). Re-produce it into the current round's topic with
+                // the decayed weight so the folder fuses it durably; the
+                // copy keeps the original round, so its ingest echo
+                // routes back here and dedupes.
+                let old = mq.fetch(&mq::update_topic(job, round), 0, usize::MAX);
+                let Some(m) = old.iter().find(|m| m.party == party) else {
+                    self.updates_dropped += 1; // payload gone — give up
+                    return;
+                };
+                mq.produce(
+                    &cur_topic,
+                    Message {
+                        party,
+                        round,
+                        weight,
+                        enqueued_at: now,
+                        payload: m.payload.clone(),
+                    },
+                );
+            }
+        }
+        self.updates_decayed += 1;
+        self.arrived += 1;
+        let arrived = self.arrived;
+        let params = self.params.clone();
+        let mut ctx = Ctx {
+            q,
+            cluster,
+            mq,
+            params: &params,
+        };
+        self.strategy.on_update(&mut ctx, self.round, party, arrived);
     }
 
     /// A party's update arrived (event popped at `q.now()`): feed the
     /// estimator with the observed timing and dispatch the strategy. In
     /// [`ArrivalMode::Schedule`] the engine also produces the sim payload
     /// into the MQ; in `External` the real message is already in the
-    /// topic log (that is where the arrival event came from).
+    /// topic log (that is where the arrival event came from). Arrivals
+    /// from an already-fused round take the stale path (drop or decayed
+    /// fold, per the strategy's [`StalePolicy`]).
     pub fn handle_update(
         &mut self,
         q: &mut EventQueue,
@@ -514,8 +779,15 @@ impl JobEngine {
         mode: ArrivalMode,
     ) {
         let now = q.now();
-        if self.done || round != self.round {
-            return; // stale arrival from a quorum-completed round
+        if self.done || round > self.round {
+            return;
+        }
+        if round < self.round {
+            self.handle_stale(q, cluster, mq, round, party, mode, now);
+            return;
+        }
+        if !self.delivered.insert((round, party)) {
+            return; // engine-scheduled stale event echoing a live ingest
         }
         self.arrived += 1;
         let arrived = self.arrived;
@@ -738,8 +1010,9 @@ mod tests {
         let mut q = EventQueue::new();
         let mut cluster = Cluster::new(crate::cluster::ClusterConfig::default());
         let mq = MessageQueue::new();
-        let offs = e.start_round(&mut q, &mut cluster, &mq, ArrivalMode::Schedule);
-        assert_eq!(offs.len(), 4);
+        let plan = e.start_round(&mut q, &mut cluster, &mq, ArrivalMode::Schedule);
+        assert_eq!(plan.offsets.len(), 4);
+        assert_eq!(plan.parties, vec![0, 1, 2, 3], "fault-free: all deliver");
         // AO's on_job_start deployed its long-lived fleet immediately
         assert_eq!(cluster.job_deployments(0), 1);
         // arrivals were scheduled
@@ -758,8 +1031,8 @@ mod tests {
         let mut q = EventQueue::new();
         let mut cluster = Cluster::new(crate::cluster::ClusterConfig::default());
         let mq = MessageQueue::new();
-        let offs = e.start_round(&mut q, &mut cluster, &mq, ArrivalMode::External);
-        assert_eq!(offs.len(), 3);
+        let plan = e.start_round(&mut q, &mut cluster, &mq, ArrivalMode::External);
+        assert_eq!(plan.offsets.len(), 3);
         assert!(q.is_empty(), "external mode must not pre-schedule arrivals");
         e.handle_update(&mut q, &mut cluster, &mq, 0, 0, ArrivalMode::External);
         assert_eq!(
@@ -768,5 +1041,185 @@ mod tests {
             "external mode must not double-produce"
         );
         assert_eq!(e.arrived, 1);
+    }
+
+    fn faulty_engine(strategy: &str, faults: FleetFaults, seed: u64, n: usize) -> JobEngine {
+        let spec = FlJobSpec::new(
+            Workload::cifar100_effnet(),
+            FleetKind::ActiveHomogeneous,
+            n,
+            3,
+        );
+        JobEngine::with_faults(0, spec, strategy, seed, faults)
+    }
+
+    #[test]
+    fn fault_free_engine_plan_matches_legacy_offsets() {
+        // the faults=none constructor must consume the identical rng
+        // stream as the pre-fault engine: compare against a hand-rolled
+        // replica of the old draw sequence
+        let spec = FlJobSpec::new(
+            Workload::cifar100_effnet(),
+            FleetKind::ActiveHeterogeneous,
+            5,
+            2,
+        );
+        let mut e = JobEngine::new(0, spec.clone(), "jit", 99);
+        let mut rng = Rng::new(99);
+        let fleet = Fleet::generate(
+            spec.fleet_kind,
+            spec.n_parties,
+            spec.workload.fleet_params(),
+            &mut rng,
+        );
+        let _ = fleet.infos(spec.report_prob, &mut rng); // estimate's draw
+        let legacy = fleet.arrival_offsets(
+            spec.workload.model.size_bytes(),
+            spec.t_wait_secs,
+            &mut rng,
+        );
+        let mut q = EventQueue::new();
+        let mut cluster = Cluster::new(crate::cluster::ClusterConfig::default());
+        let mq = MessageQueue::new();
+        let plan = e.start_round(&mut q, &mut cluster, &mq, ArrivalMode::External);
+        assert_eq!(plan.offsets, legacy, "fault-free rng stream must not move");
+    }
+
+    #[test]
+    fn drop_strategy_cuts_deadline_missers_at_the_source() {
+        let faults = FleetFaults {
+            straggler_prob: 1.0,
+            straggler_alpha: 1.1,
+            straggler_cutoff_secs: Some(60.0),
+            quorum_floor_frac: 0.0,
+            ..FleetFaults::default()
+        };
+        let mut e = faulty_engine("jit", faults, 0xD0, 12);
+        let mut q = EventQueue::new();
+        let mut cluster = Cluster::new(crate::cluster::ClusterConfig::default());
+        let mq = MessageQueue::new();
+        let plan = e.start_round(&mut q, &mut cluster, &mq, ArrivalMode::External);
+        assert!(
+            e.updates_dropped > 0,
+            "with everyone stalled some parties must miss the 60s cutoff"
+        );
+        assert_eq!(plan.parties.len() + e.updates_dropped, 12);
+        assert_eq!(e.params.quorum, plan.parties.len(), "quorum degrades");
+    }
+
+    #[test]
+    fn decay_strategy_keeps_late_parties_and_self_schedules_delivery() {
+        let faults = FleetFaults {
+            straggler_prob: 1.0,
+            straggler_alpha: 1.1,
+            straggler_cutoff_secs: Some(60.0),
+            quorum_floor_frac: 0.0,
+            ..FleetFaults::default()
+        };
+        // same seed as the jit engine above: identical draw, different policy
+        let mut e = faulty_engine("async-stale", faults, 0xD0, 12);
+        let mut q = EventQueue::new();
+        let mut cluster = Cluster::new(crate::cluster::ClusterConfig::default());
+        let mq = MessageQueue::new();
+        let plan = e.start_round(&mut q, &mut cluster, &mq, ArrivalMode::External);
+        assert_eq!(plan.parties.len(), 12, "decay policy never cuts at source");
+        assert_eq!(e.updates_dropped, 0);
+        assert!(
+            q.len() > 0,
+            "late parties need engine-scheduled stale deliveries in live mode"
+        );
+    }
+
+    #[test]
+    fn starved_rounds_are_skipped_and_total_starvation_finishes_the_job() {
+        let faults = FleetFaults {
+            dropout_prob: 0.95, // clamp ceiling: nearly everyone out
+            rejoin_after: 0,
+            quorum_floor_frac: 1.0,
+            ..FleetFaults::default()
+        };
+        let mut e = faulty_engine("jit", faults, 0xD1, 6);
+        let mut q = EventQueue::new();
+        let mut cluster = Cluster::new(crate::cluster::ClusterConfig::default());
+        let mq = MessageQueue::new();
+        let plan = e.start_round(&mut q, &mut cluster, &mq, ArrivalMode::External);
+        assert!(e.done, "every round starves below a full-quorum floor");
+        assert!(plan.parties.is_empty());
+        assert_eq!(e.rounds_skipped, 3);
+        assert!(e.records.is_empty(), "skipped rounds publish nothing");
+    }
+
+    #[test]
+    fn stale_update_is_dropped_or_decayed_by_policy() {
+        let faults = FleetFaults {
+            dropout_prob: 0.01,
+            ..FleetFaults::default()
+        };
+        for (name, expect_decay) in [("jit", false), ("async-stale", true)] {
+            let mut e = faulty_engine(name, faults, 0xD2, 6);
+            let mut q = EventQueue::new();
+            let mut cluster = Cluster::new(crate::cluster::ClusterConfig::default());
+            let mq = MessageQueue::new();
+            let _ = e.start_round(&mut q, &mut cluster, &mq, ArrivalMode::Schedule);
+            e.round = 2; // pretend rounds 0..1 fused; round-0 update is stale
+            e.handle_update(&mut q, &mut cluster, &mq, 0, 3, ArrivalMode::Schedule);
+            if expect_decay {
+                assert_eq!(e.updates_decayed, 1, "{name}");
+                assert_eq!(e.updates_dropped, 0, "{name}");
+                let msgs = mq.fetch(&mq::update_topic(0, 2), 0, usize::MAX);
+                assert_eq!(msgs.len(), 1, "{name}: decayed copy in current topic");
+                let expected_w = (e.fleet.parties[3].dataset_items
+                    * (-crate::coordinator::strategies::async_stale::DECAY_LAMBDA
+                        * 2.0)
+                        .exp()) as f32;
+                assert!((msgs[0].weight - expected_w).abs() < 1e-6, "{name}");
+                // a second delivery of the same (round, party) is a no-op
+                e.handle_update(&mut q, &mut cluster, &mq, 0, 3, ArrivalMode::Schedule);
+                assert_eq!(e.updates_decayed, 1, "{name}: deduped");
+            } else {
+                assert_eq!(e.updates_dropped, 1, "{name}");
+                assert_eq!(e.updates_decayed, 0, "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn replay_matches_live_skip_accounting() {
+        // replay_completed must consume exactly the draws start_round
+        // consumed, leaving the rng aligned for post-resume rounds (a
+        // floor of 1 keeps every round viable so the fused count is
+        // deterministic regardless of who drops)
+        let faults = FleetFaults {
+            dropout_prob: 0.3,
+            rejoin_after: 0,
+            quorum_floor_frac: 0.0,
+            ..FleetFaults::default()
+        };
+        let mut live = faulty_engine("jit", faults, 0xD3, 12);
+        let mut q = EventQueue::new();
+        let mut cluster = Cluster::new(crate::cluster::ClusterConfig::default());
+        let mq = MessageQueue::new();
+        let mut fused = 0u32;
+        while !live.done && live.round < live.spec.rounds {
+            let plan = live.start_round(&mut q, &mut cluster, &mq, ArrivalMode::External);
+            if live.done {
+                break;
+            }
+            assert!(!plan.parties.is_empty());
+            fused += 1;
+            if live.round + 1 >= live.spec.rounds {
+                break;
+            }
+            live.round += 1;
+        }
+        let mut replayed = faulty_engine("jit", faults, 0xD3);
+        replayed.replay_completed(fused);
+        assert_eq!(replayed.round, live.round + u32::from(!live.done));
+        assert_eq!(replayed.rounds_skipped, live.rounds_skipped);
+        let mut a = live.rng.clone();
+        let mut b = replayed.rng.clone();
+        for _ in 0..32 {
+            assert_eq!(a.next_u64(), b.next_u64(), "rng streams diverged");
+        }
     }
 }

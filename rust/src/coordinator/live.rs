@@ -10,8 +10,10 @@
 //!   bookkeeping, strategy dispatch) pulled by a [`WallDriver`]: the
 //!   driver sleeps to the next deadline (JIT timer, container phase end,
 //!   δ-tick) and wakes the moment a party publishes an update into the
-//!   zero-copy MQ. All five strategies (`jit`, `batched`,
-//!   `eager-serverless`, `eager-ao`, `lazy`) run here unmodified.
+//!   zero-copy MQ. All six strategies (`jit`, `batched`,
+//!   `eager-serverless`, `eager-ao`, `lazy`, `async-stale`) run here
+//!   unmodified, fault injection included — the engine draws faults
+//!   from the same seeded stream in every time regime.
 //! * **Data plane** — party updates are `Payload::Inline` messages in the
 //!   round's MQ topic. A [`Folder`] consumes them *in offset order*,
 //!   folding each into a streaming [`Aggregator`] and checkpointing the
@@ -19,7 +21,7 @@
 //!   §5.5's "checkpointing partially aggregated model updates using the
 //!   message queue". Kill the aggregator at any point and a fresh one
 //!   resumes from the topic log + checkpoint to a bit-identical published
-//!   model ([`run_live_on`] with `resume = true`).
+//!   model (`Session::live().on(&mq).resume(true)`).
 //! * **Parties** — pluggable [`UpdateSource`]s: scripted publishes at the
 //!   fleet model's drawn offsets on an instant clock (deterministic
 //!   tests/benches, sim/live equivalence), synthetic training threads on
@@ -36,12 +38,11 @@
 //! instant clock, `::wall()` for the real one). This module houses the
 //! execution machinery — party sources, the fold-and-checkpoint data
 //! plane, and `session_loop`, the one multi-job control loop of which
-//! a single live job is simply the N = 1 case. The old free functions
-//! (`run_live`, `run_live_on`, `run_live_broker`) survive one PR as
-//! `#[deprecated]` shims delegating to `Session`.
+//! a single live job is simply the N = 1 case.
 //!
-//! **Multi-tenancy** (§6.3 economics): [`run_live_broker`] replays a
-//! whole [`JobTrace`] under the *same* wall-clock driver — jobs arrive
+//! **Multi-tenancy** (§6.3 economics): `Session::live().trace(..)`
+//! replays a whole job trace under the *same* wall-clock driver — jobs
+//! arrive
 //! at their trace times, pass the broker's admission control, share one
 //! emulated cluster arbitrated by the configured
 //! [`ArbitrationPolicy`](crate::broker::arbitration::ArbitrationPolicy),
@@ -60,21 +61,18 @@ use std::time::Instant;
 use anyhow::{anyhow, Context, Result};
 
 use crate::broker::admission::{AdmissionConfig, AdmissionController};
-use crate::broker::workload::{JobArrival, JobTrace};
-use crate::broker::{arbitration, SloClass};
+use crate::broker::arbitration;
+use crate::broker::workload::JobArrival;
 use crate::cluster::{Cluster, ClusterConfig, Notification};
 use crate::coordinator::driver::{
     ArrivalMode, Clock, Driver, JobEngine, UpdateSource, WallClock, WallDriver, WallTimer,
 };
-use crate::coordinator::job::FlJobSpec;
-use crate::coordinator::session::{EventSink, JobOutcome, Report, RunSummary, Session, SessionEvent};
+use crate::coordinator::session::{EventSink, JobOutcome, RunSummary, SessionEvent};
 use crate::fusion::{Aggregator, Algorithm};
 use crate::metrics::RoundRecord;
 use crate::mq::{self, CheckpointState, Message, MessageQueue, Payload};
-use crate::party::FleetKind;
 use crate::sim::{secs, to_secs, EventKind, EventQueue, Time};
 use crate::util::rng::Rng;
-use crate::workloads::Workload;
 
 // ---------------------------------------------------------------------------
 // configuration & report
@@ -95,54 +93,6 @@ pub enum PartyBackend {
     XlaThreads,
 }
 
-#[derive(Clone, Debug)]
-pub struct LiveConfig {
-    /// Any of the five §3 strategies (`strategies::by_name`).
-    pub strategy: String,
-    pub n_parties: usize,
-    pub rounds: u32,
-    pub seed: u64,
-    /// Timing profile for the cluster emulation + fleet model. The MLP
-    /// live profile keeps wall rounds around a second.
-    pub workload: Workload,
-    /// Fleet composition (active/intermittent, §6.3 axes).
-    pub fleet: FleetKind,
-    /// Minimum updates per round (defaults to all parties).
-    pub quorum: Option<usize>,
-    pub backend: PartyBackend,
-    /// Update vector length for the synthetic backends.
-    pub dim: usize,
-    /// Synthetic local-training pull toward the party target.
-    pub lr: f32,
-    /// XLA backend: minibatches per epoch (2/4/8/16/32 artifacts).
-    pub minibatches: usize,
-    /// XLA backend: Dirichlet alpha for non-IID label skew.
-    pub alpha: f64,
-    /// Fault injection: abort the aggregator after this many data-plane
-    /// folds, leaving the MQ intact for a resume (§5.5 test hook).
-    pub kill_after_fuses: Option<u64>,
-}
-
-impl Default for LiveConfig {
-    fn default() -> Self {
-        LiveConfig {
-            strategy: "jit".to_string(),
-            n_parties: 4,
-            rounds: 5,
-            seed: 42,
-            workload: Workload::mlp_live(),
-            fleet: FleetKind::ActiveHomogeneous,
-            quorum: None,
-            backend: PartyBackend::SynthThreads,
-            dim: 512,
-            lr: 0.3,
-            minibatches: 4,
-            alpha: 0.5,
-            kill_after_fuses: None,
-        }
-    }
-}
-
 /// Per-round model quality (XLA backend only).
 #[derive(Clone, Copy, Debug)]
 pub struct LiveRoundStats {
@@ -150,42 +100,6 @@ pub struct LiveRoundStats {
     pub train_loss: f32,
     pub eval_loss: f32,
     pub eval_acc: f32,
-}
-
-/// A live run's outcome.
-#[derive(Clone, Debug)]
-pub struct LiveReport {
-    pub strategy: String,
-    /// Strategy round records (§6.2 latency semantics, same as sim).
-    pub records: Vec<RoundRecord>,
-    /// Aggregation container-seconds from the emulated cluster ledger —
-    /// wall seconds under the thread backends.
-    pub container_seconds: f64,
-    pub deployments: u64,
-    /// Real data-plane folds performed by this run.
-    pub updates_fused: u64,
-    pub wall_secs: f64,
-    /// True when `kill_after_fuses` fired: the run aborted mid-round and
-    /// the MQ holds the topic log + checkpoint for a resume.
-    pub crashed: bool,
-    /// Set on resumed runs: the round reconstructed from the MQ.
-    pub resumed_round: Option<u32>,
-    /// Latest published global model (the init model if none published).
-    pub final_model: Vec<f32>,
-    /// XLA backend: per-round train/eval stats.
-    pub stats: Vec<LiveRoundStats>,
-    /// XLA backend: measured pair-fusion time on the real XLA path
-    /// (§5.4 offline calibration; 0.0 for the synthetic backends).
-    pub t_pair_secs: f64,
-}
-
-impl LiveReport {
-    pub fn mean_latency_secs(&self) -> f64 {
-        if self.records.is_empty() {
-            return 0.0;
-        }
-        self.records.iter().map(|r| r.latency_secs).sum::<f64>() / self.records.len() as f64
-    }
 }
 
 /// Deterministic initial global model for the synthetic backends.
@@ -665,75 +579,9 @@ impl UpdateSource for ThreadParties {
 // the live runner
 // ---------------------------------------------------------------------------
 
-fn live_spec(cfg: &LiveConfig) -> FlJobSpec {
-    let spec = FlJobSpec::new(
-        cfg.workload.clone(),
-        cfg.fleet,
-        cfg.n_parties,
-        cfg.rounds,
-    );
-    match cfg.quorum {
-        Some(q) => spec.with_quorum(q),
-        None => spec,
-    }
-}
-
-/// Run a live job on a fresh private MQ (no resume possible afterwards).
-#[deprecated(
-    since = "0.3.0",
-    note = "use coordinator::session::Session::live()/::wall() — this shim maps onto it"
-)]
-pub fn run_live(cfg: &LiveConfig) -> Result<LiveReport> {
-    // no #[allow] needed: deprecation warnings are suppressed inside
-    // items that are themselves deprecated
-    run_live_on(cfg, &Arc::new(MessageQueue::new()), false)
-}
-
-/// Run a live job against an explicit MQ; `resume = true` reconstructs
-/// the job's position from it (§5.5).
-#[deprecated(
-    since = "0.3.0",
-    note = "use coordinator::session::Session::live()/::wall() with .on(mq).resume(..)"
-)]
-pub fn run_live_on(
-    cfg: &LiveConfig,
-    mq: &Arc<MessageQueue>,
-    resume: bool,
-) -> Result<LiveReport> {
-    let mut s = match cfg.backend {
-        PartyBackend::Scripted => Session::live(),
-        PartyBackend::SynthThreads | PartyBackend::XlaThreads => {
-            Session::wall().backend(cfg.backend)
-        }
-    };
-    s = s
-        .seed(cfg.seed)
-        .dim(cfg.dim)
-        .lr(cfg.lr)
-        .minibatches(cfg.minibatches)
-        .alpha(cfg.alpha)
-        .kill_after_fuses(cfg.kill_after_fuses)
-        .on(mq)
-        .resume(resume);
-    s.job(live_spec(cfg), &cfg.strategy);
-    let (Report::Sim(mut sum) | Report::Live(mut sum) | Report::Wall(mut sum)) = s.run()?;
-    let o = sum.jobs.swap_remove(0);
-    Ok(LiveReport {
-        strategy: cfg.strategy.clone(),
-        records: o.records,
-        container_seconds: o.container_seconds,
-        deployments: o.deployments,
-        updates_fused: o.updates_folded,
-        wall_secs: sum.wall_secs,
-        crashed: sum.crashed,
-        resumed_round: o.resumed_round,
-        final_model: o.final_model,
-        stats: o.stats,
-        t_pair_secs: o.t_pair_secs,
-    })
-}
-
-/// XLA wall-session knobs ([`Session`] forwards these from its builder).
+/// XLA wall-session knobs
+/// ([`Session`](crate::coordinator::session::Session) forwards these
+/// from its builder).
 pub(crate) struct XlaSessionConfig {
     pub(crate) n_parties: usize,
     pub(crate) minibatches: usize,
@@ -816,199 +664,8 @@ fn mean_metric(mq: &MessageQueue, job: usize, round: u32) -> f32 {
     latest.values().sum::<f32>() / latest.len() as f32
 }
 
-// ---------------------------------------------------------------------------
-// live multi-tenancy: the broker's job mix under the wall-clock driver
-// ---------------------------------------------------------------------------
-
-/// Configuration for a live multi-job trace replay ([`run_live_broker`]).
-#[derive(Clone, Debug)]
-pub struct LiveBrokerConfig {
-    /// Shared cluster container capacity.
-    pub capacity: usize,
-    pub admission: AdmissionConfig,
-    /// Arbitration policy name (see `broker::arbitration::by_name`).
-    pub policy: String,
-    pub seed: u64,
-    /// Update vector length of every job's data plane.
-    pub dim: usize,
-    /// Synthetic local-training pull toward the party target.
-    pub lr: f32,
-    /// Pace the replay on the real wall clock instead of the instant
-    /// clock (slow: trace arrival gaps play out in real time).
-    pub wall: bool,
-    /// Fault injection: abort the aggregator after this many data-plane
-    /// folds *across all jobs*, leaving the MQ intact for a resume.
-    pub kill_after_fuses: Option<u64>,
-}
-
-impl Default for LiveBrokerConfig {
-    fn default() -> Self {
-        LiveBrokerConfig {
-            capacity: 16,
-            admission: AdmissionConfig::default(),
-            policy: "deadline".to_string(),
-            seed: 0xB40C,
-            dim: 32,
-            lr: 0.3,
-            wall: false,
-            kill_after_fuses: None,
-        }
-    }
-}
-
-/// One job's outcome in a live broker run.
-#[derive(Clone, Debug)]
-pub struct LiveJobOutcome {
-    pub job: usize,
-    pub name: String,
-    pub class: SloClass,
-    pub arrival_secs: f64,
-    /// Admission backpressure: seconds queued before the job started.
-    pub queue_wait_secs: f64,
-    /// Strategy round records (§6.2 latency semantics, same as sim).
-    pub records: Vec<RoundRecord>,
-    /// Aggregation container-seconds from the shared cluster ledger.
-    pub container_seconds: f64,
-    pub deployments: u64,
-    /// Emulated update merges (the simulator-comparable count).
-    pub updates_fused: u64,
-    /// Real data-plane folds this incarnation performed for the job.
-    pub updates_folded: u64,
-    /// Absolute instant the job finished (0.0 if it did not).
-    pub makespan_secs: f64,
-    /// Latest published global model for the job.
-    pub final_model: Vec<f32>,
-    /// Set on resumed runs: the round reconstructed from the job's MQ
-    /// state (model-topic offset).
-    pub resumed_round: Option<u32>,
-}
-
-impl LiveJobOutcome {
-    pub fn mean_latency_secs(&self) -> f64 {
-        if self.records.is_empty() {
-            return 0.0;
-        }
-        self.records.iter().map(|r| r.latency_secs).sum::<f64>() / self.records.len() as f64
-    }
-}
-
-/// A whole live broker run's report (one policy over one trace).
-#[derive(Clone, Debug)]
-pub struct LiveBrokerReport {
-    pub policy: String,
-    pub capacity: usize,
-    pub jobs: Vec<LiveJobOutcome>,
-    /// Σ container-seconds / (capacity × span).
-    pub cluster_utilization: f64,
-    pub total_container_seconds: f64,
-    pub span_secs: f64,
-    /// Real data-plane folds across all jobs.
-    pub updates_folded: u64,
-    /// Preemption decisions `(secs, victim task)` in decision order —
-    /// the policy-determinism pin.
-    pub preemptions: Vec<(f64, usize)>,
-    pub wall_secs: f64,
-    /// True when `kill_after_fuses` fired: the run aborted mid-round and
-    /// the MQ holds every job's durable state for a resume.
-    pub crashed: bool,
-}
-
-impl LiveBrokerReport {
-    pub fn mean_queue_wait_secs(&self) -> f64 {
-        if self.jobs.is_empty() {
-            return 0.0;
-        }
-        self.jobs.iter().map(|j| j.queue_wait_secs).sum::<f64>() / self.jobs.len() as f64
-    }
-
-    /// Peak number of jobs simultaneously running.
-    pub fn max_concurrent_jobs(&self) -> usize {
-        crate::broker::peak_concurrency(
-            self.jobs
-                .iter()
-                .map(|o| (o.arrival_secs + o.queue_wait_secs, o.makespan_secs)),
-        )
-    }
-}
-
-/// Replay a [`JobTrace`] on the live platform: jobs arrive at their
-/// trace times, pass the broker's admission control, and share one
-/// emulated cluster whose starts *and preemptions* follow the configured
-/// arbitration policy, while each job's data plane folds real updates
-/// from its own MQ topics with per-fold §5.5 checkpoints and publishes
-/// fused models to its own model topic.
-///
-/// With `resume = true` the runner reconstructs every job's position
-/// from the shared MQ instead of starting fresh: completed rounds come
-/// from each job's model-topic offset, in-progress partial aggregates
-/// from each job's checkpoint slot, and the round topics replay into the
-/// strategies as arrival events. Jobs that were still *queued* for
-/// admission when the previous aggregator died have no MQ state at all —
-/// they are re-admitted from the trace (which is why resume takes the
-/// trace, not just the MQ) rather than silently dropped.
-#[deprecated(
-    since = "0.3.0",
-    note = "use coordinator::session::Session::live()/::wall() with .trace(..) — this shim maps onto it"
-)]
-pub fn run_live_broker(
-    trace: &JobTrace,
-    cfg: &LiveBrokerConfig,
-    mq: &Arc<MessageQueue>,
-    resume: bool,
-) -> Result<LiveBrokerReport> {
-    if trace.is_empty() {
-        return Err(anyhow!("live broker replay needs a non-empty trace"));
-    }
-    let s = if cfg.wall {
-        Session::wall().backend(PartyBackend::Scripted)
-    } else {
-        Session::live()
-    };
-    let s = s
-        .trace(trace)
-        .policy(&cfg.policy)
-        .admission(cfg.admission.clone())
-        .capacity(cfg.capacity)
-        .seed(cfg.seed)
-        .dim(cfg.dim)
-        .lr(cfg.lr)
-        .kill_after_fuses(cfg.kill_after_fuses)
-        .on(mq)
-        .resume(resume);
-    let (Report::Sim(sum) | Report::Live(sum) | Report::Wall(sum)) = s.run()?;
-    Ok(LiveBrokerReport {
-        policy: sum.policy,
-        capacity: cfg.capacity,
-        jobs: sum
-            .jobs
-            .into_iter()
-            .map(|o| LiveJobOutcome {
-                job: o.job,
-                name: o.name,
-                class: o.class,
-                arrival_secs: o.arrival_secs,
-                queue_wait_secs: o.queue_wait_secs,
-                records: o.records,
-                container_seconds: o.container_seconds,
-                deployments: o.deployments,
-                updates_fused: o.updates_fused,
-                updates_folded: o.updates_folded,
-                makespan_secs: o.makespan_secs,
-                final_model: o.final_model,
-                resumed_round: o.resumed_round,
-            })
-            .collect(),
-        cluster_utilization: sum.cluster_utilization,
-        total_container_seconds: sum.total_container_seconds,
-        span_secs: sum.span_secs,
-        updates_folded: sum.updates_folded,
-        preemptions: sum.preemptions,
-        wall_secs: sum.wall_secs,
-        crashed: sum.crashed,
-    })
-}
-
-/// Per-run knobs of [`session_loop`], assembled by [`Session`].
+/// Per-run knobs of [`session_loop`], assembled by
+/// [`Session`](crate::coordinator::session::Session).
 pub(crate) struct LoopParams<'a> {
     pub(crate) arrivals: &'a [JobArrival],
     pub(crate) capacity: usize,
@@ -1092,27 +749,22 @@ pub(crate) fn session_loop<C: Clock, S: UpdateSource>(
                     }
                 }
             }
-            let start_round = (completed as u32).min(arr.spec.rounds);
-            resumed_rounds[job] = Some(start_round);
-            skip_broadcast[job] = Some(start_round);
-            if start_round >= arr.spec.rounds {
+            let fused = (completed as u32).min(arr.spec.rounds);
+            if fused >= arr.spec.rounds {
                 engine.done = true;
+                resumed_rounds[job] = Some(arr.spec.rounds);
+                skip_broadcast[job] = Some(arr.spec.rounds);
             } else {
-                engine.round = start_round;
                 // Fast-forward the engine's rng stream past the completed
-                // rounds: each round consumed one infos draw (inside
-                // estimate) and one arrival-offsets draw, so a resumed
-                // round k draws exactly the offsets the original run drew
-                // for k — re-delivered parties publish on the original
-                // schedule and fold order is preserved.
-                let model_bytes = engine.spec.workload.model.size_bytes();
-                let t_wait = engine.spec.t_wait_secs;
-                for _ in 0..start_round {
-                    let _ = engine.estimate();
-                    let _ = engine
-                        .fleet
-                        .arrival_offsets(model_bytes, t_wait, &mut engine.rng);
-                }
+                // rounds, skip-aware: each replayed round consumes one
+                // infos draw (inside estimate) and one fault/arrival
+                // draw, and starved rounds are re-skipped without
+                // counting as fused — so the resumed round draws exactly
+                // the offsets the original run drew for it and fold
+                // order is preserved.
+                engine.replay_completed(fused);
+                resumed_rounds[job] = Some(engine.round);
+                skip_broadcast[job] = Some(engine.round);
             }
         }
         dims.push(dim);
@@ -1171,62 +823,94 @@ pub(crate) fn session_loop<C: Clock, S: UpdateSource>(
                 if engines[job].done || engines[job].round != round {
                     None // stale start from a quorum-completed round
                 } else {
-                    sink.emit(SessionEvent::RoundStarted {
-                        job,
-                        round,
-                        at_secs: to_secs(q.now()),
-                    });
-                    driver.watch_round(job, round);
-                    folders[job] = if resume && resumed_rounds[job] == Some(round) {
-                        Folder::resume(mq, job, round, dims[job])
-                    } else {
-                        Folder::fresh(dims[job])
-                    };
-                    let offsets = engines[job].start_round(
+                    let plan = engines[job].start_round(
                         &mut q,
                         &mut cluster,
                         mq,
                         ArrivalMode::External,
                     );
-                    // resumed round: re-deliver only the parties missing
-                    // from the topic log (logged updates replay from the
-                    // MQ)
-                    let parties: Vec<usize> = if skip_broadcast[job].take() == Some(round) {
-                        let logged: std::collections::HashSet<usize> = mq
-                            .fetch(&mq::update_topic(job, round), 0, usize::MAX)
-                            .iter()
-                            .map(|m| m.party)
-                            .collect();
-                        (0..engines[job].spec.n_parties)
-                            .filter(|p| !logged.contains(p))
-                            .collect()
-                    } else {
-                        (0..engines[job].spec.n_parties).collect()
-                    };
-                    let mut failed = false;
-                    if !parties.is_empty() {
+                    if engines[job].done {
+                        // every remaining round starved below the quorum
+                        // floor: the engine skipped to the end without
+                        // starting anything
                         let now = q.now();
-                        if let Err(e) = driver.source.begin_round(
+                        driver.unwatch(job);
+                        sink.emit(SessionEvent::JobFinished {
+                            job,
+                            at_secs: to_secs(now),
+                        });
+                        for j in ctrl.finish(job, now) {
+                            sink.emit(SessionEvent::JobAdmitted {
+                                job: j,
+                                at_secs: to_secs(now),
+                            });
+                            q.schedule_at(
+                                now,
+                                EventKind::RoundStart {
+                                    job: j,
+                                    round: engines[j].round,
+                                },
+                            );
+                        }
+                        None
+                    } else {
+                        // the engine may have skipped starved rounds —
+                        // watch and announce the round it settled on
+                        let round = engines[job].round;
+                        sink.emit(SessionEvent::RoundStarted {
                             job,
                             round,
-                            &globals[job],
-                            &parties,
-                            &offsets,
-                            now,
-                            mq,
-                        ) {
-                            fatal = Some(e);
-                            failed = true;
+                            at_secs: to_secs(q.now()),
+                        });
+                        driver.watch_round(job, round);
+                        folders[job] = if resume && resumed_rounds[job] == Some(round) {
+                            Folder::resume(mq, job, round, dims[job])
+                        } else {
+                            Folder::fresh(dims[job])
+                        };
+                        // resumed round: re-deliver only the plan's parties
+                        // missing from the topic log (logged updates replay
+                        // from the MQ)
+                        let parties: Vec<usize> =
+                            if skip_broadcast[job].take() == Some(round) {
+                                let logged: std::collections::HashSet<usize> = mq
+                                    .fetch(&mq::update_topic(job, round), 0, usize::MAX)
+                                    .iter()
+                                    .map(|m| m.party)
+                                    .collect();
+                                plan.parties
+                                    .iter()
+                                    .copied()
+                                    .filter(|p| !logged.contains(p))
+                                    .collect()
+                            } else {
+                                plan.parties.clone()
+                            };
+                        let mut failed = false;
+                        if !parties.is_empty() {
+                            let now = q.now();
+                            if let Err(e) = driver.source.begin_round(
+                                job,
+                                round,
+                                &globals[job],
+                                &parties,
+                                &plan.offsets,
+                                now,
+                                mq,
+                            ) {
+                                fatal = Some(e);
+                                failed = true;
+                            }
                         }
+                        if failed {
+                            break 'outer;
+                        }
+                        if !tick_scheduled {
+                            tick_scheduled = true;
+                            q.schedule_in(cluster.cfg.delta_tick, EventKind::SchedTick);
+                        }
+                        None
                     }
-                    if failed {
-                        break 'outer;
-                    }
-                    if !tick_scheduled {
-                        tick_scheduled = true;
-                        q.schedule_in(cluster.cfg.delta_tick, EventKind::SchedTick);
-                    }
-                    None
                 }
             }
             EventKind::UpdateArrival { job, round, party } => {
@@ -1468,6 +1152,9 @@ pub(crate) fn session_loop<C: Clock, S: UpdateSource>(
             stats: std::mem::take(&mut stats[job]),
             t_pair_secs: 0.0,
             solo_mean_latency_secs: None,
+            updates_dropped: engines[job].updates_dropped,
+            updates_decayed: engines[job].updates_decayed,
+            rounds_skipped: engines[job].rounds_skipped,
         })
         .collect();
     Ok(RunSummary {
@@ -1493,8 +1180,13 @@ pub(crate) fn session_loop<C: Clock, S: UpdateSource>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::session::JobHandle;
+    use crate::broker::workload::JobTrace;
+    use crate::broker::SloClass;
+    use crate::coordinator::job::FlJobSpec;
+    use crate::coordinator::session::{JobHandle, Report, Session};
     use crate::coordinator::strategies;
+    use crate::party::FleetKind;
+    use crate::workloads::Workload;
 
     fn scripted_spec(parties: usize, rounds: u32) -> FlJobSpec {
         FlJobSpec::new(
@@ -1514,7 +1206,7 @@ mod tests {
     }
 
     #[test]
-    fn all_five_strategies_run_live_scripted() {
+    fn all_six_strategies_run_live_scripted() {
         for name in strategies::all_strategies() {
             let (s, h) = live_session(name);
             let r = s.run().unwrap_or_else(|e| panic!("{name}: {e:#}"));
@@ -1773,30 +1465,6 @@ mod tests {
         assert_eq!(a, b);
         let c = synth_update(&g, 9, 3, 0.3);
         assert_ne!(a, c, "parties must differ");
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_delegate_to_the_session_facade() {
-        // the one sanctioned in-tree use of the legacy entry points: pin
-        // that the shims reproduce the façade's results exactly
-        let cfg = LiveConfig {
-            strategy: "jit".to_string(),
-            n_parties: 4,
-            rounds: 2,
-            seed: 11,
-            backend: PartyBackend::Scripted,
-            dim: 32,
-            workload: Workload::mlp_live(),
-            ..Default::default()
-        };
-        let shim = run_live(&cfg).expect("shim run");
-        let (s, h) = live_session("jit");
-        let rep = s.run().expect("session run");
-        assert_eq!(shim.final_model, rep.job(h).final_model);
-        assert_eq!(shim.updates_fused, rep.job(h).updates_folded);
-        assert_eq!(shim.records.len(), rep.job(h).records.len());
-        assert_eq!(shim.deployments, rep.job(h).deployments);
     }
 
     // -----------------------------------------------------------------

@@ -14,8 +14,9 @@
 //! ([`driver`]) — [`platform`] pulls the per-job [`driver::JobEngine`]s
 //! with the virtual driver, [`live`] pulls them with the wall-clock
 //! driver over real MQ traffic through one multi-job control loop (a
-//! single live job is its N = 1 case). The five [`strategies`] run
-//! unmodified under both.
+//! single live job is its N = 1 case). The six [`strategies`] run
+//! unmodified under both, fault injection ([`crate::party::FleetFaults`])
+//! included.
 
 pub mod driver;
 pub mod job;

@@ -22,6 +22,7 @@ use crate::coordinator::session::{EventSink, SessionEvent};
 use crate::coordinator::strategies::Strategy;
 use crate::metrics::JobReport;
 use crate::mq::{self, MessageQueue};
+use crate::party::FleetFaults;
 use crate::sim::{secs, to_secs, EventKind, EventQueue, Time};
 
 /// Platform configuration.
@@ -35,6 +36,9 @@ pub struct PlatformConfig {
     pub jit_margin: Option<f64>,
     /// Override the batched-serverless trigger size — ablation.
     pub batch_override: Option<usize>,
+    /// Fleet fault injection, applied to every admitted job (default:
+    /// all knobs off — the bit-compat fast path).
+    pub faults: FleetFaults,
 }
 
 impl Default for PlatformConfig {
@@ -48,6 +52,7 @@ impl Default for PlatformConfig {
             opportunistic: true,
             jit_margin: None,
             batch_override: None,
+            faults: FleetFaults::none(),
         }
     }
 }
@@ -78,6 +83,9 @@ pub struct RunStats {
     /// Preemption decisions `(secs, victim task)` in decision order —
     /// deterministic per (seed, trace, policy).
     pub preemptions: Vec<(f64, usize)>,
+    /// Per-job fault accounting `(updates_dropped, updates_decayed,
+    /// rounds_skipped)` — all zeros without [`PlatformConfig::faults`].
+    pub fault_counts: Vec<(usize, usize, u32)>,
 }
 
 impl Platform {
@@ -97,7 +105,8 @@ impl Platform {
     /// Admit a job with the given strategy. Returns the job id.
     pub fn admit(&mut self, spec: FlJobSpec, strategy_name: &str) -> usize {
         let job = self.jobs.len();
-        let mut engine = JobEngine::new(job, spec, strategy_name, self.cfg.seed);
+        let mut engine =
+            JobEngine::with_faults(job, spec, strategy_name, self.cfg.seed, self.cfg.faults);
         engine.params.opportunistic = self.cfg.opportunistic;
         if let Some(m) = self.cfg.jit_margin {
             engine.params.jit_margin = m;
@@ -169,18 +178,40 @@ impl Platform {
     }
 
     fn start_round(&mut self, job: usize) {
-        self.events.emit(SessionEvent::RoundStarted {
-            job,
-            round: self.jobs[job].round,
-            at_secs: to_secs(self.q.now()),
-        });
         self.jobs[job].start_round(
             &mut self.q,
             &mut self.cluster,
             &self.mq,
             ArrivalMode::Schedule,
         );
+        if self.jobs[job].done {
+            // every remaining round starved below the quorum floor: the
+            // engine skipped to the end without starting anything
+            self.job_finished(job);
+            return;
+        }
+        self.events.emit(SessionEvent::RoundStarted {
+            job,
+            round: self.jobs[job].round,
+            at_secs: to_secs(self.q.now()),
+        });
         self.ensure_tick();
+    }
+
+    /// Emit the finish event and release admission demand a finished job
+    /// held (queued jobs may start now — broker backpressure path).
+    fn job_finished(&mut self, job: usize) {
+        let now = self.q.now();
+        self.events.emit(SessionEvent::JobFinished {
+            job,
+            at_secs: to_secs(now),
+        });
+        if let Some(ctrl) = self.admission.as_mut() {
+            let released = ctrl.finish(job, now);
+            for j in released {
+                self.release_job(j);
+            }
+        }
     }
 
     fn ensure_tick(&mut self) {
@@ -207,18 +238,7 @@ impl Platform {
         let finished =
             self.jobs[job].finish_round(&mut self.q, &mut self.cluster, &self.mq, rec);
         if finished {
-            self.events.emit(SessionEvent::JobFinished {
-                job,
-                at_secs: to_secs(now),
-            });
-            // a finished job frees committed admission demand: queued
-            // jobs may start now (broker backpressure path)
-            if let Some(ctrl) = self.admission.as_mut() {
-                let released = ctrl.finish(job, now);
-                for j in released {
-                    self.release_job(j);
-                }
-            }
+            self.job_finished(job);
         }
     }
 
@@ -340,6 +360,11 @@ impl Platform {
                 .preemption_log()
                 .iter()
                 .map(|&(t, task)| (to_secs(t), task))
+                .collect(),
+            fault_counts: self
+                .jobs
+                .iter()
+                .map(|j| (j.updates_dropped, j.updates_decayed, j.rounds_skipped))
                 .collect(),
         };
         (reports, stats)
@@ -469,6 +494,65 @@ mod tests {
         // the paper's thesis: JIT latency stays eager-like even under
         // heterogeneity because training time is predictable
         assert!(r.mean_latency_secs() < 5.0, "latency {}", r.mean_latency_secs());
+    }
+
+    #[test]
+    fn faulty_sim_runs_are_bit_identical_per_seed() {
+        // satellite: same seed + same FleetFaults ⇒ bit-identical report
+        let s = spec(FleetKind::ActiveHomogeneous, 10, 4);
+        let run = |seed: u64, scenario: &str| {
+            let mut cfg = PlatformConfig {
+                seed,
+                ..Default::default()
+            };
+            cfg.cluster.capacity = scenario_capacity(&s);
+            cfg.faults = FleetFaults::scenario(scenario, 30.0).unwrap();
+            let mut p = Platform::new(cfg);
+            p.admit(s.clone(), "jit");
+            p.run().remove(0)
+        };
+        for scenario in FleetFaults::all_scenarios() {
+            let a = run(0xAB, scenario);
+            let b = run(0xAB, scenario);
+            assert_eq!(a.rounds.len(), b.rounds.len(), "{scenario}");
+            for (x, y) in a.rounds.iter().zip(&b.rounds) {
+                assert_eq!(
+                    x.latency_secs.to_bits(),
+                    y.latency_secs.to_bits(),
+                    "{scenario} round {}",
+                    x.round
+                );
+                assert_eq!(x.complete_secs.to_bits(), y.complete_secs.to_bits());
+            }
+            assert_eq!(a.updates_fused, b.updates_fused, "{scenario}");
+            assert_eq!(a.deployments, b.deployments, "{scenario}");
+        }
+    }
+
+    #[test]
+    fn dropout_faults_shrink_fused_updates() {
+        let s = spec(FleetKind::ActiveHomogeneous, 10, 4);
+        let run = |faults: FleetFaults| {
+            let mut cfg = PlatformConfig {
+                seed: 0xF5,
+                ..Default::default()
+            };
+            cfg.cluster.capacity = scenario_capacity(&s);
+            cfg.faults = faults;
+            let mut p = Platform::new(cfg);
+            p.admit(s.clone(), "jit");
+            p.run_with_stats()
+        };
+        let (clean, _) = run(FleetFaults::none());
+        let (faulty, stats) = run(FleetFaults::scenario("dropout", 30.0).unwrap());
+        assert_eq!(clean[0].updates_fused, 40, "10 parties × 4 rounds");
+        assert!(
+            faulty[0].updates_fused < clean[0].updates_fused,
+            "dropped-out parties must not fuse ({} vs {})",
+            faulty[0].updates_fused,
+            clean[0].updates_fused
+        );
+        assert_eq!(stats.fault_counts.len(), 1);
     }
 
     #[test]

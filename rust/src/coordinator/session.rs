@@ -47,14 +47,14 @@
 //! | [`resume`](Session::resume) | reconstruct every job from the MQ after an aggregator death | §5.5 checkpointing |
 //! | [`quorum` (on the spec)](crate::coordinator::job::FlJobSpec::with_quorum) | minimum updates per round | §5.1 |
 //! | [`backend`](Session::backend) | who plays the parties in a `wall` session | §4 party model |
-//! | [`kill_after_fuses`](Session::kill_after_fuses) | fault injection for the resume tests | §5.5 |
+//! | [`kill_after_fuses`](Session::kill_after_fuses) | aggregator-crash injection for the resume tests | §5.5 |
+//! | [`faults`](Session::faults) | fleet fault injection ([`FleetFaults`]): stragglers, dropout, diurnal waves, weight skew | robustness matrix |
 //! | [`events`](Session::events) | stream typed [`SessionEvent`]s while the run executes | §5.5 observability |
 //!
 //! Every variant returns the same unified [`Report`] (one enum over a
 //! shared [`RunSummary`] body), which subsumes the legacy
 //! `JobReport`/`RunStats`/`BrokerReport`/`LiveReport`/`LiveBrokerReport`
-//! quintet. The legacy free functions survive one more PR as
-//! `#[deprecated]` shims delegating here.
+//! quintet.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -71,8 +71,9 @@ use crate::coordinator::live::{
     self, LiveRoundStats, PartyBackend, ScriptedParties, ThreadParties,
 };
 use crate::coordinator::platform::{scenario_capacity, Platform, PlatformConfig};
-use crate::metrics::{JobReport, RoundRecord, AZURE_USD_PER_CONTAINER_SECOND};
+use crate::metrics::{RoundRecord, AZURE_USD_PER_CONTAINER_SECOND};
 use crate::mq::MessageQueue;
+use crate::party::FleetFaults;
 use crate::sim::secs;
 use crate::util::json::Json;
 use crate::util::stats::percentile;
@@ -233,6 +234,14 @@ pub struct JobOutcome {
     /// Sim with [`Session::solo_baselines`]: the same job's mean latency
     /// alone on an uncontended cluster.
     pub solo_mean_latency_secs: Option<f64>,
+    /// Updates cut at the straggler deadline (drop-policy strategies) or
+    /// whose payload vanished before a decayed fold. 0 without faults.
+    pub updates_dropped: usize,
+    /// Deadline-missers folded with decayed weight (`async-stale` only).
+    pub updates_decayed: usize,
+    /// Rounds skipped on starvation (expected on-time arrivals below the
+    /// quorum floor). 0 without faults.
+    pub rounds_skipped: u32,
 }
 
 impl JobOutcome {
@@ -273,23 +282,6 @@ impl JobOutcome {
             return None;
         }
         Some(self.mean_latency_secs() / solo)
-    }
-
-    /// Project onto the legacy `JobReport` shape (the deprecated-shim
-    /// bridge; new code reads `JobOutcome` directly).
-    pub fn to_job_report(&self) -> JobReport {
-        JobReport {
-            strategy: self.strategy.clone(),
-            workload: self.workload.clone(),
-            fleet: self.fleet.clone(),
-            parties: self.parties,
-            rounds: self.records.clone(),
-            container_seconds: self.container_seconds,
-            ancillary_seconds: self.ancillary_seconds,
-            deployments: self.deployments,
-            updates_fused: self.updates_fused,
-            makespan_secs: self.makespan_secs,
-        }
     }
 
     pub fn to_json(&self) -> Json {
@@ -576,6 +568,7 @@ pub struct Session {
     resume: bool,
     solo_baselines: bool,
     sink: EventSink,
+    faults: FleetFaults,
 }
 
 impl Session {
@@ -597,6 +590,7 @@ impl Session {
             resume: false,
             solo_baselines: false,
             sink: EventSink::none(),
+            faults: FleetFaults::none(),
         }
     }
 
@@ -625,8 +619,9 @@ impl Session {
         Session::with_mode(Mode::Wall)
     }
 
-    /// Admit a job at t = 0 under `strategy` (any of the five §3
-    /// designs). Returns a [`JobHandle`] to index the [`Report`] with.
+    /// Admit a job at t = 0 under `strategy` (any of the six §3
+    /// designs, `async-stale` included). Returns a [`JobHandle`] to
+    /// index the [`Report`] with.
     pub fn job(&mut self, spec: FlJobSpec, strategy: &str) -> JobHandle {
         self.job_at(spec, strategy, 0.0, SloClass::Standard)
     }
@@ -738,6 +733,17 @@ impl Session {
         self
     }
 
+    /// Fleet fault injection ([`FleetFaults`]): heavy-tailed stragglers,
+    /// per-round dropout with rejoin, diurnal availability waves, non-IID
+    /// weight skew, straggler cutoff and the quorum floor. Applied to
+    /// every job, identically in `sim`, `live` and `wall` sessions — the
+    /// engine draws the faults from the same seeded rng stream in all
+    /// three, so a sim cell and its live twin degrade bit-identically.
+    pub fn faults(mut self, faults: FleetFaults) -> Session {
+        self.faults = faults;
+        self
+    }
+
     /// Run against an explicit shared MQ — required for resume (a fresh
     /// private MQ is created otherwise, so nothing survives the run).
     pub fn on(mut self, mq: &Arc<MessageQueue>) -> Session {
@@ -837,6 +843,7 @@ impl Session {
         let wall_start = Instant::now();
         let mut pcfg = PlatformConfig {
             seed: self.seed,
+            faults: self.faults,
             ..Default::default()
         };
         pcfg.cluster.capacity = capacity;
@@ -882,6 +889,9 @@ impl Session {
                     resumed_round: None,
                     stats: Vec::new(),
                     t_pair_secs: 0.0,
+                    updates_dropped: stats.fault_counts[job].0,
+                    updates_decayed: stats.fault_counts[job].1,
+                    rounds_skipped: stats.fault_counts[job].2,
                     solo_mean_latency_secs: self
                         .solo_baselines
                         .then(|| crate::broker::solo_mean_latency(arr, self.seed, job)),
@@ -937,7 +947,8 @@ impl Session {
         let mut engines: Vec<JobEngine> = Vec::with_capacity(self.arrivals.len());
         let mut weights: Vec<Vec<f32>> = Vec::with_capacity(self.arrivals.len());
         for (job, arr) in self.arrivals.iter().enumerate() {
-            let mut engine = JobEngine::new(job, arr.spec.clone(), &arr.strategy, self.seed);
+            let mut engine =
+                JobEngine::with_faults(job, arr.spec.clone(), &arr.strategy, self.seed, self.faults);
             engine.deferred = true;
             weights.push(
                 engine

@@ -1,0 +1,199 @@
+//! Staleness-tolerant JIT (`async-stale`) — the sixth strategy.
+//!
+//! Deploy scheduling is *identical* to [`super::jit::Jit`]: defer the
+//! aggregator gang to `t_rnd − t_agg·(1+margin)`, arm the deadline timer,
+//! release opportunistically. The sole behavioral difference is the
+//! [`StalePolicy`]: where every other strategy lets the engine **drop**
+//! updates that arrive after their round already fused, `async-stale`
+//! asks the engine to **fold them into the current round with
+//! exponentially decayed weight** `w · e^(−λ · age_rounds)`
+//! (FedAsync-style staleness discounting).
+//!
+//! The decayed fold itself lives in `JobEngine::handle_update`, not here
+//! — the strategy only declares the policy — so the sim driver and the
+//! live wall-clock driver share the degradation state machine verbatim.
+//! On a healthy fleet (no late arrivals) `async-stale` is bit-identical
+//! to `jit`.
+
+use super::jit::Jit;
+use super::{Ctx, StalePolicy, Strategy};
+use crate::cluster::{Notification, TaskId};
+use crate::estimator::RoundEstimate;
+use crate::metrics::RoundRecord;
+
+/// Decay rate λ for stale-update weights: one round of staleness keeps
+/// ~50% of the update's weight, two rounds ~25%.
+pub const DECAY_LAMBDA: f64 = 0.7;
+
+/// JIT's deploy schedule + decayed folding of deadline-missers.
+#[derive(Default)]
+pub struct AsyncStale {
+    inner: Jit,
+}
+
+impl Strategy for AsyncStale {
+    fn name(&self) -> &'static str {
+        "async-stale"
+    }
+
+    fn stale_policy(&self) -> StalePolicy {
+        StalePolicy::Decay {
+            lambda: DECAY_LAMBDA,
+        }
+    }
+
+    fn on_job_start(&mut self, ctx: &mut Ctx) {
+        self.inner.on_job_start(ctx);
+    }
+
+    fn on_round_start(&mut self, ctx: &mut Ctx, round: u32, est: &RoundEstimate) {
+        self.inner.on_round_start(ctx, round, est);
+    }
+
+    fn on_update(&mut self, ctx: &mut Ctx, round: u32, party: usize, arrived: usize) {
+        self.inner.on_update(ctx, round, party, arrived);
+    }
+
+    fn on_timer(&mut self, ctx: &mut Ctx, round: u32) {
+        self.inner.on_timer(ctx, round);
+    }
+
+    fn on_linger(&mut self, ctx: &mut Ctx, task: TaskId) {
+        self.inner.on_linger(ctx, task);
+    }
+
+    fn on_note(&mut self, ctx: &mut Ctx, note: &Notification) {
+        self.inner.on_note(ctx, note);
+    }
+
+    fn on_job_end(&mut self, ctx: &mut Ctx) {
+        self.inner.on_job_end(ctx);
+    }
+
+    fn take_completed(&mut self) -> Option<RoundRecord> {
+        self.inner.take_completed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, ClusterConfig};
+    use crate::coordinator::job::{FlJobSpec, JobParams};
+    use crate::mq::MessageQueue;
+    use crate::party::FleetKind;
+    use crate::sim::{EventKind, EventQueue};
+    use crate::workloads::Workload;
+
+    fn run_round(strategy: &mut dyn Strategy, arrivals: &[f64]) -> Vec<RoundRecord> {
+        let spec = FlJobSpec::new(
+            Workload::cifar100_effnet(),
+            FleetKind::ActiveHomogeneous,
+            arrivals.len(),
+            1,
+        );
+        let params = JobParams::derive(0, &spec);
+        let mut q = EventQueue::new();
+        let mut cluster = Cluster::new(ClusterConfig::default());
+        let mq = MessageQueue::new();
+        let est = RoundEstimate {
+            t_upd: arrivals.to_vec(),
+            t_rnd: arrivals.iter().cloned().fold(0.0, f64::max),
+            t_agg: 1.0,
+        };
+        {
+            let mut ctx = Ctx {
+                q: &mut q,
+                cluster: &mut cluster,
+                mq: &mq,
+                params: &params,
+            };
+            strategy.on_round_start(&mut ctx, 0, &est);
+        }
+        for (i, &a) in arrivals.iter().enumerate() {
+            q.schedule_at(
+                crate::sim::secs(a),
+                EventKind::UpdateArrival {
+                    job: 0,
+                    round: 0,
+                    party: i,
+                },
+            );
+        }
+        q.schedule_in(cluster.cfg.delta_tick, EventKind::SchedTick);
+        let mut arrived = 0;
+        let mut records = Vec::new();
+        let mut ticks = 0;
+        while let Some((_, ev)) = q.next() {
+            match ev {
+                EventKind::UpdateArrival { party, .. } => {
+                    arrived += 1;
+                    let mut ctx = Ctx {
+                        q: &mut q,
+                        cluster: &mut cluster,
+                        mq: &mq,
+                        params: &params,
+                    };
+                    strategy.on_update(&mut ctx, 0, party, arrived);
+                }
+                EventKind::TimerAlert { round, .. } => {
+                    let mut ctx = Ctx {
+                        q: &mut q,
+                        cluster: &mut cluster,
+                        mq: &mq,
+                        params: &params,
+                    };
+                    strategy.on_timer(&mut ctx, round);
+                }
+                EventKind::ContainerDone { container } => {
+                    if let Some(note) = cluster.advance(&mut q, container) {
+                        let mut ctx = Ctx {
+                            q: &mut q,
+                            cluster: &mut cluster,
+                            mq: &mq,
+                            params: &params,
+                        };
+                        strategy.on_note(&mut ctx, &note);
+                    }
+                }
+                EventKind::SchedTick => {
+                    cluster.on_tick(&mut q);
+                    ticks += 1;
+                    if ticks < 10_000 && records.is_empty() {
+                        q.schedule_in(cluster.cfg.delta_tick, EventKind::SchedTick);
+                    }
+                }
+                _ => {}
+            }
+            if let Some(r) = strategy.take_completed() {
+                records.push(r);
+            }
+        }
+        records
+    }
+
+    #[test]
+    fn declares_decay_policy() {
+        let s = AsyncStale::default();
+        match s.stale_policy() {
+            StalePolicy::Decay { lambda } => assert!((lambda - DECAY_LAMBDA).abs() < 1e-12),
+            StalePolicy::Drop => panic!("async-stale must decay, not drop"),
+        }
+    }
+
+    #[test]
+    fn completes_rounds_exactly_like_jit_on_healthy_fleet() {
+        let arrivals: Vec<f64> = (1..=6).map(|i| i as f64 * 3.0).collect();
+        let a = run_round(&mut AsyncStale::default(), &arrivals);
+        let mut jit = crate::coordinator::strategies::jit::Jit::default();
+        let j = run_round(&mut jit, &arrivals);
+        assert_eq!(a.len(), 1);
+        assert_eq!(j.len(), 1);
+        assert_eq!(
+            a[0].latency_secs.to_bits(),
+            j[0].latency_secs.to_bits(),
+            "healthy-fleet async-stale must be bit-identical to jit"
+        );
+        assert_eq!(a[0].complete_secs.to_bits(), j[0].complete_secs.to_bits());
+    }
+}

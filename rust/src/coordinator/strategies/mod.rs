@@ -8,6 +8,10 @@
 //! * [`lazy::Lazy`] — deploy once, after the last update.
 //! * [`jit::Jit`] — the paper's contribution: deadline timer at
 //!   `t_rnd − t_agg` + opportunistic priorities (§5.5, Fig 6).
+//! * [`async_stale::AsyncStale`] — JIT's deploy schedule, but updates
+//!   that miss the fuse deadline are folded with exponentially decayed
+//!   weight instead of dropped ([`StalePolicy::Decay`]; the engine owns
+//!   the decayed folds so both drivers share the state machine).
 //!
 //! A strategy is a pure event-driven policy: it never reads a clock or
 //! sleeps, it only reacts to events and schedules future ones through
@@ -19,6 +23,7 @@
 //! clock: `q.now()` is virtual µs in sim and wall µs live; an event
 //! scheduled at `t` fires when the driver's clock reaches `t`.
 
+pub mod async_stale;
 pub mod batched;
 pub mod eager_ao;
 pub mod eager_serverless;
@@ -45,9 +50,28 @@ pub struct Ctx<'a> {
     pub params: &'a JobParams,
 }
 
+/// What the engine does with an update that arrives after its round
+/// already completed (it missed the fuse deadline).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StalePolicy {
+    /// Drop it — the classical synchronous-FL behavior (all strategies
+    /// except `async-stale`).
+    Drop,
+    /// Fold it into the *current* round's aggregate with exponentially
+    /// decayed weight `w · e^(−lambda · age_rounds)` (FedAsync-style
+    /// staleness discounting).
+    Decay { lambda: f64 },
+}
+
 /// The strategy interface — the platform routes events here.
 pub trait Strategy {
     fn name(&self) -> &'static str;
+
+    /// How the engine treats updates that miss the fuse deadline.
+    /// Default: drop them (`async-stale` overrides with decay).
+    fn stale_policy(&self) -> StalePolicy {
+        StalePolicy::Drop
+    }
 
     /// Job admitted (before round 0). AO deploys its long-lived container.
     fn on_job_start(&mut self, _ctx: &mut Ctx) {}
@@ -84,6 +108,7 @@ pub fn by_name(name: &str) -> Option<Box<dyn Strategy>> {
         }
         "eager-ao" | "ao" => Some(Box::new(eager_ao::EagerAlwaysOn::default())),
         "lazy" => Some(Box::new(lazy::Lazy::default())),
+        "async-stale" | "async" => Some(Box::new(async_stale::AsyncStale::default())),
         _ => None,
     }
 }
@@ -93,10 +118,18 @@ pub fn paper_strategies() -> &'static [&'static str] {
     &["jit", "batched", "eager-serverless", "eager-ao"]
 }
 
-/// Every strategy, paper order plus `lazy` — all five run both simulated
-/// and live (`fljit live --strategy <any of these>`).
+/// Every strategy, paper order plus `lazy` and the staleness-tolerant
+/// `async-stale` — all six run both simulated and live
+/// (`fljit live --strategy <any of these>`).
 pub fn all_strategies() -> &'static [&'static str] {
-    &["jit", "batched", "eager-serverless", "eager-ao", "lazy"]
+    &[
+        "jit",
+        "batched",
+        "eager-serverless",
+        "eager-ao",
+        "lazy",
+        "async-stale",
+    ]
 }
 
 /// Shared per-round bookkeeping for the serverless strategies.
@@ -229,10 +262,24 @@ mod tests {
     }
 
     #[test]
-    fn all_strategies_resolve_and_are_exactly_five() {
-        assert_eq!(all_strategies().len(), 5);
+    fn all_strategies_resolve_and_are_exactly_six() {
+        assert_eq!(all_strategies().len(), 6);
         for n in all_strategies() {
             assert_eq!(by_name(n).unwrap().name(), *n, "{n}");
+        }
+    }
+
+    #[test]
+    fn only_async_stale_decays_stale_updates() {
+        for n in all_strategies() {
+            let s = by_name(n).unwrap();
+            match s.stale_policy() {
+                StalePolicy::Decay { lambda } => {
+                    assert_eq!(*n, "async-stale");
+                    assert!(lambda > 0.0);
+                }
+                StalePolicy::Drop => assert_ne!(*n, "async-stale"),
+            }
         }
     }
 

@@ -21,6 +21,9 @@
 //!   * `live-broker` — the broker's job mix on the live platform
 //!                   (admission + policy-arbitrated preemption + per-job
 //!                   data planes).
+//!   * `robustness` — strategy × fault-scenario degradation matrix
+//!                   (stragglers, dropout, diurnal waves, weight skew)
+//!                   with per-cell fidelity and dropped-vs-decayed counts.
 
 use fljit::util::cli::Args;
 

@@ -39,7 +39,7 @@ pub struct JobReport {
     /// Absolute virtual-time instant the job finished (seconds from
     /// platform start). For jobs admitted at t = 0 this equals the wall
     /// duration; for broker jobs arriving later it includes arrival +
-    /// queue time (BrokerReport::max_concurrent_jobs relies on this
+    /// queue time (RunSummary::max_concurrent_jobs relies on this
     /// absolute interpretation).
     pub makespan_secs: f64,
 }

@@ -103,16 +103,22 @@ impl PartyProfile {
 
     /// Draw the actual update arrival offset for one round.
     pub fn draw_arrival(&self, model_bytes: u64, t_wait: f64, rng: &mut Rng) -> f64 {
+        let (train, comm) = self.draw_split(model_bytes, t_wait, rng);
+        train + comm
+    }
+
+    /// The same draw, split into (train, transfer) so the fault layer can
+    /// stretch the two components independently. Consumes exactly the rng
+    /// draws `draw_arrival` always consumed.
+    pub fn draw_split(&self, model_bytes: u64, t_wait: f64, rng: &mut Rng) -> (f64, f64) {
         match self.mode {
             Mode::Active => {
                 let train = self.epoch_secs * rng.lognormal(0.0, self.jitter_sigma);
-                train + self.comm_secs(model_bytes)
+                (train, self.comm_secs(model_bytes))
             }
             // §6.3: "each participant would send their model update at a
             // random time" within the allotted round window.
-            Mode::Intermittent => {
-                rng.range_f64(0.05, 0.98) * t_wait
-            }
+            Mode::Intermittent => (rng.range_f64(0.05, 0.98) * t_wait, 0.0),
         }
     }
 
@@ -134,6 +140,185 @@ impl PartyProfile {
             bw_up: self.bw_up,
             bw_down: self.bw_down,
         }
+    }
+}
+
+/// Fault-injection knobs for a hostile fleet. Implemented once, here in
+/// the fleet layer, so the simulator and the live drivers inject the
+/// *identical* faults from the same seeded rng stream: the engine draws
+/// [`Fleet::faulty_arrival_offsets`] per round in both regimes.
+///
+/// All knobs default to "off"; [`FleetFaults::is_none`] gates a fast path
+/// that consumes exactly the fault-free rng stream, so zero-fault runs
+/// stay bit-identical to pre-fault-layer seeds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FleetFaults {
+    /// Per-party, per-round probability of a heavy-tailed compute stall.
+    pub straggler_prob: f64,
+    /// Pareto shape of the stall multiplier (≥ 1×, inverse-CDF draw);
+    /// smaller alpha = heavier tail.
+    pub straggler_alpha: f64,
+    /// Lognormal sigma stretching the upload (transfer) time; 0 = off.
+    pub upload_tail_sigma: f64,
+    /// Base per-party, per-round dropout probability.
+    pub dropout_prob: f64,
+    /// Rounds a dropped party stays out before it rejoins.
+    pub rejoin_after: u32,
+    /// Diurnal availability wave: extra dropout probability amplitude
+    /// (0..1) riding a per-party-phased cosine over the round index.
+    pub diurnal_amplitude: f64,
+    /// Diurnal wave period, in rounds.
+    pub diurnal_period_rounds: u32,
+    /// Non-IID weight skew: redraw the fleet's dataset shares from
+    /// Dirichlet(alpha) at generation time (lower = more skew).
+    pub weight_skew_alpha: Option<f64>,
+    /// Round reporting deadline (seconds from round start). Arrivals
+    /// drawn beyond it are cut at the source for drop-at-deadline
+    /// strategies, or delivered late (and weight-decayed) for
+    /// `async-stale`.
+    pub straggler_cutoff_secs: Option<f64>,
+    /// Quorum floor as a fraction of the spec quorum: a round whose
+    /// expected on-time arrivals fall below the floor is skipped
+    /// (starvation) instead of hanging on an unreachable quorum.
+    pub quorum_floor_frac: f64,
+}
+
+impl Default for FleetFaults {
+    fn default() -> Self {
+        FleetFaults {
+            straggler_prob: 0.0,
+            straggler_alpha: 1.5,
+            upload_tail_sigma: 0.0,
+            dropout_prob: 0.0,
+            rejoin_after: 1,
+            diurnal_amplitude: 0.0,
+            diurnal_period_rounds: 8,
+            weight_skew_alpha: None,
+            straggler_cutoff_secs: None,
+            quorum_floor_frac: 0.5,
+        }
+    }
+}
+
+impl FleetFaults {
+    /// The fault-free configuration (every knob off).
+    pub fn none() -> FleetFaults {
+        FleetFaults::default()
+    }
+
+    /// True when no knob injects anything — the engine then consumes the
+    /// plain fault-free rng stream (bit-compat with pre-fault seeds).
+    pub fn is_none(&self) -> bool {
+        self.straggler_prob == 0.0
+            && self.upload_tail_sigma == 0.0
+            && self.dropout_prob == 0.0
+            && self.diurnal_amplitude == 0.0
+            && self.weight_skew_alpha.is_none()
+            && self.straggler_cutoff_secs.is_none()
+    }
+
+    /// Named fault scenarios for the robustness matrix (`fljit
+    /// robustness`) and the CI smoke. `cutoff` scales with the workload's
+    /// epoch time, so callers pass the spec's base epoch seconds.
+    pub fn scenario(name: &str, base_epoch_secs: f64) -> Option<FleetFaults> {
+        match name {
+            "baseline" => Some(FleetFaults::none()),
+            // heavy-tailed stragglers + a reporting deadline: the cell
+            // where drop-at-deadline loses data and async-stale decays it
+            "stragglers" => Some(FleetFaults {
+                straggler_prob: 0.35,
+                straggler_alpha: 1.1,
+                upload_tail_sigma: 0.4,
+                straggler_cutoff_secs: Some(base_epoch_secs * 2.0),
+                ..FleetFaults::default()
+            }),
+            // mid-round churn: parties vanish for a couple of rounds
+            "dropout" => Some(FleetFaults {
+                dropout_prob: 0.25,
+                rejoin_after: 2,
+                ..FleetFaults::default()
+            }),
+            // availability waves: dropout swells and ebbs over rounds
+            "diurnal" => Some(FleetFaults {
+                dropout_prob: 0.05,
+                diurnal_amplitude: 0.6,
+                diurnal_period_rounds: 4,
+                rejoin_after: 1,
+                ..FleetFaults::default()
+            }),
+            // non-IID weight skew + mild stragglers
+            "skew" => Some(FleetFaults {
+                weight_skew_alpha: Some(0.3),
+                straggler_prob: 0.1,
+                straggler_alpha: 1.5,
+                ..FleetFaults::default()
+            }),
+            _ => None,
+        }
+    }
+
+    /// All scenario names, in matrix order.
+    pub fn all_scenarios() -> &'static [&'static str] {
+        &["baseline", "stragglers", "dropout", "diurnal", "skew"]
+    }
+
+    /// Effective dropout probability for `party` in `round`: the base
+    /// rate plus the diurnal wave (per-party phase spreads the wave so
+    /// the whole fleet doesn't blink in lockstep).
+    pub fn dropout_at(&self, round: u32, party: usize, n: usize) -> f64 {
+        let wave = if self.diurnal_amplitude > 0.0 {
+            let period = self.diurnal_period_rounds.max(1) as f64;
+            let phase = party as f64 / n.max(1) as f64;
+            let x = 2.0 * std::f64::consts::PI * (round as f64 / period + phase);
+            self.diurnal_amplitude * 0.5 * (1.0 - x.cos())
+        } else {
+            0.0
+        };
+        (self.dropout_prob + wave).clamp(0.0, 0.95)
+    }
+}
+
+/// Per-job fault bookkeeping that evolves round to round (who is dropped
+/// out and until when). Owned by the `JobEngine` so the §5.5 resume
+/// replay reconstructs it deterministically.
+#[derive(Clone, Debug)]
+pub struct FaultState {
+    /// Party `p` is out until round `out_until[p]` (exclusive).
+    out_until: Vec<u32>,
+}
+
+impl FaultState {
+    pub fn new(n: usize) -> FaultState {
+        FaultState {
+            out_until: vec![0; n],
+        }
+    }
+}
+
+/// One round's fault-aware arrival draw, indexed by party id.
+#[derive(Clone, Debug)]
+pub struct RoundDraw {
+    /// Drawn arrival offsets (µs from round start) — meaningful only for
+    /// present parties, but always drawn for all of them so the rng
+    /// stream length is state-independent.
+    pub offsets: Vec<Time>,
+    /// False while the party is dropped out (it neither trains nor
+    /// publishes this round).
+    pub present: Vec<bool>,
+    /// False when the drawn offset exceeds the straggler cutoff: the
+    /// update misses the round's reporting deadline.
+    pub on_time: Vec<bool>,
+}
+
+impl RoundDraw {
+    /// Parties expected to arrive before the reporting deadline — the
+    /// round's effective quorum ceiling.
+    pub fn expected_on_time(&self) -> usize {
+        self.present
+            .iter()
+            .zip(&self.on_time)
+            .filter(|(&p, &o)| p && o)
+            .count()
     }
 }
 
@@ -238,6 +423,91 @@ impl Fleet {
     /// PartyInfos for the estimator.
     pub fn infos(&self, report_prob: f64, rng: &mut Rng) -> Vec<PartyInfo> {
         self.parties.iter().map(|p| p.info(report_prob, rng)).collect()
+    }
+
+    /// Fault-aware arrival draw for one round. With `faults.is_none()`
+    /// this consumes *exactly* the [`arrival_offsets`](Fleet::arrival_offsets)
+    /// stream (bit-compat); otherwise every party consumes a fixed number
+    /// of extra draws per round regardless of its dropout state, so the
+    /// stream stays deterministic and replayable for the §5.5 resume
+    /// fast-forward.
+    pub fn faulty_arrival_offsets(
+        &self,
+        model_bytes: u64,
+        t_wait: f64,
+        faults: &FleetFaults,
+        round: u32,
+        state: &mut FaultState,
+        rng: &mut Rng,
+    ) -> RoundDraw {
+        let n = self.parties.len();
+        if faults.is_none() {
+            return RoundDraw {
+                offsets: self.arrival_offsets(model_bytes, t_wait, rng),
+                present: vec![true; n],
+                on_time: vec![true; n],
+            };
+        }
+        debug_assert_eq!(state.out_until.len(), n);
+        let mut offsets = Vec::with_capacity(n);
+        let mut present = Vec::with_capacity(n);
+        let mut on_time = Vec::with_capacity(n);
+        for p in &self.parties {
+            // unconditional draws: the stream shape never depends on
+            // dropout state, only the per-call count is fixed
+            let drop_u = rng.f64();
+            let tail_u = rng.f64();
+            let sev_u = rng.f64();
+            let up_mult = if faults.upload_tail_sigma > 0.0 {
+                rng.lognormal(0.0, faults.upload_tail_sigma)
+            } else {
+                1.0
+            };
+            let (train, comm) = p.draw_split(model_bytes, t_wait, rng);
+            // Pareto(alpha, x_m = 1) via inverse CDF: multiplier ≥ 1
+            let tail_mult = if tail_u < faults.straggler_prob {
+                (1.0 - sev_u).max(1e-12).powf(-1.0 / faults.straggler_alpha.max(0.05))
+            } else {
+                1.0
+            };
+            let off_secs = train * tail_mult + comm * up_mult;
+            let here = if state.out_until[p.id] > round {
+                false // still dropped out, rejoins later
+            } else if drop_u < faults.dropout_at(round, p.id, n) {
+                state.out_until[p.id] = round + 1 + faults.rejoin_after;
+                false
+            } else {
+                true
+            };
+            offsets.push(crate::sim::secs(off_secs));
+            present.push(here);
+            on_time.push(
+                faults
+                    .straggler_cutoff_secs
+                    .map_or(true, |c| off_secs <= c),
+            );
+        }
+        RoundDraw {
+            offsets,
+            present,
+            on_time,
+        }
+    }
+
+    /// Apply non-IID weight skew: redraw the dataset shares from
+    /// Dirichlet(alpha), keeping the fleet's data total constant. Called
+    /// at fleet generation time (deterministic per engine seed); the
+    /// skewed `dataset_items` flow into fold weights and estimator
+    /// linearity exactly like generated ones.
+    pub fn apply_weight_skew(&mut self, alpha: f64, rng: &mut Rng) {
+        let n = self.parties.len();
+        if n == 0 {
+            return;
+        }
+        let shares = rng.dirichlet(alpha, n);
+        for (p, share) in self.parties.iter_mut().zip(shares) {
+            p.dataset_items = 320.0 * share * n as f64;
+        }
     }
 }
 
@@ -384,6 +654,140 @@ mod tests {
         let none = f.infos(0.0, &mut rng);
         assert!(none.iter().all(|i| i.t_epoch.is_none()));
         assert!(none.iter().all(|i| i.hw_score.is_some()));
+    }
+
+    fn test_fleet(kind: FleetKind, n: usize, seed: u64) -> (Fleet, Rng) {
+        let mut rng = Rng::new(seed);
+        let f = Fleet::generate(kind, n, FleetParams::default(), &mut rng);
+        (f, rng)
+    }
+
+    #[test]
+    fn no_faults_path_is_bit_identical_to_plain_offsets() {
+        let (f, mut rng) = test_fleet(FleetKind::ActiveHeterogeneous, 12, 21);
+        let mut rng2 = rng.clone();
+        let plain = f.arrival_offsets(1_000_000, 600.0, &mut rng);
+        let mut st = FaultState::new(12);
+        let draw = f.faulty_arrival_offsets(
+            1_000_000,
+            600.0,
+            &FleetFaults::none(),
+            0,
+            &mut st,
+            &mut rng2,
+        );
+        assert_eq!(plain, draw.offsets);
+        assert!(draw.present.iter().all(|&p| p));
+        assert!(draw.on_time.iter().all(|&o| o));
+        // the rng streams stay aligned after the draw
+        assert_eq!(rng.next_u64(), rng2.next_u64());
+    }
+
+    #[test]
+    fn faulty_draws_are_deterministic_per_seed() {
+        let faults = FleetFaults::scenario("stragglers", 30.0).unwrap();
+        let run = |seed: u64| {
+            let (f, mut rng) = test_fleet(FleetKind::ActiveHomogeneous, 10, seed);
+            let mut st = FaultState::new(10);
+            (0..5)
+                .map(|r| {
+                    f.faulty_arrival_offsets(1_000_000, 600.0, &faults, r, &mut st, &mut rng)
+                        .offsets
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(7), run(7), "same seed, same fault draws");
+        assert_ne!(run(7), run(8), "different seeds differ");
+    }
+
+    #[test]
+    fn dropout_keeps_parties_out_until_rejoin() {
+        let faults = FleetFaults {
+            dropout_prob: 0.5,
+            rejoin_after: 2,
+            ..FleetFaults::default()
+        };
+        let (f, mut rng) = test_fleet(FleetKind::ActiveHomogeneous, 40, 3);
+        let mut st = FaultState::new(40);
+        let d0 = f.faulty_arrival_offsets(1_000_000, 600.0, &faults, 0, &mut st, &mut rng);
+        let dropped: Vec<usize> =
+            (0..40).filter(|&p| !d0.present[p]).collect();
+        assert!(!dropped.is_empty(), "p=0.5 over 40 parties must drop some");
+        // out for rounds 1..=2 (rejoin_after = 2), back in round 3
+        for r in 1..=2 {
+            let d = f.faulty_arrival_offsets(1_000_000, 600.0, &faults, r, &mut st, &mut rng);
+            for &p in &dropped {
+                assert!(!d.present[p], "party {p} must stay out in round {r}");
+            }
+        }
+        let d3 = f.faulty_arrival_offsets(1_000_000, 600.0, &faults, 3, &mut st, &mut rng);
+        // rejoined parties are eligible again (present unless re-dropped)
+        let back = dropped.iter().filter(|&&p| d3.present[p]).count();
+        assert!(back > 0, "some dropped parties must rejoin in round 3");
+    }
+
+    #[test]
+    fn straggler_tail_stretches_arrivals_and_cutoff_marks_them() {
+        let faults = FleetFaults {
+            straggler_prob: 1.0,
+            straggler_alpha: 1.1,
+            straggler_cutoff_secs: Some(60.0),
+            ..FleetFaults::default()
+        };
+        let (f, mut rng) = test_fleet(FleetKind::ActiveHomogeneous, 64, 5);
+        let mut st = FaultState::new(64);
+        let d = f.faulty_arrival_offsets(1_000_000, 600.0, &faults, 0, &mut st, &mut rng);
+        let secs: Vec<f64> = d.offsets.iter().map(|&t| crate::sim::to_secs(t)).collect();
+        // every party stalls ≥ its base (~30s) and the heavy tail pushes
+        // a meaningful fraction past the 60s deadline
+        let late = (0..64).filter(|&p| !d.on_time[p]).count();
+        assert!(late > 0, "alpha=1.1 must push arrivals past the cutoff");
+        assert!(late < 64, "not everyone stalls past 2× the epoch");
+        for (p, &s) in secs.iter().enumerate() {
+            assert!(s > 0.0);
+            assert_eq!(d.on_time[p], s <= 60.0, "party {p}: {s}");
+        }
+        assert_eq!(d.expected_on_time(), 64 - late);
+    }
+
+    #[test]
+    fn diurnal_wave_modulates_dropout_over_rounds() {
+        let faults = FleetFaults {
+            diurnal_amplitude: 0.8,
+            diurnal_period_rounds: 4,
+            ..FleetFaults::default()
+        };
+        // the wave peaks mid-period and vanishes at the trough
+        let peak = faults.dropout_at(2, 0, 1);
+        let trough = faults.dropout_at(0, 0, 1);
+        assert!(peak > 0.7, "peak={peak}");
+        assert!(trough < 0.01, "trough={trough}");
+        // per-party phase spreads the wave across the fleet
+        assert!(
+            (faults.dropout_at(0, 0, 4) - faults.dropout_at(0, 2, 4)).abs() > 0.1,
+            "phased parties must see different availability"
+        );
+    }
+
+    #[test]
+    fn weight_skew_preserves_total_and_skews_shares() {
+        let (mut f, mut rng) = test_fleet(FleetKind::ActiveHomogeneous, 32, 9);
+        let before: f64 = f.parties.iter().map(|p| p.dataset_items).sum();
+        f.apply_weight_skew(0.2, &mut rng);
+        let after: f64 = f.parties.iter().map(|p| p.dataset_items).sum();
+        assert!((before - after).abs() / before < 1e-9, "total preserved");
+        let items: Vec<f64> = f.parties.iter().map(|p| p.dataset_items).collect();
+        let s = crate::util::stats::Summary::of(&items);
+        assert!(s.cv() > 0.5, "alpha=0.2 must skew hard, cv={}", s.cv());
+    }
+
+    #[test]
+    fn scenarios_resolve_and_baseline_is_none() {
+        for name in FleetFaults::all_scenarios() {
+            let f = FleetFaults::scenario(name, 30.0).unwrap_or_else(|| panic!("{name}"));
+            assert_eq!(f.is_none(), *name == "baseline", "{name}");
+        }
+        assert!(FleetFaults::scenario("bogus", 30.0).is_none());
     }
 
     #[test]

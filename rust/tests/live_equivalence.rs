@@ -12,19 +12,30 @@
 
 use fljit::coordinator::job::FlJobSpec;
 use fljit::coordinator::session::Session;
-use fljit::party::FleetKind;
+use fljit::party::{FleetFaults, FleetKind};
 use fljit::workloads::Workload;
 
 fn assert_equivalent(strategy: &str, fleet: FleetKind, parties: usize, rounds: u32, seed: u64) {
+    assert_equivalent_under(strategy, fleet, parties, rounds, seed, FleetFaults::none());
+}
+
+fn assert_equivalent_under(
+    strategy: &str,
+    fleet: FleetKind,
+    parties: usize,
+    rounds: u32,
+    seed: u64,
+    faults: FleetFaults,
+) {
     let workload = Workload::cifar100_effnet();
     let spec = FlJobSpec::new(workload, fleet, parties, rounds);
 
-    let mut s = Session::sim().seed(seed);
+    let mut s = Session::sim().seed(seed).faults(faults);
     let hs = s.job(spec.clone(), strategy);
     let sim_rep = s.run().unwrap_or_else(|e| panic!("{strategy}/{fleet:?} sim run: {e:#}"));
     let sim = sim_rep.job(hs);
 
-    let mut l = Session::live().seed(seed).dim(64);
+    let mut l = Session::live().seed(seed).dim(64).faults(faults);
     let hl = l.job(spec, strategy);
     let live_rep = l
         .run()
@@ -75,6 +86,25 @@ fn assert_equivalent(strategy: &str, fleet: FleetKind, parties: usize, rounds: u
         sim.deployments, live.deployments,
         "{strategy}/{fleet:?}: deployments"
     );
+    assert_eq!(
+        (sim.updates_dropped, sim.updates_decayed, sim.rounds_skipped),
+        (live.updates_dropped, live.updates_decayed, live.rounds_skipped),
+        "{strategy}/{fleet:?}: degradation counters"
+    );
+}
+
+/// Dropout churn + heavy-tailed stragglers with a reporting deadline —
+/// the hostile cell the drop-policy equivalence pins run under.
+fn hostile_faults() -> FleetFaults {
+    FleetFaults {
+        dropout_prob: 0.2,
+        rejoin_after: 1,
+        straggler_prob: 0.3,
+        straggler_alpha: 1.2,
+        upload_tail_sigma: 0.3,
+        straggler_cutoff_secs: Some(Workload::cifar100_effnet().base_epoch_secs * 2.0),
+        ..FleetFaults::default()
+    }
 }
 
 #[test]
@@ -143,4 +173,129 @@ fn sim_session_matches_run_scenario_bit_for_bit() {
         legacy.container_seconds.to_bits(),
         o.container_seconds.to_bits()
     );
+}
+
+/// `async-stale` on a healthy fleet is jit with a different stale
+/// policy that never triggers — sim/live equivalence holds bit-for-bit.
+#[test]
+fn async_stale_healthy_matches_sim() {
+    assert_equivalent("async-stale", FleetKind::ActiveHomogeneous, 8, 2, 0xE9);
+}
+
+/// The drop-policy strategies cut deadline-missers at the source, so the
+/// faulty sim and live event streams stay identical: one hostile cell
+/// (dropout + stragglers) per strategy, pinned bit-for-bit.
+#[test]
+fn drop_strategies_match_sim_bit_for_bit_under_a_hostile_fleet() {
+    for (i, strategy) in ["jit", "batched", "eager-serverless", "eager-ao", "lazy"]
+        .iter()
+        .enumerate()
+    {
+        assert_equivalent_under(
+            strategy,
+            FleetKind::ActiveHomogeneous,
+            10,
+            3,
+            0xF0 + i as u64,
+            hostile_faults(),
+        );
+    }
+}
+
+/// `async-stale` under faults self-schedules its late deliveries on the
+/// live driver (an epsilon after the drawn offset), so sim and live are
+/// not compared bit-for-bit there; instead the live run itself must be
+/// bit-reproducible per seed, and must actually decay late updates
+/// rather than dropping them.
+#[test]
+fn async_stale_faulty_live_runs_are_deterministic_and_decay() {
+    let workload = Workload::cifar100_effnet();
+    let faults = FleetFaults::scenario("stragglers", workload.base_epoch_secs).unwrap();
+    let run = || {
+        let mut s = Session::live().seed(0xEA).dim(64).faults(faults);
+        let h = s.job(
+            FlJobSpec::new(workload.clone(), FleetKind::ActiveHomogeneous, 12, 3),
+            "async-stale",
+        );
+        let rep = s.run().expect("async-stale faulty live run");
+        (rep, h)
+    };
+    let (a, ha) = run();
+    let (b, hb) = run();
+    let (a, b) = (a.job(ha), b.job(hb));
+    assert_eq!(a.records.len(), b.records.len());
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.round, y.round);
+        assert_eq!(x.latency_secs.to_bits(), y.latency_secs.to_bits());
+        assert_eq!(x.complete_secs.to_bits(), y.complete_secs.to_bits());
+    }
+    assert_eq!(a.final_model, b.final_model, "bit-identical final model");
+    assert_eq!(a.updates_decayed, b.updates_decayed);
+    assert_eq!(a.updates_dropped, b.updates_dropped);
+    assert!(
+        a.updates_decayed > 0,
+        "the straggler scenario must produce decayed folds, got 0 \
+         (dropped {}, rounds {})",
+        a.updates_dropped,
+        a.records.len()
+    );
+}
+
+/// §5.5 under a hostile fleet: kill the live aggregator mid-run with
+/// fault injection on, resume from the MQ, and the model stream must be
+/// bit-identical to the uninterrupted faulty run — the resume replay
+/// fast-forwards the *fault* rng stream too.
+#[test]
+fn kill_resume_under_faults_resumes_bit_identical() {
+    use fljit::mq::{self, MessageQueue};
+    use std::sync::Arc;
+
+    let faults = hostile_faults();
+    let session = |mq: &Arc<MessageQueue>, kill: Option<u64>, resume: bool| {
+        let mut s = Session::live()
+            .seed(0xEC)
+            .dim(32)
+            .on(mq)
+            .kill_after_fuses(kill)
+            .resume(resume)
+            .faults(faults);
+        let h = s.job(
+            FlJobSpec::new(
+                Workload::cifar100_effnet(),
+                FleetKind::ActiveHomogeneous,
+                6,
+                3,
+            ),
+            "jit",
+        );
+        (s.run().expect("session run"), h)
+    };
+
+    let mq_full = Arc::new(MessageQueue::new());
+    let (full, hf) = session(&mq_full, None, false);
+    assert!(!full.summary().crashed);
+    let published = mq_full.end_offset(&mq::model_topic(0));
+    assert!(published > 0, "the faulty run must publish models");
+
+    let mq_kill = Arc::new(MessageQueue::new());
+    let (dead, _) = session(&mq_kill, Some(3), false);
+    assert!(dead.summary().crashed, "fault injection must trip");
+
+    let (resumed, hr) = session(&mq_kill, None, true);
+    assert!(!resumed.summary().crashed);
+    assert_eq!(
+        mq_kill.end_offset(&mq::model_topic(0)),
+        published,
+        "resume must publish the remaining rounds"
+    );
+    for round in 0..published {
+        let a = mq_full.fetch(&mq::model_topic(0), round, 1);
+        let b = mq_kill.fetch(&mq::model_topic(0), round, 1);
+        assert_eq!(
+            a[0].payload.data().unwrap(),
+            b[0].payload.data().unwrap(),
+            "round {round} model must be bit-identical under faults"
+        );
+    }
+    assert_eq!(resumed.job(hr).final_model, full.job(hf).final_model);
 }
