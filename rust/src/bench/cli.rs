@@ -6,6 +6,7 @@ use crate::coordinator::session::{Session, SessionEvent};
 use crate::coordinator::timeline;
 use crate::model::zoo;
 use crate::party::FleetKind;
+use crate::telemetry::{export, Registry};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::util::table::Table;
@@ -19,7 +20,7 @@ USAGE: fljit <subcommand> [--flags]
 SUBCOMMANDS:
   timeline                         Fig 2 scenario (6 parties, 4+1 options)
   simulate   --workload cifar100 --fleet active-homog --parties 100
-             --strategy jit --rounds 50 --seed 7
+             --strategy jit --rounds 50 --seed 7 [--telemetry-dir DIR]
   bench-table <fig3|fig4|fig7|fig8|fig9>  regenerate a paper figure/table
              [--rounds N] [--max-parties N] [--reps N] [--workload W]
   broker     multi-tenant broker sweep: Poisson job arrivals, admission
@@ -34,6 +35,7 @@ SUBCOMMANDS:
                          async-stale|all>
              [--parties 4] [--rounds 5] [--seed 42] [--dim 512]
              [--epoch-secs 0.4] [--scripted] [--backend synth|xla]
+             [--telemetry-dir DIR]
              (--strategy all sweeps every strategy -> BENCH_live.json)
   robustness strategy × fault-scenario matrix: every strategy on the
              scripted live platform under injected stragglers / dropout /
@@ -50,8 +52,17 @@ SUBCOMMANDS:
              [--jobs 4] [--rounds 2] [--max-parties 8] [--capacity 4]
              [--budget 8] [--interarrival 5] [--seed N] [--dim 32]
              [--trace t.json] [--save-trace t.json] [--wall]
+             [--telemetry-dir DIR]
              (writes BENCH_live_broker.json dump)
+  top        <dir>                 summarize a telemetry dir's JSONL trace:
+             per-job rounds, fuses, checkpoints, deploys, preemptions,
+             admission + party waits (re-run anytime — the JSONL streams
+             during the run)
   zoo                              list zoo models
+
+Any run taking --telemetry-dir writes telemetry.jsonl (streamed spans +
+final metric samples), exposition.prom (Prometheus text format) and
+trace.json (Chrome trace_event; open in chrome://tracing or perfetto).
 ";
 
 pub fn dispatch(args: &Args) -> i32 {
@@ -65,6 +76,7 @@ pub fn dispatch(args: &Args) -> i32 {
         Some("live") => cmd_live(args),
         Some("live-broker") => cmd_live_broker(args),
         Some("robustness") => cmd_robustness(args),
+        Some("top") => cmd_top(args),
         Some("zoo") => cmd_zoo(),
         _ => {
             print!("{USAGE}");
@@ -75,6 +87,37 @@ pub fn dispatch(args: &Args) -> i32 {
             0
         }
     }
+}
+
+/// Open `--telemetry-dir` as a streaming registry. `Ok(None)` = flag
+/// absent, telemetry disabled (the default no-op fast path).
+fn telemetry_from_args(args: &Args) -> Result<Option<(Registry, String)>, i32> {
+    let Some(dir) = args.get("telemetry-dir") else {
+        return Ok(None);
+    };
+    match Registry::with_dir(dir) {
+        Ok(reg) => Ok(Some((reg, dir.to_string()))),
+        Err(e) => {
+            eprintln!("cannot open telemetry dir {dir:?}: {e}");
+            Err(1)
+        }
+    }
+}
+
+/// Finalize a run's telemetry dir (all three export formats).
+fn export_telemetry(tel: &Option<(Registry, String)>) -> i32 {
+    let Some((reg, dir)) = tel else { return 0 };
+    if let Err(e) = export::write_all(reg, dir) {
+        eprintln!("telemetry export failed: {e}");
+        return 1;
+    }
+    println!(
+        "telemetry written to {dir}/ ({}, {}, {})",
+        export::JSONL_FILE,
+        export::EXPOSITION_FILE,
+        export::CHROME_TRACE_FILE
+    );
+    0
 }
 
 fn cmd_timeline(args: &Args) -> i32 {
@@ -102,7 +145,14 @@ fn cmd_simulate(args: &Args) -> i32 {
     let mut spec = FlJobSpec::new(workload, fleet, parties, rounds);
     spec.t_wait_secs = args.get_f64("twait", crate::workloads::T_WAIT_SECS);
     spec.report_prob = args.get_f64("report-prob", 1.0);
+    let tel = match telemetry_from_args(args) {
+        Ok(t) => t,
+        Err(code) => return code,
+    };
     let mut s = Session::sim().seed(args.get_u64("seed", 7));
+    if let Some((reg, _)) = &tel {
+        s = s.telemetry(reg);
+    }
     let h = s.job(spec, &strategy);
     let rep = match s.run() {
         Ok(rep) => rep,
@@ -135,7 +185,7 @@ fn cmd_simulate(args: &Args) -> i32 {
     t.row(vec!["makespan (s)".into(), format!("{:.1}", r.makespan_secs)]);
     t.print();
     crate::bench::dump("simulate", &rep.to_json());
-    0
+    export_telemetry(&tel)
 }
 
 fn cmd_bench_table(args: &Args) -> i32 {
@@ -386,6 +436,13 @@ fn cmd_live(args: &Args) -> i32 {
         .minibatches(args.get_usize("minibatches", 4))
         .lr(args.get_f64("lr", 0.3) as f32)
         .alpha(args.get_f64("alpha", 0.5));
+    let tel = match telemetry_from_args(args) {
+        Ok(t) => t,
+        Err(code) => return code,
+    };
+    if let Some((reg, _)) = &tel {
+        s = s.telemetry(reg);
+    }
     let h = s.job(spec, &strategy);
     // consume the session's event stream live from a worker thread: each
     // round prints the moment its model is fused, not after the run
@@ -452,6 +509,61 @@ fn cmd_live(args: &Args) -> i32 {
     if o.t_pair_secs > 0.0 {
         println!("t_pair (XLA fusion path, §5.4): {:.3}ms", o.t_pair_secs * 1e3);
     }
+    export_telemetry(&tel)
+}
+
+fn cmd_top(args: &Args) -> i32 {
+    let dir = args
+        .get("dir")
+        .map(|s| s.to_string())
+        .or_else(|| args.positional.get(1).cloned());
+    let Some(dir) = dir else {
+        eprintln!("top requires a telemetry dir: fljit top <dir>");
+        return 2;
+    };
+    let path = std::path::Path::new(&dir).join(export::JSONL_FILE);
+    let body = match std::fs::read_to_string(&path) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("cannot read {}: {e}", path.display());
+            return 1;
+        }
+    };
+    let tops = export::summarize_jsonl(&body);
+    if tops.is_empty() {
+        println!("no spans recorded yet in {}", path.display());
+        return 0;
+    }
+    let mut t = Table::new(
+        &format!("fljit top — {}", path.display()),
+        &[
+            "job",
+            "rounds",
+            "mean round (s)",
+            "fuses",
+            "ckpts",
+            "deploys",
+            "preempts",
+            "adm wait (s)",
+            "party wait (ms)",
+            "last seen (s)",
+        ],
+    );
+    for top in &tops {
+        t.row(vec![
+            top.job.to_string(),
+            top.rounds.to_string(),
+            format!("{:.2}", top.mean_round_secs()),
+            top.fuses.to_string(),
+            top.checkpoints.to_string(),
+            top.deploys.to_string(),
+            top.preempts.to_string(),
+            format!("{:.1}", top.admission_wait_secs),
+            format!("{:.1}", top.mean_party_wait_secs() * 1e3),
+            format!("{:.1}", top.last_at_secs),
+        ]);
+    }
+    t.print();
     0
 }
 

@@ -20,6 +20,7 @@ use crate::broker::arbitration;
 use crate::broker::workload::{poisson_trace, JobTrace, TraceConfig};
 use crate::coordinator::live::PartyBackend;
 use crate::coordinator::session::{Session, SessionEvent};
+use crate::telemetry::{export, Registry};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::util::table::Table;
@@ -49,6 +50,9 @@ pub struct LiveBrokerSweepConfig {
     pub save_trace: Option<String>,
     /// Pace on the real wall clock (slow) instead of the instant clock.
     pub wall: bool,
+    /// When set, stream telemetry spans into `<dir>/telemetry.jsonl`
+    /// during the sweep and write the exposition + Chrome trace after it.
+    pub telemetry_dir: Option<String>,
 }
 
 impl Default for LiveBrokerSweepConfig {
@@ -66,6 +70,7 @@ impl Default for LiveBrokerSweepConfig {
             trace_path: None,
             save_trace: None,
             wall: false,
+            telemetry_dir: None,
         }
     }
 }
@@ -88,6 +93,7 @@ impl LiveBrokerSweepConfig {
             trace_path: args.get("trace").map(|s| s.to_string()),
             save_trace: args.get("save-trace").map(|s| s.to_string()),
             wall: args.get_bool("wall"),
+            telemetry_dir: args.get("telemetry-dir").map(|s| s.to_string()),
         }
     }
 
@@ -152,6 +158,13 @@ pub fn run_sweep(cfg: &LiveBrokerSweepConfig) -> Result<(Vec<Table>, Json)> {
             .save(std::path::Path::new(path))
             .context("writing --save-trace")?;
     }
+    // One registry shared across all swept policies: the per-strategy /
+    // per-job label scopes keep the series apart, and the JSONL stream
+    // captures the whole sweep as a single timeline.
+    let telemetry = match &cfg.telemetry_dir {
+        Some(dir) => Registry::with_dir(dir).context("opening --telemetry-dir")?,
+        None => Registry::disabled(),
+    };
     let mut tables = Vec::new();
     let mut policies_json = Vec::new();
     let mut summary = Table::new(
@@ -173,7 +186,7 @@ pub fn run_sweep(cfg: &LiveBrokerSweepConfig) -> Result<(Vec<Table>, Json)> {
         ],
     );
     for policy in &policies {
-        let mut s = cfg.session(&trace, policy);
+        let mut s = cfg.session(&trace, policy).telemetry(&telemetry);
         let events = s.events();
         let rep = s.run().with_context(|| format!("policy {policy}"))?;
         let preempts = events
@@ -219,6 +232,9 @@ pub fn run_sweep(cfg: &LiveBrokerSweepConfig) -> Result<(Vec<Table>, Json)> {
         policies_json.push(rep.to_json());
     }
     tables.push(summary);
+    if let Some(dir) = &cfg.telemetry_dir {
+        export::write_all(&telemetry, dir).context("writing telemetry exports")?;
+    }
     let json = Json::obj(vec![
         ("bench", Json::str("live_broker")),
         ("jobs", Json::num(trace.len() as f64)),

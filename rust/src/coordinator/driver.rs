@@ -54,6 +54,7 @@ use crate::metrics::RoundRecord;
 use crate::mq::{self, Message, MessageQueue, Payload};
 use crate::party::{FaultState, Fleet, FleetFaults, RoundDraw};
 use crate::sim::{to_secs, EventKind, EventQueue, Time};
+use crate::telemetry::{Registry, Scope, SpanKind};
 use crate::util::rng::Rng;
 
 // ---------------------------------------------------------------------------
@@ -444,6 +445,12 @@ pub struct JobEngine {
     /// Rounds skipped because expected on-time arrivals starved below the
     /// quorum floor.
     pub rounds_skipped: u32,
+    /// Telemetry handle (disabled by default; the platform/live loops
+    /// attach an enabled registry via [`JobEngine::set_telemetry`]).
+    /// Strictly observational — never touches `rng` or the event queue.
+    pub telemetry: Registry,
+    /// Label scope for this engine's metric samples (job + strategy).
+    pub tel_scope: Scope,
     /// (round, party) pairs already delivered to the strategy — dedupes
     /// the engine's self-scheduled stale deliveries against the driver's
     /// ingested ones.
@@ -506,10 +513,20 @@ impl JobEngine {
             updates_dropped: 0,
             updates_decayed: 0,
             rounds_skipped: 0,
+            telemetry: Registry::disabled(),
+            tel_scope: Scope::job(job),
             delivered: std::collections::HashSet::new(),
             started: false,
             spec,
         }
+    }
+
+    /// Attach a telemetry registry. The engine records per-job /
+    /// per-strategy counters (`rounds_started_total`, `updates_*`) and
+    /// `party_wait` spans (round start → each party's arrival) into it.
+    pub fn set_telemetry(&mut self, reg: &Registry, strategy_name: &str) {
+        self.telemetry = reg.clone();
+        self.tel_scope = Scope::job_strategy(self.params.job, strategy_name);
     }
 
     /// The Fig 6 lines 6–13 prediction for the upcoming round.
@@ -585,6 +602,8 @@ impl JobEngine {
             // starvation: skip this round rather than hang on a quorum
             // that cannot be met
             self.rounds_skipped += 1;
+            self.telemetry
+                .counter_add("rounds_skipped_total", &self.tel_scope, 1);
             if self.round + 1 >= self.spec.rounds {
                 self.done = true;
                 self.finished_at = now;
@@ -616,6 +635,8 @@ impl JobEngine {
                 // misses the reporting deadline and the strategy drops
                 // deadline-missers: cut at the source, in both regimes
                 self.updates_dropped += 1;
+                self.telemetry
+                    .counter_add("updates_dropped_total", &self.tel_scope, 1);
                 continue;
             }
             parties.push(party);
@@ -653,6 +674,16 @@ impl JobEngine {
             self.strategy.on_job_start(&mut ctx);
         }
         self.strategy.on_round_start(&mut ctx, round, &est);
+        if self.telemetry.on() {
+            self.telemetry
+                .counter_add("rounds_started_total", &self.tel_scope, 1);
+            // one party_wait span per expected publisher, closed by
+            // handle_update when the arrival lands
+            for &party in &parties {
+                self.telemetry
+                    .span_begin(SpanKind::PartyWait, job, round, party as u64, now);
+            }
+        }
         RoundPlan {
             offsets: draw.offsets,
             parties,
@@ -698,6 +729,8 @@ impl JobEngine {
         let lambda = match self.strategy.stale_policy() {
             StalePolicy::Drop => {
                 self.updates_dropped += 1;
+                self.telemetry
+                    .counter_add("updates_dropped_total", &self.tel_scope, 1);
                 return;
             }
             StalePolicy::Decay { lambda } => lambda,
@@ -735,6 +768,8 @@ impl JobEngine {
                 let old = mq.fetch(&mq::update_topic(job, round), 0, usize::MAX);
                 let Some(m) = old.iter().find(|m| m.party == party) else {
                     self.updates_dropped += 1; // payload gone — give up
+                    self.telemetry
+                        .counter_add("updates_dropped_total", &self.tel_scope, 1);
                     return;
                 };
                 mq.produce(
@@ -750,6 +785,8 @@ impl JobEngine {
             }
         }
         self.updates_decayed += 1;
+        self.telemetry
+            .counter_add("updates_decayed_total", &self.tel_scope, 1);
         self.arrived += 1;
         let arrived = self.arrived;
         let params = self.params.clone();
@@ -790,6 +827,17 @@ impl JobEngine {
             return; // engine-scheduled stale event echoing a live ingest
         }
         self.arrived += 1;
+        if self.telemetry.on() {
+            self.telemetry
+                .counter_add("updates_arrived_total", &self.tel_scope, 1);
+            self.telemetry.span_end(
+                SpanKind::PartyWait,
+                self.params.job,
+                round,
+                party as u64,
+                now,
+            );
+        }
         let arrived = self.arrived;
         // feed the estimator with the *observed* timing (active parties):
         // train_time ≈ arrival_offset − estimated transfer time (§5.3)
@@ -905,6 +953,14 @@ impl JobEngine {
     ) -> bool {
         let now = q.now();
         let round = rec.round;
+        self.telemetry
+            .counter_add("rounds_fused_total", &self.tel_scope, 1);
+        self.telemetry.histogram_observe(
+            "round_latency_secs",
+            &self.tel_scope,
+            rec.latency_secs,
+            &crate::telemetry::LATENCY_BUCKETS_SECS,
+        );
         self.records.push(rec);
         if round + 1 >= self.spec.rounds {
             self.done = true;
@@ -1212,7 +1268,7 @@ mod tests {
             }
             live.round += 1;
         }
-        let mut replayed = faulty_engine("jit", faults, 0xD3);
+        let mut replayed = faulty_engine("jit", faults, 0xD3, 12);
         replayed.replay_completed(fused);
         assert_eq!(replayed.round, live.round + u32::from(!live.done));
         assert_eq!(replayed.rounds_skipped, live.rounds_skipped);

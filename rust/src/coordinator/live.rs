@@ -72,6 +72,7 @@ use crate::fusion::{Aggregator, Algorithm};
 use crate::metrics::RoundRecord;
 use crate::mq::{self, CheckpointState, Message, MessageQueue, Payload};
 use crate::sim::{secs, to_secs, EventKind, EventQueue, Time};
+use crate::telemetry::{Registry, Scope, SpanKind};
 use crate::util::rng::Rng;
 
 // ---------------------------------------------------------------------------
@@ -172,7 +173,8 @@ impl Folder {
     /// checkpoint after each fold. `budget` is the fault-injection
     /// countdown; `fused` counts this run's real folds. Folds performed
     /// by this pass are reported through `sink` as one
-    /// [`SessionEvent::CheckpointWritten`].
+    /// [`SessionEvent::CheckpointWritten`], and into `tel` as a
+    /// `checkpoint` span plus a fold counter.
     #[allow(clippy::too_many_arguments)]
     fn catch_up(
         &mut self,
@@ -183,6 +185,7 @@ impl Folder {
         budget: &mut Option<u64>,
         fused: &mut u64,
         sink: &EventSink,
+        tel: &Registry,
     ) -> FoldOutcome {
         let topic = mq::update_topic(job, round);
         let slot = mq::checkpoint_slot(job, round);
@@ -223,6 +226,10 @@ impl Folder {
                 folds: *fused - before,
                 at_secs: to_secs(now),
             });
+            if tel.on() {
+                tel.span_instant(SpanKind::Checkpoint, job, round, 0, now);
+                tel.counter_add("updates_folded_total", &Scope::job(job), *fused - before);
+            }
         }
         outcome
     }
@@ -681,6 +688,7 @@ pub(crate) struct LoopParams<'a> {
     /// flattened init instead of `init_model`).
     pub(crate) init_override: Option<Vec<f32>>,
     pub(crate) sink: EventSink,
+    pub(crate) telemetry: Registry,
 }
 
 /// The one live control loop — every session runs through here, a
@@ -703,6 +711,11 @@ pub(crate) fn session_loop<C: Clock, S: UpdateSource>(
     let n_jobs = arrivals.len();
     let resume = p.resume;
     let sink = p.sink.clone();
+    let tel = p.telemetry.clone();
+    mq.set_telemetry(&tel);
+    // jobs currently held in the admission queue — `admission_wait` span
+    // pairing (begin at queue, end at release)
+    let mut admission_waiting = vec![false; n_jobs];
     let policy = arbitration::by_name(&p.policy).ok_or_else(|| {
         anyhow!(
             "unknown arbitration policy {:?}; expected one of {:?}",
@@ -802,8 +815,17 @@ pub(crate) fn session_loop<C: Clock, S: UpdateSource>(
                             job,
                             at_secs: to_secs(now),
                         });
+                        if tel.on() {
+                            admission_waiting[job] = true;
+                            tel.span_begin(SpanKind::AdmissionWait, job, 0, 0, now);
+                            tel.counter_add("jobs_queued_total", &Scope::job(job), 1);
+                        }
                     }
                     for j in started {
+                        if admission_waiting[j] {
+                            admission_waiting[j] = false;
+                            tel.span_end(SpanKind::AdmissionWait, j, 0, 0, now);
+                        }
                         sink.emit(SessionEvent::JobAdmitted {
                             job: j,
                             at_secs: to_secs(now),
@@ -834,12 +856,25 @@ pub(crate) fn session_loop<C: Clock, S: UpdateSource>(
                         // floor: the engine skipped to the end without
                         // starting anything
                         let now = q.now();
+                        if sink.active() {
+                            for r in round..engines[job].spec.rounds {
+                                sink.emit(SessionEvent::RoundSkipped {
+                                    job,
+                                    round: r,
+                                    at_secs: to_secs(now),
+                                });
+                            }
+                        }
                         driver.unwatch(job);
                         sink.emit(SessionEvent::JobFinished {
                             job,
                             at_secs: to_secs(now),
                         });
                         for j in ctrl.finish(job, now) {
+                            if admission_waiting[j] {
+                                admission_waiting[j] = false;
+                                tel.span_end(SpanKind::AdmissionWait, j, 0, 0, now);
+                            }
                             sink.emit(SessionEvent::JobAdmitted {
                                 job: j,
                                 at_secs: to_secs(now),
@@ -856,12 +891,23 @@ pub(crate) fn session_loop<C: Clock, S: UpdateSource>(
                     } else {
                         // the engine may have skipped starved rounds —
                         // watch and announce the round it settled on
-                        let round = engines[job].round;
+                        let settled = engines[job].round;
+                        if sink.active() {
+                            for r in round..settled {
+                                sink.emit(SessionEvent::RoundSkipped {
+                                    job,
+                                    round: r,
+                                    at_secs: to_secs(q.now()),
+                                });
+                            }
+                        }
+                        let round = settled;
                         sink.emit(SessionEvent::RoundStarted {
                             job,
                             round,
                             at_secs: to_secs(q.now()),
                         });
+                        tel.span_begin(SpanKind::Round, job, round, 0, q.now());
                         driver.watch_round(job, round);
                         folders[job] = if resume && resumed_rounds[job] == Some(round) {
                             Folder::resume(mq, job, round, dims[job])
@@ -954,6 +1000,7 @@ pub(crate) fn session_loop<C: Clock, S: UpdateSource>(
                                 &mut kill,
                                 &mut folded[job],
                                 &sink,
+                                &tel,
                             ) == FoldOutcome::Killed
                         {
                             crashed = true;
@@ -988,6 +1035,7 @@ pub(crate) fn session_loop<C: Clock, S: UpdateSource>(
         if let Some(job) = touched {
             if let Some(rec) = engines[job].take_completed() {
                 let round = rec.round;
+                let fuse_begin = q.now();
                 if folders[job].catch_up(
                     mq,
                     job,
@@ -996,6 +1044,7 @@ pub(crate) fn session_loop<C: Clock, S: UpdateSource>(
                     &mut kill,
                     &mut folded[job],
                     &sink,
+                    &tel,
                 ) == FoldOutcome::Killed
                 {
                     crashed = true;
@@ -1003,6 +1052,8 @@ pub(crate) fn session_loop<C: Clock, S: UpdateSource>(
                 }
                 let fused_model =
                     folders[job].finalize(engines[job].spec.algorithm(), &globals[job]);
+                tel.span_begin(SpanKind::Fuse, job, round, 0, fuse_begin);
+                tel.span_end(SpanKind::Fuse, job, round, 0, q.now());
                 // aggregator-side model-quality hook (XLA wall sessions)
                 if job == 0 {
                     if let Some(eval) = eval.as_mut() {
@@ -1041,6 +1092,7 @@ pub(crate) fn session_loop<C: Clock, S: UpdateSource>(
                     latency_secs: rec.latency_secs,
                     at_secs: to_secs(q.now()),
                 });
+                tel.span_end(SpanKind::Round, job, round, 0, q.now());
                 mq.clear_checkpoint(&mq::checkpoint_slot(job, round));
                 mq.drop_topic(&mq::update_topic(job, round));
                 if round > 0 {
@@ -1058,6 +1110,10 @@ pub(crate) fn session_loop<C: Clock, S: UpdateSource>(
                     // freed admission demand releases queued jobs
                     // (backpressure)
                     for j in ctrl.finish(job, now) {
+                        if admission_waiting[j] {
+                            admission_waiting[j] = false;
+                            tel.span_end(SpanKind::AdmissionWait, j, 0, 0, now);
+                        }
                         sink.emit(SessionEvent::JobAdmitted {
                             job: j,
                             at_secs: to_secs(now),
@@ -1124,6 +1180,21 @@ pub(crate) fn session_loop<C: Clock, S: UpdateSource>(
         ));
     }
     let now = q.now();
+    if tel.on() {
+        // deploy/preempt spans come off the cluster's own records, so
+        // recording them post-loop perturbs nothing and misses nothing
+        for d in cluster.ledger() {
+            tel.span_begin(SpanKind::Deploy, d.job, 0, d.task as u64, d.start);
+            tel.span_end(SpanKind::Deploy, d.job, 0, d.task as u64, d.end.unwrap_or(now));
+            tel.counter_add("deployments_total", &Scope::job(d.job), 1);
+        }
+        for &(t, task) in cluster.preemption_log() {
+            let job = cluster.job_of(task);
+            tel.span_instant(SpanKind::Preempt, job, 0, task as u64, t);
+            tel.counter_add("preemptions_total", &Scope::job(job), 1);
+        }
+        tel.flush();
+    }
     let span = to_secs(now);
     let total_cs = cluster.total_container_seconds(now);
     let jobs: Vec<JobOutcome> = arrivals

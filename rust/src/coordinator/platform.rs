@@ -24,6 +24,7 @@ use crate::metrics::JobReport;
 use crate::mq::{self, MessageQueue};
 use crate::party::FleetFaults;
 use crate::sim::{secs, to_secs, EventKind, EventQueue, Time};
+use crate::telemetry::{Registry, Scope, SpanKind};
 
 /// Platform configuration.
 #[derive(Clone, Debug)]
@@ -69,6 +70,11 @@ pub struct Platform {
     /// Streaming observer channel (`Session::events()`); inactive by
     /// default, so the grid hot paths pay one `Option` check per emit.
     events: EventSink,
+    /// Telemetry registry (`Session::telemetry()`); disabled by default.
+    telemetry: Registry,
+    /// Jobs currently held in the admission queue — drives the
+    /// `admission_wait` span pairing (begin at queue, end at release).
+    admission_waiting: Vec<bool>,
 }
 
 /// End-of-run aggregates for the broker (`run_with_stats`).
@@ -98,6 +104,8 @@ impl Platform {
             tick_scheduled: false,
             admission: None,
             events: EventSink::none(),
+            telemetry: Registry::disabled(),
+            admission_waiting: Vec::new(),
             cfg,
         }
     }
@@ -114,7 +122,9 @@ impl Platform {
         if let Some(b) = self.cfg.batch_override {
             engine.params.batch = b.max(1);
         }
+        engine.set_telemetry(&self.telemetry, strategy_name);
         self.jobs.push(engine);
+        self.admission_waiting.push(false);
         job
     }
 
@@ -145,9 +155,27 @@ impl Platform {
         self.events = sink;
     }
 
+    /// Install a telemetry registry and propagate it to the MQ and to
+    /// every already-admitted engine (engines admitted later pick it up
+    /// in [`admit`](Platform::admit)). Strictly passive: timestamps are
+    /// the virtual times the run already computes.
+    pub fn set_telemetry(&mut self, reg: &Registry) {
+        self.telemetry = reg.clone();
+        self.mq.set_telemetry(reg);
+        for engine in &mut self.jobs {
+            let strategy = engine.strategy.name().to_string();
+            engine.set_telemetry(reg, &strategy);
+        }
+    }
+
     /// A job cleared admission (or has no controller): start round 0 now.
     fn release_job(&mut self, job: usize) {
         let now = self.q.now();
+        if self.admission_waiting[job] {
+            self.admission_waiting[job] = false;
+            self.telemetry
+                .span_end(SpanKind::AdmissionWait, job, 0, 0, now);
+        }
         self.events.emit(SessionEvent::JobAdmitted {
             job,
             at_secs: to_secs(now),
@@ -171,6 +199,13 @@ impl Platform {
                 job,
                 at_secs: to_secs(now),
             });
+            if self.telemetry.on() {
+                self.admission_waiting[job] = true;
+                self.telemetry
+                    .span_begin(SpanKind::AdmissionWait, job, 0, 0, now);
+                self.telemetry
+                    .counter_add("jobs_queued_total", &Scope::job(job), 1);
+            }
         }
         for j in started {
             self.release_job(j);
@@ -178,24 +213,50 @@ impl Platform {
     }
 
     fn start_round(&mut self, job: usize) {
+        let round_before = self.jobs[job].round;
         self.jobs[job].start_round(
             &mut self.q,
             &mut self.cluster,
             &self.mq,
             ArrivalMode::Schedule,
         );
+        self.emit_skipped_rounds(job, round_before);
         if self.jobs[job].done {
             // every remaining round starved below the quorum floor: the
             // engine skipped to the end without starting anything
             self.job_finished(job);
             return;
         }
+        let round = self.jobs[job].round;
+        let now = self.q.now();
         self.events.emit(SessionEvent::RoundStarted {
             job,
-            round: self.jobs[job].round,
-            at_secs: to_secs(self.q.now()),
+            round,
+            at_secs: to_secs(now),
         });
+        self.telemetry.span_begin(SpanKind::Round, job, round, 0, now);
         self.ensure_tick();
+    }
+
+    /// `JobEngine::start_round` silently advances past rounds that starve
+    /// below the quorum floor; surface each one as a
+    /// [`SessionEvent::RoundSkipped`] so the event stream stays a faithful
+    /// account of round numbering under faults.
+    fn emit_skipped_rounds(&mut self, job: usize, round_before: u32) {
+        if !self.events.active() {
+            return;
+        }
+        let settled = self.jobs[job].round;
+        let end = if self.jobs[job].done {
+            self.jobs[job].spec.rounds
+        } else {
+            settled
+        };
+        let at_secs = to_secs(self.q.now());
+        for round in round_before..end {
+            self.events
+                .emit(SessionEvent::RoundSkipped { job, round, at_secs });
+        }
     }
 
     /// Emit the finish event and release admission demand a finished job
@@ -233,6 +294,8 @@ impl Platform {
             latency_secs: rec.latency_secs,
             at_secs: to_secs(now),
         });
+        self.telemetry
+            .span_end(SpanKind::Round, job, rec.round, 0, now);
         // GC the round's MQ topic
         self.mq.drop_topic(&mq::update_topic(job, rec.round));
         let finished =
@@ -333,6 +396,26 @@ impl Platform {
             self.events.stream_preemptions(&self.cluster, &mut preempt_seen);
         }
         let now = self.q.now();
+        if self.telemetry.on() {
+            // deploy/preempt spans come off the cluster's own records, so
+            // recording them post-loop perturbs nothing and misses nothing
+            for d in self.cluster.ledger() {
+                self.telemetry
+                    .span_begin(SpanKind::Deploy, d.job, 0, d.task as u64, d.start);
+                self.telemetry
+                    .span_end(SpanKind::Deploy, d.job, 0, d.task as u64, d.end.unwrap_or(now));
+                self.telemetry
+                    .counter_add("deployments_total", &Scope::job(d.job), 1);
+            }
+            for &(t, task) in self.cluster.preemption_log() {
+                let job = self.cluster.job_of(task);
+                self.telemetry
+                    .span_instant(SpanKind::Preempt, job, 0, task as u64, t);
+                self.telemetry
+                    .counter_add("preemptions_total", &Scope::job(job), 1);
+            }
+            self.telemetry.flush();
+        }
         let reports: Vec<JobReport> = self
             .jobs
             .iter()

@@ -50,12 +50,14 @@
 //! | [`kill_after_fuses`](Session::kill_after_fuses) | aggregator-crash injection for the resume tests | §5.5 |
 //! | [`faults`](Session::faults) | fleet fault injection ([`FleetFaults`]): stragglers, dropout, diurnal waves, weight skew | robustness matrix |
 //! | [`events`](Session::events) | stream typed [`SessionEvent`]s while the run executes | §5.5 observability |
+//! | [`telemetry`](Session::telemetry) | attach a [`Registry`](crate::telemetry::Registry): metrics + structured spans from every layer | §5.5 observability |
 //!
 //! Every variant returns the same unified [`Report`] (one enum over a
 //! shared [`RunSummary`] body), which subsumes the legacy
 //! `JobReport`/`RunStats`/`BrokerReport`/`LiveReport`/`LiveBrokerReport`
 //! quintet.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::Instant;
@@ -75,6 +77,7 @@ use crate::metrics::{RoundRecord, AZURE_USD_PER_CONTAINER_SECOND};
 use crate::mq::MessageQueue;
 use crate::party::FleetFaults;
 use crate::sim::secs;
+use crate::telemetry::Registry;
 use crate::util::json::Json;
 use crate::util::stats::percentile;
 
@@ -97,6 +100,10 @@ pub enum SessionEvent {
     JobAdmitted { job: usize, at_secs: f64 },
     /// A round began: the global model went out to the round's parties.
     RoundStarted { job: usize, round: u32, at_secs: f64 },
+    /// A round was skipped on starvation: expected on-time arrivals fell
+    /// below the quorum floor (fault injection's graceful-degradation
+    /// rule), so the engine moved on instead of hanging.
+    RoundSkipped { job: usize, round: u32, at_secs: f64 },
     /// The data plane folded `folds` updates and checkpointed the partial
     /// aggregate to the MQ after each one (§5.5). Live/wall only.
     CheckpointWritten {
@@ -127,24 +134,44 @@ pub enum SessionEvent {
 /// default (every emit is a no-op until [`Session::events`] installs a
 /// channel), so the hot paths pay one `Option` check.
 #[derive(Clone, Default)]
-pub struct EventSink(Option<Sender<SessionEvent>>);
+pub struct EventSink {
+    tx: Option<Sender<SessionEvent>>,
+    /// Set the first time a send fails (receiver dropped). Shared across
+    /// clones so every emitter in the run degrades to a no-op together —
+    /// a consumer hanging up mid-run must never wedge or panic the loop,
+    /// and `active()` going false lets hot paths skip event assembly.
+    closed: Arc<AtomicBool>,
+}
 
 impl EventSink {
     /// A sink that drops everything.
     pub fn none() -> EventSink {
-        EventSink(None)
+        EventSink::default()
+    }
+
+    fn with_sender(tx: Sender<SessionEvent>) -> EventSink {
+        EventSink {
+            tx: Some(tx),
+            closed: Arc::new(AtomicBool::new(false)),
+        }
     }
 
     /// Is anyone listening? Lets callers skip event assembly entirely.
+    /// Goes false permanently once the receiver hangs up.
     pub fn active(&self) -> bool {
-        self.0.is_some()
+        self.tx.is_some() && !self.closed.load(Ordering::Relaxed)
     }
 
-    /// Emit an event (no-op without a listener; send errors — a dropped
-    /// receiver — are deliberately ignored so a consumer may hang up).
+    /// Emit an event. No-op without a listener; the first send error (a
+    /// dropped receiver) latches the shared `closed` flag so every clone
+    /// of this sink stops emitting — hanging up is always safe.
     pub fn emit(&self, ev: SessionEvent) {
-        if let Some(tx) = &self.0 {
-            let _ = tx.send(ev);
+        let Some(tx) = &self.tx else { return };
+        if self.closed.load(Ordering::Relaxed) {
+            return;
+        }
+        if tx.send(ev).is_err() {
+            self.closed.store(true, Ordering::Relaxed);
         }
     }
 
@@ -324,6 +351,9 @@ impl JobOutcome {
             ("deployments", Json::num(self.deployments as f64)),
             ("updates_fused", Json::num(self.updates_fused as f64)),
             ("updates_folded", Json::num(self.updates_folded as f64)),
+            ("updates_dropped", Json::num(self.updates_dropped as f64)),
+            ("updates_decayed", Json::num(self.updates_decayed as f64)),
+            ("rounds_skipped", Json::num(self.rounds_skipped as f64)),
             ("makespan_secs", Json::num(self.makespan_secs)),
             ("final_model_dim", Json::num(self.final_model.len() as f64)),
             (
@@ -569,6 +599,7 @@ pub struct Session {
     solo_baselines: bool,
     sink: EventSink,
     faults: FleetFaults,
+    telemetry: Registry,
 }
 
 impl Session {
@@ -591,6 +622,7 @@ impl Session {
             solo_baselines: false,
             sink: EventSink::none(),
             faults: FleetFaults::none(),
+            telemetry: Registry::disabled(),
         }
     }
 
@@ -775,10 +807,24 @@ impl Session {
     /// [`SessionEvent`]s through it as they happen. Consume live from
     /// another thread (wall sessions), or drain after [`run`](Session::run)
     /// returns — the channel is unbounded and buffers everything.
+    /// Dropping the receiver at any point is safe: emitters degrade to
+    /// silent no-ops from the first failed send onward.
     pub fn events(&mut self) -> Receiver<SessionEvent> {
         let (tx, rx) = channel();
-        self.sink = EventSink(Some(tx));
+        self.sink = EventSink::with_sender(tx);
         rx
+    }
+
+    /// Attach a telemetry [`Registry`]: counters, gauges, histograms and
+    /// structured spans from every layer the run touches (engine rounds,
+    /// MQ depth/wait, admission queueing, cluster deploys/preemptions,
+    /// fusion pool). Strictly passive — a disabled registry (the
+    /// default) costs one branch per site, and an enabled one observes
+    /// the same timestamps the run already computes, so seeded streams
+    /// and reports are bit-identical either way (pinned by test).
+    pub fn telemetry(mut self, reg: &Registry) -> Session {
+        self.telemetry = reg.clone();
+        self
     }
 
     // -- execution ---------------------------------------------------------
@@ -860,6 +906,7 @@ impl Session {
             .set_policy(arbitration::by_name(&self.policy).expect("validated in run"));
         platform.set_admission(ctrl);
         platform.set_event_sink(self.sink.clone());
+        platform.set_telemetry(&self.telemetry);
         let (reports, stats) = platform.run_with_stats();
         let ctrl = stats.admission.expect("admission controller returned");
         let span = stats.end_secs;
@@ -944,12 +991,14 @@ impl Session {
             .mq
             .clone()
             .unwrap_or_else(|| Arc::new(MessageQueue::new()));
+        mq.set_telemetry(&self.telemetry);
         let mut engines: Vec<JobEngine> = Vec::with_capacity(self.arrivals.len());
         let mut weights: Vec<Vec<f32>> = Vec::with_capacity(self.arrivals.len());
         for (job, arr) in self.arrivals.iter().enumerate() {
             let mut engine =
                 JobEngine::with_faults(job, arr.spec.clone(), &arr.strategy, self.seed, self.faults);
             engine.deferred = true;
+            engine.set_telemetry(&self.telemetry, &arr.strategy);
             weights.push(
                 engine
                     .fleet
@@ -971,6 +1020,7 @@ impl Session {
             resume: self.resume,
             init_override: None,
             sink: self.sink.clone(),
+            telemetry: self.telemetry.clone(),
         };
         let summary = match backend {
             PartyBackend::Scripted => {

@@ -25,9 +25,49 @@ use std::cell::Cell;
 use std::collections::VecDeque;
 use std::ops::{Deref, DerefMut};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+// ---------------------------------------------------------------------------
+// process-global pool telemetry
+// ---------------------------------------------------------------------------
+//
+// The worker/scratch pools are `OnceLock` process singletons shared by
+// every session, so their throughput counters live beside them rather
+// than in any one `telemetry::Registry`. Exporters sample these at dump
+// time (`telemetry::export::sample_pool_stats`). Relaxed ordering: the
+// counts are monotone and read only for reporting.
+
+static POOL_TASKS_RUN: AtomicU64 = AtomicU64::new(0);
+static SCRATCH_TAKE_HITS: AtomicU64 = AtomicU64::new(0);
+static SCRATCH_TAKE_MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// A point-in-time sample of the process-global pool counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// Tasks executed through any [`WorkerPool::run_all`] (fold
+    /// throughput proxy: one task per reduce shard / sweep cell).
+    pub tasks_run: u64,
+    /// [`ScratchPool::take`] calls served from a parked buffer.
+    pub scratch_hits: u64,
+    /// [`ScratchPool::take`] calls that had to allocate fresh.
+    pub scratch_misses: u64,
+    /// Worker count of the global pool (0 until first use).
+    pub threads: usize,
+}
+
+/// Sample the process-global pool counters (never resets them).
+pub fn pool_stats() -> PoolStats {
+    PoolStats {
+        tasks_run: POOL_TASKS_RUN.load(Ordering::Relaxed),
+        scratch_hits: SCRATCH_TAKE_HITS.load(Ordering::Relaxed),
+        scratch_misses: SCRATCH_TAKE_MISSES.load(Ordering::Relaxed),
+        threads: std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(0),
+    }
+}
 
 thread_local! {
     /// Id of the [`WorkerPool`] this thread is a worker of (0 = none).
@@ -171,6 +211,7 @@ impl WorkerPool {
         if n == 0 {
             return Vec::new();
         }
+        POOL_TASKS_RUN.fetch_add(n as u64, Ordering::Relaxed);
         // Reentrancy: a task already running on one of this pool's workers
         // must not wait on further helper jobs (the queued helpers could
         // only ever run on workers that are themselves blocked waiting).
@@ -256,12 +297,17 @@ impl ScratchPool {
     /// the largest pooled buffer when one exists (capacity is retained
     /// across rounds).
     pub fn take(&self, len: usize) -> ScratchBuf<'_> {
-        let mut v = {
+        let popped = {
             let mut free = self.free.lock().unwrap();
             // Largest-first keeps big (model-sized) buffers circulating
             // instead of repeatedly growing small ones.
-            free.pop().unwrap_or_default()
+            free.pop()
         };
+        match &popped {
+            Some(_) => SCRATCH_TAKE_HITS.fetch_add(1, Ordering::Relaxed),
+            None => SCRATCH_TAKE_MISSES.fetch_add(1, Ordering::Relaxed),
+        };
+        let mut v = popped.unwrap_or_default();
         if v.len() >= len {
             v.truncate(len);
         } else {

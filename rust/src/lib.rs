@@ -37,5 +37,6 @@ pub mod party;
 pub mod runtime;
 pub mod sim;
 pub mod store;
+pub mod telemetry;
 pub mod util;
 pub mod workloads;

@@ -20,6 +20,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::sim::Time;
+use crate::telemetry::{Registry, Scope};
 
 /// What a message carries.
 #[derive(Clone, Debug, PartialEq)]
@@ -89,6 +90,11 @@ pub struct MessageQueue {
     /// driver) sleep here instead of polling, and every `produce` wakes
     /// them. Purely additive — virtual-time consumers never touch it.
     produce_sig: (Mutex<u64>, Condvar),
+    /// Optional telemetry handle (disabled by default — the clone out of
+    /// the mutex is an `Option<Arc>` copy, and a disabled registry makes
+    /// every record a no-op). Strictly observational: never affects
+    /// offsets, wakeups, or message contents.
+    telemetry: Mutex<Registry>,
 }
 
 /// A partially aggregated state parked by a preempted aggregator (§5.5).
@@ -110,6 +116,17 @@ impl MessageQueue {
         Self::default()
     }
 
+    /// Attach a telemetry registry: produce/consume counters, per-topic
+    /// depth gauges, and the `wait_produce` wait-time histogram record
+    /// into it. Pass `Registry::disabled()` to detach.
+    pub fn set_telemetry(&self, reg: &Registry) {
+        *self.telemetry.lock().unwrap() = reg.clone();
+    }
+
+    fn reg(&self) -> Registry {
+        self.telemetry.lock().unwrap().clone()
+    }
+
     /// Append a message; returns its offset. Wakes any wall-clock
     /// consumer blocked in [`wait_produce`](MessageQueue::wait_produce).
     pub fn produce(&self, topic: &str, msg: Message) -> usize {
@@ -121,6 +138,15 @@ impl MessageQueue {
             t.log.push(Arc::new(msg));
             off
         };
+        let reg = self.reg();
+        if reg.on() {
+            reg.counter_add("mq_messages_produced_total", &Scope::none(), 1);
+            reg.gauge_set(
+                "mq_topic_depth",
+                &Scope::label("topic", topic),
+                (off + 1) as f64,
+            );
+        }
         let (lock, cvar) = &self.produce_sig;
         *lock.lock().unwrap() += 1;
         cvar.notify_all();
@@ -138,8 +164,9 @@ impl MessageQueue {
     /// parks here between event deadlines so a party's publish wakes it
     /// immediately.
     pub fn wait_produce(&self, seen: u64, timeout: Duration) -> u64 {
+        let t0 = Instant::now();
         let (lock, cvar) = &self.produce_sig;
-        let deadline = Instant::now() + timeout;
+        let deadline = t0 + timeout;
         let mut n = lock.lock().unwrap();
         while *n <= seen {
             let rem = deadline.saturating_duration_since(Instant::now());
@@ -152,18 +179,44 @@ impl MessageQueue {
                 break;
             }
         }
-        *n
+        let out = *n;
+        drop(n);
+        let reg = self.reg();
+        if reg.on() {
+            // Wall-side observation only (the wait itself is wall time);
+            // recording it perturbs nothing the seeded streams see.
+            reg.histogram_observe(
+                "mq_wait_produce_secs",
+                &Scope::none(),
+                t0.elapsed().as_secs_f64(),
+                &crate::telemetry::LATENCY_BUCKETS_SECS,
+            );
+        }
+        out
     }
 
     /// Messages in [from, from+max) — non-consuming, zero-copy read: the
     /// returned views share the log's allocations (cloning an `Arc`, not
     /// the payload).
     pub fn fetch(&self, topic: &str, from: usize, max: usize) -> Vec<MessageView> {
-        let topics = self.topics.lock().unwrap();
-        match topics.get(topic) {
-            None => Vec::new(),
-            Some(t) => t.log.iter().skip(from).take(max).cloned().collect(),
+        let batch: Vec<MessageView> = {
+            let topics = self.topics.lock().unwrap();
+            match topics.get(topic) {
+                None => Vec::new(),
+                Some(t) => t.log.iter().skip(from).take(max).cloned().collect(),
+            }
+        };
+        if !batch.is_empty() {
+            let reg = self.reg();
+            if reg.on() {
+                reg.counter_add(
+                    "mq_messages_fetched_total",
+                    &Scope::none(),
+                    batch.len() as u64,
+                );
+            }
         }
+        batch
     }
 
     /// All of one round's messages, via the round index — O(messages in
@@ -263,12 +316,20 @@ impl MessageQueue {
 
     /// Drop a whole topic (round GC after aggregation completes).
     pub fn drop_topic(&self, topic: &str) -> usize {
-        self.topics
+        let n = self
+            .topics
             .lock()
             .unwrap()
             .remove(topic)
             .map(|t| t.log.len())
-            .unwrap_or(0)
+            .unwrap_or(0);
+        if n > 0 {
+            let reg = self.reg();
+            if reg.on() {
+                reg.gauge_set("mq_topic_depth", &Scope::label("topic", topic), 0.0);
+            }
+        }
+        n
     }
 }
 
@@ -482,5 +543,49 @@ mod tests {
         assert_eq!(q.committed("t", "agg"), 5);
         assert!(q.poll("t", "agg", 10).is_empty());
         assert!(q.poll("missing", "agg", 10).is_empty());
+    }
+
+    #[test]
+    fn telemetry_counts_traffic_and_detaches_cleanly() {
+        let q = MessageQueue::new();
+        q.produce("t", msg(0, 0)); // before attach: invisible
+        let reg = Registry::enabled();
+        q.set_telemetry(&reg);
+        q.produce("t", msg(1, 0));
+        q.produce("u", msg(2, 0));
+        assert_eq!(q.fetch("t", 0, 10).len(), 2);
+        q.wait_produce(q.produced(), Duration::from_millis(1));
+        let (counters, gauges, histograms, _) = reg.snapshot();
+        assert_eq!(
+            counters.get(&("mq_messages_produced_total".to_string(), String::new())),
+            Some(&2),
+            "only post-attach produces count"
+        );
+        assert_eq!(
+            counters.get(&("mq_messages_fetched_total".to_string(), String::new())),
+            Some(&2)
+        );
+        assert_eq!(
+            gauges.get(&("mq_topic_depth".to_string(), "topic=\"t\"".to_string())),
+            Some(&2.0),
+            "depth gauge tracks the topic's end offset"
+        );
+        assert_eq!(
+            gauges.get(&("mq_topic_depth".to_string(), "topic=\"u\"".to_string())),
+            Some(&1.0)
+        );
+        let waits = histograms
+            .get(&("mq_wait_produce_secs".to_string(), String::new()))
+            .expect("wait histogram recorded");
+        assert_eq!(waits.count, 1);
+
+        // detaching stops recording without touching what's there
+        q.set_telemetry(&Registry::disabled());
+        q.produce("t", msg(3, 0));
+        let (counters, _, _, _) = reg.snapshot();
+        assert_eq!(
+            counters.get(&("mq_messages_produced_total".to_string(), String::new())),
+            Some(&2)
+        );
     }
 }

@@ -1,0 +1,493 @@
+//! Telemetry exporters: Prometheus text exposition, JSONL trace, Chrome
+//! `trace_event` JSON.
+//!
+//! All three read one [`Registry`] snapshot, so a single run can be
+//! inspected as a scrape (`exposition.prom`), replayed line-by-line
+//! (`telemetry.jsonl`), or opened as a flamegraph-style round timeline
+//! (`trace.json` in `chrome://tracing` / <https://ui.perfetto.dev> —
+//! jobs map to processes, span kinds to tracks).
+//!
+//! At export time the process-global fusion pool stats
+//! ([`crate::fusion::pool::pool_stats`]) are sampled into the registry
+//! as gauges (`fusion_pool_tasks_total`, `fusion_scratch_reuse_ratio`,
+//! …) — the `WorkerPool`/`ScratchPool` are `OnceLock` singletons shared
+//! by every session in the process, so their counters live beside the
+//! pools, not in any one registry.
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use crate::sim::to_secs;
+use crate::util::json::Json;
+
+use super::{Registry, Scope, SpanEvent, SpanPhase};
+
+/// File names written by [`write_all`] under the telemetry dir.
+pub const JSONL_FILE: &str = "telemetry.jsonl";
+pub const EXPOSITION_FILE: &str = "exposition.prom";
+pub const CHROME_TRACE_FILE: &str = "trace.json";
+
+// ---------------------------------------------------------------------------
+// JSONL
+// ---------------------------------------------------------------------------
+
+/// One span event as a JSONL line (`kind: "span"`). Written live by the
+/// registry as spans are recorded.
+pub fn span_line(ev: &SpanEvent) -> Json {
+    Json::obj(vec![
+        ("kind", Json::str("span")),
+        ("span", Json::str(ev.kind.name())),
+        (
+            "phase",
+            Json::str(match ev.phase {
+                SpanPhase::Begin => "B",
+                SpanPhase::End => "E",
+            }),
+        ),
+        ("job", Json::num(ev.job as f64)),
+        ("round", Json::num(ev.round as f64)),
+        ("detail", Json::num(ev.detail as f64)),
+        ("at_us", Json::num(ev.at as f64)),
+    ])
+}
+
+/// Metric samples as JSONL lines (`kind: "counter" | "gauge" |
+/// "histogram"`) — appended to the live stream at export time so the
+/// file carries both the span timeline and the final metric state.
+pub fn metric_lines(reg: &Registry) -> Vec<String> {
+    let (counters, gauges, histograms, _) = reg.snapshot();
+    let mut out = Vec::new();
+    for ((name, labels), v) in &counters {
+        out.push(
+            Json::obj(vec![
+                ("kind", Json::str("counter")),
+                ("name", Json::str(name)),
+                ("labels", Json::str(labels)),
+                ("value", Json::num(*v as f64)),
+            ])
+            .print(),
+        );
+    }
+    for ((name, labels), v) in &gauges {
+        out.push(
+            Json::obj(vec![
+                ("kind", Json::str("gauge")),
+                ("name", Json::str(name)),
+                ("labels", Json::str(labels)),
+                ("value", Json::num(*v)),
+            ])
+            .print(),
+        );
+    }
+    for ((name, labels), h) in &histograms {
+        out.push(
+            Json::obj(vec![
+                ("kind", Json::str("histogram")),
+                ("name", Json::str(name)),
+                ("labels", Json::str(labels)),
+                ("sum", Json::num(h.sum)),
+                ("count", Json::num(h.count as f64)),
+                (
+                    "bounds",
+                    Json::arr(h.bounds.iter().map(|b| Json::num(*b))),
+                ),
+                (
+                    "counts",
+                    Json::arr(h.counts.iter().map(|c| Json::num(*c as f64))),
+                ),
+            ])
+            .print(),
+        );
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus text exposition
+// ---------------------------------------------------------------------------
+
+fn metric_line(name: &str, labels: &str, extra: &str, value: f64) -> String {
+    let all = match (labels.is_empty(), extra.is_empty()) {
+        (true, true) => String::new(),
+        (false, true) => format!("{{{labels}}}"),
+        (true, false) => format!("{{{extra}}}"),
+        (false, false) => format!("{{{labels},{extra}}}"),
+    };
+    let v = if value.fract() == 0.0 && value.abs() < 9.0e15 {
+        format!("{}", value as i64)
+    } else {
+        format!("{value}")
+    };
+    format!("{name}{all} {v}")
+}
+
+/// The full registry as Prometheus text exposition format (0.0.4):
+/// `# TYPE` headers, one sample per line, histograms expanded into
+/// cumulative `_bucket{le=..}` series plus `_sum`/`_count`.
+pub fn prometheus_exposition(reg: &Registry) -> String {
+    let (counters, gauges, histograms, _) = reg.snapshot();
+    let mut out = String::new();
+    let mut last_name = String::new();
+    for ((name, labels), v) in &counters {
+        if *name != last_name {
+            out.push_str(&format!("# TYPE {name} counter\n"));
+            last_name = name.clone();
+        }
+        out.push_str(&metric_line(name, labels, "", *v as f64));
+        out.push('\n');
+    }
+    last_name.clear();
+    for ((name, labels), v) in &gauges {
+        if *name != last_name {
+            out.push_str(&format!("# TYPE {name} gauge\n"));
+            last_name = name.clone();
+        }
+        out.push_str(&metric_line(name, labels, "", *v));
+        out.push('\n');
+    }
+    last_name.clear();
+    for ((name, labels), h) in &histograms {
+        if *name != last_name {
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            last_name = name.clone();
+        }
+        let mut cum = 0u64;
+        for (i, b) in h.bounds.iter().enumerate() {
+            cum += h.counts[i];
+            let le = format!("le=\"{b}\"");
+            out.push_str(&metric_line(
+                &format!("{name}_bucket"),
+                labels,
+                &le,
+                cum as f64,
+            ));
+            out.push('\n');
+        }
+        cum += h.counts[h.bounds.len()];
+        out.push_str(&metric_line(
+            &format!("{name}_bucket"),
+            labels,
+            "le=\"+Inf\"",
+            cum as f64,
+        ));
+        out.push('\n');
+        out.push_str(&metric_line(&format!("{name}_sum"), labels, "", h.sum));
+        out.push('\n');
+        out.push_str(&metric_line(
+            &format!("{name}_count"),
+            labels,
+            "",
+            h.count as f64,
+        ));
+        out.push('\n');
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace_event
+// ---------------------------------------------------------------------------
+
+/// The span timeline as a Chrome `trace_event` JSON document: complete
+/// (`"ph": "X"`) events with µs timestamps, `pid` = job id, `tid` = the
+/// span kind's track. Unmatched begins export as zero-duration events so
+/// a crashed run still renders.
+pub fn chrome_trace(reg: &Registry) -> Json {
+    let (_, _, _, spans) = reg.snapshot();
+    // pair begin/end by identity key, FIFO within a key
+    use std::collections::BTreeMap;
+    let mut open: BTreeMap<(u8, usize, u32, u64), Vec<&SpanEvent>> = BTreeMap::new();
+    let kind_ix = |ev: &SpanEvent| ev.kind as u8;
+    let mut events = Vec::new();
+    let mut complete = |b: &SpanEvent, end_at: u64, events: &mut Vec<Json>| {
+        events.push(Json::obj(vec![
+            ("name", Json::str(&format!("{} r{}", b.kind.name(), b.round))),
+            ("cat", Json::str(b.kind.name())),
+            ("ph", Json::str("X")),
+            ("ts", Json::num(b.at as f64)),
+            ("dur", Json::num(end_at.saturating_sub(b.at) as f64)),
+            ("pid", Json::num(b.job as f64)),
+            ("tid", Json::num(kind_ix(b) as f64)),
+            (
+                "args",
+                Json::obj(vec![
+                    ("round", Json::num(b.round as f64)),
+                    ("detail", Json::num(b.detail as f64)),
+                ]),
+            ),
+        ]));
+    };
+    for ev in &spans {
+        let key = (kind_ix(ev), ev.job, ev.round, ev.detail);
+        match ev.phase {
+            SpanPhase::Begin => open.entry(key).or_default().push(ev),
+            SpanPhase::End => {
+                if let Some(b) = open.get_mut(&key).and_then(|v| {
+                    if v.is_empty() {
+                        None
+                    } else {
+                        Some(v.remove(0))
+                    }
+                }) {
+                    complete(b, ev.at, &mut events);
+                }
+            }
+        }
+    }
+    for stack in open.values() {
+        for b in stack {
+            complete(b, b.at, &mut events);
+        }
+    }
+    // process names so the viewer shows "job N" instead of bare pids
+    let jobs: std::collections::BTreeSet<usize> = spans.iter().map(|s| s.job).collect();
+    for j in jobs {
+        events.push(Json::obj(vec![
+            ("name", Json::str("process_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(j as f64)),
+            ("tid", Json::num(0.0)),
+            (
+                "args",
+                Json::obj(vec![("name", Json::str(&format!("job {j}")))]),
+            ),
+        ]));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// the one-call export
+// ---------------------------------------------------------------------------
+
+/// Sample the process-global fusion pool counters into `reg` as gauges.
+/// Called by [`write_all`]; callable directly for in-memory registries.
+pub fn sample_pool_stats(reg: &Registry) {
+    if !reg.on() {
+        return;
+    }
+    let st = crate::fusion::pool::pool_stats();
+    let sc = Scope::none();
+    reg.gauge_set("fusion_pool_tasks_total", &sc, st.tasks_run as f64);
+    reg.gauge_set("fusion_pool_threads", &sc, st.threads as f64);
+    reg.gauge_set("fusion_scratch_takes_total", &sc, (st.scratch_hits + st.scratch_misses) as f64);
+    reg.gauge_set("fusion_scratch_reuse_hits", &sc, st.scratch_hits as f64);
+    reg.gauge_set("fusion_scratch_fresh_allocs", &sc, st.scratch_misses as f64);
+    let takes = st.scratch_hits + st.scratch_misses;
+    let ratio = if takes == 0 {
+        0.0
+    } else {
+        st.scratch_hits as f64 / takes as f64
+    };
+    reg.gauge_set("fusion_scratch_reuse_ratio", &sc, ratio);
+}
+
+/// Write every export format under `dir`: flush + finalize the JSONL
+/// (appending final metric samples), the Prometheus exposition, and the
+/// Chrome trace. Also samples the fusion pool stats first, so the dumps
+/// carry fold throughput and scratch reuse.
+pub fn write_all<P: AsRef<Path>>(reg: &Registry, dir: P) -> io::Result<()> {
+    let dir = dir.as_ref();
+    fs::create_dir_all(dir)?;
+    sample_pool_stats(reg);
+    // JSONL: the registry streamed spans here live if it was opened with
+    // `with_dir`; append the metric state and flush. An in-memory
+    // registry writes the whole file from the snapshot instead.
+    let lines = metric_lines(reg);
+    if reg.dir().as_deref() == Some(dir) {
+        reg.jsonl_append(&lines);
+    } else {
+        let (_, _, _, spans) = reg.snapshot();
+        let mut all: Vec<String> = spans.iter().map(|ev| span_line(ev).print()).collect();
+        all.extend(lines);
+        fs::write(dir.join(JSONL_FILE), all.join("\n") + "\n")?;
+    }
+    fs::write(dir.join(EXPOSITION_FILE), prometheus_exposition(reg))?;
+    fs::write(dir.join(CHROME_TRACE_FILE), chrome_trace(reg).pretty())?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// `fljit top`: summarize a telemetry dir
+// ---------------------------------------------------------------------------
+
+/// Per-job aggregates distilled from a JSONL trace, for the `fljit top`
+/// live summary.
+#[derive(Clone, Debug, Default)]
+pub struct JobTop {
+    pub job: usize,
+    pub rounds: u64,
+    pub round_secs_sum: f64,
+    pub fuses: u64,
+    pub checkpoints: u64,
+    pub deploys: u64,
+    pub preempts: u64,
+    pub admission_wait_secs: f64,
+    pub party_waits: u64,
+    pub party_wait_secs_sum: f64,
+    pub last_at_secs: f64,
+}
+
+impl JobTop {
+    pub fn mean_round_secs(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.round_secs_sum / self.rounds as f64
+        }
+    }
+
+    pub fn mean_party_wait_secs(&self) -> f64 {
+        if self.party_waits == 0 {
+            0.0
+        } else {
+            self.party_wait_secs_sum / self.party_waits as f64
+        }
+    }
+}
+
+/// Parse a `telemetry.jsonl` body into per-job aggregates (ignores
+/// malformed lines — the file may be mid-write on a live run).
+pub fn summarize_jsonl(body: &str) -> Vec<JobTop> {
+    use std::collections::BTreeMap;
+    let mut begins: BTreeMap<(String, usize, u32, u64), Vec<u64>> = BTreeMap::new();
+    let mut tops: BTreeMap<usize, JobTop> = BTreeMap::new();
+    for line in body.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Ok(v) = Json::parse(line) else { continue };
+        if v.get("kind").as_str() != Some("span") {
+            continue;
+        }
+        let (Some(span), Some(phase), Some(job), Some(at)) = (
+            v.get("span").as_str().map(String::from),
+            v.get("phase").as_str().map(String::from),
+            v.get("job").as_usize(),
+            v.get("at_us").as_u64(),
+        ) else {
+            continue;
+        };
+        let round = v.get("round").as_u64().unwrap_or(0) as u32;
+        let detail = v.get("detail").as_u64().unwrap_or(0);
+        let top = tops.entry(job).or_insert_with(|| JobTop {
+            job,
+            ..JobTop::default()
+        });
+        top.last_at_secs = top.last_at_secs.max(to_secs(at));
+        let key = (span.clone(), job, round, detail);
+        if phase == "B" {
+            begins.entry(key).or_default().push(at);
+            continue;
+        }
+        let dur = begins
+            .get_mut(&key)
+            .and_then(|v| if v.is_empty() { None } else { Some(v.remove(0)) })
+            .map(|b| to_secs(at.saturating_sub(b)))
+            .unwrap_or(0.0);
+        match span.as_str() {
+            "round" => {
+                top.rounds += 1;
+                top.round_secs_sum += dur;
+            }
+            "fuse" => top.fuses += 1,
+            "checkpoint" => top.checkpoints += 1,
+            "deploy" => top.deploys += 1,
+            "preempt" => top.preempts += 1,
+            "admission_wait" => top.admission_wait_secs += dur,
+            "party_wait" => {
+                top.party_waits += 1;
+                top.party_wait_secs_sum += dur;
+            }
+            _ => {}
+        }
+    }
+    tops.into_values().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{Registry, Scope, SpanKind, LATENCY_BUCKETS_SECS};
+
+    fn filled() -> Registry {
+        let r = Registry::enabled();
+        r.counter_add("rounds_total", &Scope::job_strategy(0, "jit"), 3);
+        r.gauge_set("depth", &Scope::label("topic", "job0/models"), 2.0);
+        r.histogram_observe(
+            "round_latency_secs",
+            &Scope::job(0),
+            0.25,
+            &LATENCY_BUCKETS_SECS,
+        );
+        r.span_begin(SpanKind::Round, 0, 1, 0, 1_000_000);
+        r.span_end(SpanKind::Round, 0, 1, 0, 3_500_000);
+        r.span_instant(SpanKind::Preempt, 0, 1, 4, 2_000_000);
+        r
+    }
+
+    #[test]
+    fn exposition_has_type_headers_and_histogram_series() {
+        let text = prometheus_exposition(&filled());
+        assert!(text.contains("# TYPE rounds_total counter"));
+        assert!(text.contains("rounds_total{job=\"0\",strategy=\"jit\"} 3"));
+        assert!(text.contains("# TYPE depth gauge"));
+        assert!(text.contains("depth{topic=\"job0/models\"} 2"));
+        assert!(text.contains("round_latency_secs_bucket{job=\"0\",le=\"0.5\"} 1"));
+        assert!(text.contains("round_latency_secs_bucket{job=\"0\",le=\"+Inf\"} 1"));
+        assert!(text.contains("round_latency_secs_count{job=\"0\"} 1"));
+    }
+
+    #[test]
+    fn chrome_trace_pairs_spans_into_complete_events() {
+        let doc = chrome_trace(&filled());
+        let evs = doc.get("traceEvents").as_arr().unwrap();
+        let round = evs
+            .iter()
+            .find(|e| e.get("cat").as_str() == Some("round"))
+            .unwrap();
+        assert_eq!(round.get("ph").as_str(), Some("X"));
+        assert_eq!(round.get("ts").as_u64(), Some(1_000_000));
+        assert_eq!(round.get("dur").as_u64(), Some(2_500_000));
+        assert_eq!(round.get("pid").as_u64(), Some(0));
+        let preempt = evs
+            .iter()
+            .find(|e| e.get("cat").as_str() == Some("preempt"))
+            .unwrap();
+        assert_eq!(preempt.get("dur").as_u64(), Some(0));
+        assert!(evs
+            .iter()
+            .any(|e| e.get("ph").as_str() == Some("M")), "process_name metadata");
+    }
+
+    #[test]
+    fn jsonl_lines_parse_and_summarize() {
+        let r = filled();
+        let mut body: Vec<String> = {
+            let (_, _, _, spans) = r.snapshot();
+            spans.iter().map(|ev| span_line(ev).print()).collect()
+        };
+        body.extend(metric_lines(&r));
+        for line in &body {
+            Json::parse(line).expect("every JSONL line parses");
+        }
+        let tops = summarize_jsonl(&body.join("\n"));
+        assert_eq!(tops.len(), 1);
+        assert_eq!(tops[0].rounds, 1);
+        assert!((tops[0].mean_round_secs() - 2.5).abs() < 1e-9);
+        assert_eq!(tops[0].preempts, 1);
+    }
+
+    #[test]
+    fn summarize_skips_malformed_lines() {
+        let body = "garbage\n{\"kind\":\"span\",\"span\":\"fuse\",\"phase\":\"E\",\"job\":1,\"round\":0,\"detail\":0,\"at_us\":5}\n{half";
+        let tops = summarize_jsonl(body);
+        assert_eq!(tops.len(), 1);
+        assert_eq!(tops[0].fuses, 1);
+    }
+}

@@ -1,0 +1,478 @@
+//! Telemetry: structured spans, a metrics registry, and exporters.
+//!
+//! The paper's whole argument is measured in observables — aggregation
+//! latency (§6.2), container-seconds, deployment counts (Figs 7–9) — but
+//! the platform could only report them *after* a run via `Report`. This
+//! subsystem makes a running mix observable: a lock-cheap [`Registry`] of
+//! named counters, gauges and fixed-bucket histograms with per-job /
+//! per-strategy label scoping, plus structured [`SpanKind`] spans
+//! (`round`, `fuse`, `checkpoint`, `deploy`, `preempt`, `admission_wait`,
+//! `party_wait`) recorded as begin/end pairs.
+//!
+//! **Time regime neutrality.** The registry never reads a clock: every
+//! record call takes its timestamp *in* as a [`Time`] (µs). Simulation
+//! passes virtual time, the wall regime passes wall time — same API, same
+//! exporters. That is also what keeps telemetry strictly passive: it
+//! touches no rng stream and schedules no events, so an enabled registry
+//! produces bit-identical `Report`s to a disabled one (pinned by
+//! `tests/telemetry.rs`).
+//!
+//! **No-op fast path.** A [`Registry`] is a clone-cheap handle around
+//! `Option<Arc<..>>`; the default (disabled) registry is `None` and every
+//! record call is a single branch. Enabled registries take one short
+//! mutex per record — fine for control-plane rates (rounds, deploys,
+//! folds), which is all we instrument.
+//!
+//! Exporters live in [`export`]: Prometheus-style text exposition, a
+//! JSONL trace (one span/metric sample per line, written live when a
+//! telemetry dir is configured), and a Chrome `trace_event` JSON file for
+//! flamegraph-style round timelines (open in `chrome://tracing` or
+//! <https://ui.perfetto.dev>).
+
+pub mod export;
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::{self, BufWriter, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::sim::{to_secs, Time};
+
+// ---------------------------------------------------------------------------
+// spans
+// ---------------------------------------------------------------------------
+
+/// The structured span vocabulary. One enum, not free-form strings, so
+/// exporters and the `fljit top` summary agree on names.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// One aggregation round, start → fuse.
+    Round,
+    /// The data-plane fold + finalize of one round.
+    Fuse,
+    /// A §5.5 checkpoint write.
+    Checkpoint,
+    /// A container deployment (cluster ledger entry).
+    Deploy,
+    /// A preemption decision (instantaneous).
+    Preempt,
+    /// Admission-queue wait, job arrival → release.
+    AdmissionWait,
+    /// One party's round latency, round start → update arrival.
+    PartyWait,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Round => "round",
+            SpanKind::Fuse => "fuse",
+            SpanKind::Checkpoint => "checkpoint",
+            SpanKind::Deploy => "deploy",
+            SpanKind::Preempt => "preempt",
+            SpanKind::AdmissionWait => "admission_wait",
+            SpanKind::PartyWait => "party_wait",
+        }
+    }
+
+    pub const ALL: [SpanKind; 7] = [
+        SpanKind::Round,
+        SpanKind::Fuse,
+        SpanKind::Checkpoint,
+        SpanKind::Deploy,
+        SpanKind::Preempt,
+        SpanKind::AdmissionWait,
+        SpanKind::PartyWait,
+    ];
+}
+
+/// Begin or end of a span.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanPhase {
+    Begin,
+    End,
+}
+
+/// One recorded span edge. Begin/end pairs share the identity key
+/// `(kind, job, round, detail)`; `detail` disambiguates within a round
+/// (party id for `party_wait`, task id for `deploy`/`preempt`, 0
+/// otherwise).
+#[derive(Clone, Debug)]
+pub struct SpanEvent {
+    pub kind: SpanKind,
+    pub job: usize,
+    pub round: u32,
+    pub detail: u64,
+    pub phase: SpanPhase,
+    pub at: Time,
+}
+
+// ---------------------------------------------------------------------------
+// label scoping
+// ---------------------------------------------------------------------------
+
+/// Per-job / per-strategy label scope attached to metric samples.
+#[derive(Clone, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Scope {
+    pub job: Option<usize>,
+    pub strategy: Option<String>,
+}
+
+impl Scope {
+    /// Unscoped (process/global metrics).
+    pub fn none() -> Scope {
+        Scope::default()
+    }
+
+    pub fn job(job: usize) -> Scope {
+        Scope {
+            job: Some(job),
+            strategy: None,
+        }
+    }
+
+    pub fn job_strategy(job: usize, strategy: &str) -> Scope {
+        Scope {
+            job: Some(job),
+            strategy: Some(strategy.to_string()),
+        }
+    }
+
+    /// A raw labelled scope for subsystems outside the job axis (e.g. MQ
+    /// topics). Rendered as `key="value"`.
+    pub fn label(key: &str, value: &str) -> Scope {
+        Scope {
+            job: None,
+            strategy: Some(format!("{key}\u{0}{value}")),
+        }
+    }
+
+    /// Prometheus-style label string, `{}`-less: `job="0",strategy="jit"`.
+    /// Empty for an unscoped metric.
+    pub fn render(&self) -> String {
+        let mut parts = Vec::new();
+        if let Some(j) = self.job {
+            parts.push(format!("job=\"{j}\""));
+        }
+        if let Some(s) = &self.strategy {
+            match s.split_once('\u{0}') {
+                Some((k, v)) => parts.push(format!("{k}=\"{v}\"")),
+                None => parts.push(format!("strategy=\"{s}\"")),
+            }
+        }
+        parts.join(",")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// metrics
+// ---------------------------------------------------------------------------
+
+/// A fixed-bucket histogram (Prometheus `le` semantics: cumulative at
+/// export, per-bucket counts internally; the last implicit bucket is
+/// `+Inf`).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// Upper bounds, ascending. Counts has `bounds.len() + 1` slots.
+    pub bounds: Vec<f64>,
+    pub counts: Vec<u64>,
+    pub sum: f64,
+    pub count: u64,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Histogram {
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+            sum: 0.0,
+            count: 0,
+        }
+    }
+
+    fn observe(&mut self, v: f64) {
+        let slot = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[slot] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+}
+
+/// Default buckets for latency-shaped observations, in seconds.
+pub const LATENCY_BUCKETS_SECS: [f64; 11] = [
+    0.001, 0.005, 0.01, 0.05, 0.1, 0.5, 1.0, 5.0, 10.0, 60.0, 600.0,
+];
+
+/// Metric identity: name + rendered label scope.
+pub type Key = (String, String);
+
+#[derive(Default)]
+struct State {
+    counters: BTreeMap<Key, u64>,
+    gauges: BTreeMap<Key, f64>,
+    histograms: BTreeMap<Key, Histogram>,
+    spans: Vec<SpanEvent>,
+}
+
+struct Inner {
+    state: Mutex<State>,
+    /// Live JSONL writer (one span event per line), when a telemetry dir
+    /// is configured. Metric samples are appended at export time.
+    jsonl: Mutex<Option<BufWriter<fs::File>>>,
+    dir: Option<PathBuf>,
+}
+
+/// The telemetry handle threaded through the platform. Clone-cheap;
+/// `Registry::disabled()` (the default everywhere) makes every record
+/// call a single `None` check.
+#[derive(Clone, Default)]
+pub struct Registry(Option<Arc<Inner>>);
+
+impl Registry {
+    /// The no-op registry: nothing is recorded, nothing is allocated.
+    pub fn disabled() -> Registry {
+        Registry(None)
+    }
+
+    /// An in-memory registry (exporters can still dump it on demand).
+    pub fn enabled() -> Registry {
+        Registry(Some(Arc::new(Inner {
+            state: Mutex::new(State::default()),
+            jsonl: Mutex::new(None),
+            dir: None,
+        })))
+    }
+
+    /// An enabled registry that also streams span events to
+    /// `<dir>/telemetry.jsonl` as they are recorded (the directory is
+    /// created; the file is truncated).
+    pub fn with_dir<P: AsRef<Path>>(dir: P) -> io::Result<Registry> {
+        let dir = dir.as_ref().to_path_buf();
+        fs::create_dir_all(&dir)?;
+        let f = fs::File::create(dir.join("telemetry.jsonl"))?;
+        Ok(Registry(Some(Arc::new(Inner {
+            state: Mutex::new(State::default()),
+            jsonl: Mutex::new(Some(BufWriter::new(f))),
+            dir: Some(dir),
+        }))))
+    }
+
+    /// True when records are kept (the one branch on every call site).
+    pub fn on(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// The configured export directory, if any.
+    pub fn dir(&self) -> Option<PathBuf> {
+        self.0.as_ref().and_then(|i| i.dir.clone())
+    }
+
+    // -- metrics ---------------------------------------------------------
+
+    pub fn counter_add(&self, name: &str, scope: &Scope, v: u64) {
+        let Some(inner) = &self.0 else { return };
+        let mut st = inner.state.lock().unwrap();
+        *st.counters
+            .entry((name.to_string(), scope.render()))
+            .or_insert(0) += v;
+    }
+
+    pub fn gauge_set(&self, name: &str, scope: &Scope, v: f64) {
+        let Some(inner) = &self.0 else { return };
+        let mut st = inner.state.lock().unwrap();
+        st.gauges.insert((name.to_string(), scope.render()), v);
+    }
+
+    /// Observe into a fixed-bucket histogram; buckets are fixed by the
+    /// *first* observation of a (name, scope) pair.
+    pub fn histogram_observe(&self, name: &str, scope: &Scope, v: f64, bounds: &[f64]) {
+        let Some(inner) = &self.0 else { return };
+        let mut st = inner.state.lock().unwrap();
+        st.histograms
+            .entry((name.to_string(), scope.render()))
+            .or_insert_with(|| Histogram::new(bounds))
+            .observe(v);
+    }
+
+    // -- spans -----------------------------------------------------------
+
+    pub fn span_begin(&self, kind: SpanKind, job: usize, round: u32, detail: u64, at: Time) {
+        self.span(SpanEvent {
+            kind,
+            job,
+            round,
+            detail,
+            phase: SpanPhase::Begin,
+            at,
+        });
+    }
+
+    pub fn span_end(&self, kind: SpanKind, job: usize, round: u32, detail: u64, at: Time) {
+        self.span(SpanEvent {
+            kind,
+            job,
+            round,
+            detail,
+            phase: SpanPhase::End,
+            at,
+        });
+    }
+
+    /// An instantaneous span: begin and end at the same stamp (preempt
+    /// decisions, checkpoint writes in virtual time).
+    pub fn span_instant(&self, kind: SpanKind, job: usize, round: u32, detail: u64, at: Time) {
+        self.span_begin(kind, job, round, detail, at);
+        self.span_end(kind, job, round, detail, at);
+    }
+
+    fn span(&self, ev: SpanEvent) {
+        let Some(inner) = &self.0 else { return };
+        if let Some(w) = inner.jsonl.lock().unwrap().as_mut() {
+            let _ = writeln!(w, "{}", export::span_line(&ev).print());
+        }
+        inner.state.lock().unwrap().spans.push(ev);
+    }
+
+    // -- snapshots (exporters) -------------------------------------------
+
+    pub(crate) fn snapshot(
+        &self,
+    ) -> (
+        BTreeMap<Key, u64>,
+        BTreeMap<Key, f64>,
+        BTreeMap<Key, Histogram>,
+        Vec<SpanEvent>,
+    ) {
+        match &self.0 {
+            None => Default::default(),
+            Some(inner) => {
+                let st = inner.state.lock().unwrap();
+                (
+                    st.counters.clone(),
+                    st.gauges.clone(),
+                    st.histograms.clone(),
+                    st.spans.clone(),
+                )
+            }
+        }
+    }
+
+    /// Append lines to the live JSONL (exporters use this for final
+    /// metric samples) and flush it.
+    pub(crate) fn jsonl_append(&self, lines: &[String]) {
+        let Some(inner) = &self.0 else { return };
+        if let Some(w) = inner.jsonl.lock().unwrap().as_mut() {
+            for l in lines {
+                let _ = writeln!(w, "{l}");
+            }
+            let _ = w.flush();
+        }
+    }
+
+    /// Flush the live JSONL stream (no-op when disabled / in-memory).
+    pub fn flush(&self) {
+        let Some(inner) = &self.0 else { return };
+        if let Some(w) = inner.jsonl.lock().unwrap().as_mut() {
+            let _ = w.flush();
+        }
+    }
+}
+
+impl std::fmt::Debug for Registry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Registry({})", if self.on() { "on" } else { "off" })
+    }
+}
+
+/// Helper: seconds between two µs stamps (for histogram observations of
+/// span durations).
+pub fn span_secs(begin: Time, end: Time) -> f64 {
+    to_secs(end.saturating_sub(begin))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_registry_records_nothing() {
+        let r = Registry::disabled();
+        assert!(!r.on());
+        r.counter_add("c", &Scope::none(), 3);
+        r.gauge_set("g", &Scope::job(1), 2.5);
+        r.histogram_observe("h", &Scope::none(), 0.1, &LATENCY_BUCKETS_SECS);
+        r.span_begin(SpanKind::Round, 0, 0, 0, 0);
+        let (c, g, h, s) = r.snapshot();
+        assert!(c.is_empty() && g.is_empty() && h.is_empty() && s.is_empty());
+    }
+
+    #[test]
+    fn counters_gauges_and_scopes_accumulate() {
+        let r = Registry::enabled();
+        let s0 = Scope::job_strategy(0, "jit");
+        let s1 = Scope::job_strategy(1, "lazy");
+        r.counter_add("rounds_total", &s0, 1);
+        r.counter_add("rounds_total", &s0, 2);
+        r.counter_add("rounds_total", &s1, 5);
+        r.gauge_set("depth", &Scope::label("topic", "job0/models"), 7.0);
+        let (c, g, _, _) = r.snapshot();
+        assert_eq!(
+            c[&("rounds_total".into(), "job=\"0\",strategy=\"jit\"".into())],
+            3
+        );
+        assert_eq!(
+            c[&("rounds_total".into(), "job=\"1\",strategy=\"lazy\"".into())],
+            5
+        );
+        assert_eq!(g[&("depth".into(), "topic=\"job0/models\"".into())], 7.0);
+    }
+
+    #[test]
+    fn histogram_buckets_are_fixed_and_cumulative_at_export() {
+        let r = Registry::enabled();
+        let sc = Scope::none();
+        for v in [0.0005, 0.003, 0.003, 0.2, 1e9] {
+            r.histogram_observe("lat", &sc, v, &LATENCY_BUCKETS_SECS);
+        }
+        let (_, _, h, _) = r.snapshot();
+        let hist = &h[&("lat".into(), String::new())];
+        assert_eq!(hist.count, 5);
+        assert_eq!(hist.counts[0], 1); // <= 1ms
+        assert_eq!(hist.counts[1], 2); // <= 5ms
+        assert_eq!(*hist.counts.last().unwrap(), 1); // +Inf overflow
+        assert!((hist.sum - (0.0005 + 0.003 + 0.003 + 0.2 + 1e9)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn span_pairs_share_an_identity_key() {
+        let r = Registry::enabled();
+        r.span_begin(SpanKind::Round, 2, 4, 0, 1_000);
+        r.span_end(SpanKind::Round, 2, 4, 0, 9_000);
+        r.span_instant(SpanKind::Preempt, 2, 4, 17, 5_000);
+        let (_, _, _, spans) = r.snapshot();
+        assert_eq!(spans.len(), 4);
+        assert_eq!(spans[0].phase, SpanPhase::Begin);
+        assert_eq!(spans[1].phase, SpanPhase::End);
+        assert_eq!(spans[1].at - spans[0].at, 8_000);
+        assert_eq!(spans[2].detail, 17);
+    }
+
+    #[test]
+    fn scope_rendering_matches_prometheus_label_syntax() {
+        assert_eq!(Scope::none().render(), "");
+        assert_eq!(Scope::job(3).render(), "job=\"3\"");
+        assert_eq!(
+            Scope::job_strategy(0, "async-stale").render(),
+            "job=\"0\",strategy=\"async-stale\""
+        );
+        assert_eq!(
+            Scope::label("topic", "job0/round1/updates").render(),
+            "topic=\"job0/round1/updates\""
+        );
+    }
+}

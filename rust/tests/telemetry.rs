@@ -1,0 +1,277 @@
+//! Telemetry pins, through the `Session` façade.
+//!
+//! The subsystem's core contract is **passivity**: a run with telemetry
+//! attached (metrics + streamed spans on disk) must produce a `Report`
+//! bit-identical to the same run without it, in every regime — the
+//! registry observes the seeded streams and never feeds back into them.
+//! On top of that: the exporter files must actually appear and parse for
+//! a multi-job live-broker sweep, the `SessionEvent` stream must stay a
+//! deterministic function of the seed under fault injection (including
+//! `RoundSkipped` sequences), and a consumer hanging up on the events
+//! channel must never wedge or panic a live run.
+
+use fljit::bench::live_broker::{run_sweep, LiveBrokerSweepConfig};
+use fljit::coordinator::job::FlJobSpec;
+use fljit::coordinator::session::{Report, Session, SessionEvent};
+use fljit::party::{FleetFaults, FleetKind};
+use fljit::telemetry::{export, Registry};
+use fljit::util::json::Json;
+use fljit::workloads::Workload;
+
+/// `Report::to_json` with the one nondeterministic field (real elapsed
+/// time) scrubbed, so two runs of the same seeded session compare equal
+/// byte for byte.
+fn canonical(rep: &Report) -> String {
+    let mut json = rep.to_json();
+    if let Json::Obj(map) = &mut json {
+        map.insert("wall_secs".to_string(), Json::Null);
+    }
+    json.pretty()
+}
+
+fn run_canonical(
+    live: bool,
+    strategy: &str,
+    faults: FleetFaults,
+    reg: Option<&Registry>,
+) -> String {
+    let spec = FlJobSpec::new(
+        Workload::cifar100_effnet(),
+        FleetKind::ActiveHomogeneous,
+        10,
+        3,
+    );
+    let mut s = if live {
+        Session::live().dim(32)
+    } else {
+        Session::sim()
+    };
+    s = s.seed(0x7E1E).faults(faults);
+    if let Some(reg) = reg {
+        s = s.telemetry(reg);
+    }
+    let _ = s.job(spec, strategy);
+    let rep = s
+        .run()
+        .unwrap_or_else(|e| panic!("{strategy} live={live}: {e:#}"));
+    canonical(&rep)
+}
+
+/// The tentpole pin: telemetry fully on (registry + streaming JSONL on
+/// disk) changes nothing observable in the `Report`, for the default
+/// drop policy and the decay policy, in both sim and live.
+#[test]
+fn telemetry_is_passive_reports_stay_bit_identical() {
+    let base = Workload::cifar100_effnet().base_epoch_secs;
+    let faults = FleetFaults::scenario("stragglers", base).unwrap();
+    for strategy in ["jit", "async-stale"] {
+        for live in [false, true] {
+            let dir = std::env::temp_dir().join(format!(
+                "fljit_tel_passive_{strategy}_{}",
+                if live { "live" } else { "sim" }
+            ));
+            let reg = Registry::with_dir(&dir).expect("telemetry dir");
+            let with = run_canonical(live, strategy, faults, Some(&reg));
+            let without = run_canonical(live, strategy, faults, None);
+            assert_eq!(
+                with, without,
+                "{strategy} live={live}: telemetry must not perturb the run"
+            );
+            let jsonl =
+                std::fs::read_to_string(dir.join(export::JSONL_FILE)).expect("streamed JSONL");
+            assert!(
+                !jsonl.trim().is_empty(),
+                "{strategy} live={live}: spans must stream during the run"
+            );
+        }
+    }
+}
+
+/// Acceptance: a multi-job live-broker sweep with `--telemetry-dir`
+/// produces all three artifacts, every JSONL line parses, the
+/// exposition is well formed, and the Chrome trace carries events —
+/// plus the `fljit top` summarizer finds per-job rows in the stream.
+#[test]
+fn live_broker_sweep_writes_all_three_exports() {
+    let dir = std::env::temp_dir().join("fljit_tel_broker");
+    let cfg = LiveBrokerSweepConfig {
+        jobs: 3,
+        max_parties: 4,
+        capacity: 2,
+        budget: 4,
+        mean_interarrival_secs: 2.0,
+        seed: 29,
+        dim: 16,
+        policy: "deadline".to_string(),
+        telemetry_dir: Some(dir.to_string_lossy().to_string()),
+        ..Default::default()
+    };
+    run_sweep(&cfg).expect("sweep with telemetry");
+
+    let jsonl = std::fs::read_to_string(dir.join(export::JSONL_FILE)).expect("JSONL written");
+    assert!(!jsonl.trim().is_empty());
+    let mut spans = 0usize;
+    let mut metrics = 0usize;
+    for line in jsonl.lines().filter(|l| !l.trim().is_empty()) {
+        let j = Json::parse(line).expect("every JSONL line is valid JSON");
+        match j.get("kind").as_str() {
+            Some("span") => spans += 1,
+            Some("counter") | Some("gauge") | Some("histogram") => metrics += 1,
+            other => panic!("unexpected kind {other:?} in line: {line}"),
+        }
+    }
+    assert!(spans > 0, "round/fuse spans must be streamed");
+    assert!(metrics > 0, "final metric samples must be appended");
+
+    let prom =
+        std::fs::read_to_string(dir.join(export::EXPOSITION_FILE)).expect("exposition written");
+    assert!(prom.contains("# TYPE"), "typed exposition metadata");
+    assert!(
+        prom.contains("rounds_fused_total"),
+        "engine counters reach the exposition"
+    );
+    assert!(
+        prom.contains("mq_messages_produced_total"),
+        "MQ counters reach the exposition"
+    );
+
+    let trace =
+        std::fs::read_to_string(dir.join(export::CHROME_TRACE_FILE)).expect("trace written");
+    let trace = Json::parse(&trace).expect("Chrome trace parses");
+    let events = trace.get("traceEvents").as_arr().expect("traceEvents array");
+    assert!(!events.is_empty());
+
+    let tops = export::summarize_jsonl(&jsonl);
+    assert_eq!(tops.len(), 3, "`fljit top` sees every job in the stream");
+    assert!(tops.iter().all(|t| t.rounds > 0));
+}
+
+fn collect_events(
+    live: bool,
+    strategy: &str,
+    faults: FleetFaults,
+    seed: u64,
+    parties: usize,
+    rounds: u32,
+) -> Vec<SessionEvent> {
+    let spec = FlJobSpec::new(
+        Workload::cifar100_effnet(),
+        FleetKind::ActiveHomogeneous,
+        parties,
+        rounds,
+    );
+    let mut s = if live {
+        Session::live().dim(16)
+    } else {
+        Session::sim()
+    };
+    s = s.seed(seed).faults(faults);
+    let _ = s.job(spec, strategy);
+    let rx = s.events();
+    s.run()
+        .unwrap_or_else(|e| panic!("{strategy} live={live}: {e:#}"));
+    rx.try_iter().collect()
+}
+
+/// Satellite pin: under fault injection the event stream is a
+/// deterministic function of the seed, in both regimes, for both the
+/// straggler and the dropout scenario.
+#[test]
+fn fault_event_streams_are_deterministic_per_seed() {
+    let base = Workload::cifar100_effnet().base_epoch_secs;
+    for scenario in ["stragglers", "dropout"] {
+        let faults = FleetFaults::scenario(scenario, base).unwrap();
+        for live in [false, true] {
+            let a = collect_events(live, "jit", faults, 0xA11CE, 10, 3);
+            let b = collect_events(live, "jit", faults, 0xA11CE, 10, 3);
+            assert!(!a.is_empty(), "{scenario} live={live}: events flow");
+            assert_eq!(a, b, "{scenario} live={live}: same seed, same stream");
+            assert!(
+                a.iter()
+                    .any(|e| matches!(e, SessionEvent::RoundFused { .. })),
+                "{scenario} live={live}: rounds still complete"
+            );
+            // round numbering stays coherent even when rounds are
+            // skipped: started/skipped indices are strictly increasing
+            let mut last: Option<u32> = None;
+            for ev in &a {
+                let r = match ev {
+                    SessionEvent::RoundStarted { round, .. }
+                    | SessionEvent::RoundSkipped { round, .. } => *round,
+                    _ => continue,
+                };
+                if let Some(prev) = last {
+                    assert!(r > prev, "{scenario} live={live}: round {r} after {prev}");
+                }
+                last = Some(r);
+            }
+        }
+    }
+}
+
+/// `RoundSkipped`-adjacent sequence pin: a fleet starved below a
+/// full-quorum floor skips every round. The stream must carry one
+/// `RoundSkipped` per planned round, in order, with no started/fused
+/// rounds, followed by `JobFinished` — identically in sim and live,
+/// and bit-reproducibly per seed.
+#[test]
+fn total_starvation_emits_skips_then_finishes() {
+    let faults = FleetFaults {
+        dropout_prob: 0.95,
+        rejoin_after: 0,
+        quorum_floor_frac: 1.0,
+        ..FleetFaults::default()
+    };
+    for live in [false, true] {
+        let evs = collect_events(live, "jit", faults, 0xD1, 6, 3);
+        let skipped: Vec<u32> = evs
+            .iter()
+            .filter_map(|e| match e {
+                SessionEvent::RoundSkipped { round, .. } => Some(*round),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(skipped, vec![0, 1, 2], "live={live}: all rounds skip in order");
+        assert!(
+            !evs.iter().any(|e| matches!(
+                e,
+                SessionEvent::RoundStarted { .. } | SessionEvent::RoundFused { .. }
+            )),
+            "live={live}: nothing starts under total starvation"
+        );
+        let fin = evs
+            .iter()
+            .position(|e| matches!(e, SessionEvent::JobFinished { .. }))
+            .expect("job still finishes");
+        let last_skip = evs
+            .iter()
+            .rposition(|e| matches!(e, SessionEvent::RoundSkipped { .. }))
+            .unwrap();
+        assert!(last_skip < fin, "live={live}: skips precede the finish");
+        assert_eq!(
+            evs,
+            collect_events(live, "jit", faults, 0xD1, 6, 3),
+            "live={live}: the skip sequence is seed-deterministic"
+        );
+    }
+}
+
+/// Satellite pin: a consumer that subscribes and hangs up before (or
+/// during) the run must not wedge or panic any emitter — the sink
+/// latches closed and the live run completes normally.
+#[test]
+fn dropped_events_receiver_never_wedges_a_live_run() {
+    let spec = FlJobSpec::new(
+        Workload::cifar100_effnet(),
+        FleetKind::ActiveHomogeneous,
+        8,
+        3,
+    );
+    let mut s = Session::live().seed(0xDEAD).dim(16);
+    let h = s.job(spec, "jit");
+    drop(s.events());
+    let rep = s.run().expect("run must survive a hung-up consumer");
+    let o = rep.job(h);
+    assert_eq!(o.records.len(), 3, "every round completes");
+    assert!(o.updates_fused > 0);
+}
