@@ -36,7 +36,14 @@ SUBCOMMANDS:
              [--parties 4] [--rounds 5] [--seed 42] [--dim 512]
              [--epoch-secs 0.4] [--scripted] [--backend synth|xla]
              [--telemetry-dir DIR]
+             [--data-dir DIR] [--fsync always|every=N|os] [--resume]
+             [--wall]   (--data-dir makes the MQ durable: a killed run
+             resumes bit-identically with --resume; --wall paces the
+             scripted backend on the real clock)
              (--strategy all sweeps every strategy -> BENCH_live.json)
+  recover    <dir> | --data-dir DIR   open a durable data dir, replay its
+             segmented log, and print the recovery report, per-topic
+             depths, per-job model CRCs and surviving checkpoint slots
   robustness strategy × fault-scenario matrix: every strategy on the
              scripted live platform under injected stragglers / dropout /
              diurnal waves / weight skew; per-cell fidelity-vs-baseline,
@@ -53,6 +60,11 @@ SUBCOMMANDS:
              [--budget 8] [--interarrival 5] [--seed N] [--dim 32]
              [--trace t.json] [--save-trace t.json] [--wall]
              [--telemetry-dir DIR]
+             [--data-dir DIR] [--fsync P] [--resume]  (durable data
+             plane; needs a single --policy, not 'all')
+             [--replay-gb G] [--replay-dim N]  multi-GB durable-log
+             replay bench: per-fsync-policy append + recovery-scan
+             throughput rows merged into the dump
              (writes BENCH_live_broker.json dump)
   top        <dir>                 summarize a telemetry dir's JSONL trace:
              per-job rounds, fuses, checkpoints, deploys, preemptions,
@@ -75,6 +87,7 @@ pub fn dispatch(args: &Args) -> i32 {
         Some("run") => cmd_run(args),
         Some("live") => cmd_live(args),
         Some("live-broker") => cmd_live_broker(args),
+        Some("recover") => cmd_recover(args),
         Some("robustness") => cmd_robustness(args),
         Some("top") => cmd_top(args),
         Some("zoo") => cmd_zoo(),
@@ -86,6 +99,17 @@ pub fn dispatch(args: &Args) -> i32 {
             }
             0
         }
+    }
+}
+
+/// Parse `--fsync` (absent = the durable default policy).
+fn fsync_from_args(args: &Args) -> Result<crate::wal::FsyncPolicy, i32> {
+    match args.get("fsync") {
+        None => Ok(crate::wal::FsyncPolicy::default()),
+        Some(s) => crate::wal::FsyncPolicy::parse(s).map_err(|e| {
+            eprintln!("bad --fsync: {e}");
+            2
+        }),
     }
 }
 
@@ -272,6 +296,9 @@ fn cmd_broker(args: &Args) -> i32 {
 
 fn cmd_live_broker(args: &Args) -> i32 {
     use crate::broker::arbitration;
+    if let Err(code) = fsync_from_args(args) {
+        return code;
+    }
     let cfg = crate::bench::live_broker::LiveBrokerSweepConfig::from_args(args);
     if cfg.policy != "all" && arbitration::by_name(&cfg.policy).is_none() {
         eprintln!(
@@ -279,6 +306,10 @@ fn cmd_live_broker(args: &Args) -> i32 {
             cfg.policy,
             arbitration::all_policies()
         );
+        return 2;
+    }
+    if cfg.data_dir.is_some() && cfg.policy == "all" {
+        eprintln!("--data-dir needs a single --policy (swept policies would share one log)");
         return 2;
     }
     match crate::bench::live_broker::run_sweep(&cfg) {
@@ -377,7 +408,19 @@ fn cmd_live(args: &Args) -> i32 {
     use crate::coordinator::live::PartyBackend;
     use crate::coordinator::strategies;
     let strategy = args.get_or("strategy", "jit").to_string();
+    let fsync = match fsync_from_args(args) {
+        Ok(p) => p,
+        Err(code) => return code,
+    };
+    let data_dir = args.get("data-dir").map(|s| s.to_string());
     if strategy == "all" {
+        if data_dir.is_some() {
+            eprintln!(
+                "--strategy all sweeps private in-memory sessions; \
+                 --data-dir needs a single strategy"
+            );
+            return 2;
+        }
         // the live analogue of the Fig 7/9 sweeps: every strategy on the
         // identical job, busy-seconds + latency per strategy
         match args.get("backend") {
@@ -425,6 +468,11 @@ fn cmd_live(args: &Args) -> i32 {
         args.get_u64("rounds", 5) as u32,
     );
     let mut s = match backend {
+        // --wall paces even the scripted backend on the real clock — the
+        // shape a mid-run `kill -9` + durable resume exercise needs
+        PartyBackend::Scripted if args.get_bool("wall") => {
+            Session::wall().backend(backend)
+        }
         PartyBackend::Scripted => Session::live(),
         PartyBackend::SynthThreads | PartyBackend::XlaThreads => {
             Session::wall().backend(backend)
@@ -436,6 +484,12 @@ fn cmd_live(args: &Args) -> i32 {
         .minibatches(args.get_usize("minibatches", 4))
         .lr(args.get_f64("lr", 0.3) as f32)
         .alpha(args.get_f64("alpha", 0.5));
+    if let Some(dir) = &data_dir {
+        s = s.data_dir(dir).fsync(fsync);
+    }
+    if args.get_bool("resume") {
+        s = s.resume(true);
+    }
     let tel = match telemetry_from_args(args) {
         Ok(t) => t,
         Err(code) => return code,
@@ -510,6 +564,82 @@ fn cmd_live(args: &Args) -> i32 {
         println!("t_pair (XLA fusion path, §5.4): {:.3}ms", o.t_pair_secs * 1e3);
     }
     export_telemetry(&tel)
+}
+
+/// Open a durable data dir, replay its log, and print what survived:
+/// the recovery report, per-topic depths, each job's completed-round
+/// count plus a CRC-32 of its latest fused model (the greppable
+/// `job=N rounds=R model_crc32=0x...` lines the durability smoke
+/// compares across a kill/resume boundary), and checkpoint slots.
+fn cmd_recover(args: &Args) -> i32 {
+    use crate::mq::MessageQueue;
+    use crate::wal::{crc32, FsyncPolicy, WalConfig};
+    let dir = args
+        .get("data-dir")
+        .map(|s| s.to_string())
+        .or_else(|| args.positional.get(1).cloned());
+    let Some(dir) = dir else {
+        eprintln!("recover requires a durable data dir: fljit recover <dir>");
+        return 2;
+    };
+    if !std::path::Path::new(&dir).is_dir() {
+        eprintln!("no durable log at {dir:?}: directory does not exist");
+        return 1;
+    }
+    // read-mostly open: OS-paced syncs, we only append telemetry-free
+    let q = match MessageQueue::durable(WalConfig::new(&dir).fsync(FsyncPolicy::OsOnly)) {
+        Ok(q) => q,
+        Err(e) => {
+            eprintln!("recovery of {dir} failed: {e}");
+            return 1;
+        }
+    };
+    let rec = q.recovery().expect("durable queue always has a recovery report");
+    println!(
+        "recovered {dir}: segments={} records={} bytes={} torn_tail={} \
+         truncated_bytes={} elapsed={:.3}s",
+        rec.segments, rec.records, rec.bytes, rec.torn_tail, rec.truncated_bytes,
+        rec.elapsed_secs
+    );
+    let topics = q.topic_names();
+    if !topics.is_empty() {
+        let mut t = Table::new(&format!("fljit recover — {dir}"), &["topic", "depth"]);
+        for name in &topics {
+            t.row(vec![name.clone(), q.end_offset(name).to_string()]);
+        }
+        t.print();
+    }
+    for name in &topics {
+        let Some(job) = name
+            .strip_prefix("job")
+            .and_then(|r| r.strip_suffix("/models"))
+            .and_then(|j| j.parse::<usize>().ok())
+        else {
+            continue;
+        };
+        let rounds = q.end_offset(name);
+        let crc = q
+            .fetch(name, rounds.saturating_sub(1), 1)
+            .first()
+            .and_then(|m| m.payload.data().map(|d| {
+                let mut bytes = Vec::with_capacity(d.len() * 4);
+                for v in d {
+                    bytes.extend_from_slice(&v.to_le_bytes());
+                }
+                crc32(&bytes)
+            }));
+        match crc {
+            Some(c) => println!("job={job} rounds={rounds} model_crc32=0x{c:08x}"),
+            None => println!("job={job} rounds={rounds} model_crc32=none"),
+        }
+    }
+    let slots = q.checkpoint_slots();
+    if slots.is_empty() {
+        println!("checkpoints: (none)");
+    } else {
+        println!("checkpoints: {}", slots.join(" "));
+    }
+    0
 }
 
 fn cmd_top(args: &Args) -> i32 {
@@ -690,6 +820,39 @@ mod tests {
         );
         assert!(crate::bench::repro_dir().join("BENCH_robustness.json").exists());
         assert_eq!(dispatch(&args("robustness --strategies nope")), 2);
+    }
+
+    #[test]
+    fn recover_roundtrips_a_durable_live_run() {
+        let dir = std::env::temp_dir().join(format!("fljit_cli_recover_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let dir_s = dir.to_string_lossy().to_string();
+        assert_eq!(dispatch(&args("recover")), 2, "recover needs a dir");
+        assert_eq!(dispatch(&args(&format!("recover {dir_s}"))), 1, "missing dir");
+        // a durable live run leaves a recoverable log behind…
+        assert_eq!(
+            dispatch(&args(&format!(
+                "live --strategy jit --parties 3 --rounds 2 --dim 16 \
+                 --scripted --data-dir {dir_s}"
+            ))),
+            0
+        );
+        // …that `fljit recover` replays and reports on
+        assert_eq!(dispatch(&args(&format!("recover {dir_s}"))), 0);
+        assert_eq!(dispatch(&args(&format!("recover --data-dir {dir_s}"))), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn durable_flag_validation() {
+        assert_eq!(dispatch(&args("live --strategy jit --fsync bogus")), 2);
+        assert_eq!(dispatch(&args("live --strategy all --data-dir /tmp/x")), 2);
+        assert_eq!(
+            dispatch(&args("live-broker --policy all --data-dir /tmp/x")),
+            2,
+            "swept policies must not share one durable log"
+        );
+        assert_eq!(dispatch(&args("live-broker --policy deadline --fsync bogus")), 2);
     }
 
     #[test]

@@ -24,6 +24,7 @@ use crate::telemetry::{export, Registry};
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use crate::util::table::Table;
+use crate::wal::FsyncPolicy;
 
 /// Sweep shape knobs (CLI flags map 1:1).
 #[derive(Clone, Debug)]
@@ -53,6 +54,18 @@ pub struct LiveBrokerSweepConfig {
     /// When set, stream telemetry spans into `<dir>/telemetry.jsonl`
     /// during the sweep and write the exposition + Chrome trace after it.
     pub telemetry_dir: Option<String>,
+    /// Durable data plane: persist the session's MQ to this dir
+    /// (single-policy sweeps only — policies must not share one log).
+    pub data_dir: Option<String>,
+    /// Fsync policy for `data_dir`.
+    pub fsync: FsyncPolicy,
+    /// Resume a killed durable run from `data_dir`'s log.
+    pub resume: bool,
+    /// Durable-log replay bench: GB of inline updates to append + scan
+    /// per fsync policy (0 = skip; rows land in the JSON dump).
+    pub replay_gb: f64,
+    /// Update vector length of the replay bench's synthetic records.
+    pub replay_dim: usize,
 }
 
 impl Default for LiveBrokerSweepConfig {
@@ -71,6 +84,11 @@ impl Default for LiveBrokerSweepConfig {
             save_trace: None,
             wall: false,
             telemetry_dir: None,
+            data_dir: None,
+            fsync: FsyncPolicy::default(),
+            resume: false,
+            replay_gb: 0.0,
+            replay_dim: 4096,
         }
     }
 }
@@ -94,6 +112,14 @@ impl LiveBrokerSweepConfig {
             save_trace: args.get("save-trace").map(|s| s.to_string()),
             wall: args.get_bool("wall"),
             telemetry_dir: args.get("telemetry-dir").map(|s| s.to_string()),
+            data_dir: args.get("data-dir").map(|s| s.to_string()),
+            fsync: args
+                .get("fsync")
+                .and_then(|s| FsyncPolicy::parse(s).ok())
+                .unwrap_or_default(),
+            resume: args.get_bool("resume"),
+            replay_gb: args.get_f64("replay-gb", d.replay_gb),
+            replay_dim: args.get_usize("replay-dim", d.replay_dim),
         }
     }
 
@@ -105,7 +131,8 @@ impl LiveBrokerSweepConfig {
         } else {
             Session::live()
         };
-        s.trace(trace)
+        let mut s = s
+            .trace(trace)
             .policy(policy)
             .admission(AdmissionConfig {
                 budget: self.budget.max(1),
@@ -113,7 +140,14 @@ impl LiveBrokerSweepConfig {
             })
             .capacity(self.capacity)
             .seed(self.seed)
-            .dim(self.dim)
+            .dim(self.dim);
+        if let Some(dir) = &self.data_dir {
+            s = s.data_dir(dir).fsync(self.fsync);
+        }
+        if self.resume {
+            s = s.resume(true);
+        }
+        s
     }
 }
 
@@ -152,6 +186,12 @@ pub fn run_sweep(cfg: &LiveBrokerSweepConfig) -> Result<(Vec<Table>, Json)> {
     } else {
         vec![cfg.policy.clone()]
     };
+    if cfg.data_dir.is_some() && policies.len() > 1 {
+        anyhow::bail!(
+            "--data-dir needs a single --policy: swept policies replay the \
+             same trace and would interleave into one durable log"
+        );
+    }
     let trace = build_trace(cfg)?;
     if let Some(path) = &cfg.save_trace {
         trace
@@ -235,7 +275,7 @@ pub fn run_sweep(cfg: &LiveBrokerSweepConfig) -> Result<(Vec<Table>, Json)> {
     if let Some(dir) = &cfg.telemetry_dir {
         export::write_all(&telemetry, dir).context("writing telemetry exports")?;
     }
-    let json = Json::obj(vec![
+    let mut fields = vec![
         ("bench", Json::str("live_broker")),
         ("jobs", Json::num(trace.len() as f64)),
         ("capacity", Json::num(cfg.capacity as f64)),
@@ -244,8 +284,117 @@ pub fn run_sweep(cfg: &LiveBrokerSweepConfig) -> Result<(Vec<Table>, Json)> {
         ("dim", Json::num(cfg.dim as f64)),
         ("wall", Json::Bool(cfg.wall)),
         ("policies", Json::Arr(policies_json)),
-    ]);
+    ];
+    if cfg.replay_gb > 0.0 {
+        let (t, rows) = replay_bench(cfg.replay_gb, cfg.replay_dim)?;
+        tables.push(t);
+        fields.push(("replay", rows));
+    }
+    let json = Json::obj(fields);
     Ok((tables, json))
+}
+
+/// Durable-log replay bench: per fsync policy, append `gb` GB of
+/// synthetic inline updates (vectors of `dim` f32s) to a fresh WAL, then
+/// reopen it and time the recovery scan. The append column is the
+/// fsync-policy trade-off the EXPERIMENTS table documents; the scan
+/// column is pure sequential mmap read and should be policy-independent.
+/// The multi-GB temp dirs are deleted before returning.
+pub fn replay_bench(gb: f64, dim: usize) -> Result<(Table, Json)> {
+    use crate::mq::{Message, Payload};
+    use crate::wal::{RecordRef, Wal, WalConfig};
+    let dim = dim.max(1);
+    let policies = [
+        FsyncPolicy::Always,
+        FsyncPolicy::EveryN(256),
+        FsyncPolicy::OsOnly,
+    ];
+    let target_bytes = (gb * 1e9) as u64;
+    let mut t = Table::new(
+        &format!("durable-log replay bench — {gb} GB of dim-{dim} updates per policy"),
+        &[
+            "fsync",
+            "records",
+            "segments",
+            "fsyncs",
+            "append (s)",
+            "append MB/s",
+            "scan (s)",
+            "scan MB/s",
+        ],
+    );
+    let mut rows = Vec::new();
+    for policy in policies {
+        let dir = std::env::temp_dir().join(format!(
+            "fljit_replay_{}_{}",
+            std::process::id(),
+            policy.name().replace('=', "")
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let (wal, _, _) = Wal::open(WalConfig::new(&dir).fsync(policy))
+            .context("opening replay-bench WAL")?;
+        let data: Vec<f32> = (0..dim).map(|i| i as f32 * 0.5).collect();
+        let mut written = 0u64;
+        let mut records = 0u64;
+        let t0 = std::time::Instant::now();
+        while written < target_bytes {
+            let msg = Message {
+                party: (records % 97) as usize,
+                round: (records / 97) as u32,
+                weight: 1.0,
+                enqueued_at: records,
+                payload: Payload::Inline(data.clone()),
+            };
+            let info = wal
+                .append(RecordRef::Produce {
+                    topic: "replay/updates",
+                    msg: &msg,
+                })
+                .context("replay-bench append")?;
+            written += info.bytes as u64;
+            records += 1;
+        }
+        wal.flush().context("replay-bench flush")?;
+        let stats = wal.stats();
+        let append_secs = t0.elapsed().as_secs_f64();
+        drop(wal);
+        let t1 = std::time::Instant::now();
+        let (reopened, recovered, report) =
+            Wal::open(WalConfig::new(&dir).fsync(policy)).context("replay-bench reopen")?;
+        let scan_secs = t1.elapsed().as_secs_f64();
+        anyhow::ensure!(
+            recovered.len() as u64 == records && !report.torn_tail,
+            "replay bench lost records: wrote {records}, recovered {} (torn={})",
+            recovered.len(),
+            report.torn_tail
+        );
+        drop(recovered);
+        drop(reopened);
+        let _ = std::fs::remove_dir_all(&dir);
+        let mb = written as f64 / 1e6;
+        t.row(vec![
+            policy.name(),
+            records.to_string(),
+            stats.segments.to_string(),
+            stats.fsyncs.to_string(),
+            format!("{append_secs:.2}"),
+            format!("{:.1}", mb / append_secs.max(1e-9)),
+            format!("{scan_secs:.2}"),
+            format!("{:.1}", mb / scan_secs.max(1e-9)),
+        ]);
+        rows.push(Json::obj(vec![
+            ("fsync", Json::str(&policy.name())),
+            ("records", Json::num(records as f64)),
+            ("bytes", Json::num(written as f64)),
+            ("segments", Json::num(stats.segments as f64)),
+            ("fsyncs", Json::num(stats.fsyncs as f64)),
+            ("append_secs", Json::num(append_secs)),
+            ("append_mb_per_sec", Json::num(mb / append_secs.max(1e-9))),
+            ("scan_secs", Json::num(scan_secs)),
+            ("scan_mb_per_sec", Json::num(mb / scan_secs.max(1e-9))),
+        ]));
+    }
+    Ok((t, Json::Arr(rows)))
 }
 
 #[cfg(test)]
@@ -323,6 +472,52 @@ mod tests {
             ..LiveBrokerSweepConfig::default()
         })
         .is_err());
+    }
+
+    #[test]
+    fn durable_sweep_needs_single_policy_and_persists() {
+        let dir = std::env::temp_dir().join(format!("fljit_lb_durable_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = LiveBrokerSweepConfig {
+            jobs: 2,
+            max_parties: 4,
+            capacity: 2,
+            budget: 4,
+            mean_interarrival_secs: 2.0,
+            seed: 13,
+            dim: 16,
+            data_dir: Some(dir.to_string_lossy().to_string()),
+            ..Default::default()
+        };
+        assert!(run_sweep(&cfg).is_err(), "policy 'all' must not share one log");
+        let one = LiveBrokerSweepConfig {
+            policy: "deadline".to_string(),
+            ..cfg.clone()
+        };
+        run_sweep(&one).expect("durable single-policy sweep");
+        // the data plane survives the sweep: reopening replays its topics
+        let q = crate::mq::MessageQueue::durable(crate::wal::WalConfig::new(&dir))
+            .expect("reopen");
+        assert!(q.produced() > 0, "replay restored the sweep's messages");
+        assert!(!q.topic_names().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn replay_bench_rows_cover_every_fsync_policy() {
+        // tiny: 2 MB per policy — the CI-scale invocation
+        let (_, rows) = replay_bench(0.002, 64).expect("replay bench");
+        let rows = rows.as_arr().unwrap().clone();
+        assert_eq!(rows.len(), 3, "always, every=256, os");
+        for r in &rows {
+            assert!(r.get("records").as_f64().unwrap() > 0.0);
+            assert!(r.get("append_mb_per_sec").as_f64().unwrap() > 0.0);
+            assert!(r.get("scan_mb_per_sec").as_f64().unwrap() > 0.0);
+        }
+        assert!(
+            rows[0].get("fsyncs").as_f64().unwrap() > rows[2].get("fsyncs").as_f64().unwrap(),
+            "fsync=always must sync more often than fsync=os"
+        );
     }
 
     #[test]

@@ -80,6 +80,7 @@ use crate::sim::secs;
 use crate::telemetry::Registry;
 use crate::util::json::Json;
 use crate::util::stats::percentile;
+use crate::wal::{FsyncPolicy, WalConfig};
 
 // ---------------------------------------------------------------------------
 // events
@@ -595,6 +596,8 @@ pub struct Session {
     alpha: f64,
     kill_after_fuses: Option<u64>,
     mq: Option<Arc<MessageQueue>>,
+    data_dir: Option<std::path::PathBuf>,
+    fsync: FsyncPolicy,
     resume: bool,
     solo_baselines: bool,
     sink: EventSink,
@@ -618,6 +621,8 @@ impl Session {
             alpha: 0.5,
             kill_after_fuses: None,
             mq: None,
+            data_dir: None,
+            fsync: FsyncPolicy::default(),
             resume: false,
             solo_baselines: false,
             sink: EventSink::none(),
@@ -776,10 +781,28 @@ impl Session {
         self
     }
 
-    /// Run against an explicit shared MQ — required for resume (a fresh
-    /// private MQ is created otherwise, so nothing survives the run).
+    /// Run against an explicit shared MQ — required for in-process
+    /// resume (a fresh private MQ is created otherwise, so nothing
+    /// survives the run). For cross-process durability use
+    /// [`data_dir`](Session::data_dir) instead.
     pub fn on(mut self, mq: &Arc<MessageQueue>) -> Session {
         self.mq = Some(Arc::clone(mq));
+        self
+    }
+
+    /// Put the data plane on disk: the session runs on a durable MQ
+    /// (segmented mmap WAL) rooted at `dir`. Combined with
+    /// [`resume`](Session::resume), a session killed with `kill -9`
+    /// picks up from the on-disk log + §5.5 checkpoints. Live/wall only.
+    pub fn data_dir<P: Into<std::path::PathBuf>>(mut self, dir: P) -> Session {
+        self.data_dir = Some(dir.into());
+        self
+    }
+
+    /// Fsync policy for [`data_dir`](Session::data_dir) (default
+    /// `every=128`; inert without a data dir).
+    pub fn fsync(mut self, policy: FsyncPolicy) -> Session {
+        self.fsync = policy;
         self
     }
 
@@ -862,7 +885,15 @@ impl Session {
             }
         }
         match self.mode {
-            Mode::Sim => self.run_sim(),
+            Mode::Sim => {
+                if self.data_dir.is_some() {
+                    return Err(anyhow!(
+                        "the Sim regime has no data plane to persist: \
+                         .data_dir(..) only applies to live()/wall() sessions"
+                    ));
+                }
+                self.run_sim()
+            }
             Mode::Live | Mode::Wall => self.run_live_mode(),
         }
     }
@@ -980,17 +1011,28 @@ impl Session {
                 "multi-job sessions run scripted parties (thread backends are single-job)"
             ));
         }
-        if self.resume && self.mq.is_none() {
+        if self.resume && self.mq.is_none() && self.data_dir.is_none() {
             return Err(anyhow!(
                 "resume needs the MQ the crashed run wrote to: pass it with .on(&mq) \
+                 or point .data_dir(..) at its durable log \
                  (a fresh private MQ has no §5.5 state to restore)"
             ));
         }
+        if self.mq.is_some() && self.data_dir.is_some() {
+            return Err(anyhow!(
+                "pass either .on(&mq) or .data_dir(..), not both \
+                 (an explicit MQ already decides where the data plane lives)"
+            ));
+        }
         let capacity = self.capacity.unwrap_or_else(|| self.default_capacity()).max(1);
-        let mq = self
-            .mq
-            .clone()
-            .unwrap_or_else(|| Arc::new(MessageQueue::new()));
+        let mq = match (&self.mq, &self.data_dir) {
+            (Some(mq), _) => Arc::clone(mq),
+            (None, Some(dir)) => Arc::new(
+                MessageQueue::durable(WalConfig::new(dir).fsync(self.fsync))
+                    .map_err(|e| anyhow!("opening durable data plane: {e}"))?,
+            ),
+            (None, None) => Arc::new(MessageQueue::new()),
+        };
         mq.set_telemetry(&self.telemetry);
         let mut engines: Vec<JobEngine> = Vec::with_capacity(self.arrivals.len());
         let mut weights: Vec<Vec<f32>> = Vec::with_capacity(self.arrivals.len());

@@ -39,4 +39,5 @@ pub mod sim;
 pub mod store;
 pub mod telemetry;
 pub mod util;
+pub mod wal;
 pub mod workloads;

@@ -19,8 +19,8 @@
 //! Two interchangeable priority-queue backends share that contract:
 //!
 //! * [`QueueKind::Heap`] — one global `BinaryHeap`, the reference
-//!   implementation (and the default).
-//! * [`QueueKind::Bucket`] — a two-level calendar queue: a wheel of
+//!   implementation.
+//! * [`QueueKind::Bucket`] — the default: a two-level calendar queue: a wheel of
 //!   δ-tick-sized buckets (each a small heap) plus a `BTreeMap` overflow
 //!   for far-future events. Inserts and pops touch one small bucket
 //!   instead of a multi-megabyte heap, which is what the cancel/peek-heavy
@@ -220,12 +220,18 @@ impl BucketQueue {
 // ---------------------------------------------------------------------------
 
 /// Which priority-queue backend an [`EventQueue`] runs on.
+///
+/// `Bucket` is the default per the decision rule in EXPERIMENTS.md: the
+/// heap ≡ bucket ordering-equivalence property stays pinned at tier-1,
+/// and the bucket backend is the one built for the cancel/peek-heavy
+/// scheduler profile. `Heap` remains the reference implementation.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum QueueKind {
-    /// Single global binary heap (reference implementation, default).
-    #[default]
+    /// Single global binary heap (reference implementation).
     Heap,
-    /// Two-level bucket/calendar queue (cancel/peek-heavy profile).
+    /// Two-level bucket/calendar queue (cancel/peek-heavy profile,
+    /// default).
+    #[default]
     Bucket,
 }
 

@@ -15,6 +15,7 @@ use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::Mutex;
 
+use crate::mq::Payload;
 use crate::util::json::Json;
 
 /// A versioned document.
@@ -187,9 +188,17 @@ impl MetaStore {
 }
 
 /// Object store for model blobs (cloud-object-store stand-in).
+///
+/// By-reference MQ payloads ([`Payload::Ref`]) round-trip through here:
+/// [`put_payload`](ObjectStore::put_payload) parks a blob and returns the
+/// `Ref` to enqueue, [`resolve`](ObjectStore::resolve) dereferences any
+/// payload back to its data. With [`persistent`](ObjectStore::persistent)
+/// the blobs live on disk too, so a `Ref` recovered from the WAL after a
+/// `kill -9` still dereferences.
 #[derive(Debug, Default)]
 pub struct ObjectStore {
     inner: Mutex<ObjectStoreInner>,
+    blob_dir: Option<PathBuf>,
 }
 
 #[derive(Debug, Default)]
@@ -199,28 +208,100 @@ struct ObjectStoreInner {
     bytes_got: u64,
 }
 
+/// Keys may contain path separators; file names must not. Keep the key
+/// readable and make it unique with a crc32 suffix.
+fn blob_file(dir: &std::path::Path, key: &str) -> PathBuf {
+    let safe: String = key
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect();
+    dir.join(format!("{safe}-{:08x}.f32", crate::wal::crc32(key.as_bytes())))
+}
+
 impl ObjectStore {
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// A store that mirrors every blob to `<dir>` as little-endian f32
+    /// files, and reads back blobs it doesn't hold in memory — the
+    /// durable sibling of the in-memory store.
+    pub fn persistent<P: Into<PathBuf>>(dir: P) -> Result<Self, StoreError> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir).map_err(|e| StoreError::Io(e.to_string()))?;
+        Ok(Self {
+            inner: Mutex::new(ObjectStoreInner::default()),
+            blob_dir: Some(dir),
+        })
+    }
+
     pub fn put(&self, key: &str, data: Vec<f32>) {
         let mut g = self.inner.lock().unwrap();
         g.bytes_put += (data.len() * 4) as u64;
+        if let Some(dir) = &self.blob_dir {
+            let mut bytes = Vec::with_capacity(data.len() * 4);
+            for x in &data {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+            if let Err(e) = std::fs::write(blob_file(dir, key), bytes) {
+                panic!("persistent object store write failed for {key:?}: {e}");
+            }
+        }
         g.blobs.insert(key.to_string(), data);
+    }
+
+    /// Park `data` under `key` and return the by-reference payload to
+    /// enqueue in its place.
+    pub fn put_payload(&self, key: &str, data: Vec<f32>) -> Payload {
+        let size_bytes = (data.len() * 4) as u64;
+        self.put(key, data);
+        Payload::Ref {
+            key: key.to_string(),
+            size_bytes,
+        }
     }
 
     pub fn get(&self, key: &str) -> Option<Vec<f32>> {
         let mut g = self.inner.lock().unwrap();
-        let v = g.blobs.get(key).cloned();
+        let mut v = g.blobs.get(key).cloned();
+        if v.is_none() {
+            // Not resident (e.g. a fresh process after a crash): fall
+            // back to the blob file and re-admit it.
+            if let Some(dir) = &self.blob_dir {
+                if let Ok(bytes) = std::fs::read(blob_file(dir, key)) {
+                    let data: Vec<f32> = bytes
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    g.blobs.insert(key.to_string(), data.clone());
+                    v = Some(data);
+                }
+            }
+        }
         if let Some(ref d) = v {
             g.bytes_got += (d.len() * 4) as u64;
         }
         v
     }
 
+    /// Dereference a payload: inline/mapped data is copied out, `Ref`
+    /// fetches the blob, `Sim` has no data.
+    pub fn resolve(&self, payload: &Payload) -> Option<Vec<f32>> {
+        match payload {
+            Payload::Ref { key, .. } => self.get(key),
+            p => p.data().map(|d| d.to_vec()),
+        }
+    }
+
     pub fn delete(&self, key: &str) -> bool {
-        self.inner.lock().unwrap().blobs.remove(key).is_some()
+        let mut g = self.inner.lock().unwrap();
+        let mem = g.blobs.remove(key).is_some();
+        let disk = self
+            .blob_dir
+            .as_ref()
+            .map(|dir| std::fs::remove_file(blob_file(dir, key)).is_ok())
+            .unwrap_or(false);
+        mem || disk
     }
 
     pub fn len(&self) -> usize {
@@ -307,5 +388,68 @@ mod tests {
         assert!(o.get("missing").is_none());
         assert!(o.delete("m1"));
         assert!(o.is_empty());
+    }
+
+    #[test]
+    fn ref_payload_roundtrips_through_store_and_queue() {
+        use crate::mq::{Message, MessageQueue};
+        let o = ObjectStore::new();
+        let data = vec![1.0f32, -2.5, 3.25];
+        let payload = o.put_payload("job0/round1/p7", data.clone());
+        assert_eq!(payload.size_bytes(), 12, "ref carries the blob size");
+        let q = MessageQueue::new();
+        q.produce(
+            "job0/round1/updates",
+            Message {
+                party: 7,
+                round: 1,
+                weight: 1.0,
+                enqueued_at: 0,
+                payload,
+            },
+        );
+        assert_eq!(q.resident_bytes(), 12, "sizing path no longer inert");
+        let m = q.fetch("job0/round1/updates", 0, 1).remove(0);
+        assert!(m.payload.data().is_none(), "ref has no inline data");
+        assert_eq!(o.resolve(&m.payload).unwrap(), data, "deref via the store");
+        // resolve is uniform across payload kinds
+        assert_eq!(
+            o.resolve(&Payload::Inline(vec![9.0])).unwrap(),
+            vec![9.0f32]
+        );
+        assert!(o.resolve(&Payload::Sim { size_bytes: 8 }).is_none());
+    }
+
+    #[test]
+    fn persistent_object_store_survives_reopen() {
+        let dir = std::env::temp_dir().join(format!("fljit_blobs_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let data = vec![0.5f32; 16];
+        {
+            let o = ObjectStore::persistent(&dir).unwrap();
+            let p = o.put_payload("ckpt/partial", data.clone());
+            assert_eq!(
+                p,
+                Payload::Ref {
+                    key: "ckpt/partial".into(),
+                    size_bytes: 64
+                }
+            );
+        }
+        // Fresh store over the same dir (a revived aggregator): the blob
+        // comes back from disk on demand.
+        let o2 = ObjectStore::persistent(&dir).unwrap();
+        assert!(o2.is_empty(), "nothing resident yet");
+        assert_eq!(
+            o2.resolve(&Payload::Ref {
+                key: "ckpt/partial".into(),
+                size_bytes: 64
+            })
+            .unwrap(),
+            data
+        );
+        assert!(o2.delete("ckpt/partial"));
+        assert!(o2.get("ckpt/partial").is_none(), "gone from disk too");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -7,7 +7,7 @@
 //! named counters, gauges and fixed-bucket histograms with per-job /
 //! per-strategy label scoping, plus structured [`SpanKind`] spans
 //! (`round`, `fuse`, `checkpoint`, `deploy`, `preempt`, `admission_wait`,
-//! `party_wait`) recorded as begin/end pairs.
+//! `party_wait`, `recovery`) recorded as begin/end pairs.
 //!
 //! **Time regime neutrality.** The registry never reads a clock: every
 //! record call takes its timestamp *in* as a [`Time`] (µs). Simulation
@@ -61,6 +61,9 @@ pub enum SpanKind {
     AdmissionWait,
     /// One party's round latency, round start → update arrival.
     PartyWait,
+    /// Durable data-plane recovery: WAL open → replay complete
+    /// (`detail` = records recovered).
+    Recovery,
 }
 
 impl SpanKind {
@@ -73,10 +76,11 @@ impl SpanKind {
             SpanKind::Preempt => "preempt",
             SpanKind::AdmissionWait => "admission_wait",
             SpanKind::PartyWait => "party_wait",
+            SpanKind::Recovery => "recovery",
         }
     }
 
-    pub const ALL: [SpanKind; 7] = [
+    pub const ALL: [SpanKind; 8] = [
         SpanKind::Round,
         SpanKind::Fuse,
         SpanKind::Checkpoint,
@@ -84,6 +88,7 @@ impl SpanKind {
         SpanKind::Preempt,
         SpanKind::AdmissionWait,
         SpanKind::PartyWait,
+        SpanKind::Recovery,
     ];
 }
 

@@ -1,0 +1,251 @@
+//! Minimal memory-mapped file wrapper over raw `mmap(2)`.
+//!
+//! The container builds with no external crates beyond the vendored
+//! workspace members, so this speaks the libc ABI directly (std already
+//! links libc on unix). Only what the WAL needs: map a file shared
+//! read/write at a fixed capacity, read it back, flush dirty pages with
+//! `msync`, unmap on drop. Non-unix targets get a heap-buffer fallback
+//! with write-through to the file — same API and aliasing discipline, no
+//! page-cache zero-copy (the repo's primary target is linux).
+
+use std::fs::{File, OpenOptions};
+use std::io;
+use std::path::{Path, PathBuf};
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const PROT_WRITE: c_int = 2;
+    pub const MAP_SHARED: c_int = 1;
+    #[cfg(target_os = "macos")]
+    pub const MS_SYNC: c_int = 0x10;
+    #[cfg(not(target_os = "macos"))]
+    pub const MS_SYNC: c_int = 4;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+        pub fn msync(addr: *mut c_void, len: usize, flags: c_int) -> c_int;
+    }
+}
+
+/// A file mapped shared into the address space at a fixed length.
+///
+/// Writes go through [`write_at`](MmapFile::write_at) (single appender,
+/// serialized by the WAL's lock); reads through
+/// [`as_slice`](MmapFile::as_slice). Readers only ever dereference bytes
+/// below the published append cursor, writers only ever touch bytes at or
+/// above it, and the cursor is published under the same lock — so the
+/// `&self` raw-pointer writes never race a live read.
+pub struct MmapFile {
+    /// Base of the mapping (unix) or of a leaked heap buffer (fallback).
+    ptr: *mut u8,
+    len: usize,
+    file: File,
+    path: PathBuf,
+    writable: bool,
+}
+
+// SAFETY: the mapping itself is plain memory; all mutation is serialized
+// by the owning WAL's mutex (see type-level comment).
+unsafe impl Send for MmapFile {}
+unsafe impl Sync for MmapFile {}
+
+impl std::fmt::Debug for MmapFile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MmapFile")
+            .field("path", &self.path)
+            .field("len", &self.len)
+            .field("writable", &self.writable)
+            .finish()
+    }
+}
+
+impl MmapFile {
+    /// Open (create if missing) `path`, grow it to exactly `len` bytes
+    /// (new bytes read as zero — the WAL's end-of-log sentinel), and map
+    /// it shared read+write.
+    pub fn create_rw(path: &Path, len: usize) -> io::Result<MmapFile> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .open(path)?;
+        file.set_len(len as u64)?;
+        Self::map(file, path, len, true)
+    }
+
+    /// Map an existing file read-only at its current on-disk length.
+    pub fn open_ro(path: &Path) -> io::Result<MmapFile> {
+        let file = OpenOptions::new().read(true).open(path)?;
+        let len = file.metadata()?.len() as usize;
+        Self::map(file, path, len, false)
+    }
+
+    #[cfg(unix)]
+    fn map(file: File, path: &Path, len: usize, writable: bool) -> io::Result<MmapFile> {
+        use std::os::unix::io::AsRawFd;
+        let ptr = if len == 0 {
+            std::ptr::null_mut()
+        } else {
+            let prot = if writable {
+                sys::PROT_READ | sys::PROT_WRITE
+            } else {
+                sys::PROT_READ
+            };
+            let p = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    prot,
+                    sys::MAP_SHARED,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if p as isize == -1 {
+                return Err(io::Error::last_os_error());
+            }
+            p as *mut u8
+        };
+        Ok(MmapFile {
+            ptr,
+            len,
+            file,
+            path: path.to_path_buf(),
+            writable,
+        })
+    }
+
+    #[cfg(not(unix))]
+    fn map(mut file: File, path: &Path, len: usize, writable: bool) -> io::Result<MmapFile> {
+        use std::io::{Read, Seek, SeekFrom};
+        let mut buf = vec![0u8; len].into_boxed_slice();
+        file.seek(SeekFrom::Start(0))?;
+        let mut read = 0;
+        while read < len {
+            let n = file.read(&mut buf[read..])?;
+            if n == 0 {
+                break;
+            }
+            read += n;
+        }
+        let ptr = if len == 0 {
+            std::ptr::null_mut()
+        } else {
+            Box::into_raw(buf) as *mut u8
+        };
+        Ok(MmapFile {
+            ptr,
+            len,
+            file,
+            path: path.to_path_buf(),
+            writable,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// The whole mapping as a byte slice.
+    pub fn as_slice(&self) -> &[u8] {
+        if self.len == 0 {
+            &[]
+        } else {
+            // SAFETY: ptr..ptr+len is live for the life of self; mutation
+            // discipline is documented on the type.
+            unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+        }
+    }
+
+    /// Write `bytes` at `off`. Callers serialize via the WAL lock.
+    pub fn write_at(&self, off: usize, bytes: &[u8]) {
+        assert!(self.writable, "write to read-only mapping");
+        assert!(off + bytes.len() <= self.len, "mmap write out of bounds");
+        if bytes.is_empty() {
+            return;
+        }
+        // SAFETY: in-bounds (asserted above); serialized by the WAL lock;
+        // readers never dereference past the append cursor.
+        unsafe {
+            std::ptr::copy_nonoverlapping(bytes.as_ptr(), self.ptr.add(off), bytes.len());
+        }
+        #[cfg(not(unix))]
+        {
+            use std::io::{Seek, SeekFrom, Write};
+            let mut f = &self.file;
+            let _ = f.seek(SeekFrom::Start(off as u64));
+            let _ = f.write_all(bytes);
+        }
+    }
+
+    /// Flush dirty pages of the whole mapping to the file (`msync` with
+    /// `MS_SYNC`). Syncing the full range keeps the address page-aligned
+    /// on every page size.
+    pub fn sync(&self) -> io::Result<()> {
+        #[cfg(unix)]
+        {
+            if self.len == 0 {
+                return Ok(());
+            }
+            let rc = unsafe {
+                sys::msync(
+                    self.ptr as *mut std::os::raw::c_void,
+                    self.len,
+                    sys::MS_SYNC,
+                )
+            };
+            if rc != 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+        #[cfg(not(unix))]
+        {
+            self.file.sync_data()
+        }
+    }
+
+    /// Shrink the backing file to `len` bytes (sealing a segment at its
+    /// used length). The mapping itself stays at full size; callers must
+    /// not touch bytes past the new end afterwards.
+    pub fn truncate_file(&self, len: usize) -> io::Result<()> {
+        self.file.set_len(len as u64)
+    }
+}
+
+impl Drop for MmapFile {
+    fn drop(&mut self) {
+        if self.ptr.is_null() {
+            return;
+        }
+        #[cfg(unix)]
+        unsafe {
+            sys::munmap(self.ptr as *mut std::os::raw::c_void, self.len);
+        }
+        #[cfg(not(unix))]
+        unsafe {
+            drop(Box::from_raw(std::slice::from_raw_parts_mut(
+                self.ptr, self.len,
+            )));
+        }
+    }
+}

@@ -1,0 +1,1227 @@
+//! Durable data plane: a segmented, memory-mapped, append-only log.
+//!
+//! The paper's JIT scheduler kills and revives aggregators mid-job and
+//! leans on §5.5 checkpoints plus a replayable update log to make that
+//! safe. This module is the storage engine under [`crate::mq`]: every
+//! queue mutation (produce, checkpoint, commit, topic drop) becomes one
+//! **length-prefixed, CRC32-framed record** appended to a preallocated,
+//! `mmap`-backed segment file, so a `kill -9` at any instruction boundary
+//! leaves a log that recovers to exactly the acknowledged prefix.
+//!
+//! Layout per segment (`NNNNNNNNNNNN.wal`, fixed-capacity, zero-filled):
+//!
+//! ```text
+//! [magic "FLJITWAL" | version u32 | reserved u32]          16-byte header
+//! [len u32 | crc32(body) u32 | body | pad→4B] ...          frames
+//! [zeros...]                                               unwritten tail
+//! ```
+//!
+//! * `len == 0` (the preallocated zero-fill) marks end-of-data — no
+//!   scan-past-the-end ambiguity.
+//! * Frames are 4-byte aligned and inline `f32` payload data lands
+//!   4-byte aligned inside the body, so recovery hands back
+//!   **zero-copy** [`MappedSlice`] views straight into the mapping.
+//! * Recovery distinguishes a **torn tail** (a partially written final
+//!   record: frame overruns the written region, or CRC mismatch with
+//!   nothing but zeros after it) — truncated and logged — from
+//!   **mid-log corruption** (bad frame with real data after it), which
+//!   is a hard [`WalError::Corrupt`] naming segment and offset: no
+//!   silent skips.
+//!
+//! Durability knob: [`FsyncPolicy`] — `msync` every append, every N
+//! appends, or never (OS page cache only). A SIGKILL'd process survives
+//! all three (dirty pages belong to the kernel, not the process); the
+//! policy only changes the window lost to power failure. Segments are
+//! sealed (synced + truncated to used length) on rollover.
+
+mod mmap;
+
+pub use mmap::MmapFile;
+
+use std::fmt;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::mq::{CheckpointState, Message, Payload};
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE 802.3, reflected) — hand-rolled, no crates in the container.
+// ---------------------------------------------------------------------------
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// CRC32 (IEEE) of `data` — the frame checksum, also reused by
+/// `fljit recover` to fingerprint recovered models.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = !0u32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// ---------------------------------------------------------------------------
+// errors
+// ---------------------------------------------------------------------------
+
+/// WAL failure: I/O, or an unambiguously corrupt record.
+#[derive(Debug)]
+pub enum WalError {
+    Io(io::Error),
+    /// A frame that cannot be a torn tail: bad CRC / impossible length /
+    /// undecodable body with real data after it. Recovery refuses to
+    /// skip it — that would silently drop acknowledged writes.
+    Corrupt {
+        segment: PathBuf,
+        offset: usize,
+        detail: String,
+    },
+}
+
+impl fmt::Display for WalError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WalError::Io(e) => write!(f, "wal io error: {e}"),
+            WalError::Corrupt {
+                segment,
+                offset,
+                detail,
+            } => write!(
+                f,
+                "wal corrupt record in {} at byte {offset}: {detail}",
+                segment.display()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for WalError {}
+
+impl From<io::Error> for WalError {
+    fn from(e: io::Error) -> Self {
+        WalError::Io(e)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// config
+// ---------------------------------------------------------------------------
+
+/// When to force dirty log pages to stable storage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// `msync(MS_SYNC)` after every append — survives power loss, pays
+    /// a storage round-trip per record.
+    Always,
+    /// Sync every N appends — bounded power-loss window of N records.
+    EveryN(u32),
+    /// Never sync explicitly; the OS flushes on its own schedule.
+    /// Still survives `kill -9` (page cache outlives the process) —
+    /// only power loss can lose the tail.
+    OsOnly,
+}
+
+impl Default for FsyncPolicy {
+    fn default() -> Self {
+        FsyncPolicy::EveryN(128)
+    }
+}
+
+impl FsyncPolicy {
+    /// Parse a CLI spelling: `always`, `os`, or `every=N` / bare `N`.
+    pub fn parse(s: &str) -> Result<FsyncPolicy, String> {
+        match s {
+            "always" => Ok(FsyncPolicy::Always),
+            "os" | "never" => Ok(FsyncPolicy::OsOnly),
+            other => {
+                let n = other.strip_prefix("every=").unwrap_or(other);
+                n.parse::<u32>()
+                    .ok()
+                    .filter(|&n| n > 0)
+                    .map(FsyncPolicy::EveryN)
+                    .ok_or_else(|| {
+                        format!("bad fsync policy {other:?} (want always|os|every=N)")
+                    })
+            }
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            FsyncPolicy::Always => "always".into(),
+            FsyncPolicy::EveryN(n) => format!("every={n}"),
+            FsyncPolicy::OsOnly => "os".into(),
+        }
+    }
+}
+
+/// Where and how the log lives on disk.
+#[derive(Clone, Debug)]
+pub struct WalConfig {
+    pub dir: PathBuf,
+    /// Segment capacity; a record larger than this gets a dedicated
+    /// exactly-sized segment.
+    pub segment_bytes: usize,
+    pub fsync: FsyncPolicy,
+}
+
+impl WalConfig {
+    pub fn new<P: Into<PathBuf>>(dir: P) -> WalConfig {
+        WalConfig {
+            dir: dir.into(),
+            segment_bytes: 64 << 20,
+            fsync: FsyncPolicy::default(),
+        }
+    }
+
+    pub fn segment_bytes(mut self, n: usize) -> WalConfig {
+        self.segment_bytes = n.max(MIN_SEGMENT_BYTES);
+        self
+    }
+
+    pub fn fsync(mut self, p: FsyncPolicy) -> WalConfig {
+        self.fsync = p;
+        self
+    }
+}
+
+// ---------------------------------------------------------------------------
+// records
+// ---------------------------------------------------------------------------
+
+/// A decoded log record (recovery output).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Record {
+    Produce { topic: String, msg: Message },
+    Checkpoint { slot: String, state: CheckpointState },
+    Commit { topic: String, group: String, offset: u64 },
+    DropTopic { topic: String },
+    ClearCheckpoint { slot: String },
+}
+
+/// A borrowed record for appends — no payload clone on the produce path.
+#[derive(Clone, Copy, Debug)]
+pub enum RecordRef<'a> {
+    Produce { topic: &'a str, msg: &'a Message },
+    Checkpoint { slot: &'a str, state: &'a CheckpointState },
+    Commit { topic: &'a str, group: &'a str, offset: u64 },
+    DropTopic { topic: &'a str },
+    ClearCheckpoint { slot: &'a str },
+}
+
+const KIND_PRODUCE: u32 = 0;
+const KIND_CHECKPOINT: u32 = 1;
+const KIND_COMMIT: u32 = 2;
+const KIND_DROP_TOPIC: u32 = 3;
+const KIND_CLEAR_CKPT: u32 = 4;
+
+const PAYLOAD_INLINE: u32 = 0;
+const PAYLOAD_REF: u32 = 1;
+const PAYLOAD_SIM: u32 = 2;
+
+// ---------------------------------------------------------------------------
+// zero-copy payload view
+// ---------------------------------------------------------------------------
+
+/// An `f32` slice living inside a mapped segment: recovery's zero-copy
+/// answer to `Payload::Inline`. Holds the mapping alive via `Arc`; the
+/// byte offset is 4-aligned by the frame layout (checked at
+/// construction — misaligned data falls back to an owned copy).
+#[derive(Clone)]
+pub struct MappedSlice {
+    map: Arc<MmapFile>,
+    byte_off: usize,
+    len: usize,
+}
+
+impl MappedSlice {
+    fn new(map: Arc<MmapFile>, byte_off: usize, len: usize) -> Option<MappedSlice> {
+        let end = byte_off.checked_add(len.checked_mul(4)?)?;
+        if end > map.len() || byte_off % 4 != 0 {
+            return None;
+        }
+        Some(MappedSlice { map, byte_off, len })
+    }
+
+    /// Number of `f32`s.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The mapped data. Zero-copy: points into the segment mapping.
+    pub fn as_f32s(&self) -> &[f32] {
+        if self.len == 0 {
+            return &[];
+        }
+        let bytes = &self.map.as_slice()[self.byte_off..self.byte_off + self.len * 4];
+        // SAFETY: in-bounds and 4-aligned (checked in `new`); f32 has no
+        // invalid bit patterns; the region is a sealed prefix of the log
+        // that no writer revisits.
+        unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const f32, self.len) }
+    }
+}
+
+impl fmt::Debug for MappedSlice {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("MappedSlice")
+            .field("segment", &self.map.path())
+            .field("byte_off", &self.byte_off)
+            .field("len", &self.len)
+            .finish()
+    }
+}
+
+impl PartialEq for MappedSlice {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_f32s() == other.as_f32s()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// encode / decode
+// ---------------------------------------------------------------------------
+
+const MAGIC: &[u8; 8] = b"FLJITWAL";
+const VERSION: u32 = 1;
+const HEADER_LEN: usize = 16;
+const FRAME_HEADER: usize = 8;
+const MIN_SEGMENT_BYTES: usize = 4096;
+
+fn pad4(n: usize) -> usize {
+    (n + 3) & !3
+}
+
+struct Enc {
+    b: Vec<u8>,
+}
+
+impl Enc {
+    fn new() -> Enc {
+        Enc { b: Vec::new() }
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.b.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.b.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f32(&mut self, v: f32) {
+        self.b.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.b.extend_from_slice(s.as_bytes());
+        while self.b.len() % 4 != 0 {
+            self.b.push(0);
+        }
+    }
+
+    fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        debug_assert_eq!(self.b.len() % 4, 0, "f32 data must land 4-aligned");
+        for x in v {
+            self.f32(*x);
+        }
+    }
+}
+
+fn encode_record(rec: RecordRef<'_>) -> Vec<u8> {
+    let mut e = Enc::new();
+    match rec {
+        RecordRef::Produce { topic, msg } => {
+            e.u32(KIND_PRODUCE);
+            e.str(topic);
+            e.u64(msg.party as u64);
+            e.u32(msg.round);
+            e.f32(msg.weight);
+            e.u64(msg.enqueued_at);
+            match &msg.payload {
+                Payload::Inline(v) => {
+                    e.u32(PAYLOAD_INLINE);
+                    e.f32s(v);
+                }
+                Payload::Mapped(m) => {
+                    e.u32(PAYLOAD_INLINE);
+                    e.f32s(m.as_f32s());
+                }
+                Payload::Ref { key, size_bytes } => {
+                    e.u32(PAYLOAD_REF);
+                    e.str(key);
+                    e.u64(*size_bytes);
+                }
+                Payload::Sim { size_bytes } => {
+                    e.u32(PAYLOAD_SIM);
+                    e.u64(*size_bytes);
+                }
+            }
+        }
+        RecordRef::Checkpoint { slot, state } => {
+            e.u32(KIND_CHECKPOINT);
+            e.str(slot);
+            match &state.acc {
+                Some(acc) => {
+                    e.u32(1);
+                    e.f32s(acc);
+                }
+                None => e.u32(0),
+            }
+            e.f32(state.weight);
+            e.u64(state.n_merged as u64);
+            e.u64(state.consumed_to as u64);
+            e.u64(state.saved_at);
+        }
+        RecordRef::Commit {
+            topic,
+            group,
+            offset,
+        } => {
+            e.u32(KIND_COMMIT);
+            e.str(topic);
+            e.str(group);
+            e.u64(offset);
+        }
+        RecordRef::DropTopic { topic } => {
+            e.u32(KIND_DROP_TOPIC);
+            e.str(topic);
+        }
+        RecordRef::ClearCheckpoint { slot } => {
+            e.u32(KIND_CLEAR_CKPT);
+            e.str(slot);
+        }
+    }
+    e.b
+}
+
+struct Dec<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(b: &'a [u8]) -> Dec<'a> {
+        Dec { b, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.b.len() {
+            return Err(format!(
+                "body truncated: want {n} bytes at {}, have {}",
+                self.pos,
+                self.b.len() - self.pos
+            ));
+        }
+        let out = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32, String> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String, String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        let s = std::str::from_utf8(bytes)
+            .map_err(|_| "non-utf8 string".to_string())?
+            .to_string();
+        self.take(pad4(n) - n)?;
+        Ok(s)
+    }
+
+    /// Decode a counted f32 run: zero-copy [`MappedSlice`] when the
+    /// absolute position is 4-aligned, owned copy otherwise.
+    fn f32_run(
+        &mut self,
+        map: &Arc<MmapFile>,
+        body_abs: usize,
+    ) -> Result<Result<MappedSlice, Vec<f32>>, String> {
+        let n = self.u32()? as usize;
+        let abs = body_abs + self.pos;
+        let bytes = self.take(n.checked_mul(4).ok_or("f32 count overflow")?)?;
+        if let Some(m) = MappedSlice::new(Arc::clone(map), abs, n) {
+            Ok(Ok(m))
+        } else {
+            let mut v = Vec::with_capacity(n);
+            for chunk in bytes.chunks_exact(4) {
+                v.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+            }
+            Ok(Err(v))
+        }
+    }
+}
+
+/// `body_abs`: absolute byte offset of the body inside the segment, so
+/// mapped payload views can be anchored.
+fn decode_record(
+    body: &[u8],
+    map: &Arc<MmapFile>,
+    body_abs: usize,
+) -> Result<Record, String> {
+    let mut d = Dec::new(body);
+    let kind = d.u32()?;
+    match kind {
+        KIND_PRODUCE => {
+            let topic = d.str()?;
+            let party = d.u64()? as usize;
+            let round = d.u32()?;
+            let weight = d.f32()?;
+            let enqueued_at = d.u64()?;
+            let payload = match d.u32()? {
+                PAYLOAD_INLINE => match d.f32_run(map, body_abs)? {
+                    Ok(m) => Payload::Mapped(m),
+                    Err(v) => Payload::Inline(v),
+                },
+                PAYLOAD_REF => Payload::Ref {
+                    key: d.str()?,
+                    size_bytes: d.u64()?,
+                },
+                PAYLOAD_SIM => Payload::Sim {
+                    size_bytes: d.u64()?,
+                },
+                t => return Err(format!("unknown payload tag {t}")),
+            };
+            Ok(Record::Produce {
+                topic,
+                msg: Message {
+                    party,
+                    round,
+                    weight,
+                    enqueued_at,
+                    payload,
+                },
+            })
+        }
+        KIND_CHECKPOINT => {
+            let slot = d.str()?;
+            let acc = if d.u32()? != 0 {
+                // Checkpoints are latest-wins singletons: an owned copy
+                // keeps them alive across segment GC, and the copy cost
+                // is one accumulator per recovery.
+                Some(match d.f32_run(map, body_abs)? {
+                    Ok(m) => m.as_f32s().to_vec(),
+                    Err(v) => v,
+                })
+            } else {
+                None
+            };
+            Ok(Record::Checkpoint {
+                slot,
+                state: CheckpointState {
+                    acc,
+                    weight: d.f32()?,
+                    n_merged: d.u64()? as usize,
+                    consumed_to: d.u64()? as usize,
+                    saved_at: d.u64()?,
+                },
+            })
+        }
+        KIND_COMMIT => Ok(Record::Commit {
+            topic: d.str()?,
+            group: d.str()?,
+            offset: d.u64()?,
+        }),
+        KIND_DROP_TOPIC => Ok(Record::DropTopic { topic: d.str()? }),
+        KIND_CLEAR_CKPT => Ok(Record::ClearCheckpoint { slot: d.str()? }),
+        k => Err(format!("unknown record kind {k}")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the log
+// ---------------------------------------------------------------------------
+
+/// Append/roll/sync counters, exported as `wal_*` telemetry by the MQ.
+#[derive(Clone, Debug, Default)]
+pub struct WalStats {
+    pub records_appended: u64,
+    pub bytes_appended: u64,
+    pub fsyncs: u64,
+    pub segments_rolled: u64,
+    /// Total segments on disk (sealed + active).
+    pub segments: u64,
+}
+
+/// What one append did (telemetry feed for the MQ's `wal_*` counters).
+#[derive(Clone, Copy, Debug)]
+pub struct AppendInfo {
+    /// Frame bytes written (header + body + padding).
+    pub bytes: usize,
+    /// This append triggered an `msync`.
+    pub synced: bool,
+    /// This append rolled to a fresh segment.
+    pub rolled: bool,
+    /// Total segments after the append.
+    pub segments: u64,
+}
+
+/// What recovery found and did.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryReport {
+    pub segments: usize,
+    pub records: u64,
+    /// Frame bytes scanned (headers + bodies + padding).
+    pub bytes: u64,
+    /// A partially written final record was found and truncated away.
+    pub torn_tail: bool,
+    pub truncated_bytes: u64,
+    pub elapsed_secs: f64,
+}
+
+struct Inner {
+    active: Arc<MmapFile>,
+    active_index: u64,
+    used: usize,
+    appends_since_sync: u32,
+    stats: WalStats,
+}
+
+/// The segmented append-only log. One instance per data dir; interior
+/// mutability so the MQ can append behind `&self` from per-topic locks
+/// (lock order: topic/checkpoint lock → WAL lock, never the reverse).
+pub struct Wal {
+    cfg: WalConfig,
+    inner: Mutex<Inner>,
+}
+
+impl fmt::Debug for Wal {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Wal").field("dir", &self.cfg.dir).finish()
+    }
+}
+
+fn segment_path(dir: &Path, index: u64) -> PathBuf {
+    dir.join(format!("{index:012}.wal"))
+}
+
+fn list_segments(dir: &Path) -> Result<Vec<(u64, PathBuf)>, WalError> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if let Some(stem) = name.strip_suffix(".wal") {
+            if stem.len() == 12 && stem.bytes().all(|b| b.is_ascii_digit()) {
+                out.push((stem.parse::<u64>().unwrap(), entry.path()));
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn write_header(map: &MmapFile) {
+    let mut h = [0u8; HEADER_LEN];
+    h[..8].copy_from_slice(MAGIC);
+    h[8..12].copy_from_slice(&VERSION.to_le_bytes());
+    map.write_at(0, &h);
+}
+
+fn header_ok(bytes: &[u8]) -> bool {
+    bytes.len() >= HEADER_LEN
+        && &bytes[..8] == MAGIC
+        && u32::from_le_bytes(bytes[8..12].try_into().unwrap()) == VERSION
+}
+
+/// One scanned frame (diagnostics: `fljit recover` and the recovery
+/// edge-case tests locate frames to inspect or corrupt through this).
+#[derive(Clone, Debug)]
+pub struct FrameInfo {
+    /// Byte offset of the frame (its length prefix) in the segment.
+    pub offset: usize,
+    /// Body length (unpadded).
+    pub len: usize,
+    pub crc_ok: bool,
+    /// First body word (the record kind) if readable.
+    pub kind: Option<u32>,
+}
+
+/// Walk a segment's frames without decoding bodies. Stops at the
+/// end-of-data sentinel or the first frame that doesn't fit.
+pub fn list_frames(path: &Path) -> Result<Vec<FrameInfo>, WalError> {
+    let map = MmapFile::open_ro(path)?;
+    let bytes = map.as_slice();
+    let mut out = Vec::new();
+    if !header_ok(bytes) {
+        return Ok(out);
+    }
+    let mut off = HEADER_LEN;
+    while off + FRAME_HEADER <= bytes.len() {
+        let len = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+        if len == 0 {
+            break;
+        }
+        let crc = u32::from_le_bytes(bytes[off + 4..off + 8].try_into().unwrap());
+        let body_end = off + FRAME_HEADER + len;
+        if body_end > bytes.len() {
+            out.push(FrameInfo {
+                offset: off,
+                len,
+                crc_ok: false,
+                kind: None,
+            });
+            break;
+        }
+        let body = &bytes[off + FRAME_HEADER..body_end];
+        out.push(FrameInfo {
+            offset: off,
+            len,
+            crc_ok: crc32(body) == crc,
+            kind: (len >= 4).then(|| u32::from_le_bytes(body[..4].try_into().unwrap())),
+        });
+        off += FRAME_HEADER + pad4(len);
+    }
+    Ok(out)
+}
+
+struct ScanOut {
+    records: Vec<Record>,
+    used: usize,
+    torn: Option<usize>,
+    frames: u64,
+    bytes: u64,
+}
+
+/// Scan one segment's frames into records. `is_last` selects torn-tail
+/// handling (truncate) over hard corruption errors.
+fn scan_segment(map: &Arc<MmapFile>, is_last: bool) -> Result<ScanOut, WalError> {
+    let bytes = map.as_slice();
+    let path = map.path().to_path_buf();
+    let corrupt = |offset: usize, detail: String| WalError::Corrupt {
+        segment: path.clone(),
+        offset,
+        detail,
+    };
+    let mut out = ScanOut {
+        records: Vec::new(),
+        used: HEADER_LEN,
+        torn: None,
+        frames: 0,
+        bytes: 0,
+    };
+    let mut off = HEADER_LEN;
+    loop {
+        if off + FRAME_HEADER > bytes.len() {
+            // Ran off the end without a sentinel: full segment, clean.
+            break;
+        }
+        let len = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+        if len == 0 {
+            break;
+        }
+        let crc = u32::from_le_bytes(bytes[off + 4..off + 8].try_into().unwrap());
+        let frame_end = off + FRAME_HEADER + pad4(len);
+        if off + FRAME_HEADER + len > bytes.len() {
+            // Frame overruns the segment: only a torn final write can
+            // look like this in the last segment.
+            if is_last {
+                out.torn = Some(off);
+                break;
+            }
+            return Err(corrupt(off, format!("frame length {len} overruns segment")));
+        }
+        let body = &bytes[off + FRAME_HEADER..off + FRAME_HEADER + len];
+        if crc32(body) != crc {
+            let tail_zero = bytes[frame_end.min(bytes.len())..].iter().all(|&b| b == 0);
+            if is_last && tail_zero {
+                // Nothing after it: the classic torn tail.
+                out.torn = Some(off);
+                break;
+            }
+            return Err(corrupt(
+                off,
+                format!(
+                    "crc mismatch (stored {crc:#010x}, computed {:#010x}) with live data after the frame",
+                    crc32(body)
+                ),
+            ));
+        }
+        let rec = decode_record(body, map, off + FRAME_HEADER)
+            .map_err(|detail| corrupt(off, detail))?;
+        out.records.push(rec);
+        out.frames += 1;
+        out.bytes += (FRAME_HEADER + pad4(len)) as u64;
+        off = frame_end;
+        out.used = off;
+    }
+    Ok(out)
+}
+
+impl Wal {
+    /// Open (or create) the log in `cfg.dir`, replaying every record.
+    /// Returns the ready-to-append log, the records in file order, and
+    /// the recovery report (torn-tail truncation already applied).
+    pub fn open(cfg: WalConfig) -> Result<(Wal, Vec<Record>, RecoveryReport), WalError> {
+        let t0 = std::time::Instant::now();
+        std::fs::create_dir_all(&cfg.dir)?;
+        let segs = list_segments(&cfg.dir)?;
+        let mut report = RecoveryReport::default();
+        let mut records = Vec::new();
+
+        let (active, active_index, used) = if segs.is_empty() {
+            let map = Arc::new(MmapFile::create_rw(
+                &segment_path(&cfg.dir, 0),
+                cfg.segment_bytes.max(MIN_SEGMENT_BYTES),
+            )?);
+            write_header(&map);
+            (map, 0u64, HEADER_LEN)
+        } else {
+            report.segments = segs.len();
+            let last = segs.len() - 1;
+            let mut active = None;
+            for (i, (index, path)) in segs.iter().enumerate() {
+                let is_last = i == last;
+                let map = if is_last {
+                    // Reopen the tail RW at full capacity (a sealed-then-
+                    // crashed tail may sit truncated below capacity; the
+                    // grow zero-fills, preserving the sentinel).
+                    let on_disk = std::fs::metadata(path)?.len() as usize;
+                    let cap = pad4(on_disk.max(cfg.segment_bytes.max(MIN_SEGMENT_BYTES)));
+                    Arc::new(MmapFile::create_rw(path, cap)?)
+                } else {
+                    Arc::new(MmapFile::open_ro(path)?)
+                };
+                if !header_ok(map.as_slice()) {
+                    let blank = map.as_slice().iter().all(|&b| b == 0);
+                    if is_last && blank {
+                        // Crash between segment creation and header
+                        // write: an empty shell, reinitialize it.
+                        write_header(&map);
+                        active = Some((map, *index, HEADER_LEN));
+                        continue;
+                    }
+                    return Err(WalError::Corrupt {
+                        segment: path.clone(),
+                        offset: 0,
+                        detail: "bad segment header".into(),
+                    });
+                }
+                let mut scan = scan_segment(&map, is_last)?;
+                records.append(&mut scan.records);
+                report.records += scan.frames;
+                report.bytes += scan.bytes;
+                if let Some(torn_at) = scan.torn {
+                    report.torn_tail = true;
+                    report.truncated_bytes = (map.len() - torn_at) as u64;
+                    // Zero the torn frame so the sentinel is clean for
+                    // the appends that follow.
+                    map.write_at(torn_at, &vec![0u8; map.len() - torn_at]);
+                    map.sync()?;
+                }
+                if is_last {
+                    active = Some((map, *index, scan.used));
+                }
+            }
+            active.expect("last segment always yields the active map")
+        };
+
+        report.elapsed_secs = t0.elapsed().as_secs_f64();
+        let stats = WalStats {
+            segments: active_index + 1,
+            ..WalStats::default()
+        };
+        let wal = Wal {
+            cfg,
+            inner: Mutex::new(Inner {
+                active,
+                active_index,
+                used,
+                appends_since_sync: 0,
+                stats,
+            }),
+        };
+        Ok((wal, records, report))
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.cfg.dir
+    }
+
+    pub fn fsync_policy(&self) -> FsyncPolicy {
+        self.cfg.fsync
+    }
+
+    pub fn stats(&self) -> WalStats {
+        self.inner.lock().unwrap().stats.clone()
+    }
+
+    /// Append one record (frame + optional sync per policy).
+    pub fn append(&self, rec: RecordRef<'_>) -> Result<AppendInfo, WalError> {
+        let body = encode_record(rec);
+        let frame = FRAME_HEADER + pad4(body.len());
+        let mut inner = self.inner.lock().unwrap();
+        let mut rolled = false;
+        if inner.used + frame > inner.active.len() {
+            self.roll(&mut inner, frame)?;
+            rolled = true;
+        }
+        let off = inner.used;
+        let map = Arc::clone(&inner.active);
+        // Body and CRC first, length prefix last: a record only becomes
+        // visible to recovery once its length word is non-zero, so a
+        // torn write can at worst leave a frame the CRC check rejects.
+        map.write_at(off + 4, &crc32(&body).to_le_bytes());
+        map.write_at(off + FRAME_HEADER, &body);
+        map.write_at(off, &(body.len() as u32).to_le_bytes());
+        inner.used = off + frame;
+        inner.stats.records_appended += 1;
+        inner.stats.bytes_appended += frame as u64;
+        let sync_now = match self.cfg.fsync {
+            FsyncPolicy::Always => true,
+            FsyncPolicy::EveryN(n) => {
+                inner.appends_since_sync += 1;
+                inner.appends_since_sync >= n
+            }
+            FsyncPolicy::OsOnly => false,
+        };
+        if sync_now {
+            map.sync()?;
+            inner.appends_since_sync = 0;
+            inner.stats.fsyncs += 1;
+        }
+        Ok(AppendInfo {
+            bytes: frame,
+            synced: sync_now,
+            rolled,
+            segments: inner.active_index + 1,
+        })
+    }
+
+    fn roll(&self, inner: &mut Inner, need: usize) -> Result<(), WalError> {
+        // Seal: flush and shrink the old segment to its used length.
+        inner.active.sync()?;
+        inner.active.truncate_file(inner.used)?;
+        let next = inner.active_index + 1;
+        let cap = pad4((HEADER_LEN + need).max(self.cfg.segment_bytes.max(MIN_SEGMENT_BYTES)));
+        let map = Arc::new(MmapFile::create_rw(&segment_path(&self.cfg.dir, next), cap)?);
+        write_header(&map);
+        inner.active = map;
+        inner.active_index = next;
+        inner.used = HEADER_LEN;
+        inner.appends_since_sync = 0;
+        inner.stats.segments_rolled += 1;
+        inner.stats.segments = next + 1;
+        Ok(())
+    }
+
+    /// Force-flush the active segment regardless of policy.
+    pub fn flush(&self) -> Result<(), WalError> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.active.sync()?;
+        inner.appends_since_sync = 0;
+        inner.stats.fsyncs += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Seek, SeekFrom, Write};
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("fljit_wal_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn produce(topic: &str, party: usize, payload: Payload) -> Record {
+        Record::Produce {
+            topic: topic.into(),
+            msg: Message {
+                party,
+                round: 3,
+                weight: 2.5,
+                enqueued_at: 777,
+                payload,
+            },
+        }
+    }
+
+    fn append_owned(wal: &Wal, rec: &Record) {
+        let r = match rec {
+            Record::Produce { topic, msg } => RecordRef::Produce { topic, msg },
+            Record::Checkpoint { slot, state } => RecordRef::Checkpoint { slot, state },
+            Record::Commit {
+                topic,
+                group,
+                offset,
+            } => RecordRef::Commit {
+                topic,
+                group,
+                offset: *offset,
+            },
+            Record::DropTopic { topic } => RecordRef::DropTopic { topic },
+            Record::ClearCheckpoint { slot } => RecordRef::ClearCheckpoint { slot },
+        };
+        wal.append(r).unwrap();
+    }
+
+    #[test]
+    fn crc32_known_answer() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn fsync_policy_parses_and_names() {
+        assert_eq!(FsyncPolicy::parse("always").unwrap(), FsyncPolicy::Always);
+        assert_eq!(FsyncPolicy::parse("os").unwrap(), FsyncPolicy::OsOnly);
+        assert_eq!(
+            FsyncPolicy::parse("every=16").unwrap(),
+            FsyncPolicy::EveryN(16)
+        );
+        assert_eq!(FsyncPolicy::parse("8").unwrap(), FsyncPolicy::EveryN(8));
+        assert!(FsyncPolicy::parse("every=0").is_err());
+        assert!(FsyncPolicy::parse("sometimes").is_err());
+        assert_eq!(FsyncPolicy::EveryN(16).name(), "every=16");
+    }
+
+    #[test]
+    fn all_record_kinds_roundtrip() {
+        let dir = tmp("roundtrip");
+        let recs = vec![
+            produce("t", 1, Payload::Inline(vec![1.0, -2.0, 3.5])),
+            produce(
+                "t",
+                2,
+                Payload::Ref {
+                    key: "blob/7".into(),
+                    size_bytes: 4096,
+                },
+            ),
+            produce("u", 3, Payload::Sim { size_bytes: 100 }),
+            Record::Checkpoint {
+                slot: "job0/round3/ckpt".into(),
+                state: CheckpointState {
+                    acc: Some(vec![0.5, 0.25]),
+                    weight: 4.0,
+                    n_merged: 2,
+                    consumed_to: 2,
+                    saved_at: 999,
+                },
+            },
+            Record::Commit {
+                topic: "t".into(),
+                group: "agg".into(),
+                offset: 2,
+            },
+            Record::DropTopic { topic: "u".into() },
+            Record::ClearCheckpoint {
+                slot: "job0/round3/ckpt".into(),
+            },
+        ];
+        {
+            let (wal, replay, report) = Wal::open(WalConfig::new(&dir)).unwrap();
+            assert!(replay.is_empty(), "fresh dir replays nothing");
+            assert!(!report.torn_tail);
+            for r in &recs {
+                append_owned(&wal, r);
+            }
+        }
+        let (_wal, replay, report) = Wal::open(WalConfig::new(&dir)).unwrap();
+        assert_eq!(report.records, recs.len() as u64);
+        assert_eq!(replay, recs, "decode(encode(x)) == x for every kind");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recovered_inline_payloads_are_mapped_zero_copy() {
+        let dir = tmp("mapped");
+        let data = vec![1.0f32, 2.0, 3.0, 4.0];
+        {
+            let (wal, _, _) = Wal::open(WalConfig::new(&dir)).unwrap();
+            append_owned(&wal, &produce("t", 0, Payload::Inline(data.clone())));
+        }
+        let (_wal, replay, _) = Wal::open(WalConfig::new(&dir)).unwrap();
+        let Record::Produce { msg, .. } = &replay[0] else {
+            panic!("expected produce");
+        };
+        match &msg.payload {
+            Payload::Mapped(m) => {
+                assert_eq!(m.as_f32s(), &data[..]);
+                assert_eq!(m.as_f32s().as_ptr() as usize % 4, 0, "aligned view");
+            }
+            p => panic!("expected mapped payload, got {p:?}"),
+        }
+        assert_eq!(msg.payload.size_bytes(), 16);
+        assert_eq!(msg.payload.data().unwrap(), &data[..]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rollover_spreads_records_across_segments() {
+        let dir = tmp("roll");
+        let n = 64;
+        {
+            let (wal, _, _) = Wal::open(
+                WalConfig::new(&dir).segment_bytes(MIN_SEGMENT_BYTES),
+            )
+            .unwrap();
+            for p in 0..n {
+                append_owned(&wal, &produce("t", p, Payload::Inline(vec![p as f32; 64])));
+            }
+            assert!(wal.stats().segments_rolled > 0, "tiny segments must roll");
+        }
+        assert!(
+            list_segments(&dir).unwrap().len() > 1,
+            "multiple segment files on disk"
+        );
+        let (_wal, replay, report) = Wal::open(
+            WalConfig::new(&dir).segment_bytes(MIN_SEGMENT_BYTES),
+        )
+        .unwrap();
+        assert_eq!(replay.len(), n);
+        assert!(!report.torn_tail);
+        for (p, rec) in replay.iter().enumerate() {
+            let Record::Produce { msg, .. } = rec else {
+                panic!()
+            };
+            assert_eq!(msg.party, p, "file order == append order across segments");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn oversized_record_gets_dedicated_segment() {
+        let dir = tmp("oversize");
+        let big = vec![7.0f32; 8192]; // 32 KiB body > 4 KiB segment
+        {
+            let (wal, _, _) = Wal::open(
+                WalConfig::new(&dir).segment_bytes(MIN_SEGMENT_BYTES),
+            )
+            .unwrap();
+            append_owned(&wal, &produce("t", 0, Payload::Inline(vec![1.0; 4])));
+            append_owned(&wal, &produce("t", 1, Payload::Inline(big.clone())));
+        }
+        let (_wal, replay, _) = Wal::open(
+            WalConfig::new(&dir).segment_bytes(MIN_SEGMENT_BYTES),
+        )
+        .unwrap();
+        assert_eq!(replay.len(), 2);
+        let Record::Produce { msg, .. } = &replay[1] else {
+            panic!()
+        };
+        assert_eq!(msg.payload.data().unwrap(), &big[..]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_final_record_is_truncated_and_log_stays_usable() {
+        let dir = tmp("torn");
+        {
+            let (wal, _, _) = Wal::open(WalConfig::new(&dir)).unwrap();
+            for p in 0..3 {
+                append_owned(&wal, &produce("t", p, Payload::Inline(vec![p as f32; 8])));
+            }
+        }
+        // Corrupt the LAST frame's body; everything after it is still
+        // the preallocated zero fill, so this is indistinguishable from
+        // a torn final write.
+        let seg = segment_path(&dir, 0);
+        let frames = list_frames(&seg).unwrap();
+        assert_eq!(frames.len(), 3);
+        let last = frames.last().unwrap();
+        {
+            let mut f = std::fs::OpenOptions::new().write(true).open(&seg).unwrap();
+            f.seek(SeekFrom::Start((last.offset + FRAME_HEADER + 4) as u64))
+                .unwrap();
+            f.write_all(&[0xAB, 0xCD]).unwrap();
+        }
+        let (wal, replay, report) = Wal::open(WalConfig::new(&dir)).unwrap();
+        assert!(report.torn_tail, "must report the truncation");
+        assert!(report.truncated_bytes > 0);
+        assert_eq!(replay.len(), 2, "only the intact prefix survives");
+        // The log keeps working where the torn frame used to be.
+        append_owned(&wal, &produce("t", 9, Payload::Inline(vec![9.0; 8])));
+        drop(wal);
+        let (_wal, replay, report) = Wal::open(WalConfig::new(&dir)).unwrap();
+        assert!(!report.torn_tail);
+        assert_eq!(replay.len(), 3);
+        let Record::Produce { msg, .. } = &replay[2] else {
+            panic!()
+        };
+        assert_eq!(msg.party, 9);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mid_log_corruption_is_a_hard_error_not_a_skip() {
+        let dir = tmp("corrupt");
+        {
+            let (wal, _, _) = Wal::open(WalConfig::new(&dir)).unwrap();
+            for p in 0..3 {
+                append_owned(&wal, &produce("t", p, Payload::Inline(vec![p as f32; 8])));
+            }
+        }
+        let seg = segment_path(&dir, 0);
+        let first = &list_frames(&seg).unwrap()[0];
+        {
+            let mut f = std::fs::OpenOptions::new().write(true).open(&seg).unwrap();
+            f.seek(SeekFrom::Start((first.offset + FRAME_HEADER + 4) as u64))
+                .unwrap();
+            f.write_all(&[0xAB, 0xCD]).unwrap();
+        }
+        let err = Wal::open(WalConfig::new(&dir)).unwrap_err();
+        match err {
+            WalError::Corrupt {
+                segment, offset, ..
+            } => {
+                assert_eq!(segment, seg);
+                assert_eq!(offset, first.offset, "error names the bad frame");
+            }
+            e => panic!("expected corrupt error, got {e}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fsync_policy_controls_sync_cadence() {
+        for (policy, expect) in [
+            (FsyncPolicy::Always, 10u64),
+            (FsyncPolicy::EveryN(4), 2),
+            (FsyncPolicy::OsOnly, 0),
+        ] {
+            let dir = tmp(&format!("fsync_{}", policy.name().replace('=', "_")));
+            let (wal, _, _) = Wal::open(WalConfig::new(&dir).fsync(policy)).unwrap();
+            for p in 0..10 {
+                append_owned(&wal, &produce("t", p, Payload::Sim { size_bytes: 8 }));
+            }
+            assert_eq!(wal.stats().fsyncs, expect, "policy {}", policy.name());
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}

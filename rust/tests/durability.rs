@@ -1,0 +1,324 @@
+//! Durable data plane, end to end: the segmented mmap log under the MQ
+//! must make a live session's state survive real process death.
+//!
+//! 1. **Mem ≡ Disk** — the same session run on the in-memory log and on
+//!    a durable `--data-dir` log reports bit-identical models, folds and
+//!    (virtual-clock) latencies. Durability is a side-channel, never a
+//!    semantic change.
+//! 2. **Kill + reopen resume** — a `kill_after_fuses` crash on a durable
+//!    dir, then a resume through a *fresh* `MessageQueue` replayed from
+//!    that dir (no shared in-memory state), reproduces the uninterrupted
+//!    model bit-for-bit. This is §5.5 across an aggregator incarnation
+//!    boundary instead of a shared `Arc`.
+//! 3. **Trace re-admission across reopen** — a multi-job broker trace
+//!    killed mid-flight resumes from disk with still-queued jobs
+//!    re-admitted from the persisted trace, every job finishing.
+//! 4. **Real `kill -9`** (unix only) — a wall-paced subprocess run is
+//!    SIGKILLed mid-round; `fljit recover` reads the torn log and a
+//!    `--resume` run converges to the reference run's model CRCs.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use fljit::broker::workload::{JobArrival, JobTrace};
+use fljit::broker::SloClass;
+use fljit::coordinator::job::FlJobSpec;
+use fljit::coordinator::session::Session;
+use fljit::mq::{self, MessageQueue};
+use fljit::party::FleetKind;
+use fljit::wal::WalConfig;
+use fljit::workloads::Workload;
+
+fn spec(parties: usize, rounds: u32) -> FlJobSpec {
+    FlJobSpec::new(
+        Workload::mlp_live(),
+        FleetKind::ActiveHomogeneous,
+        parties,
+        rounds,
+    )
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("fljit_dur_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn two_job_trace() -> JobTrace {
+    let arrival = |i: usize, at: f64, parties: usize| {
+        let mut s = spec(parties, 2);
+        s.name = format!("t{i}");
+        JobArrival {
+            at_secs: at,
+            spec: s,
+            strategy: "jit".to_string(),
+            class: SloClass::Standard,
+        }
+    };
+    JobTrace::from_arrivals(vec![arrival(0, 0.0, 3), arrival(1, 0.5, 4)])
+}
+
+// ---------------------------------------------------------------------------
+// 1. Mem ≡ Disk
+// ---------------------------------------------------------------------------
+
+#[test]
+fn disk_backed_session_reports_bit_identical_to_memory() {
+    let dir = tmp("memdisk");
+    let run = |data: Option<&PathBuf>| {
+        let mut s = Session::live().seed(11).dim(16);
+        if let Some(d) = data {
+            s = s.data_dir(d);
+        }
+        let h = s.job(spec(4, 3), "jit");
+        (s.run().expect("session run"), h)
+    };
+    let (mem, hm) = run(None);
+    let (disk, hd) = run(Some(&dir));
+    let (m, d) = (mem.job(hm), disk.job(hd));
+    assert_eq!(
+        m.final_model, d.final_model,
+        "LogKind::Disk must not change a single model bit"
+    );
+    assert_eq!(m.updates_folded, d.updates_folded);
+    assert_eq!(m.deployments, d.deployments);
+    assert_eq!(m.records.len(), d.records.len());
+    for (a, b) in m.records.iter().zip(&d.records) {
+        assert_eq!(a.round, b.round);
+        assert_eq!(
+            a.latency_secs.to_bits(),
+            b.latency_secs.to_bits(),
+            "virtual-clock latencies are deterministic, WAL writes cost no virtual time"
+        );
+    }
+    // the run's whole model stream is on disk: reopening the dir replays
+    // one message per completed round into the model topic
+    let q = MessageQueue::durable(WalConfig::new(&dir)).expect("reopen");
+    assert_eq!(q.end_offset(&mq::model_topic(0)), m.records.len());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// 2. Kill + reopen resume (fresh MQ incarnation from the same dir)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn killed_durable_session_resumes_bit_identical_across_reopen() {
+    let dir = tmp("killreopen");
+    let run = |data: Option<&PathBuf>, kill: Option<u64>, resume: bool| {
+        let mut s = Session::live()
+            .seed(11)
+            .dim(16)
+            .kill_after_fuses(kill)
+            .resume(resume);
+        if let Some(d) = data {
+            s = s.data_dir(d);
+        }
+        let h = s.job(spec(4, 2), "jit");
+        (s.run().expect("session run"), h)
+    };
+    // uninterrupted reference on the in-memory log
+    let (full, hf) = run(None, None, false);
+    assert!(!full.summary().crashed);
+    // crash a durable run mid-round; its MQ incarnation dies with it
+    let (dead, _) = run(Some(&dir), Some(3), false);
+    assert!(dead.summary().crashed);
+    // resume builds a brand-new MQ replayed from the dir — the only
+    // thing the two incarnations share is the on-disk log
+    let (resumed, hr) = run(Some(&dir), None, true);
+    assert!(!resumed.summary().crashed);
+    assert_eq!(
+        resumed.job(hr).final_model,
+        full.job(hf).final_model,
+        "§5.5 across a process-equivalent boundary: disk replay must \
+         reproduce the uninterrupted model bit-for-bit"
+    );
+    assert_eq!(
+        dead.single().updates_folded + resumed.single().updates_folded,
+        full.single().updates_folded,
+        "every update folds exactly once across the two incarnations"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// 3. Multi-job trace: queued jobs re-admitted across reopen
+// ---------------------------------------------------------------------------
+
+#[test]
+fn trace_resume_readmits_queued_jobs_across_reopen() {
+    let dir = tmp("tracereopen");
+    let run = |data: Option<&PathBuf>, kill: Option<u64>, resume: bool| {
+        let mut s = Session::live()
+            .trace(&two_job_trace())
+            .capacity(8)
+            .seed(7)
+            .dim(8)
+            .kill_after_fuses(kill)
+            .resume(resume);
+        if let Some(d) = data {
+            s = s.data_dir(d);
+        }
+        s.run().expect("trace run")
+    };
+    let full = run(None, None, false);
+    // kill after the very first fuse: job 1 is still queued or barely
+    // started — the resume must re-admit it from the persisted trace
+    let dead = run(Some(&dir), Some(1), false);
+    assert!(dead.summary().crashed);
+    let resumed = run(Some(&dir), None, true);
+    assert!(!resumed.summary().crashed);
+    let sum = resumed.summary();
+    assert_eq!(sum.jobs.len(), 2, "both trace jobs reported after resume");
+    for (f, r) in full.summary().jobs.iter().zip(&sum.jobs) {
+        assert_eq!(f.name, r.name);
+        assert_eq!(
+            f.records.len(),
+            r.records.len(),
+            "job {}: resume must finish every round",
+            r.name
+        );
+        assert_eq!(
+            f.final_model, r.final_model,
+            "job {}: re-admitted job must converge to the reference model",
+            r.name
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// 4. Real kill -9 across a real process boundary
+// ---------------------------------------------------------------------------
+
+/// Run the fljit binary with the given args, panicking on spawn failure.
+#[cfg(unix)]
+fn fljit(args: &[&str]) -> std::process::Output {
+    std::process::Command::new(env!("CARGO_BIN_EXE_fljit"))
+        .args(args)
+        .output()
+        .expect("spawn fljit")
+}
+
+/// The greppable `job=.. rounds=.. model_crc32=..` lines from
+/// `fljit recover <dir>` — the durability smoke's comparison key.
+#[cfg(unix)]
+fn recover_crc_lines(dir: &std::path::Path) -> Vec<String> {
+    let out = fljit(&["recover", &dir.to_string_lossy()]);
+    assert!(
+        out.status.success(),
+        "recover failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout)
+        .lines()
+        .filter(|l| l.starts_with("job="))
+        .map(|l| l.to_string())
+        .collect()
+}
+
+#[cfg(unix)]
+#[test]
+fn sigkilled_subprocess_resumes_to_reference_model_crcs() {
+    let base = [
+        "live", "--strategy", "jit", "--parties", "4", "--rounds", "3", "--dim", "16",
+        "--seed", "11", "--scripted",
+    ];
+    // reference: the identical job uninterrupted on its own durable dir
+    let ref_dir = tmp("sig_ref");
+    let ref_dir_s = ref_dir.to_string_lossy().to_string();
+    let mut args: Vec<&str> = base.to_vec();
+    args.extend(["--data-dir", &ref_dir_s]);
+    let out = fljit(&args);
+    assert!(
+        out.status.success(),
+        "reference run failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let want = recover_crc_lines(&ref_dir);
+    assert!(!want.is_empty(), "reference run published models");
+
+    // victim: the same job paced on the wall clock, SIGKILLed mid-run
+    let kill_dir = tmp("sig_kill");
+    let kill_dir_s = kill_dir.to_string_lossy().to_string();
+    let mut args: Vec<&str> = base.to_vec();
+    args.extend([
+        "--wall", "--epoch-secs", "0.5", "--fsync", "always", "--data-dir", &kill_dir_s,
+    ]);
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_fljit"))
+        .args(&args)
+        .stdout(std::process::Stdio::null())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn victim");
+    // let it get partway into its ~1.5s+ of wall-paced rounds, then a
+    // real SIGKILL: no destructors, no flush, the page cache is all
+    // that saves the tail
+    std::thread::sleep(std::time::Duration::from_millis(900));
+    child.kill().expect("kill -9");
+    let _ = child.wait();
+
+    // the torn log must recover cleanly (exit 0, possibly a truncated
+    // tail) and a resume must finish the job to the reference CRCs
+    let _ = recover_crc_lines(&kill_dir);
+    let mut args: Vec<&str> = base.to_vec();
+    args.extend(["--resume", "--data-dir", &kill_dir_s]);
+    let out = fljit(&args);
+    assert!(
+        out.status.success(),
+        "resume run failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let got = recover_crc_lines(&kill_dir);
+    assert_eq!(
+        got, want,
+        "killed-and-resumed run must converge to the reference model CRCs"
+    );
+    let _ = std::fs::remove_dir_all(&ref_dir);
+    let _ = std::fs::remove_dir_all(&kill_dir);
+}
+
+// ---------------------------------------------------------------------------
+// Recovery edge cases at the MQ level (the WAL-level ones live in
+// `wal::tests`): an empty dir and a CRC-corrupted mid-log record.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn durable_open_on_fresh_dir_is_an_empty_queue() {
+    let dir = tmp("fresh");
+    let q = MessageQueue::durable(WalConfig::new(&dir)).expect("open fresh");
+    assert_eq!(q.produced(), 0);
+    assert!(q.topic_names().is_empty());
+    assert!(q.recovery().expect("report").records == 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_mid_log_record_fails_loudly_not_silently() {
+    use std::io::{Seek, SeekFrom, Write};
+    let dir = tmp("corrupt");
+    {
+        let s = Session::live().seed(11).dim(16).data_dir(&dir);
+        let mut s = s;
+        s.job(spec(3, 2), "jit");
+        s.run().expect("seed run");
+    }
+    // flip bytes in the middle of the first segment's first record body
+    let seg = dir.join("000000000000.wal");
+    let mut f = std::fs::OpenOptions::new()
+        .write(true)
+        .open(&seg)
+        .expect("open segment");
+    f.seek(SeekFrom::Start(32)).unwrap();
+    f.write_all(&[0xAA; 8]).unwrap();
+    f.sync_all().unwrap();
+    drop(f);
+    let err = MessageQueue::durable(WalConfig::new(&dir));
+    assert!(err.is_err(), "mid-log corruption must be a hard error");
+    let msg = format!("{}", err.err().unwrap());
+    assert!(
+        msg.contains("corrupt"),
+        "error must name the corruption, got: {msg}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
