@@ -35,6 +35,10 @@ SUBCOMMANDS:
                          async-stale|all>
              [--parties 4] [--rounds 5] [--seed 42] [--dim 512]
              [--epoch-secs 0.4] [--scripted] [--backend synth|xla]
+             [--shards <n|sweep>]  (L1 aggregator tree width, 1..=64;
+             the published models are bit-identical for every n;
+             'sweep' scales the tree over the jit job -> shard_scaling
+             rows in BENCH_live.json)
              [--telemetry-dir DIR]
              [--data-dir DIR] [--fsync always|every=N|os] [--resume]
              [--wall]   (--data-dir makes the MQ durable: a killed run
@@ -43,7 +47,8 @@ SUBCOMMANDS:
              (--strategy all sweeps every strategy -> BENCH_live.json)
   recover    <dir> | --data-dir DIR   open a durable data dir, replay its
              segmented log, and print the recovery report, per-topic
-             depths, per-job model CRCs and surviving checkpoint slots
+             depths (per-shard topics included), per-job model CRCs,
+             and each surviving checkpoint slot's partial-aggregate CRC
   robustness strategy × fault-scenario matrix: every strategy on the
              scripted live platform under injected stragglers / dropout /
              diurnal waves / weight skew; per-cell fidelity-vs-baseline,
@@ -413,6 +418,42 @@ fn cmd_live(args: &Args) -> i32 {
         Err(code) => return code,
     };
     let data_dir = args.get("data-dir").map(|s| s.to_string());
+    if args.get("shards") == Some("sweep") {
+        if data_dir.is_some() {
+            eprintln!(
+                "--shards sweep runs private in-memory sessions; \
+                 --data-dir needs a single --shards value"
+            );
+            return 2;
+        }
+        match args.get("backend") {
+            None | Some("synth") | Some("scripted") => {}
+            Some(other) => {
+                eprintln!(
+                    "--shards sweep runs the synthetic backends only \
+                     (synth | scripted), got --backend {other:?}"
+                );
+                return 2;
+            }
+        }
+        // scale the L1 aggregator tree over the identical jit job; every
+        // row must report the same final-model fingerprint
+        let cfg = crate::bench::live::LiveSweepConfig::from_args(args);
+        let (t, json) = crate::bench::live::run_shard_sweep(&cfg, &[1, 2, 3, 4, 7, 16]);
+        t.print();
+        crate::bench::dump("BENCH_live", &json);
+        return 0;
+    }
+    let shards = match args.get("shards") {
+        None => 1,
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                eprintln!("bad --shards {s:?}: expected a count >= 1 or 'sweep'");
+                return 2;
+            }
+        },
+    };
     if strategy == "all" {
         if data_dir.is_some() {
             eprintln!(
@@ -483,7 +524,8 @@ fn cmd_live(args: &Args) -> i32 {
         .dim(args.get_usize("dim", 512))
         .minibatches(args.get_usize("minibatches", 4))
         .lr(args.get_f64("lr", 0.3) as f32)
-        .alpha(args.get_f64("alpha", 0.5));
+        .alpha(args.get_f64("alpha", 0.5))
+        .shards(shards);
     if let Some(dir) = &data_dir {
         s = s.data_dir(dir).fsync(fsync);
     }
@@ -638,6 +680,33 @@ fn cmd_recover(args: &Args) -> i32 {
         println!("checkpoints: (none)");
     } else {
         println!("checkpoints: {}", slots.join(" "));
+        // one greppable line per surviving slot: what the (shard's)
+        // partial aggregate looked like at the kill — the shard smoke
+        // compares these across a kill/resume boundary
+        for slot in &slots {
+            let Some(ck) = q.load_checkpoint(slot) else {
+                continue;
+            };
+            let crc = ck.acc.as_ref().map(|d| {
+                let mut bytes = Vec::with_capacity(d.len() * 4);
+                for v in d {
+                    bytes.extend_from_slice(&v.to_le_bytes());
+                }
+                crc32(&bytes)
+            });
+            let crc = match crc {
+                Some(c) => format!("0x{c:08x}"),
+                None => "none".to_string(),
+            };
+            println!(
+                "shard_ckpt slot={slot} consumed_to={} folds={} weight={} \
+                 buckets={} partial_crc32={crc}",
+                ck.consumed_to,
+                ck.n_merged,
+                ck.weight,
+                ck.buckets.len()
+            );
+        }
     }
     0
 }
@@ -853,6 +922,38 @@ mod tests {
             "swept policies must not share one durable log"
         );
         assert_eq!(dispatch(&args("live-broker --policy deadline --fsync bogus")), 2);
+    }
+
+    #[test]
+    fn live_sharded_runs_and_shard_sweep_dumps() {
+        // a sharded live run is just another session shape
+        assert_eq!(
+            dispatch(&args(
+                "live --strategy jit --parties 5 --rounds 1 --dim 16 \
+                 --scripted --shards 3"
+            )),
+            0
+        );
+        // the shard-scaling sweep dumps shard_scaling rows
+        assert_eq!(
+            dispatch(&args(
+                "live --parties 4 --rounds 1 --dim 16 --scripted --shards sweep"
+            )),
+            0
+        );
+        // the dump is valid JSON (other tests may re-dump BENCH_live, so
+        // don't pin its keys here; the sweep's own unit test does)
+        let text =
+            std::fs::read_to_string(crate::bench::repro_dir().join("BENCH_live.json")).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        assert_eq!(dispatch(&args("live --strategy jit --shards 0")), 2);
+        assert_eq!(dispatch(&args("live --strategy jit --shards bogus")), 2);
+        assert_eq!(
+            dispatch(&args("live --shards sweep --data-dir /tmp/x")),
+            2,
+            "swept shard counts must not share one durable log"
+        );
+        assert_eq!(dispatch(&args("live --shards sweep --backend xla")), 2);
     }
 
     #[test]

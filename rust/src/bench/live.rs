@@ -28,6 +28,9 @@ pub struct LiveSweepConfig {
     /// parties on an instant clock (deterministic, CI-fast, same code
     /// path through the MQ + wall driver).
     pub wall: bool,
+    /// L1 aggregator shard count for the strategy sweep (the shard-
+    /// scaling sweep varies this itself).
+    pub shards: usize,
 }
 
 impl Default for LiveSweepConfig {
@@ -39,6 +42,7 @@ impl Default for LiveSweepConfig {
             dim: 512,
             epoch_secs: 0.4,
             wall: true,
+            shards: 1,
         }
     }
 }
@@ -53,6 +57,10 @@ impl LiveSweepConfig {
             dim: args.get_usize("dim", d.dim),
             epoch_secs: args.get_f64("epoch-secs", d.epoch_secs),
             wall: !args.get_bool("scripted") && args.get("backend") != Some("scripted"),
+            shards: match args.get("shards") {
+                Some(s) if s != "sweep" => s.parse().unwrap_or(d.shards),
+                _ => d.shards,
+            },
         }
     }
 
@@ -70,10 +78,17 @@ impl LiveSweepConfig {
         } else {
             Session::live()
         };
-        s = s.seed(self.seed).dim(self.dim);
+        s = s.seed(self.seed).dim(self.dim).shards(self.shards);
         s.job(spec, strategy);
         s
     }
+}
+
+/// CRC32 over a model's raw f32 bytes — the greppable bit-identity
+/// fingerprint the shard-scaling rows (and the CI smokes) compare.
+fn model_crc(model: &[f32]) -> u32 {
+    let bytes: Vec<u8> = model.iter().flat_map(|v| v.to_le_bytes()).collect();
+    crate::wal::crc32(&bytes)
 }
 
 /// Run every strategy on the identical live job; table + JSON rows.
@@ -166,7 +181,107 @@ pub fn run_sweep(cfg: &LiveSweepConfig) -> (Table, Json) {
         ("dim", Json::num(cfg.dim as f64)),
         ("epoch_secs", Json::num(cfg.epoch_secs)),
         ("wall", Json::Bool(cfg.wall)),
+        ("shards", Json::num(cfg.shards as f64)),
         ("strategies", Json::Arr(rows)),
+    ]);
+    (t, json)
+}
+
+/// Shard-scaling sweep: the identical `jit` job under a widening L1
+/// aggregator tree. Scaling the tree must change *performance* only —
+/// every row reports the final model's CRC32, and all rows carry the
+/// same fingerprint (the root fold runs over fixed logical buckets, so
+/// the result is bit-identical for every shard count; pinned by
+/// `tests/shard_equivalence.rs` and compared by the CI smoke).
+pub fn run_shard_sweep(cfg: &LiveSweepConfig, shard_counts: &[usize]) -> (Table, Json) {
+    let mut t = Table::new(
+        &format!(
+            "shard-scaling sweep — jit, {} parties × {} rounds, dim {} ({})",
+            cfg.n_parties,
+            cfg.rounds,
+            cfg.dim,
+            if cfg.wall { "wall clock" } else { "scripted" }
+        ),
+        &[
+            "shards",
+            "busy (cs)",
+            "mean lat (ms)",
+            "fused",
+            "model crc32",
+            "wall (s)",
+        ],
+    );
+    let mut rows = Vec::new();
+    for &n in shard_counts {
+        let mut scfg = cfg.clone();
+        scfg.shards = n;
+        let mut s = scfg.session("jit");
+        let events = s.events();
+        match s.run() {
+            Ok(rep) => {
+                let mut fused_rounds = 0u64;
+                let mut latency_sum = 0.0f64;
+                let mut folds = 0u64;
+                for ev in events.try_iter() {
+                    match ev {
+                        SessionEvent::RoundFused { latency_secs, .. } => {
+                            fused_rounds += 1;
+                            latency_sum += latency_secs;
+                        }
+                        SessionEvent::CheckpointWritten { folds: k, .. } => folds += k,
+                        _ => {}
+                    }
+                }
+                let mean_latency = if fused_rounds > 0 {
+                    latency_sum / fused_rounds as f64
+                } else {
+                    0.0
+                };
+                let o = rep.single();
+                let sum = rep.summary();
+                let crc = model_crc(&o.final_model);
+                t.row(vec![
+                    n.to_string(),
+                    format!("{:.3}", o.container_seconds),
+                    format!("{:.1}", mean_latency * 1e3),
+                    folds.to_string(),
+                    format!("{crc:08x}"),
+                    format!("{:.2}", sum.wall_secs),
+                ]);
+                rows.push(Json::obj(vec![
+                    ("shards", Json::num(n as f64)),
+                    ("busy_secs", Json::num(o.container_seconds)),
+                    ("mean_latency_secs", Json::num(mean_latency)),
+                    ("updates_fused", Json::num(folds as f64)),
+                    ("rounds", Json::num(fused_rounds as f64)),
+                    ("model_crc32", Json::str(&format!("{crc:08x}"))),
+                    ("wall_secs", Json::num(sum.wall_secs)),
+                ]));
+            }
+            Err(e) => {
+                t.row(vec![
+                    n.to_string(),
+                    format!("failed: {e}"),
+                    String::new(),
+                    String::new(),
+                    String::new(),
+                    String::new(),
+                ]);
+                rows.push(Json::obj(vec![
+                    ("shards", Json::num(n as f64)),
+                    ("error", Json::str(&format!("{e:#}"))),
+                ]));
+            }
+        }
+    }
+    let json = Json::obj(vec![
+        ("parties", Json::num(cfg.n_parties as f64)),
+        ("rounds", Json::num(cfg.rounds as f64)),
+        ("seed", Json::num(cfg.seed as f64)),
+        ("dim", Json::num(cfg.dim as f64)),
+        ("epoch_secs", Json::num(cfg.epoch_secs)),
+        ("wall", Json::Bool(cfg.wall)),
+        ("shard_scaling", Json::Arr(rows)),
     ]);
     (t, json)
 }
@@ -201,5 +316,36 @@ mod tests {
         let text =
             std::fs::read_to_string(crate::bench::repro_dir().join("BENCH_live.json")).unwrap();
         assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn shard_sweep_rows_carry_one_model_fingerprint() {
+        let cfg = LiveSweepConfig {
+            n_parties: 5,
+            rounds: 2,
+            dim: 32,
+            wall: false,
+            ..Default::default()
+        };
+        let (_t, json) = run_shard_sweep(&cfg, &[1, 2, 3, 7]);
+        let rows = json.get("shard_scaling").as_arr().unwrap();
+        assert_eq!(rows.len(), 4);
+        let crc0 = rows[0].get("model_crc32").as_str().unwrap().to_string();
+        for row in rows {
+            assert!(
+                row.get("error").as_str().is_none(),
+                "shards={:?} failed: {:?}",
+                row.get("shards"),
+                row.get("error")
+            );
+            assert_eq!(row.get("rounds").as_u64(), Some(2));
+            assert_eq!(row.get("updates_fused").as_u64(), Some(10));
+            assert_eq!(
+                row.get("model_crc32").as_str(),
+                Some(crc0.as_str()),
+                "shards={:?} diverged from the single-fold fingerprint",
+                row.get("shards")
+            );
+        }
     }
 }

@@ -238,11 +238,12 @@ pub trait UpdateSource {
 }
 
 /// One job's topic-watch cursor inside a [`WallDriver`].
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 struct RoundWatch {
     round: u32,
-    /// Topic offset up to which this round's messages were ingested.
-    ingested: usize,
+    /// Per-shard topic offsets up to which this round's messages were
+    /// ingested (one entry on the unsharded plane).
+    ingested: Vec<usize>,
 }
 
 /// Wall-clock driver: sleeps to the next deadline (queued event or
@@ -266,6 +267,8 @@ pub struct WallDriver<C: Clock, S: UpdateSource> {
     idle: Duration,
     /// Watchdog for stalled thread sources.
     pub idle_budget: Duration,
+    /// L1 aggregator shard count: >1 watches one topic per shard per job.
+    shards: usize,
 }
 
 impl<C: Clock, S: UpdateSource> WallDriver<C, S> {
@@ -277,7 +280,15 @@ impl<C: Clock, S: UpdateSource> WallDriver<C, S> {
             seen: 0,
             idle: Duration::ZERO,
             idle_budget: Duration::from_secs(60),
+            shards: 1,
         }
+    }
+
+    /// Watch `n` per-shard topics per job instead of the flat round
+    /// topic (the aggregator-tree data plane).
+    pub fn with_shards(mut self, n: usize) -> WallDriver<C, S> {
+        self.shards = n.max(1);
+        self
     }
 
     /// Point `job`'s ingest cursor at a (new or resumed) round's topic.
@@ -286,7 +297,13 @@ impl<C: Clock, S: UpdateSource> WallDriver<C, S> {
     /// aggregator restarts, so a fresh deployment reconstructs the round
     /// from the log.
     pub fn watch_round(&mut self, job: usize, round: u32) {
-        self.watches.insert(job, RoundWatch { round, ingested: 0 });
+        self.watches.insert(
+            job,
+            RoundWatch {
+                round,
+                ingested: vec![0; self.shards],
+            },
+        );
     }
 
     /// Stop watching a finished job's topics (its engine is done; any
@@ -302,13 +319,46 @@ impl<C: Clock, S: UpdateSource> WallDriver<C, S> {
     /// ones.
     fn ingest(&mut self, q: &mut EventQueue, mq: &MessageQueue) {
         for (&job, w) in self.watches.iter_mut() {
-            let topic = mq::update_topic(job, w.round);
-            loop {
-                let batch = mq.fetch(&topic, w.ingested, 64);
-                if batch.is_empty() {
-                    break;
+            if self.shards <= 1 {
+                let topic = mq::update_topic(job, w.round);
+                loop {
+                    let batch = mq.fetch(&topic, w.ingested[0], 64);
+                    if batch.is_empty() {
+                        break;
+                    }
+                    for m in &batch {
+                        q.schedule_at(
+                            m.enqueued_at,
+                            EventKind::UpdateArrival {
+                                job,
+                                round: m.round,
+                                party: m.party,
+                            },
+                        );
+                    }
+                    w.ingested[0] += batch.len();
                 }
-                for m in &batch {
+            } else {
+                // Sharded plane: drain every shard topic, then schedule
+                // the union in (enqueued_at, party) order — exactly the
+                // order the flat topic interleaves same-µs publishes in
+                // (the pump produces ascending by (due, job, party)), so
+                // the engine's estimator sees an identical event stream
+                // regardless of the shard count.
+                let mut fresh: Vec<Message> = Vec::new();
+                for s in 0..self.shards {
+                    let topic = mq::shard_topic(job, w.round, s);
+                    loop {
+                        let batch = mq.fetch(&topic, w.ingested[s], 64);
+                        if batch.is_empty() {
+                            break;
+                        }
+                        w.ingested[s] += batch.len();
+                        fresh.extend(batch);
+                    }
+                }
+                fresh.sort_by_key(|m| (m.enqueued_at, m.party));
+                for m in &fresh {
                     q.schedule_at(
                         m.enqueued_at,
                         EventKind::UpdateArrival {
@@ -318,7 +368,6 @@ impl<C: Clock, S: UpdateSource> WallDriver<C, S> {
                         },
                     );
                 }
-                w.ingested += batch.len();
             }
         }
         self.seen = mq.produced();
@@ -445,6 +494,10 @@ pub struct JobEngine {
     /// Rounds skipped because expected on-time arrivals starved below the
     /// quorum floor.
     pub rounds_skipped: u32,
+    /// L1 aggregator shard count for this job's data plane (1 = the flat
+    /// single-fold plane; >1 routes updates to per-shard topics by the
+    /// fixed party-id range boundaries in [`crate::fusion::shard`]).
+    pub shards: usize,
     /// Telemetry handle (disabled by default; the platform/live loops
     /// attach an enabled registry via [`JobEngine::set_telemetry`]).
     /// Strictly observational — never touches `rng` or the event queue.
@@ -513,6 +566,7 @@ impl JobEngine {
             updates_dropped: 0,
             updates_decayed: 0,
             rounds_skipped: 0,
+            shards: 1,
             telemetry: Registry::disabled(),
             tel_scope: Scope::job(job),
             delivered: std::collections::HashSet::new(),
@@ -742,7 +796,10 @@ impl JobEngine {
         let weight =
             (self.fleet.parties[party].dataset_items * (-lambda * age).exp()) as f32;
         let job = self.params.job;
-        let cur_topic = mq::update_topic(job, self.round);
+        // the party's shard owns it in every round — stale re-produces
+        // land in the same shard's current-round topic
+        let shard = crate::fusion::shard::shard_of(party, self.spec.n_parties, self.shards);
+        let cur_topic = mq::shard_topic_for(job, self.round, shard, self.shards);
         match mode {
             ArrivalMode::Schedule => {
                 mq.produce(
@@ -765,7 +822,8 @@ impl JobEngine {
                 // the decayed weight so the folder fuses it durably; the
                 // copy keeps the original round, so its ingest echo
                 // routes back here and dedupes.
-                let old = mq.fetch(&mq::update_topic(job, round), 0, usize::MAX);
+                let old =
+                    mq.fetch(&mq::shard_topic_for(job, round, shard, self.shards), 0, usize::MAX);
                 let Some(m) = old.iter().find(|m| m.party == party) else {
                     self.updates_dropped += 1; // payload gone — give up
                     self.telemetry
@@ -852,9 +910,11 @@ impl JobEngine {
             self.linearity.observe_minibatch(p.hardware.score(), mb);
         }
         if mode == ArrivalMode::Schedule {
-            // buffer in the MQ (sim payload: size only)
+            // buffer in the MQ (sim payload: size only; the sim plane is
+            // unsharded so this collapses to the flat round topic)
+            let shard = crate::fusion::shard::shard_of(party, self.spec.n_parties, self.shards);
             mq.produce(
-                &mq::update_topic(self.params.job, round),
+                &mq::shard_topic_for(self.params.job, round, shard, self.shards),
                 Message {
                     party,
                     round,

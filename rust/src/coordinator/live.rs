@@ -68,6 +68,7 @@ use crate::coordinator::driver::{
     ArrivalMode, Clock, Driver, JobEngine, UpdateSource, WallClock, WallDriver, WallTimer,
 };
 use crate::coordinator::session::{EventSink, JobOutcome, RunSummary, SessionEvent};
+use crate::fusion::shard::{self, shard_of, ShardAccum};
 use crate::fusion::{Aggregator, Algorithm};
 use crate::metrics::RoundRecord;
 use crate::mq::{self, CheckpointState, Message, MessageQueue, Payload};
@@ -135,46 +136,138 @@ enum FoldOutcome {
     Killed,
 }
 
-/// The live aggregation state: a streaming weighted mean over the round
-/// topic, consumed strictly in offset order. After *every* fold the
-/// partial state (accumulator + consumed offset) is checkpointed to the
-/// MQ, so an aggregator death at any instant loses at most nothing: the
-/// next deployment reloads the checkpoint and replays the remainder of
-/// the log, producing the bit-identical mean (pinned by test).
-struct Folder {
-    agg: Aggregator,
+/// Per-shard fault injection: kill L1 shard `shard` after its
+/// `after_folds`-th fold this run. Siblings keep folding; the dead shard
+/// is revived JIT from its own WAL checkpoint slot when the round
+/// completes. `torn` emulates death *mid-checkpoint*: the fatal fold is
+/// applied in memory but its checkpoint is never written, so revival
+/// replays that message from the shard's topic log.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct ShardKill {
+    pub(crate) shard: usize,
+    pub(crate) after_folds: u64,
+    pub(crate) torn: bool,
+}
+
+/// One L1 aggregator shard's JIT fold state: a bucketed partial sum over
+/// the shard's own topic, consumed strictly in offset order.
+struct ShardFold {
+    accum: ShardAccum,
     consumed_to: usize,
+    /// Folds performed by this shard in this run (per-shard kill ledger).
+    folds_this_run: u64,
+    /// Cleared by a [`ShardKill`]; revived at round completion.
+    alive: bool,
+}
+
+impl ShardFold {
+    fn fresh(dim: usize) -> ShardFold {
+        ShardFold {
+            accum: ShardAccum::new(dim),
+            consumed_to: 0,
+            folds_this_run: 0,
+            alive: true,
+        }
+    }
+
+    fn from_checkpoint(dim: usize, ck: &CheckpointState) -> ShardFold {
+        ShardFold {
+            accum: ShardAccum::from_parts(
+                dim,
+                ck.acc.as_deref(),
+                ck.weight,
+                ck.n_merged,
+                &ck.buckets,
+            ),
+            consumed_to: ck.consumed_to,
+            folds_this_run: 0,
+            alive: true,
+        }
+    }
+}
+
+/// The live aggregation data plane for one job: the L1 aggregator tree.
+/// With one shard this *is* the classic single-fold plane (same topic
+/// and checkpoint-slot names, one fold loop); with `n` shards each L1
+/// shard folds its own topic into fixed logical buckets and the root
+/// combines the partials in shard order ([`shard::root_fold`]), so the
+/// published model is bit-identical for every shard count. After
+/// *every* fold the folding shard checkpoints its partial state
+/// (buckets + consumed offset) to its own MQ slot — §5.5's
+/// "checkpointing partially aggregated model updates using the message
+/// queue", per shard: kill any single shard at any instant and a fresh
+/// one resumes from its slot + topic log without touching its siblings
+/// (pinned by tests).
+struct Folder {
+    shards: Vec<ShardFold>,
+    n_parties: usize,
 }
 
 impl Folder {
-    fn fresh(dim: usize) -> Folder {
+    fn fresh(dim: usize, n_parties: usize, shard_count: usize) -> Folder {
         Folder {
-            agg: Aggregator::new(dim),
-            consumed_to: 0,
+            shards: (0..shard_count.max(1)).map(|_| ShardFold::fresh(dim)).collect(),
+            n_parties,
         }
     }
 
-    /// Restore from the round's MQ checkpoint slot, or start fresh.
-    fn resume(mq: &MessageQueue, job: usize, round: u32, dim: usize) -> Folder {
-        match mq.load_checkpoint(&mq::checkpoint_slot(job, round)) {
-            Some(ck) => Folder {
-                agg: Aggregator::from_parts(
-                    ck.acc.unwrap_or_else(|| vec![0.0; dim]),
-                    ck.weight,
-                    ck.n_merged,
-                ),
-                consumed_to: ck.consumed_to,
-            },
-            None => Folder::fresh(dim),
+    /// Restore every shard from its round checkpoint slot, or fresh.
+    fn resume(
+        mq: &MessageQueue,
+        job: usize,
+        round: u32,
+        dim: usize,
+        n_parties: usize,
+        shard_count: usize,
+    ) -> Folder {
+        let shard_count = shard_count.max(1);
+        let shards = (0..shard_count)
+            .map(|s| {
+                match mq.load_checkpoint(&mq::shard_slot_for(job, round, s, shard_count)) {
+                    Some(ck) => ShardFold::from_checkpoint(dim, &ck),
+                    None => ShardFold::fresh(dim),
+                }
+            })
+            .collect();
+        Folder { shards, n_parties }
+    }
+
+    /// Any shard currently dead from a [`ShardKill`]?
+    fn any_dead(&self) -> bool {
+        self.shards.iter().any(|s| !s.alive)
+    }
+
+    /// Revive shards killed by a [`ShardKill`]: reload each dead shard
+    /// from its own WAL checkpoint slot (the §5.5 per-shard resume
+    /// path — in-memory state is discarded, exactly like a process
+    /// death), leaving siblings untouched. The next catch-up replays
+    /// the remainder of the shard's topic log.
+    fn revive_dead(&mut self, mq: &MessageQueue, job: usize, round: u32, tel: &Registry) {
+        let shard_count = self.shards.len();
+        for s in 0..shard_count {
+            if self.shards[s].alive {
+                continue;
+            }
+            let dim = self.shards[s].accum.dim();
+            self.shards[s] =
+                match mq.load_checkpoint(&mq::shard_slot_for(job, round, s, shard_count)) {
+                    Some(ck) => ShardFold::from_checkpoint(dim, &ck),
+                    None => ShardFold::fresh(dim),
+                };
+            if tel.on() {
+                tel.counter_add("shard_restarts_total", &Scope::job(job), 1);
+            }
         }
     }
 
-    /// Fold every not-yet-consumed message in the round topic, saving a
-    /// checkpoint after each fold. `budget` is the fault-injection
-    /// countdown; `fused` counts this run's real folds. Folds performed
-    /// by this pass are reported through `sink` as one
+    /// Fold every not-yet-consumed message in every live shard's topic,
+    /// saving the shard's checkpoint after each fold. `budget` is the
+    /// whole-aggregator fault-injection countdown, `kill_shard` the
+    /// per-shard one; `fused` counts this run's real folds. Folds
+    /// performed by this pass are reported through `sink` as one
     /// [`SessionEvent::CheckpointWritten`], and into `tel` as a
-    /// `checkpoint` span plus a fold counter.
+    /// `checkpoint` span per folding shard (detail = shard id) plus a
+    /// fold counter.
     #[allow(clippy::too_many_arguments)]
     fn catch_up(
         &mut self,
@@ -183,42 +276,72 @@ impl Folder {
         round: u32,
         now: Time,
         budget: &mut Option<u64>,
+        kill_shard: &mut Option<ShardKill>,
         fused: &mut u64,
         sink: &EventSink,
         tel: &Registry,
     ) -> FoldOutcome {
-        let topic = mq::update_topic(job, round);
-        let slot = mq::checkpoint_slot(job, round);
+        let shard_count = self.shards.len();
+        let n_parties = self.n_parties;
         let before = *fused;
-        let outcome = 'fold: loop {
-            let batch = mq.fetch(&topic, self.consumed_to, 64);
-            if batch.is_empty() {
-                break FoldOutcome::Ok;
+        let mut pass_folds = vec![0u64; shard_count];
+        let mut outcome = FoldOutcome::Ok;
+        'shards: for s in 0..shard_count {
+            if !self.shards[s].alive {
+                continue;
             }
-            for m in &batch {
-                if let Some(b) = budget {
-                    if *b == 0 {
-                        break 'fold FoldOutcome::Killed;
+            let topic = mq::shard_topic_for(job, round, s, shard_count);
+            let slot = mq::shard_slot_for(job, round, s, shard_count);
+            loop {
+                let batch = mq.fetch(&topic, self.shards[s].consumed_to, 64);
+                if batch.is_empty() {
+                    break;
+                }
+                for m in &batch {
+                    if let Some(b) = budget {
+                        if *b == 0 {
+                            outcome = FoldOutcome::Killed;
+                            break 'shards;
+                        }
+                        *b -= 1;
                     }
-                    *b -= 1;
+                    let sf = &mut self.shards[s];
+                    if let Some(data) = m.payload.data() {
+                        sf.accum.fold(m.party, n_parties, data, m.weight);
+                    }
+                    sf.consumed_to += 1;
+                    sf.folds_this_run += 1;
+                    *fused += 1;
+                    pass_folds[s] += 1;
+                    let dying = kill_shard
+                        .map(|k| k.shard == s && sf.folds_this_run >= k.after_folds)
+                        .unwrap_or(false);
+                    let torn = dying && kill_shard.map(|k| k.torn).unwrap_or(false);
+                    if !torn {
+                        let (acc, weight, n_merged, buckets) = sf.accum.to_parts();
+                        mq.save_checkpoint(
+                            &slot,
+                            CheckpointState {
+                                acc,
+                                weight,
+                                n_merged,
+                                consumed_to: sf.consumed_to,
+                                saved_at: now,
+                                buckets,
+                            },
+                        );
+                    }
+                    if dying {
+                        sf.alive = false;
+                        *kill_shard = None;
+                        if tel.on() {
+                            tel.counter_add("shard_kills_total", &Scope::job(job), 1);
+                        }
+                        continue 'shards; // siblings keep folding
+                    }
                 }
-                if let Some(data) = m.payload.data() {
-                    self.agg.add(data, m.weight);
-                }
-                self.consumed_to += 1;
-                *fused += 1;
-                mq.save_checkpoint(
-                    &slot,
-                    CheckpointState {
-                        acc: Some(self.agg.acc.clone()),
-                        weight: self.agg.weight,
-                        n_merged: self.agg.n_merged,
-                        consumed_to: self.consumed_to,
-                        saved_at: now,
-                    },
-                );
             }
-        };
+        }
         if *fused > before {
             sink.emit(SessionEvent::CheckpointWritten {
                 job,
@@ -227,18 +350,30 @@ impl Folder {
                 at_secs: to_secs(now),
             });
             if tel.on() {
-                tel.span_instant(SpanKind::Checkpoint, job, round, 0, now);
+                for (s, &n) in pass_folds.iter().enumerate() {
+                    if n > 0 {
+                        tel.span_instant(SpanKind::Checkpoint, job, round, s as u64, now);
+                    }
+                }
                 tel.counter_add("updates_folded_total", &Scope::job(job), *fused - before);
             }
         }
         outcome
     }
 
-    fn finalize(&self, alg: Algorithm, prev_global: &[f32]) -> Vec<f32> {
-        if self.agg.n_merged == 0 {
-            return prev_global.to_vec();
+    /// Root fold over the shards' partials (ascending bucket order,
+    /// pooled scratch) then finalize. Returns the published model and
+    /// its total fused weight; an empty round (every bucket empty —
+    /// including the all-parties-dropped-out shard case) re-publishes
+    /// the previous global, never wedging on a zero weight.
+    fn finalize(&self, alg: Algorithm, prev_global: &[f32]) -> (Vec<f32>, f32) {
+        let dim = self.shards[0].accum.dim();
+        let refs: Vec<&ShardAccum> = self.shards.iter().map(|sf| &sf.accum).collect();
+        let agg = shard::root_fold(&refs, dim);
+        if agg.n_merged == 0 {
+            return (prev_global.to_vec(), agg.weight);
         }
-        self.agg.finalize(alg, Some(prev_global))
+        (agg.finalize(alg, Some(prev_global)), agg.weight)
     }
 }
 
@@ -272,6 +407,9 @@ pub struct ScriptedParties {
     lr: f32,
     /// Aggregation weights indexed `[job][party]`.
     weights: Vec<Vec<f32>>,
+    /// L1 aggregator shard count: parties publish into their own shard's
+    /// topic (`shards <= 1` keeps the classic flat topic names).
+    shards: usize,
     /// Pending publishes, ascending by (due, job, party); drained from
     /// the front (O(1) per publish even at 10k parties).
     pending: std::collections::VecDeque<ScriptedPublish>,
@@ -289,8 +427,15 @@ impl ScriptedParties {
             seed,
             lr,
             weights,
+            shards: 1,
             pending: std::collections::VecDeque::new(),
         }
+    }
+
+    /// Route publishes across `n` L1 aggregator shard topics.
+    pub fn with_shards(mut self, n: usize) -> ScriptedParties {
+        self.shards = n.max(1);
+        self
     }
 }
 
@@ -327,8 +472,10 @@ impl UpdateSource for ScriptedParties {
         while self.pending.front().is_some_and(|p| p.due <= now) {
             let p = self.pending.pop_front().expect("front checked");
             let update = synth_update(&p.model, job_seed(self.seed, p.job), p.party, self.lr);
+            let n_parties = self.weights[p.job].len();
+            let s = shard_of(p.party, n_parties, self.shards);
             mq.produce(
-                &mq::update_topic(p.job, p.round),
+                &mq::shard_topic_for(p.job, p.round, s, self.shards),
                 Message {
                     party: p.party,
                     round: p.round,
@@ -405,15 +552,18 @@ impl ThreadParties {
         seed: u64,
         lr: f32,
         weights: &[f32],
+        shards: usize,
     ) -> ThreadParties {
         let failed = Arc::new(std::sync::Mutex::new(None));
         let mut txs = Vec::new();
         let mut handles = Vec::new();
+        let n_parties = weights.len();
         for (party, &weight) in weights.iter().enumerate() {
             let (tx, rx) = mpsc::channel::<PartyCmd>();
             txs.push(tx);
             let mqc = Arc::clone(mq);
             let failedc = Arc::clone(&failed);
+            let shard = shard_of(party, n_parties, shards);
             handles.push(std::thread::spawn(move || {
                 let mut flag = PartyFailFlag {
                     failed: failedc,
@@ -424,7 +574,7 @@ impl ThreadParties {
                     let update = synth_update(&cmd.model, seed, party, lr);
                     timer.sleep_until(cmd.due);
                     mqc.produce(
-                        &mq::update_topic(cmd.job, cmd.round),
+                        &mq::shard_topic_for(cmd.job, cmd.round, shard, shards),
                         Message {
                             party,
                             round: cmd.round,
@@ -470,6 +620,7 @@ impl ThreadParties {
             let dirc = dir.clone();
             let failedc = Arc::clone(&failed);
             let (minibatches, alpha, seed, lr) = (cfg.minibatches, cfg.alpha, cfg.seed, cfg.lr);
+            let (shard, shards) = (shard_of(party, cfg.n_parties, cfg.shards), cfg.shards);
             handles.push(std::thread::spawn(move || {
                 let mut flag = PartyFailFlag {
                     failed: failedc,
@@ -495,7 +646,7 @@ impl ThreadParties {
                             },
                         );
                         mqc.produce(
-                            &mq::update_topic(cmd.job, cmd.round),
+                            &mq::shard_topic_for(cmd.job, cmd.round, shard, shards),
                             Message {
                                 party,
                                 round: cmd.round,
@@ -595,6 +746,8 @@ pub(crate) struct XlaSessionConfig {
     pub(crate) alpha: f64,
     pub(crate) seed: u64,
     pub(crate) lr: f32,
+    /// L1 aggregator shard count (parties route to their shard's topic).
+    pub(crate) shards: usize,
 }
 
 /// XLA backend (single job): real training threads + an aggregator-side
@@ -641,10 +794,11 @@ pub(crate) fn run_session_xla(
         eval_trainer.unflatten(model);
         eval_trainer.eval(&eval_x, &eval_y)
     };
+    let shards = xla.shards;
     let mut summary = session_loop(
         params,
         mq,
-        WallDriver::new(clock, source),
+        WallDriver::new(clock, source).with_shards(shards),
         engines,
         Some(&mut eval),
     )?;
@@ -683,6 +837,10 @@ pub(crate) struct LoopParams<'a> {
     /// sets job 0's real dimension when present).
     pub(crate) dim: usize,
     pub(crate) kill_after_fuses: Option<u64>,
+    /// L1 aggregator shard count (1 = the classic single-fold plane).
+    pub(crate) shards: usize,
+    /// Kill one L1 shard mid-round (fault injection; see [`ShardKill`]).
+    pub(crate) kill_shard: Option<ShardKill>,
     pub(crate) resume: bool,
     /// Job 0's initial global model (XLA wall sessions: the trainer's
     /// flattened init instead of `init_model`).
@@ -710,6 +868,7 @@ pub(crate) fn session_loop<C: Clock, S: UpdateSource>(
     let arrivals = p.arrivals;
     let n_jobs = arrivals.len();
     let resume = p.resume;
+    let shards = p.shards.max(1);
     let sink = p.sink.clone();
     let tel = p.telemetry.clone();
     mq.set_telemetry(&tel);
@@ -782,11 +941,12 @@ pub(crate) fn session_loop<C: Clock, S: UpdateSource>(
         }
         dims.push(dim);
         globals.push(Arc::new(global));
-        folders.push(Folder::fresh(dim));
+        folders.push(Folder::fresh(dim, arr.spec.n_parties, shards));
         q.schedule_at(secs(arr.at_secs), EventKind::JobArrival { job });
     }
 
     let mut kill = p.kill_after_fuses;
+    let mut kill_shard = p.kill_shard;
     let mut crashed = false;
     let mut fatal: Option<anyhow::Error> = None;
     let mut tick_scheduled = false;
@@ -909,19 +1069,34 @@ pub(crate) fn session_loop<C: Clock, S: UpdateSource>(
                         });
                         tel.span_begin(SpanKind::Round, job, round, 0, q.now());
                         driver.watch_round(job, round);
+                        let n_parties = engines[job].spec.n_parties;
                         folders[job] = if resume && resumed_rounds[job] == Some(round) {
-                            Folder::resume(mq, job, round, dims[job])
+                            Folder::resume(mq, job, round, dims[job], n_parties, shards)
                         } else {
-                            Folder::fresh(dims[job])
+                            Folder::fresh(dims[job], n_parties, shards)
                         };
+                        // JIT shard spin-up: the L1 fold states exist only
+                        // for the duration of the round (LIFL §3.2)
+                        if shards > 1 && tel.on() {
+                            tel.counter_add(
+                                "shard_spinups_total",
+                                &Scope::job(job),
+                                shards as u64,
+                            );
+                        }
                         // resumed round: re-deliver only the plan's parties
                         // missing from the topic log (logged updates replay
                         // from the MQ)
                         let parties: Vec<usize> =
                             if skip_broadcast[job].take() == Some(round) {
-                                let logged: std::collections::HashSet<usize> = mq
-                                    .fetch(&mq::update_topic(job, round), 0, usize::MAX)
-                                    .iter()
+                                let logged: std::collections::HashSet<usize> = (0..shards)
+                                    .flat_map(|s| {
+                                        mq.fetch(
+                                            &mq::shard_topic_for(job, round, s, shards),
+                                            0,
+                                            usize::MAX,
+                                        )
+                                    })
                                     .map(|m| m.party)
                                     .collect();
                                 plan.parties
@@ -998,6 +1173,7 @@ pub(crate) fn session_loop<C: Clock, S: UpdateSource>(
                                 engines[job].round,
                                 q.now(),
                                 &mut kill,
+                                &mut kill_shard,
                                 &mut folded[job],
                                 &sink,
                                 &tel,
@@ -1036,12 +1212,17 @@ pub(crate) fn session_loop<C: Clock, S: UpdateSource>(
             if let Some(rec) = engines[job].take_completed() {
                 let round = rec.round;
                 let fuse_begin = q.now();
+                // revive any shard killed mid-round: reload it JIT from
+                // its own WAL checkpoint slot, siblings untouched, then
+                // let the completion catch-up replay its log remainder
+                folders[job].revive_dead(mq, job, round, &tel);
                 if folders[job].catch_up(
                     mq,
                     job,
                     round,
                     q.now(),
                     &mut kill,
+                    &mut kill_shard,
                     &mut folded[job],
                     &sink,
                     &tel,
@@ -1050,7 +1231,29 @@ pub(crate) fn session_loop<C: Clock, S: UpdateSource>(
                     crashed = true;
                     break 'outer;
                 }
-                let fused_model =
+                if folders[job].any_dead() {
+                    // the per-shard kill fired during the completion pass
+                    // itself: a death discards the shard's memory, so the
+                    // root fold must only ever see checkpoint-restored
+                    // state — revive and replay before finalizing
+                    folders[job].revive_dead(mq, job, round, &tel);
+                    if folders[job].catch_up(
+                        mq,
+                        job,
+                        round,
+                        q.now(),
+                        &mut kill,
+                        &mut kill_shard,
+                        &mut folded[job],
+                        &sink,
+                        &tel,
+                    ) == FoldOutcome::Killed
+                    {
+                        crashed = true;
+                        break 'outer;
+                    }
+                }
+                let (fused_model, fused_weight) =
                     folders[job].finalize(engines[job].spec.algorithm(), &globals[job]);
                 tel.span_begin(SpanKind::Fuse, job, round, 0, fuse_begin);
                 tel.span_end(SpanKind::Fuse, job, round, 0, q.now());
@@ -1081,7 +1284,7 @@ pub(crate) fn session_loop<C: Clock, S: UpdateSource>(
                     Message {
                         party: 0,
                         round,
-                        weight: folders[job].agg.weight,
+                        weight: fused_weight,
                         enqueued_at: q.now(),
                         payload: Payload::Inline(fused_model.clone()),
                     },
@@ -1093,10 +1296,15 @@ pub(crate) fn session_loop<C: Clock, S: UpdateSource>(
                     at_secs: to_secs(q.now()),
                 });
                 tel.span_end(SpanKind::Round, job, round, 0, q.now());
-                mq.clear_checkpoint(&mq::checkpoint_slot(job, round));
-                mq.drop_topic(&mq::update_topic(job, round));
-                if round > 0 {
-                    mq.drop_topic(&mq::update_topic(job, round - 1));
+                // release the round's shards JIT: checkpoints cleared,
+                // topics dropped (this round now, the previous one for
+                // straggler-recreated topics)
+                for s in 0..shards {
+                    mq.clear_checkpoint(&mq::shard_slot_for(job, round, s, shards));
+                    mq.drop_topic(&mq::shard_topic_for(job, round, s, shards));
+                    if round > 0 {
+                        mq.drop_topic(&mq::shard_topic_for(job, round - 1, s, shards));
+                    }
                 }
                 globals[job] = Arc::new(fused_model);
                 let now = q.now();
@@ -1160,7 +1368,9 @@ pub(crate) fn session_loop<C: Clock, S: UpdateSource>(
         // everything — resume needs the logs.
         for (job, e) in engines.iter().enumerate() {
             for r in 0..e.spec.rounds {
-                mq.drop_topic(&mq::update_topic(job, r));
+                for s in 0..shards {
+                    mq.drop_topic(&mq::shard_topic_for(job, r, s, shards));
+                }
             }
         }
     }

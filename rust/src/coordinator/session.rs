@@ -48,6 +48,8 @@
 //! | [`quorum` (on the spec)](crate::coordinator::job::FlJobSpec::with_quorum) | minimum updates per round | §5.1 |
 //! | [`backend`](Session::backend) | who plays the parties in a `wall` session | §4 party model |
 //! | [`kill_after_fuses`](Session::kill_after_fuses) | aggregator-crash injection for the resume tests | §5.5 |
+//! | [`shards`](Session::shards) | L1 aggregator tree width (bit-identical to the single fold for every n) | §3.2 hierarchy |
+//! | [`kill_shard`](Session::kill_shard) | kill one L1 shard mid-round; it resumes from its own checkpoint | §5.5 |
 //! | [`faults`](Session::faults) | fleet fault injection ([`FleetFaults`]): stragglers, dropout, diurnal waves, weight skew | robustness matrix |
 //! | [`events`](Session::events) | stream typed [`SessionEvent`]s while the run executes | §5.5 observability |
 //! | [`telemetry`](Session::telemetry) | attach a [`Registry`](crate::telemetry::Registry): metrics + structured spans from every layer | §5.5 observability |
@@ -595,6 +597,8 @@ pub struct Session {
     minibatches: usize,
     alpha: f64,
     kill_after_fuses: Option<u64>,
+    shards: usize,
+    kill_shard: Option<live::ShardKill>,
     mq: Option<Arc<MessageQueue>>,
     data_dir: Option<std::path::PathBuf>,
     fsync: FsyncPolicy,
@@ -620,6 +624,8 @@ impl Session {
             minibatches: 4,
             alpha: 0.5,
             kill_after_fuses: None,
+            shards: 1,
+            kill_shard: None,
             mq: None,
             data_dir: None,
             fsync: FsyncPolicy::default(),
@@ -770,6 +776,36 @@ impl Session {
         self
     }
 
+    /// Aggregator tree: partition each round's parties across `n` L1
+    /// aggregator shards (fixed range boundaries over party id), one MQ
+    /// topic and §5.5 checkpoint slot per shard, the root folding the
+    /// shard partials in shard order. The published models are
+    /// bit-identical for every `n` (1..=64; the fold runs over fixed
+    /// logical buckets, so the grouping is independent of the shard
+    /// count — pinned by `tests/shard_equivalence.rs`). Data-plane knob:
+    /// live/wall route real messages per shard; sim has no data plane,
+    /// so the knob is quietly inert there.
+    pub fn shards(mut self, n: usize) -> Session {
+        self.shards = n;
+        self
+    }
+
+    /// Fault injection: kill L1 aggregator shard `shard` after its
+    /// `after_folds`-th fold of the run. Siblings keep folding; a
+    /// replacement shard resumes JIT from the dead shard's own WAL
+    /// checkpoint slot at round completion. With `mid_checkpoint` the
+    /// fatal fold's checkpoint write is itself lost (torn), so the
+    /// replacement replays that update from the shard's topic log.
+    /// Live/wall only.
+    pub fn kill_shard(mut self, shard: usize, after_folds: u64, mid_checkpoint: bool) -> Session {
+        self.kill_shard = Some(live::ShardKill {
+            shard,
+            after_folds,
+            torn: mid_checkpoint,
+        });
+        self
+    }
+
     /// Fleet fault injection ([`FleetFaults`]): heavy-tailed stragglers,
     /// per-round dropout with rejoin, diurnal availability waves, non-IID
     /// weight skew, straggler cutoff and the quorum floor. Applied to
@@ -916,6 +952,11 @@ impl Session {
                 "kill_after_fuses applies to live/wall sessions (sim has no data plane)"
             ));
         }
+        if self.kill_shard.is_some() {
+            return Err(anyhow!(
+                "kill_shard applies to live/wall sessions (sim has no data plane)"
+            ));
+        }
         let capacity = self.capacity.unwrap_or_else(|| self.default_capacity()).max(1);
         let wall_start = Instant::now();
         let mut pcfg = PlatformConfig {
@@ -996,6 +1037,21 @@ impl Session {
     /// `coordinator::live` — a single job is its N = 1 case.
     fn run_live_mode(self) -> Result<Report> {
         let wall = self.mode == Mode::Wall;
+        let shards = self.shards;
+        if shards == 0 || shards > crate::fusion::shard::BUCKETS {
+            return Err(anyhow!(
+                "shards must be in 1..={} (the fixed logical-bucket count), got {shards}",
+                crate::fusion::shard::BUCKETS
+            ));
+        }
+        if let Some(k) = &self.kill_shard {
+            if k.shard >= shards {
+                return Err(anyhow!(
+                    "kill_shard targets shard {} but the session has {shards} shard(s)",
+                    k.shard
+                ));
+            }
+        }
         let backend = self.backend.unwrap_or(match (wall, self.arrivals.len()) {
             (false, _) => PartyBackend::Scripted,
             (true, 1) => PartyBackend::SynthThreads,
@@ -1040,6 +1096,7 @@ impl Session {
             let mut engine =
                 JobEngine::with_faults(job, arr.spec.clone(), &arr.strategy, self.seed, self.faults);
             engine.deferred = true;
+            engine.shards = shards;
             engine.set_telemetry(&self.telemetry, &arr.strategy);
             weights.push(
                 engine
@@ -1059,6 +1116,8 @@ impl Session {
             seed: self.seed,
             dim: self.dim.max(1),
             kill_after_fuses: self.kill_after_fuses,
+            shards,
+            kill_shard: self.kill_shard,
             resume: self.resume,
             init_override: None,
             sink: self.sink.clone(),
@@ -1066,12 +1125,13 @@ impl Session {
         };
         let summary = match backend {
             PartyBackend::Scripted => {
-                let source = ScriptedParties::multi_job(self.seed, self.lr, weights);
+                let source =
+                    ScriptedParties::multi_job(self.seed, self.lr, weights).with_shards(shards);
                 if wall {
                     live::session_loop(
                         params,
                         &mq,
-                        WallDriver::new(WallClock::new(), source),
+                        WallDriver::new(WallClock::new(), source).with_shards(shards),
                         engines,
                         None,
                     )?
@@ -1079,7 +1139,7 @@ impl Session {
                     live::session_loop(
                         params,
                         &mq,
-                        WallDriver::new(InstantClock::default(), source),
+                        WallDriver::new(InstantClock::default(), source).with_shards(shards),
                         engines,
                         None,
                     )?
@@ -1087,9 +1147,21 @@ impl Session {
             }
             PartyBackend::SynthThreads => {
                 let clock = WallClock::new();
-                let source =
-                    ThreadParties::synth(&mq, clock.timer, self.seed, self.lr, &weights[0]);
-                live::session_loop(params, &mq, WallDriver::new(clock, source), engines, None)?
+                let source = ThreadParties::synth(
+                    &mq,
+                    clock.timer,
+                    self.seed,
+                    self.lr,
+                    &weights[0],
+                    shards,
+                );
+                live::session_loop(
+                    params,
+                    &mq,
+                    WallDriver::new(clock, source).with_shards(shards),
+                    engines,
+                    None,
+                )?
             }
             PartyBackend::XlaThreads => live::run_session_xla(
                 params,
@@ -1101,6 +1173,7 @@ impl Session {
                     alpha: self.alpha,
                     seed: self.seed,
                     lr: self.lr,
+                    shards,
                 },
             )?,
         };
@@ -1145,6 +1218,18 @@ mod tests {
         let mut s = Session::live().backend(PartyBackend::SynthThreads);
         s.job(spec(3, 1), "jit");
         assert!(s.run().is_err(), "threads need the wall clock");
+        let mut s = Session::sim().kill_shard(0, 1, false);
+        s.job(spec(3, 1), "jit");
+        assert!(s.run().is_err(), "sim has no shards to kill");
+        let mut s = Session::live().shards(0);
+        s.job(spec(3, 1), "jit");
+        assert!(s.run().is_err(), "zero shards");
+        let mut s = Session::live().shards(crate::fusion::shard::BUCKETS + 1);
+        s.job(spec(3, 1), "jit");
+        assert!(s.run().is_err(), "more shards than logical buckets");
+        let mut s = Session::live().shards(2).kill_shard(5, 1, false);
+        s.job(spec(3, 1), "jit");
+        assert!(s.run().is_err(), "kill target beyond the shard count");
         let mut s = Session::live().resume(true); // no .on(&mq)
         s.job(spec(3, 1), "jit");
         assert!(

@@ -20,6 +20,7 @@
 //! integration test pins rust ≡ XLA ≡ (transitively, via pytest) pallas.
 
 pub mod pool;
+pub mod shard;
 
 use crate::model::{ModelSpec, ModelUpdate};
 use crate::util::rng::Rng;

@@ -38,6 +38,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
+pub use crate::fusion::shard::BucketMeta;
 use crate::sim::Time;
 use crate::telemetry::{Registry, Scope, SpanKind};
 use crate::wal::{self, RecordRef, RecoveryReport, Wal, WalConfig, WalError, WalStats};
@@ -172,7 +173,10 @@ pub struct MessageQueue {
 /// A partially aggregated state parked by a preempted aggregator (§5.5).
 #[derive(Clone, Debug, PartialEq)]
 pub struct CheckpointState {
-    /// Weighted-mean accumulator (live mode) or None in sim mode.
+    /// Accumulator payload (live mode) or None in sim mode. With the
+    /// bucketed fold plane this is the non-empty buckets' weighted sums
+    /// concatenated in bucket order (`buckets.len() * dim` values); a
+    /// legacy record with no bucket metas is a pre-tree running mean.
     pub acc: Option<Vec<f32>>,
     /// Total weight folded into the accumulator so far.
     pub weight: f32,
@@ -181,6 +185,8 @@ pub struct CheckpointState {
     /// Offset in the update topic up to which merging is complete.
     pub consumed_to: usize,
     pub saved_at: Time,
+    /// Per-bucket metadata describing `acc`'s layout (empty = legacy).
+    pub buckets: Vec<BucketMeta>,
 }
 
 impl MessageQueue {
@@ -621,6 +627,38 @@ pub fn checkpoint_slot(job: usize, round: u32) -> String {
     format!("job{job}/round{round}/ckpt")
 }
 
+/// Conventional topic for one L1 aggregator shard's round updates.
+/// Shard 0 of a single-shard plane uses [`update_topic`] — the tree
+/// with one shard IS the flat plane, topic names included.
+pub fn shard_topic(job: usize, round: u32, shard: usize) -> String {
+    format!("job{job}/round{round}/shard{shard}/updates")
+}
+
+/// Conventional checkpoint slot for one L1 shard's partial aggregate.
+pub fn shard_checkpoint_slot(job: usize, round: u32, shard: usize) -> String {
+    format!("job{job}/round{round}/shard{shard}/ckpt")
+}
+
+/// The topic shard `shard` of `shards` consumes for `(job, round)` —
+/// collapses to the flat [`update_topic`] when the plane is unsharded.
+pub fn shard_topic_for(job: usize, round: u32, shard: usize, shards: usize) -> String {
+    if shards <= 1 {
+        update_topic(job, round)
+    } else {
+        shard_topic(job, round, shard)
+    }
+}
+
+/// The checkpoint slot shard `shard` of `shards` writes for `(job,
+/// round)` — collapses to the flat [`checkpoint_slot`] when unsharded.
+pub fn shard_slot_for(job: usize, round: u32, shard: usize, shards: usize) -> String {
+    if shards <= 1 {
+        checkpoint_slot(job, round)
+    } else {
+        shard_checkpoint_slot(job, round, shard)
+    }
+}
+
 /// Conventional topic for a job's published (fused) global models — one
 /// message per completed round, so offset == completed-round count. The
 /// live runner treats this log as the job's durable model state: a
@@ -711,11 +749,18 @@ mod tests {
                 n_merged: 3,
                 consumed_to: 3,
                 saved_at: 123,
+                buckets: vec![BucketMeta {
+                    bucket: 4,
+                    weight: 5.0,
+                    folds: 3,
+                }],
             },
         );
         let st = q.load_checkpoint(&slot).unwrap();
         assert_eq!(st.n_merged, 3);
         assert_eq!(st.acc.as_ref().unwrap().len(), 2);
+        assert_eq!(st.buckets.len(), 1);
+        assert_eq!(st.buckets[0].bucket, 4);
         assert!(q.clear_checkpoint(&slot));
         assert!(!q.clear_checkpoint(&slot));
     }
@@ -941,6 +986,11 @@ mod tests {
                     n_merged: 2,
                     consumed_to: 4,
                     saved_at: 42,
+                    buckets: vec![BucketMeta {
+                        bucket: 0,
+                        weight: 2.0,
+                        folds: 2,
+                    }],
                 },
             );
             q.produce("gone", msg(0, 0));
@@ -1013,6 +1063,7 @@ mod tests {
                 n_merged: 0,
                 consumed_to: 0,
                 saved_at: 0,
+                buckets: Vec::new(),
             },
         );
         let (counters, gauges, _, _) = reg.snapshot();

@@ -43,7 +43,7 @@ use std::io;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
-use crate::mq::{CheckpointState, Message, Payload};
+use crate::mq::{BucketMeta, CheckpointState, Message, Payload};
 
 // ---------------------------------------------------------------------------
 // CRC32 (IEEE 802.3, reflected) — hand-rolled, no crates in the container.
@@ -394,6 +394,14 @@ fn encode_record(rec: RecordRef<'_>) -> Vec<u8> {
             e.u64(state.n_merged as u64);
             e.u64(state.consumed_to as u64);
             e.u64(state.saved_at);
+            // trailing bucket section (sharded fold plane) — decoders
+            // tolerate its absence, so pre-tree logs stay readable
+            e.u32(state.buckets.len() as u32);
+            for b in &state.buckets {
+                e.u32(b.bucket);
+                e.u32(b.folds);
+                e.f32(b.weight);
+            }
         }
         RecordRef::Commit {
             topic,
@@ -450,6 +458,10 @@ impl<'a> Dec<'a> {
 
     fn f32(&mut self) -> Result<f32, String> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.pos
     }
 
     fn str(&mut self) -> Result<String, String> {
@@ -538,14 +550,33 @@ fn decode_record(
             } else {
                 None
             };
+            let weight = d.f32()?;
+            let n_merged = d.u64()? as usize;
+            let consumed_to = d.u64()? as usize;
+            let saved_at = d.u64()?;
+            // a pre-tree record ends here; the bucket section is
+            // trailing and optional (legacy logs decode to no metas)
+            let mut buckets = Vec::new();
+            if d.remaining() >= 4 {
+                let n = d.u32()? as usize;
+                buckets.reserve(n);
+                for _ in 0..n {
+                    buckets.push(BucketMeta {
+                        bucket: d.u32()?,
+                        folds: d.u32()?,
+                        weight: d.f32()?,
+                    });
+                }
+            }
             Ok(Record::Checkpoint {
                 slot,
                 state: CheckpointState {
                     acc,
-                    weight: d.f32()?,
-                    n_merged: d.u64()? as usize,
-                    consumed_to: d.u64()? as usize,
-                    saved_at: d.u64()?,
+                    weight,
+                    n_merged,
+                    consumed_to,
+                    saved_at,
+                    buckets,
                 },
             })
         }
@@ -1032,6 +1063,18 @@ mod tests {
                     n_merged: 2,
                     consumed_to: 2,
                     saved_at: 999,
+                    buckets: vec![
+                        BucketMeta {
+                            bucket: 3,
+                            weight: 1.5,
+                            folds: 1,
+                        },
+                        BucketMeta {
+                            bucket: 9,
+                            weight: 2.5,
+                            folds: 1,
+                        },
+                    ],
                 },
             },
             Record::Commit {

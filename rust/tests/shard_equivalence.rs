@@ -1,0 +1,394 @@
+//! Sharded/unsharded equivalence **through the `Session` façade**: an
+//! L1 aggregator tree of any width must be a pure performance shape —
+//! `Session::…().shards(n)` has to produce the *same* report and the
+//! *same* published models, bit for bit, as the single-fold plane.
+//!
+//! The data plane makes that structural rather than coincidental: every
+//! shard folds its parties into fixed logical buckets
+//! (`fusion::shard::BUCKETS` contiguous party-id ranges, independent of
+//! the shard count), and the root combines bucket partials in ascending
+//! bucket order — so the floating-point operation sequence is a
+//! function of the party partition only, never of how many shards
+//! happened to host it. These tests pin that claim across strategies,
+//! fleet kinds, both deterministic regimes, fleet fault injection, and
+//! single-shard kill/resume (including a torn mid-checkpoint death).
+
+use fljit::coordinator::job::FlJobSpec;
+use fljit::coordinator::session::{JobOutcome, Session};
+use fljit::party::{FleetFaults, FleetKind};
+use fljit::workloads::Workload;
+
+/// The swept tree widths: the degenerate tree (1), an even split (2)
+/// and a width that leaves several shards empty at small party counts
+/// (7), per the acceptance grid.
+const SHARD_COUNTS: [usize; 3] = [1, 2, 7];
+
+fn spec(fleet: FleetKind, parties: usize, rounds: u32) -> FlJobSpec {
+    FlJobSpec::new(Workload::cifar100_effnet(), fleet, parties, rounds)
+}
+
+/// One live run; `shards == 0` leaves the knob untouched (the unsharded
+/// baseline plane every sharded run is compared against).
+fn run_live(
+    strategy: &str,
+    fleet: FleetKind,
+    parties: usize,
+    rounds: u32,
+    seed: u64,
+    faults: FleetFaults,
+    shards: usize,
+) -> JobOutcome {
+    let mut s = Session::live().seed(seed).dim(48).faults(faults);
+    if shards > 0 {
+        s = s.shards(shards);
+    }
+    let h = s.job(spec(fleet, parties, rounds), strategy);
+    let rep = s
+        .run()
+        .unwrap_or_else(|e| panic!("{strategy}/{fleet:?}/shards={shards}: {e:#}"));
+    assert!(
+        !rep.summary().crashed,
+        "{strategy}/{fleet:?}/shards={shards}: unexpected crash"
+    );
+    rep.job(h).clone()
+}
+
+/// Bit-level outcome comparison: the whole round-record sequence, every
+/// counter, and each final-model lane compared on raw bits (an `==` on
+/// f32 would let -0.0 ≡ 0.0 slip through).
+fn assert_outcomes_identical(a: &JobOutcome, b: &JobOutcome, label: &str) {
+    assert_outcomes_identical_with_extra_folds(a, b, 0, label)
+}
+
+/// Same, but `b` is allowed exactly `extra` additional real folds — a
+/// torn mid-checkpoint shard death re-folds the one update whose
+/// checkpoint write was lost, which is honest extra work, not drift.
+fn assert_outcomes_identical_with_extra_folds(
+    a: &JobOutcome,
+    b: &JobOutcome,
+    extra: u64,
+    label: &str,
+) {
+    assert_eq!(a.records.len(), b.records.len(), "{label}: round count");
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.round, y.round, "{label}: round index");
+        assert_eq!(
+            x.latency_secs.to_bits(),
+            y.latency_secs.to_bits(),
+            "{label} round {}: latency {} vs {}",
+            x.round,
+            x.latency_secs,
+            y.latency_secs
+        );
+        assert_eq!(
+            x.last_arrival_secs.to_bits(),
+            y.last_arrival_secs.to_bits(),
+            "{label} round {}: last arrival",
+            x.round
+        );
+        assert_eq!(
+            x.complete_secs.to_bits(),
+            y.complete_secs.to_bits(),
+            "{label} round {}: completion time",
+            x.round
+        );
+    }
+    assert_eq!(a.updates_fused, b.updates_fused, "{label}: fuse count");
+    assert_eq!(
+        a.updates_folded + extra,
+        b.updates_folded,
+        "{label}: fold count"
+    );
+    assert_eq!(a.deployments, b.deployments, "{label}: deployments");
+    assert_eq!(
+        (a.updates_dropped, a.updates_decayed, a.rounds_skipped),
+        (b.updates_dropped, b.updates_decayed, b.rounds_skipped),
+        "{label}: degradation counters"
+    );
+    assert_eq!(
+        a.final_model.len(),
+        b.final_model.len(),
+        "{label}: model dimension"
+    );
+    for (i, (x, y)) in a.final_model.iter().zip(&b.final_model).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{label}: final model lane {i}: {x} vs {y}"
+        );
+    }
+}
+
+/// Dropout churn + heavy-tailed stragglers with a reporting deadline —
+/// the hostile cell the faulted equivalence pins run under.
+fn hostile_faults() -> FleetFaults {
+    FleetFaults {
+        dropout_prob: 0.2,
+        rejoin_after: 1,
+        straggler_prob: 0.3,
+        straggler_alpha: 1.2,
+        upload_tail_sigma: 0.3,
+        straggler_cutoff_secs: Some(Workload::cifar100_effnet().base_epoch_secs * 2.0),
+        ..FleetFaults::default()
+    }
+}
+
+/// Every §3 strategy, every swept tree width: the sharded live plane is
+/// bit-identical to the unsharded one.
+#[test]
+fn every_strategy_is_bit_identical_across_shard_counts() {
+    for (i, strategy) in [
+        "jit",
+        "batched",
+        "eager-serverless",
+        "eager-ao",
+        "lazy",
+        "async-stale",
+    ]
+    .iter()
+    .enumerate()
+    {
+        let seed = 0x5A0 + i as u64;
+        let flat = run_live(
+            strategy,
+            FleetKind::ActiveHomogeneous,
+            10,
+            2,
+            seed,
+            FleetFaults::none(),
+            0,
+        );
+        for n in SHARD_COUNTS {
+            let sharded = run_live(
+                strategy,
+                FleetKind::ActiveHomogeneous,
+                10,
+                2,
+                seed,
+                FleetFaults::none(),
+                n,
+            );
+            assert_outcomes_identical(&flat, &sharded, &format!("{strategy} shards={n}"));
+        }
+    }
+}
+
+/// The other fleet kinds (heterogeneous speeds, intermittent
+/// availability windows) reorder arrivals — the tree must not care.
+#[test]
+fn every_fleet_kind_is_bit_identical_across_shard_counts() {
+    for (i, fleet) in [
+        FleetKind::ActiveHomogeneous,
+        FleetKind::ActiveHeterogeneous,
+        FleetKind::IntermittentHeterogeneous,
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let seed = 0x5B0 + i as u64;
+        let flat = run_live("jit", fleet, 8, 2, seed, FleetFaults::none(), 0);
+        for n in SHARD_COUNTS {
+            let sharded = run_live("jit", fleet, 8, 2, seed, FleetFaults::none(), n);
+            assert_outcomes_identical(&flat, &sharded, &format!("{fleet:?} shards={n}"));
+        }
+    }
+}
+
+/// Fault injection (dropout, stragglers, deadline cuts) shrinks and
+/// reorders each round's arrivals; the bucket partition keeps the fold
+/// order a function of *which* parties reported, so the sharded plane
+/// stays bit-identical under the hostile fleet — `async-stale`'s
+/// self-scheduled late deliveries included.
+#[test]
+fn hostile_faults_stay_bit_identical_across_shard_counts() {
+    for (i, strategy) in ["jit", "batched", "async-stale"].iter().enumerate() {
+        let seed = 0x5C0 + i as u64;
+        let flat = run_live(
+            strategy,
+            FleetKind::ActiveHomogeneous,
+            10,
+            3,
+            seed,
+            hostile_faults(),
+            0,
+        );
+        for n in SHARD_COUNTS {
+            let sharded = run_live(
+                strategy,
+                FleetKind::ActiveHomogeneous,
+                10,
+                3,
+                seed,
+                hostile_faults(),
+                n,
+            );
+            assert_outcomes_identical(
+                &flat,
+                &sharded,
+                &format!("{strategy}+faults shards={n}"),
+            );
+        }
+    }
+}
+
+/// Sim has no data plane to shard: the knob must be accepted (API
+/// symmetry with live/wall) and must change nothing.
+#[test]
+fn sim_accepts_the_shards_knob_and_ignores_it() {
+    let run = |shards: usize| {
+        let mut s = Session::sim().seed(0x5D1);
+        if shards > 0 {
+            s = s.shards(shards);
+        }
+        let h = s.job(spec(FleetKind::ActiveHeterogeneous, 10, 3), "jit");
+        let rep = s.run().expect("sim run");
+        rep.job(h).clone()
+    };
+    let flat = run(0);
+    for n in SHARD_COUNTS {
+        let sharded = run(n);
+        assert_outcomes_identical(&flat, &sharded, &format!("sim shards={n}"));
+    }
+}
+
+/// More shards than parties: with 3 parties on a 7-wide tree most
+/// shards own buckets no party maps to, and under dropout whole shards
+/// can see zero updates in a round. Empty shards must be skipped by the
+/// root fold, not wedge it — and the result is still bit-identical.
+#[test]
+fn empty_shards_do_not_wedge_the_root_fold() {
+    let flat = run_live(
+        "jit",
+        FleetKind::ActiveHomogeneous,
+        3,
+        2,
+        0x5E2,
+        FleetFaults::none(),
+        0,
+    );
+    let sharded = run_live(
+        "jit",
+        FleetKind::ActiveHomogeneous,
+        3,
+        2,
+        0x5E2,
+        FleetFaults::none(),
+        7,
+    );
+    assert_outcomes_identical(&flat, &sharded, "3 parties on 7 shards");
+
+    // and with dropout churn shrinking rounds further
+    let flat = run_live(
+        "jit",
+        FleetKind::ActiveHomogeneous,
+        4,
+        3,
+        0x5E3,
+        hostile_faults(),
+        0,
+    );
+    let sharded = run_live(
+        "jit",
+        FleetKind::ActiveHomogeneous,
+        4,
+        3,
+        0x5E3,
+        hostile_faults(),
+        7,
+    );
+    assert_outcomes_identical(&flat, &sharded, "4 faulty parties on 7 shards");
+}
+
+/// §5.5 per shard: kill one L1 shard mid-round and the round still
+/// completes — the replacement shard revives from its *own* WAL
+/// checkpoint slot and replays its own topic remainder while the
+/// sibling shards' fold states are never rebuilt. The published model
+/// stream must be bit-identical to the never-killed run, and the
+/// telemetry must show exactly one shard restart.
+#[test]
+fn single_shard_kill_revives_from_its_checkpoint_bit_identical() {
+    shard_kill_case(false, 0x5F1);
+}
+
+/// The same, dying *mid-checkpoint*: the fatal fold is applied in
+/// memory but its checkpoint write is lost (torn), so the revived
+/// shard's slot is one fold behind and the replay must re-fold that
+/// update from the shard's topic log.
+#[test]
+fn mid_checkpoint_shard_kill_replays_the_torn_fold_bit_identical() {
+    shard_kill_case(true, 0x5F2);
+}
+
+fn shard_kill_case(torn: bool, seed: u64) {
+    use fljit::mq::{self, MessageQueue};
+    use fljit::telemetry::{export, Registry};
+    use std::sync::Arc;
+
+    let session = |mq: &Arc<MessageQueue>,
+                   kill: Option<(usize, u64, bool)>,
+                   tel: &Registry| {
+        let mut s = Session::live()
+            .seed(seed)
+            .dim(48)
+            .on(mq)
+            .shards(3)
+            .telemetry(tel);
+        if let Some((shard, after, torn)) = kill {
+            s = s.kill_shard(shard, after, torn);
+        }
+        let h = s.job(spec(FleetKind::ActiveHomogeneous, 9, 3), "jit");
+        let rep = s.run().expect("sharded session run");
+        (rep, h)
+    };
+
+    let mq_ref = Arc::new(MessageQueue::new());
+    let (full, hf) = session(&mq_ref, None, &Registry::disabled());
+    assert!(!full.summary().crashed);
+    let published = mq_ref.end_offset(&mq::model_topic(0));
+    assert!(published > 0, "the reference run must publish models");
+
+    let tel = Registry::enabled();
+    let mq_kill = Arc::new(MessageQueue::new());
+    let (killed, hk) = session(&mq_kill, Some((1, 2, torn)), &tel);
+    // a single-shard death is NOT a session crash: the siblings keep
+    // folding and the replacement shard resumes within the same round
+    assert!(
+        !killed.summary().crashed,
+        "a shard kill must be absorbed, not crash the session"
+    );
+
+    let lines = export::metric_lines(&tel);
+    assert!(
+        lines.iter().any(|l| l.contains("shard_kills_total")),
+        "the injected shard kill must be counted: {lines:?}"
+    );
+    assert!(
+        lines.iter().any(|l| l.contains("shard_restarts_total")),
+        "the dead shard must revive from its checkpoint: {lines:?}"
+    );
+
+    assert_eq!(
+        mq_kill.end_offset(&mq::model_topic(0)),
+        published,
+        "the shard-killed run must publish every round"
+    );
+    for round in 0..published {
+        let a = mq_ref.fetch(&mq::model_topic(0), round, 1);
+        let b = mq_kill.fetch(&mq::model_topic(0), round, 1);
+        let (a, b) = (a[0].payload.data().unwrap(), b[0].payload.data().unwrap());
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "round {round} lane {i}: {x} vs {y} (torn={torn})"
+            );
+        }
+    }
+    assert_outcomes_identical_with_extra_folds(
+        full.job(hf),
+        killed.job(hk),
+        torn as u64,
+        &format!("shard kill torn={torn}"),
+    );
+}
