@@ -1,0 +1,605 @@
+//! # Adaptive JIT — online arrival-distribution estimation (PR 10)
+//!
+//! The paper's JIT scheduler defers aggregation to a *configured*
+//! deadline derived from the §5.4 estimator's fixed predictions. This
+//! module makes that deadline *learned* (ROADMAP direction 2, following
+//! "Adaptive Aggregation for Federated Learning"): a per-job
+//! [`AdaptivePolicy`] maintains an online sketch of the job's
+//! update-arrival lag distribution — fed from the same `UpdateArrival`
+//! bookkeeping [`JobEngine`](crate::coordinator::driver::JobEngine)
+//! already does in both regimes — and converts its quantiles into three
+//! live control signals:
+//!
+//! 1. **Fuse deadline** — the JIT / async-stale deadline timer for the
+//!    next round is re-armed (`EventQueue::cancel` + re-insert) to
+//!    `max(fixed defer, pN arrival lag × (1 + margin) + drift)`. The
+//!    `max` is deliberate: the learned deadline only ever *defers
+//!    further* than the estimator's fixed prediction, so aggregator
+//!    spin-up is never earlier (resource usage ≤ fixed) while straggler
+//!    updates get a deadline that tracks the observed tail.
+//! 2. **Straggler cutoff / quorum** — on `FleetFaults`-degraded rounds
+//!    the engine lowers its quorum to the expected on-time count; the
+//!    policy *restores* it toward the configured base when the observed
+//!    arrival rate shows the fleet actually delivers more (never below
+//!    the degraded value, never above what the round can deliver).
+//! 3. **Admission budget autoscaling** — bounded min/max budget for the
+//!    broker's [`AdmissionController`](crate::broker::admission), which
+//!    grows toward the head-of-line job's demand and shrinks back when
+//!    the queue drains (see `AdmissionConfig::autoscale`).
+//!
+//! ## The sketch
+//!
+//! [`ArrivalSketch`] is a fixed-size (256-bin) log-bucketed quantile
+//! sketch with bounded *relative* error (DDSketch-style bucketing; the
+//! same fixed-footprint mergeable-sketch family as GK, chosen over
+//! P²/GK because its merge is an element-wise counter add — **exactly**
+//! associative and commutative, bit-for-bit, which is what lets shard-
+//! or regime-split observation streams fold to one identical state).
+//! It consumes **no randomness**: every operation is a pure function of
+//! the observed lags, so feeding it inside `JobEngine::handle_update`
+//! leaves the engine's seeded rng stream untouched and every existing
+//! bit-identity pin (sim ≡ live, kill/resume, replay fast-forward)
+//! holds with adaptation on or off.
+//!
+//! ## Checkpointing
+//!
+//! Policy state serializes to a flat `Vec<f32>` ([`AdaptivePolicy::
+//! to_f32s`]) carried in the existing WAL-framed
+//! [`CheckpointState`](crate::mq::CheckpointState) records under
+//! [`adapt_slot`](crate::mq::adapt_slot), written at round completion.
+//! A resumed aggregator reloads the sketch as of the last completed
+//! round and replays the open round's logged arrivals through the same
+//! `handle_update` path, so the resumed policy state is bit-identical
+//! to the uninterrupted run's.
+
+use crate::util::stats::Ewma;
+
+/// Number of log-spaced buckets in an [`ArrivalSketch`].
+pub const SKETCH_BINS: usize = 256;
+/// Lags at or below this many seconds collapse into bucket 0.
+pub const SKETCH_MIN_LAG: f64 = 1e-3;
+/// Geometric bucket growth factor: relative quantile error is bounded
+/// by `(GAMMA - 1) / (GAMMA + 1)` ≈ 3.8%, and 256 buckets cover
+/// `1 ms … ~3.6e5 s` (≈ 100 hours) — far past any round deadline.
+pub const SKETCH_GAMMA: f64 = 1.08;
+
+/// Fixed-size mergeable quantile sketch over positive arrival lags
+/// (seconds). Deterministic, rng-free, exactly associative under
+/// [`merge`](ArrivalSketch::merge).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArrivalSketch {
+    bins: Vec<u64>,
+    count: u64,
+}
+
+impl Default for ArrivalSketch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ArrivalSketch {
+    pub fn new() -> Self {
+        Self { bins: vec![0; SKETCH_BINS], count: 0 }
+    }
+
+    /// Bucket index for a lag: bucket 0 holds `(-inf, MIN_LAG]`, bucket
+    /// `i ≥ 1` holds `(MIN_LAG·γ^(i-1), MIN_LAG·γ^i]`, the last bucket
+    /// absorbs the overflow tail.
+    fn bin_of(lag_secs: f64) -> usize {
+        if !(lag_secs > SKETCH_MIN_LAG) {
+            return 0;
+        }
+        let i = ((lag_secs / SKETCH_MIN_LAG).ln() / SKETCH_GAMMA.ln()).ceil() as usize;
+        i.min(SKETCH_BINS - 1)
+    }
+
+    /// Representative lag of a bucket (its geometric midpoint).
+    fn value_of(bin: usize) -> f64 {
+        if bin == 0 {
+            return SKETCH_MIN_LAG * 0.5;
+        }
+        // midpoint of (MIN·γ^(bin-1), MIN·γ^bin]
+        SKETCH_MIN_LAG * SKETCH_GAMMA.powi(bin as i32 - 1) * (1.0 + SKETCH_GAMMA) / 2.0
+    }
+
+    pub fn observe(&mut self, lag_secs: f64) {
+        self.bins[Self::bin_of(lag_secs)] += 1;
+        self.count += 1;
+    }
+
+    /// Element-wise counter add — exactly associative and commutative.
+    pub fn merge(&mut self, other: &ArrivalSketch) {
+        for (a, b) in self.bins.iter_mut().zip(&other.bins) {
+            *a += *b;
+        }
+        self.count += other.count;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn clear(&mut self) {
+        self.bins.iter_mut().for_each(|b| *b = 0);
+        self.count = 0;
+    }
+
+    /// The `q`-quantile (`0 ≤ q ≤ 1`) of the observed lags, within
+    /// ±3.8% relative error (plus the 1 ms bucket-0 floor). Returns
+    /// 0.0 on an empty sketch.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.bins.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::value_of(i);
+            }
+        }
+        Self::value_of(SKETCH_BINS - 1)
+    }
+
+    /// Counts as exact `f32`s (counts stay far below 2^24 for any
+    /// realistic parties × rounds product; debug-asserted).
+    pub fn to_f32s(&self) -> Vec<f32> {
+        self.bins
+            .iter()
+            .map(|&c| {
+                debug_assert!(c < (1u64 << 24), "sketch bin count exceeds exact f32 range");
+                c as f32
+            })
+            .collect()
+    }
+
+    pub fn from_f32s(data: &[f32]) -> Option<Self> {
+        if data.len() != SKETCH_BINS {
+            return None;
+        }
+        let bins: Vec<u64> = data.iter().map(|&c| c as u64).collect();
+        let count = bins.iter().sum();
+        Some(Self { bins, count })
+    }
+}
+
+/// Knobs of the adaptive subsystem. Off by default — the zero-cost
+/// opt-in follows the `FleetFaults::is_none()` pattern: a disabled
+/// config means no sketch exists, no observation happens, no rng is
+/// consumed, and every pre-existing bit-identity pin passes unchanged.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdaptiveConfig {
+    pub enabled: bool,
+    /// Arrival-lag quantile the learned fuse deadline targets.
+    pub deadline_quantile: f64,
+    /// Safety margin multiplied onto the learned lag quantile.
+    pub margin: f64,
+    /// EWMA weight of the round-over-round quantile drift term.
+    pub drift_alpha: f64,
+    /// Completed rounds observed before the policy starts steering.
+    pub warmup_rounds: u32,
+    /// Mid-round re-arm hysteresis: the armed deadline is only pulled
+    /// in when the live estimate undercuts it by more than this
+    /// fraction (prevents timer churn on every arrival).
+    pub rearm_threshold: f64,
+    /// Restore `FleetFaults`-degraded quorums toward the configured
+    /// base when the observed arrival rate supports it.
+    pub adapt_quorum: bool,
+    /// Admission budget autoscale bounds; `(0, 0)` leaves the broker
+    /// budget fixed.
+    pub admission_min: usize,
+    pub admission_max: usize,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+impl AdaptiveConfig {
+    /// Adaptation disabled (the default): zero-cost, bit-identical to
+    /// a build without the subsystem.
+    pub fn none() -> Self {
+        Self {
+            enabled: false,
+            deadline_quantile: 0.90,
+            margin: 0.05,
+            drift_alpha: 0.3,
+            warmup_rounds: 1,
+            rearm_threshold: 0.10,
+            adapt_quorum: true,
+            admission_min: 0,
+            admission_max: 0,
+        }
+    }
+
+    /// Adaptation on with the documented defaults (p90 deadline, 5%
+    /// margin, quorum restore, no admission autoscale).
+    pub fn on() -> Self {
+        Self { enabled: true, ..Self::none() }
+    }
+
+    pub fn is_none(&self) -> bool {
+        !self.enabled
+    }
+
+    /// Admission autoscale bounds, normalized: `None` unless both
+    /// bounds are set and ordered.
+    pub fn admission_bounds(&self) -> Option<(usize, usize)> {
+        if self.enabled && self.admission_max > 0 && self.admission_min <= self.admission_max
+        {
+            Some((self.admission_min.max(1), self.admission_max))
+        } else {
+            None
+        }
+    }
+}
+
+/// Per-job online arrival estimator + control policy. Owned by the
+/// `JobEngine` (one per job, identical in sim and live), fed a lag
+/// sample per delivered update, rolled over per completed round.
+#[derive(Clone, Debug)]
+pub struct AdaptivePolicy {
+    pub cfg: AdaptiveConfig,
+    /// Lag distribution across all completed rounds.
+    cum: ArrivalSketch,
+    /// Lag distribution of the in-flight round (merged into `cum` at
+    /// [`end_round`](Self::end_round)).
+    round: ArrivalSketch,
+    /// EWMA of the round-over-round drift of the target quantile —
+    /// a positive drift (fleet slowing down) pads the deadline.
+    drift: Ewma,
+    rounds_observed: u32,
+    /// Target quantile of the previous completed round (NaN = none).
+    last_round_q: f64,
+}
+
+impl AdaptivePolicy {
+    pub fn new(cfg: AdaptiveConfig) -> Self {
+        let drift = Ewma::new(cfg.drift_alpha);
+        Self {
+            cfg,
+            cum: ArrivalSketch::new(),
+            round: ArrivalSketch::new(),
+            drift,
+            rounds_observed: 0,
+            last_round_q: f64::NAN,
+        }
+    }
+
+    /// Feed one update's arrival lag (seconds since round start).
+    pub fn observe(&mut self, lag_secs: f64) {
+        self.round.observe(lag_secs);
+    }
+
+    /// Roll the in-flight round into the cumulative state: update the
+    /// drift EWMA from the per-round target quantile, merge, reset.
+    pub fn end_round(&mut self) {
+        if !self.round.is_empty() {
+            let q_now = self.round.quantile(self.cfg.deadline_quantile);
+            if self.last_round_q.is_finite() {
+                self.drift.observe(q_now - self.last_round_q);
+            }
+            self.last_round_q = q_now;
+            self.cum.merge(&self.round);
+            self.round.clear();
+        }
+        self.rounds_observed += 1;
+    }
+
+    pub fn rounds_observed(&self) -> u32 {
+        self.rounds_observed
+    }
+
+    fn warmed_up(&self) -> bool {
+        self.rounds_observed >= self.cfg.warmup_rounds && !self.cum.is_empty()
+    }
+
+    fn defer_from(&self, sketch: &ArrivalSketch) -> f64 {
+        let q = sketch.quantile(self.cfg.deadline_quantile);
+        let drift = self.drift.get().unwrap_or(0.0).max(0.0);
+        q * (1.0 + self.cfg.margin) + drift
+    }
+
+    /// Learned defer (seconds from round start) from completed rounds,
+    /// or `None` during warm-up.
+    pub fn learned_defer(&self) -> Option<f64> {
+        if !self.warmed_up() {
+            return None;
+        }
+        Some(self.defer_from(&self.cum))
+    }
+
+    /// Signal (a), round-start form: the fuse defer for the next round.
+    /// Never earlier than the estimator's fixed prediction — adaptation
+    /// only defers aggregator spin-up further, it never advances it.
+    pub fn deadline_defer(&self, fixed_defer: f64) -> f64 {
+        match self.learned_defer() {
+            Some(learned) => fixed_defer.max(learned),
+            None => fixed_defer,
+        }
+    }
+
+    /// Signal (a), mid-round form: the live defer estimate including
+    /// the in-flight round's arrivals. `Some(new_defer)` when the armed
+    /// defer should be pulled in (shortened) past the re-arm
+    /// hysteresis; still floored at `fixed_defer`.
+    pub fn rearm_defer(&self, fixed_defer: f64, armed_defer: f64) -> Option<f64> {
+        if !self.warmed_up() || self.round.is_empty() {
+            return None;
+        }
+        let mut live = self.cum.clone();
+        live.merge(&self.round);
+        let target = self.defer_from(&live).max(fixed_defer);
+        if armed_defer - target > self.cfg.rearm_threshold * armed_defer.max(f64::EPSILON) {
+            Some(target)
+        } else {
+            None
+        }
+    }
+
+    /// Signal (b): quorum for a `FleetFaults`-degraded round. Restores
+    /// from the degraded value toward `base` when the mean observed
+    /// arrivals per completed round support it; monotone in
+    /// `[degraded, base]`, clamped by `deliverable` (updates the round
+    /// can actually produce — restoring past that would starve it).
+    pub fn quorum_for(&self, degraded: usize, base: usize, deliverable: usize) -> usize {
+        if !self.cfg.adapt_quorum || !self.warmed_up() || self.rounds_observed == 0 {
+            return degraded;
+        }
+        let per_round = (self.cum.count() / self.rounds_observed as u64) as usize;
+        degraded.max(base.min(per_round)).min(deliverable.max(degraded))
+    }
+
+    /// Live quantiles (p50, p90, p99) of the cumulative lag sketch —
+    /// the telemetry gauge payload.
+    pub fn quantiles(&self) -> (f64, f64, f64) {
+        (self.cum.quantile(0.50), self.cum.quantile(0.90), self.cum.quantile(0.99))
+    }
+
+    /// Flat checkpoint payload (carried in `CheckpointState::acc`):
+    /// `[version, rounds_observed, last_round_q, drift, cum bins…,
+    /// round bins…]`. Counts are exact in f32 (< 2^24).
+    pub fn to_f32s(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(4 + 2 * SKETCH_BINS);
+        out.push(1.0);
+        out.push(self.rounds_observed as f32);
+        out.push(self.last_round_q as f32);
+        out.push(self.drift.get().map(|v| v as f32).unwrap_or(f32::NAN));
+        out.extend(self.cum.to_f32s());
+        out.extend(self.round.to_f32s());
+        out
+    }
+
+    /// Rebuild from a checkpoint payload; config comes from the
+    /// session (it is not part of the durable state). Returns `None`
+    /// on a malformed or version-mismatched payload.
+    pub fn from_f32s(cfg: AdaptiveConfig, data: &[f32]) -> Option<Self> {
+        if data.len() != 4 + 2 * SKETCH_BINS || data[0] != 1.0 {
+            return None;
+        }
+        let mut drift = Ewma::new(cfg.drift_alpha);
+        if data[3].is_finite() {
+            // the first observe sets the EWMA to the raw value exactly
+            drift.observe(data[3] as f64);
+        }
+        Some(Self {
+            cfg,
+            rounds_observed: data[1] as u32,
+            last_round_q: data[2] as f64,
+            drift,
+            cum: ArrivalSketch::from_f32s(&data[4..4 + SKETCH_BINS])?,
+            round: ArrivalSketch::from_f32s(&data[4 + SKETCH_BINS..])?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic inverse-CDF samples of a distribution.
+    fn samples(n: usize, inv_cdf: impl Fn(f64) -> f64) -> Vec<f64> {
+        (0..n).map(|i| inv_cdf((i as f64 + 0.5) / n as f64)).collect()
+    }
+
+    fn exact_quantile(sorted: &[f64], q: f64) -> f64 {
+        let rank = ((q * sorted.len() as f64).ceil() as usize).max(1) - 1;
+        sorted[rank.min(sorted.len() - 1)]
+    }
+
+    #[test]
+    fn sketch_quantile_error_bounds_on_known_distributions() {
+        let uniform = samples(5000, |u| u * 120.0); // U(0, 120s)
+        let exponential = samples(5000, |u| -20.0 * (1.0 - u).ln()); // Exp(mean 20s)
+        let lognormal = samples(5000, |u| {
+            // lognormal via a rational approximation of probit — heavy
+            // tail like the straggler scenarios
+            let z = (u - 0.5) * 6.0; // crude but monotone; exactness irrelevant
+            (1.0f64 + 0.8 * z).exp()
+        });
+        for data in [uniform, exponential, lognormal] {
+            let mut sorted = data.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mut s = ArrivalSketch::new();
+            for &x in &data {
+                s.observe(x);
+            }
+            for q in [0.5, 0.9, 0.99] {
+                let exact = exact_quantile(&sorted, q);
+                let est = s.quantile(q);
+                let rel_bound = (SKETCH_GAMMA - 1.0) / (SKETCH_GAMMA + 1.0) + 0.02;
+                assert!(
+                    (est - exact).abs() <= exact.abs() * rel_bound + SKETCH_MIN_LAG,
+                    "q{q}: est {est} vs exact {exact}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn merge_is_exactly_associative_and_commutative() {
+        let mk = |lo: usize| {
+            let mut s = ArrivalSketch::new();
+            for x in samples(500, |u| u * 10.0 + lo as f64) {
+                s.observe(x);
+            }
+            s
+        };
+        let (a, b, c) = (mk(0), mk(7), mk(40));
+        // (a ∪ b) ∪ c
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        // a ∪ (b ∪ c)
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_eq!(left, right);
+        // commutes, and equals the single-stream sketch
+        let mut rev = c.clone();
+        rev.merge(&b);
+        rev.merge(&a);
+        assert_eq!(left, rev);
+        let mut one = ArrivalSketch::new();
+        for s in [&a, &b, &c] {
+            one.merge(s);
+        }
+        assert_eq!(left, one);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_is_bit_identical_and_resumable() {
+        let mut p = AdaptivePolicy::new(AdaptiveConfig::on());
+        for r in 0..4 {
+            for x in samples(60, |u| u * 30.0 + r as f64) {
+                p.observe(x);
+            }
+            p.end_round();
+        }
+        let blob = p.to_f32s();
+        let mut q = AdaptivePolicy::from_f32s(AdaptiveConfig::on(), &blob)
+            .expect("roundtrip decodes");
+        assert_eq!(q.to_f32s(), blob);
+        assert_eq!(q.rounds_observed(), p.rounds_observed());
+        assert_eq!(q.quantiles(), p.quantiles());
+        assert_eq!(q.learned_defer(), p.learned_defer());
+        // continuing both policies in lockstep stays identical
+        for x in samples(60, |u| u * 45.0) {
+            p.observe(x);
+            q.observe(x);
+        }
+        p.end_round();
+        q.end_round();
+        assert_eq!(q.to_f32s(), p.to_f32s());
+        // malformed payloads refuse cleanly
+        assert!(AdaptivePolicy::from_f32s(AdaptiveConfig::on(), &blob[1..]).is_none());
+    }
+
+    #[test]
+    fn disabled_config_is_inert_and_deadline_never_beats_fixed() {
+        assert!(AdaptiveConfig::none().is_none());
+        assert!(AdaptiveConfig::default().is_none());
+        assert!(!AdaptiveConfig::on().is_none());
+        let mut p = AdaptivePolicy::new(AdaptiveConfig::on());
+        // warm-up: fixed passes through
+        assert_eq!(p.deadline_defer(12.5), 12.5);
+        for x in samples(200, |u| u * 4.0) {
+            p.observe(x);
+        }
+        p.end_round();
+        // learned p90 ≈ 3.6s·1.05 < fixed 12.5 ⇒ fixed wins (never earlier)
+        assert_eq!(p.deadline_defer(12.5), 12.5);
+        // slow fleet ⇒ learned extends past fixed
+        let mut slow = AdaptivePolicy::new(AdaptiveConfig::on());
+        for x in samples(200, |u| 40.0 + u * 20.0) {
+            slow.observe(x);
+        }
+        slow.end_round();
+        let d = slow.deadline_defer(12.5);
+        assert!(d > 40.0, "learned defer {d} should track the slow tail");
+    }
+
+    #[test]
+    fn rearm_only_shortens_and_respects_hysteresis_and_floor() {
+        let mut p = AdaptivePolicy::new(AdaptiveConfig::on());
+        for x in samples(100, |u| 30.0 + u * 10.0) {
+            p.observe(x);
+        }
+        p.end_round();
+        let armed = p.deadline_defer(5.0);
+        assert!(armed > 38.0);
+        // fast in-flight round pulls the live estimate down
+        for x in samples(400, |u| u * 2.0) {
+            p.observe(x);
+        }
+        let shortened = p.rearm_defer(5.0, armed).expect("live estimate undercuts armed");
+        assert!(shortened < armed);
+        assert!(shortened >= 5.0, "floored at the fixed defer");
+        // no-op within hysteresis: re-arming to ~the same deadline
+        assert!(p.rearm_defer(5.0, shortened).is_none());
+        // floor: armed at the fixed defer itself never shortens below it
+        assert!(p.rearm_defer(armed, armed).is_none() || p.rearm_defer(armed, armed).unwrap() >= armed);
+    }
+
+    #[test]
+    fn quorum_restores_toward_base_never_below_degraded() {
+        let mut p = AdaptivePolicy::new(AdaptiveConfig::on());
+        // 3 rounds × 8 observed arrivals per round
+        for _ in 0..3 {
+            for x in samples(8, |u| u * 5.0) {
+                p.observe(x);
+            }
+            p.end_round();
+        }
+        // degraded 4, base 10, 8 deliverable ⇒ restore to min(base, 8) = 8
+        assert_eq!(p.quorum_for(4, 10, 8), 8);
+        // never below degraded even if observations are sparse
+        assert_eq!(p.quorum_for(6, 10, 5), 6);
+        // clamped by base
+        assert_eq!(p.quorum_for(2, 6, 100), 6);
+        // disabled knob passes degraded through
+        let mut cfg = AdaptiveConfig::on();
+        cfg.adapt_quorum = false;
+        let q = AdaptivePolicy::from_f32s(cfg, &p.to_f32s()).unwrap();
+        assert_eq!(q.quorum_for(4, 10, 8), 4);
+    }
+
+    #[test]
+    fn same_observations_yield_bit_identical_state() {
+        let run = || {
+            let mut p = AdaptivePolicy::new(AdaptiveConfig::on());
+            for r in 0..5 {
+                for x in samples(37, |u| (u * 17.0) + (r % 3) as f64) {
+                    p.observe(x);
+                }
+                p.end_round();
+            }
+            p.to_f32s()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn admission_bounds_normalize() {
+        let mut cfg = AdaptiveConfig::on();
+        assert_eq!(cfg.admission_bounds(), None);
+        cfg.admission_min = 2;
+        cfg.admission_max = 8;
+        assert_eq!(cfg.admission_bounds(), Some((2, 8)));
+        cfg.admission_min = 9; // inverted bounds refuse
+        assert_eq!(cfg.admission_bounds(), None);
+        let mut off = AdaptiveConfig::none();
+        off.admission_min = 2;
+        off.admission_max = 8;
+        assert_eq!(off.admission_bounds(), None, "disabled config never autoscales");
+    }
+}

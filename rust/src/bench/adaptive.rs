@@ -1,0 +1,423 @@
+//! Adaptive-JIT regret sweep — learned deadlines vs the fixed estimator.
+//!
+//! Runs the identical scripted live job (instant clock, MQ data plane)
+//! under each `(scenario, mode)` cell, where the scenario is a shifting
+//! [`FleetFaults`] preset (stragglers and diurnal waves by default — the
+//! regimes where the Fig 6 estimator's fixed deadline is most wrong) and
+//! the mode is `fixed` (the estimator's `t_rnd − t_agg·(1+margin)` fuse
+//! deadline, exactly as every prior PR ran it) or `adaptive`
+//! ([`AdaptiveConfig::on`]: the [`crate::adapt`] sketch learns the
+//! arrival-lag distribution online and re-arms the deadline, restores
+//! degraded quorums, and autoscales admission).
+//!
+//! Per cell it reports the engine's degradation counters, mean round
+//! latency, aggregation container-seconds (the resource axis), and
+//! fidelity — L2 distance of the cell's final global model to the same
+//! strategy's fault-free final model (the robustness-matrix metric).
+//!
+//! The dump embeds the PR's acceptance check (`regret_check`): per
+//! scenario, adaptive must cut **no more** updates than fixed (the
+//! learned deadline only ever extends past the fixed one, so
+//! deadline-missers can only shrink), with the resource and fidelity
+//! comparisons recorded alongside. Dumped to `BENCH_adaptive.json` via
+//! `fljit adaptive`.
+
+use crate::adapt::AdaptiveConfig;
+use crate::coordinator::job::FlJobSpec;
+use crate::coordinator::session::Session;
+use crate::party::{FleetFaults, FleetKind};
+use crate::util::json::Json;
+use crate::util::table::Table;
+use crate::workloads::Workload;
+
+#[derive(Clone, Debug)]
+pub struct AdaptiveSweepConfig {
+    pub n_parties: usize,
+    pub rounds: u32,
+    pub seed: u64,
+    pub dim: usize,
+    /// Mean synthetic epoch time (virtual seconds under the instant
+    /// clock; the straggler cutoff scales from it).
+    pub epoch_secs: f64,
+    /// Strategy under test (any deadline-timer strategy; default `jit`).
+    pub strategy: String,
+    /// Scenario names to sweep (default: the two shifting-arrival
+    /// regimes the adaptive policy targets).
+    pub scenarios: Vec<String>,
+}
+
+impl Default for AdaptiveSweepConfig {
+    fn default() -> Self {
+        AdaptiveSweepConfig {
+            n_parties: 10,
+            rounds: 4,
+            seed: 42,
+            dim: 64,
+            epoch_secs: 0.4,
+            strategy: "jit".to_string(),
+            scenarios: vec!["stragglers".to_string(), "diurnal".to_string()],
+        }
+    }
+}
+
+impl AdaptiveSweepConfig {
+    pub fn from_args(args: &crate::util::cli::Args) -> AdaptiveSweepConfig {
+        let d = AdaptiveSweepConfig::default();
+        let scenarios = match args.get("scenarios") {
+            Some(s) => s
+                .split(',')
+                .map(|x| x.trim().to_string())
+                .filter(|x| !x.is_empty())
+                .collect(),
+            None => d.scenarios,
+        };
+        AdaptiveSweepConfig {
+            n_parties: args.get_usize("parties", d.n_parties),
+            rounds: args.get_u64("rounds", d.rounds as u64) as u32,
+            seed: args.get_u64("seed", d.seed),
+            dim: args.get_usize("dim", d.dim),
+            epoch_secs: args.get_f64("epoch-secs", d.epoch_secs),
+            strategy: args
+                .get("strategy")
+                .map(|s| s.to_string())
+                .unwrap_or(d.strategy),
+            scenarios,
+        }
+    }
+}
+
+/// One cell's raw outcome.
+#[derive(Clone, Debug)]
+struct Cell {
+    rounds_done: usize,
+    rounds_skipped: u32,
+    mean_latency_secs: f64,
+    container_seconds: f64,
+    updates_fused: u64,
+    updates_dropped: usize,
+    updates_decayed: usize,
+    final_model: Vec<f32>,
+}
+
+fn l2(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+fn run_cell(
+    cfg: &AdaptiveSweepConfig,
+    faults: FleetFaults,
+    adaptive: AdaptiveConfig,
+) -> Result<Cell, String> {
+    let mut workload = Workload::mlp_live();
+    workload.base_epoch_secs = cfg.epoch_secs;
+    let spec = FlJobSpec::new(
+        workload,
+        FleetKind::ActiveHomogeneous,
+        cfg.n_parties,
+        cfg.rounds,
+    );
+    let mut s = Session::live()
+        .seed(cfg.seed)
+        .dim(cfg.dim)
+        .faults(faults)
+        .adaptive(adaptive);
+    s.job(spec, &cfg.strategy);
+    let rep = s.run().map_err(|e| format!("{e:#}"))?;
+    let o = rep.single();
+    Ok(Cell {
+        rounds_done: o.records.len(),
+        rounds_skipped: o.rounds_skipped,
+        mean_latency_secs: o.mean_latency_secs(),
+        container_seconds: o.total_container_seconds(),
+        updates_fused: o.updates_fused,
+        updates_dropped: o.updates_dropped,
+        updates_decayed: o.updates_decayed,
+        final_model: o.final_model.clone(),
+    })
+}
+
+/// Run the scenario × {fixed, adaptive} grid; table + JSON with the
+/// embedded regret check.
+pub fn run_sweep(cfg: &AdaptiveSweepConfig) -> (Table, Json) {
+    let mut t = Table::new(
+        &format!(
+            "adaptive regret sweep — {} × {} parties × {} rounds, dim {}, seed {}",
+            cfg.strategy, cfg.n_parties, cfg.rounds, cfg.dim, cfg.seed
+        ),
+        &[
+            "scenario",
+            "mode",
+            "rounds",
+            "skipped",
+            "mean lat (ms)",
+            "agg cont-s",
+            "dropped",
+            "decayed",
+            "fidelity (L2)",
+        ],
+    );
+    // the fidelity reference: the strategy's fault-free run (the learned
+    // deadline cannot change a healthy-fleet outcome — rounds fuse on
+    // full arrival, never on the timer — so one reference serves both
+    // modes)
+    let base = run_cell(cfg, FleetFaults::none(), AdaptiveConfig::none());
+    let mut cells = Vec::new();
+    let mut checks = Vec::new();
+    for scenario in &cfg.scenarios {
+        let Some(faults) = FleetFaults::scenario(scenario, cfg.epoch_secs) else {
+            cells.push(Json::obj(vec![
+                ("scenario", Json::str(scenario)),
+                ("error", Json::str(&format!("unknown scenario {scenario:?}"))),
+            ]));
+            t.row(vec![
+                scenario.clone(),
+                "?".into(),
+                format!("failed: unknown scenario {scenario:?}"),
+                String::new(),
+                String::new(),
+                String::new(),
+                String::new(),
+                String::new(),
+                String::new(),
+            ]);
+            continue;
+        };
+        let mut by_mode = Vec::new();
+        for (mode, acfg) in [
+            ("fixed", AdaptiveConfig::none()),
+            ("adaptive", AdaptiveConfig::on()),
+        ] {
+            let outcome = run_cell(cfg, faults.clone(), acfg);
+            match outcome {
+                Ok(c) => {
+                    let fidelity = base
+                        .as_ref()
+                        .ok()
+                        .map(|b| l2(&c.final_model, &b.final_model));
+                    t.row(vec![
+                        scenario.clone(),
+                        mode.to_string(),
+                        c.rounds_done.to_string(),
+                        c.rounds_skipped.to_string(),
+                        format!("{:.1}", c.mean_latency_secs * 1e3),
+                        format!("{:.2}", c.container_seconds),
+                        c.updates_dropped.to_string(),
+                        c.updates_decayed.to_string(),
+                        fidelity.map(|x| format!("{x:.4}")).unwrap_or_default(),
+                    ]);
+                    cells.push(Json::obj(vec![
+                        ("scenario", Json::str(scenario)),
+                        ("mode", Json::str(mode)),
+                        ("rounds_done", Json::num(c.rounds_done as f64)),
+                        ("rounds_skipped", Json::num(c.rounds_skipped as f64)),
+                        ("mean_latency_secs", Json::num(c.mean_latency_secs)),
+                        ("container_seconds", Json::num(c.container_seconds)),
+                        ("updates_fused", Json::num(c.updates_fused as f64)),
+                        ("updates_dropped", Json::num(c.updates_dropped as f64)),
+                        ("updates_decayed", Json::num(c.updates_decayed as f64)),
+                        (
+                            "fidelity_l2",
+                            fidelity.map(Json::num).unwrap_or(Json::Null),
+                        ),
+                    ]));
+                    by_mode.push((mode, c, fidelity));
+                }
+                Err(e) => {
+                    t.row(vec![
+                        scenario.clone(),
+                        mode.to_string(),
+                        format!("failed: {e}"),
+                        String::new(),
+                        String::new(),
+                        String::new(),
+                        String::new(),
+                        String::new(),
+                        String::new(),
+                    ]);
+                    cells.push(Json::obj(vec![
+                        ("scenario", Json::str(scenario)),
+                        ("mode", Json::str(mode)),
+                        ("error", Json::str(&e)),
+                    ]));
+                }
+            }
+        }
+        // the embedded acceptance check, per scenario: the learned
+        // deadline only ever extends past the fixed one (round-start max,
+        // re-arm floored at the fixed defer), so adaptive can never cut
+        // more deadline-missers than fixed; resource and fidelity are
+        // recorded alongside for the regret accounting
+        if let [(_, f, f_fid), (_, a, a_fid)] = &by_mode[..] {
+            checks.push(Json::obj(vec![
+                ("scenario", Json::str(scenario)),
+                ("fixed_dropped", Json::num(f.updates_dropped as f64)),
+                ("adaptive_dropped", Json::num(a.updates_dropped as f64)),
+                (
+                    "adaptive_dropped_le_fixed",
+                    Json::Bool(a.updates_dropped <= f.updates_dropped),
+                ),
+                ("fixed_container_seconds", Json::num(f.container_seconds)),
+                ("adaptive_container_seconds", Json::num(a.container_seconds)),
+                (
+                    "adaptive_resource_le_fixed",
+                    Json::Bool(a.container_seconds <= f.container_seconds * 1.001 + 1e-9),
+                ),
+                (
+                    "fixed_fidelity_l2",
+                    f_fid.map(Json::num).unwrap_or(Json::Null),
+                ),
+                (
+                    "adaptive_fidelity_l2",
+                    a_fid.map(Json::num).unwrap_or(Json::Null),
+                ),
+                (
+                    "adaptive_fidelity_le_fixed",
+                    match (f_fid, a_fid) {
+                        (Some(f), Some(a)) => Json::Bool(*a <= *f + 1e-9),
+                        _ => Json::Null,
+                    },
+                ),
+            ]));
+        }
+    }
+    let json = Json::obj(vec![
+        ("strategy", Json::str(&cfg.strategy)),
+        ("parties", Json::num(cfg.n_parties as f64)),
+        ("rounds", Json::num(cfg.rounds as f64)),
+        ("seed", Json::num(cfg.seed as f64)),
+        ("dim", Json::num(cfg.dim as f64)),
+        ("epoch_secs", Json::num(cfg.epoch_secs)),
+        (
+            "scenarios",
+            Json::arr(cfg.scenarios.iter().map(|s| Json::str(s))),
+        ),
+        ("cells", Json::Arr(cells)),
+        ("regret_check", Json::Arr(checks)),
+    ]);
+    (t, json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell<'a>(json: &'a Json, scenario: &str, mode: &str) -> &'a Json {
+        json.get("cells")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|c| {
+                c.get("scenario").as_str() == Some(scenario)
+                    && c.get("mode").as_str() == Some(mode)
+            })
+            .unwrap_or_else(|| panic!("missing cell {scenario}/{mode}"))
+    }
+
+    #[test]
+    fn sweep_covers_both_modes_and_dumps_parseable_json() {
+        let cfg = AdaptiveSweepConfig {
+            n_parties: 8,
+            rounds: 3,
+            dim: 32,
+            ..Default::default()
+        };
+        let (_t, json) = run_sweep(&cfg);
+        let cells = json.get("cells").as_arr().unwrap();
+        assert_eq!(cells.len(), 2 * 2, "two scenarios × two modes");
+        for c in cells {
+            assert!(
+                c.get("error").as_str().is_none(),
+                "cell {:?}/{:?} failed: {:?}",
+                c.get("scenario").as_str(),
+                c.get("mode").as_str(),
+                c.get("error")
+            );
+            assert!(c.get("fidelity_l2").as_f64().unwrap() >= 0.0);
+            assert!(
+                c.get("rounds_done").as_u64().unwrap()
+                    + c.get("rounds_skipped").as_u64().unwrap() as u64
+                    > 0
+            );
+        }
+        crate::bench::dump("BENCH_adaptive", &json);
+        let text = std::fs::read_to_string(
+            crate::bench::repro_dir().join("BENCH_adaptive.json"),
+        )
+        .unwrap();
+        assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn adaptive_never_cuts_more_updates_than_fixed() {
+        let cfg = AdaptiveSweepConfig {
+            n_parties: 12,
+            rounds: 3,
+            dim: 32,
+            ..Default::default()
+        };
+        let (_t, json) = run_sweep(&cfg);
+        let checks = json.get("regret_check").as_arr().unwrap();
+        assert_eq!(checks.len(), 2, "one check per scenario");
+        for ch in checks {
+            let scenario = ch.get("scenario").as_str().unwrap();
+            assert_eq!(
+                ch.get("adaptive_dropped_le_fixed").as_bool(),
+                Some(true),
+                "{scenario}: the learned deadline only extends, so adaptive \
+                 ({:?}) must cut no more than fixed ({:?})",
+                ch.get("adaptive_dropped"),
+                ch.get("fixed_dropped"),
+            );
+        }
+        // the straggler scenario actually exercises the deadline: fixed
+        // must cut someone, or the comparison is vacuous
+        let straggler = checks
+            .iter()
+            .find(|c| c.get("scenario").as_str() == Some("stragglers"))
+            .unwrap();
+        assert!(
+            straggler.get("fixed_dropped").as_u64().unwrap() > 0,
+            "straggler cell must cut deadline-missers under the fixed policy"
+        );
+    }
+
+    #[test]
+    fn adaptive_runs_are_deterministic_per_seed() {
+        let cfg = AdaptiveSweepConfig {
+            n_parties: 8,
+            rounds: 3,
+            dim: 16,
+            scenarios: vec!["stragglers".to_string()],
+            ..Default::default()
+        };
+        let faults = FleetFaults::scenario("stragglers", cfg.epoch_secs).unwrap();
+        let a = run_cell(&cfg, faults.clone(), AdaptiveConfig::on()).unwrap();
+        let b = run_cell(&cfg, faults, AdaptiveConfig::on()).unwrap();
+        assert_eq!(a.updates_dropped, b.updates_dropped);
+        assert_eq!(a.final_model.len(), b.final_model.len());
+        for (x, y) in a.final_model.iter().zip(&b.final_model) {
+            assert_eq!(x.to_bits(), y.to_bits(), "adaptive runs must replay bit-identically");
+        }
+    }
+
+    #[test]
+    fn args_parse_into_the_sweep_config() {
+        let args = crate::util::cli::Args::parse(
+            "adaptive --scenarios stragglers --parties 4 --rounds 2 --dim 16 --seed 7 \
+             --strategy async-stale"
+                .split_whitespace()
+                .map(|x| x.to_string()),
+        );
+        let cfg = AdaptiveSweepConfig::from_args(&args);
+        assert_eq!(cfg.scenarios, vec!["stragglers"]);
+        assert_eq!(cfg.strategy, "async-stale");
+        assert_eq!((cfg.n_parties, cfg.rounds, cfg.dim, cfg.seed), (4, 2, 16, 7));
+    }
+}

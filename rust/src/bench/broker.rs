@@ -142,6 +142,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> (Vec<Table>, Json) {
             .admission(AdmissionConfig {
                 budget: admission_budget(cfg),
                 max_jobs: 0,
+                autoscale: None,
             })
             .capacity(cfg.capacity)
             .seed(cfg.seed)

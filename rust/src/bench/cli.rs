@@ -57,6 +57,13 @@ SUBCOMMANDS:
              [--scenarios baseline,stragglers,dropout,diurnal,skew]
              [--parties 10] [--rounds 4] [--seed 42] [--dim 64]
              [--epoch-secs 0.4]   (writes BENCH_robustness.json dump)
+  adaptive   adaptive-JIT regret sweep: learned fuse deadlines (online
+             arrival sketches, crate::adapt) vs the fixed estimator
+             deadline, per fault scenario; embeds the dropped/resource/
+             fidelity regret check in the dump
+             [--scenarios stragglers,diurnal] [--strategy jit]
+             [--parties 10] [--rounds 4] [--seed 42] [--dim 64]
+             [--epoch-secs 0.4]   (writes BENCH_adaptive.json dump)
   live-broker  the broker's job mix on the LIVE platform: trace replay
              with admission control + policy-arbitrated preemption,
              per-job MQ topics/checkpoints/models
@@ -94,6 +101,7 @@ pub fn dispatch(args: &Args) -> i32 {
         Some("live-broker") => cmd_live_broker(args),
         Some("recover") => cmd_recover(args),
         Some("robustness") => cmd_robustness(args),
+        Some("adaptive") => cmd_adaptive(args),
         Some("top") => cmd_top(args),
         Some("zoo") => cmd_zoo(),
         _ => {
@@ -347,6 +355,44 @@ fn cmd_robustness(args: &Args) -> i32 {
     let (t, json) = crate::bench::robustness::run_sweep(&cfg);
     t.print();
     crate::bench::dump("BENCH_robustness", &json);
+    0
+}
+
+fn cmd_adaptive(args: &Args) -> i32 {
+    use crate::coordinator::strategies;
+    let cfg = crate::bench::adaptive::AdaptiveSweepConfig::from_args(args);
+    if strategies::by_name(&cfg.strategy).is_none() {
+        eprintln!(
+            "unknown strategy {:?}; expected one of {:?}",
+            cfg.strategy,
+            strategies::all_strategies()
+        );
+        return 2;
+    }
+    let (t, json) = crate::bench::adaptive::run_sweep(&cfg);
+    t.print();
+    crate::bench::dump("BENCH_adaptive", &json);
+    // surface the embedded acceptance verdict on stdout so CI greps can
+    // read it without parsing the dump
+    for ch in json.get("regret_check").as_arr().into_iter().flatten() {
+        println!(
+            "regret_check scenario={} dropped {}<=:{} resource<=: {} fidelity<=: {}",
+            ch.get("scenario").as_str().unwrap_or("?"),
+            ch.get("adaptive_dropped")
+                .as_f64()
+                .map(|v| v.to_string())
+                .unwrap_or_default(),
+            ch.get("adaptive_dropped_le_fixed")
+                .as_bool()
+                .unwrap_or(false),
+            ch.get("adaptive_resource_le_fixed")
+                .as_bool()
+                .unwrap_or(false),
+            ch.get("adaptive_fidelity_le_fixed")
+                .as_bool()
+                .unwrap_or(false),
+        );
+    }
     0
 }
 
@@ -745,10 +791,24 @@ fn cmd_top(args: &Args) -> i32 {
             "preempts",
             "adm wait (s)",
             "party wait (ms)",
+            "arr p90/p99 (s)",
+            "deadline (s)",
             "last seen (s)",
         ],
     );
     for top in &tops {
+        // adaptive gauges are absent until the first adaptive round (and
+        // always, with adaptation off) — render a dash, not fake zeros
+        let quants = if top.arrival_p99_secs > 0.0 {
+            format!("{:.1}/{:.1}", top.arrival_p90_secs, top.arrival_p99_secs)
+        } else {
+            "-".to_string()
+        };
+        let deadline = if top.deadline_secs > 0.0 {
+            format!("{:.1}", top.deadline_secs)
+        } else {
+            "-".to_string()
+        };
         t.row(vec![
             top.job.to_string(),
             top.rounds.to_string(),
@@ -759,6 +819,8 @@ fn cmd_top(args: &Args) -> i32 {
             top.preempts.to_string(),
             format!("{:.1}", top.admission_wait_secs),
             format!("{:.1}", top.mean_party_wait_secs() * 1e3),
+            quants,
+            deadline,
             format!("{:.1}", top.last_at_secs),
         ]);
     }

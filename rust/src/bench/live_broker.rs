@@ -137,6 +137,7 @@ impl LiveBrokerSweepConfig {
             .admission(AdmissionConfig {
                 budget: self.budget.max(1),
                 max_jobs: 0,
+                autoscale: None,
             })
             .capacity(self.capacity)
             .seed(self.seed)

@@ -10,11 +10,13 @@
 //! | [`live`] | Fig 7/9 analogue on the wall-clock path | `BENCH_live.json` |
 //! | [`live_broker`] | §6.3 job mix on the *live* platform | `BENCH_live_broker.json` |
 //! | [`robustness`] | strategy × fault-scenario degradation matrix | `BENCH_robustness.json` |
+//! | [`adaptive`] | learned vs fixed fuse deadlines under shifting arrivals (regret sweep) | `BENCH_adaptive.json` |
 //!
 //! The perf benches (`cargo bench --bench fusion_hot_path` /
 //! `scheduler_hot_path`) additionally emit `BENCH_fusion.json` /
 //! `BENCH_scheduler.json`; EXPERIMENTS.md tracks all of them.
 
+pub mod adaptive;
 pub mod broker;
 pub mod cli;
 pub mod figs;

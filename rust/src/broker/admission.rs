@@ -24,6 +24,14 @@ pub struct AdmissionConfig {
     pub budget: usize,
     /// Max concurrently admitted jobs (0 = unlimited).
     pub max_jobs: usize,
+    /// Adaptive budget bounds `(min, max)` (PR 10, [`crate::adapt`]):
+    /// when set, the effective budget starts at `budget.clamp(min, max)`
+    /// and autoscales deterministically with observed backpressure — it
+    /// grows by the queued demand when an arrival has to wait (up to
+    /// `max`) and shrinks by the freed demand when a job finishes with
+    /// nobody waiting (down to `min`). `None` (the default) keeps the
+    /// fixed budget, bit-identical to every pre-PR-10 run.
+    pub autoscale: Option<(usize, usize)>,
 }
 
 impl Default for AdmissionConfig {
@@ -31,6 +39,7 @@ impl Default for AdmissionConfig {
         AdmissionConfig {
             budget: 256,
             max_jobs: 0,
+            autoscale: None,
         }
     }
 }
@@ -58,10 +67,17 @@ pub struct AdmissionController {
     /// first, FIFO within a class.
     wait: BTreeSet<(u8, u64, usize)>,
     arrival_seq: u64,
+    /// Effective budget under [`AdmissionConfig::autoscale`]; equals
+    /// `cfg.budget` (and never moves) when autoscale is off.
+    auto_budget: usize,
 }
 
 impl AdmissionController {
     pub fn new(cfg: AdmissionConfig) -> AdmissionController {
+        let auto_budget = match cfg.autoscale {
+            Some((lo, hi)) => cfg.budget.clamp(lo.max(1), hi.max(1)),
+            None => cfg.budget,
+        };
         AdmissionController {
             cfg,
             jobs: Vec::new(),
@@ -69,18 +85,40 @@ impl AdmissionController {
             running: 0,
             wait: BTreeSet::new(),
             arrival_seq: 0,
+            auto_budget,
         }
     }
 
     fn budget(&self) -> usize {
-        self.cfg.budget.max(1)
+        self.auto_budget.max(1)
+    }
+
+    /// Autoscale step: grow on backpressure (an arrival had to queue),
+    /// shrink on idle frees (a finish with an empty wait queue). A pure
+    /// function of (config, arrival order, finish order) — no clocks, no
+    /// rng — so autoscaled runs replay bit-identically.
+    fn autoscale_step(&mut self, pressure_demand: usize, grow: bool) {
+        let Some((lo, hi)) = self.cfg.autoscale else {
+            return;
+        };
+        let (lo, hi) = (lo.max(1), hi.max(lo.max(1)));
+        self.auto_budget = if grow {
+            (self.auto_budget + pressure_demand).min(hi)
+        } else {
+            self.auto_budget.saturating_sub(pressure_demand).max(lo)
+        };
     }
 
     /// Register a job before the run starts. Jobs must be registered in
     /// platform id order (dense ids).
     pub fn register(&mut self, job: usize, demand: usize, class: SloClass) {
         assert_eq!(job, self.jobs.len(), "register jobs in platform id order");
-        let demand = demand.clamp(1, self.budget());
+        // under autoscale, clamp against the cap the budget can grow to
+        let cap = match self.cfg.autoscale {
+            Some((lo, hi)) => hi.max(lo.max(1)),
+            None => self.budget(),
+        };
+        let demand = demand.clamp(1, cap);
         self.jobs.push(JobAdmission {
             demand,
             class,
@@ -97,17 +135,30 @@ impl AdmissionController {
         self.arrival_seq += 1;
         self.jobs[job].arrived_at = Some(now);
         self.wait.insert((self.jobs[job].class.rank(), seq, job));
-        self.drain(now)
+        let mut started = self.drain(now);
+        if self.cfg.autoscale.is_some() && !started.contains(&job) {
+            // backpressure observed: grow the budget toward the cap and
+            // retry — the arrival (or an earlier queued job) may now fit
+            self.autoscale_step(self.jobs[job].demand, true);
+            started.extend(self.drain(now));
+        }
+        started
     }
 
     /// A running job finished; its committed demand frees, possibly
     /// releasing queued jobs.
     pub fn finish(&mut self, job: usize, now: Time) -> Vec<usize> {
+        let mut freed = 0;
         let j = &mut self.jobs[job];
         if j.admitted_at.is_some() && j.finished_at.is_none() {
             j.finished_at = Some(now);
+            freed = j.demand;
             self.committed -= j.demand;
             self.running -= 1;
+        }
+        if freed > 0 && self.wait.is_empty() {
+            // idle free: nobody waited on this capacity, so give it back
+            self.autoscale_step(freed, false);
         }
         self.drain(now)
     }
@@ -123,7 +174,11 @@ impl AdmissionController {
                 break;
             };
             let demand = self.jobs[job].demand;
-            if self.committed + demand > self.budget() {
+            // `committed > 0` guard: a shrunken autoscale budget must not
+            // starve the head job forever — an empty controller always
+            // admits. Inert without autoscale (register clamps demand
+            // into the fixed budget, so an empty controller always fits).
+            if self.committed + demand > self.budget() && self.committed > 0 {
                 break;
             }
             if self.cfg.max_jobs > 0 && self.running >= self.cfg.max_jobs {
@@ -163,6 +218,12 @@ impl AdmissionController {
     pub fn queued(&self) -> usize {
         self.wait.len()
     }
+
+    /// The budget currently in force — `cfg.budget` without autoscale,
+    /// the adapted value (within its bounds) with it.
+    pub fn effective_budget(&self) -> usize {
+        self.budget()
+    }
 }
 
 #[cfg(test)]
@@ -175,6 +236,7 @@ mod tests {
         let mut c = AdmissionController::new(AdmissionConfig {
             budget: 10,
             max_jobs: 0,
+            autoscale: None,
         });
         c.register(0, 4, SloClass::Standard);
         c.register(1, 4, SloClass::Standard);
@@ -196,6 +258,7 @@ mod tests {
         let mut c = AdmissionController::new(AdmissionConfig {
             budget: 4,
             max_jobs: 0,
+            autoscale: None,
         });
         c.register(0, 4, SloClass::BestEffort);
         c.register(1, 4, SloClass::BestEffort);
@@ -213,6 +276,7 @@ mod tests {
         let mut c = AdmissionController::new(AdmissionConfig {
             budget: 8,
             max_jobs: 0,
+            autoscale: None,
         });
         c.register(0, 500, SloClass::Standard);
         assert_eq!(c.job(0).demand, 8, "demand clamped into the budget");
@@ -220,10 +284,65 @@ mod tests {
     }
 
     #[test]
+    fn autoscale_grows_on_backpressure_and_shrinks_on_idle_frees() {
+        let mut c = AdmissionController::new(AdmissionConfig {
+            budget: 4,
+            max_jobs: 0,
+            autoscale: Some((2, 12)),
+        });
+        c.register(0, 4, SloClass::Standard);
+        c.register(1, 4, SloClass::Standard);
+        c.register(2, 4, SloClass::Standard);
+        assert_eq!(c.effective_budget(), 4);
+        assert_eq!(c.arrive(0, secs(1.0)), vec![0]);
+        // job 1 does not fit the fixed budget: the controller grows by
+        // the queued demand and admits it in the same arrival
+        assert_eq!(c.arrive(1, secs(2.0)), vec![1]);
+        assert_eq!(c.effective_budget(), 8);
+        assert_eq!(c.arrive(2, secs(3.0)), vec![2]);
+        assert_eq!(c.effective_budget(), 12, "grown to the cap");
+        // idle finishes shrink back toward the floor
+        assert_eq!(c.finish(0, secs(10.0)), vec![]);
+        assert_eq!(c.effective_budget(), 8);
+        assert_eq!(c.finish(1, secs(11.0)), vec![]);
+        assert_eq!(c.finish(2, secs(12.0)), vec![]);
+        assert_eq!(c.effective_budget(), 2, "floored at the minimum");
+    }
+
+    #[test]
+    fn autoscale_replays_bit_identically_and_never_starves_the_head_job() {
+        let cfg = AdmissionConfig {
+            budget: 2,
+            max_jobs: 0,
+            autoscale: Some((1, 6)),
+        };
+        let run = || {
+            let mut c = AdmissionController::new(cfg.clone());
+            c.register(0, 4, SloClass::Standard);
+            c.register(1, 4, SloClass::Standard);
+            let mut trace = Vec::new();
+            trace.push(c.arrive(0, secs(1.0)));
+            trace.push(c.arrive(1, secs(2.0)));
+            trace.push(c.finish(0, secs(9.0)));
+            trace.push(c.finish(1, secs(10.0)));
+            (trace, c.effective_budget())
+        };
+        let (a, ba) = run();
+        let (b, bb) = run();
+        assert_eq!(a, b, "deterministic function of arrival/finish order");
+        assert_eq!(ba, bb);
+        // demand 4 > starting budget 2: the empty-controller guard (and
+        // the backpressure growth) still admit job 0 immediately
+        assert_eq!(a[0], vec![0]);
+        assert!(a.iter().flatten().any(|&j| j == 1), "job 1 eventually admits");
+    }
+
+    #[test]
     fn max_jobs_quota_limits_concurrency() {
         let mut c = AdmissionController::new(AdmissionConfig {
             budget: 100,
             max_jobs: 1,
+            autoscale: None,
         });
         c.register(0, 1, SloClass::Standard);
         c.register(1, 1, SloClass::Standard);

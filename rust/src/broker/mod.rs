@@ -178,6 +178,7 @@ mod tests {
             .admission(AdmissionConfig {
                 budget: 32,
                 max_jobs: 0,
+                autoscale: None,
             })
             .capacity(8)
             .seed(77)
@@ -210,6 +211,7 @@ mod tests {
             .admission(AdmissionConfig {
                 budget: 1,
                 max_jobs: 1,
+                autoscale: None,
             })
             .capacity(8)
             .seed(78)

@@ -44,6 +44,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::adapt::{AdaptiveConfig, AdaptivePolicy};
 use crate::cluster::{Cluster, Notification};
 use crate::coordinator::job::{FlJobSpec, JobParams};
 use crate::coordinator::strategies::{self, Ctx, StalePolicy, Strategy};
@@ -51,9 +52,9 @@ use crate::estimator::{
     estimate_round, LinearityModel, PeriodicityTracker, RoundEstimate,
 };
 use crate::metrics::RoundRecord;
-use crate::mq::{self, Message, MessageQueue, Payload};
+use crate::mq::{self, CheckpointState, Message, MessageQueue, Payload};
 use crate::party::{FaultState, Fleet, FleetFaults, RoundDraw};
-use crate::sim::{to_secs, EventKind, EventQueue, Time};
+use crate::sim::{secs, to_secs, EventKind, EventQueue, Time};
 use crate::telemetry::{Registry, Scope, SpanKind};
 use crate::util::rng::Rng;
 
@@ -504,6 +505,17 @@ pub struct JobEngine {
     pub telemetry: Registry,
     /// Label scope for this engine's metric samples (job + strategy).
     pub tel_scope: Scope,
+    /// Adaptive-JIT knobs (PR 10; default off — the zero-cost bit-compat
+    /// fast path, same pattern as `faults`).
+    pub adaptive: AdaptiveConfig,
+    /// Online arrival estimator + control policy, `Some` iff adaptation
+    /// is enabled. Consumes **no rng** — a pure function of observed
+    /// arrival lags — so the engine's seeded stream (and every
+    /// bit-identity pin built on it) is untouched either way.
+    pub adapt: Option<AdaptivePolicy>,
+    /// The fixed §5.4 defer (seconds) of the in-flight round — the floor
+    /// the adaptive deadline may never undercut.
+    adapt_fixed_defer: f64,
     /// (round, party) pairs already delivered to the strategy — dedupes
     /// the engine's self-scheduled stale deliveries against the driver's
     /// ingested ones.
@@ -569,6 +581,9 @@ impl JobEngine {
             shards: 1,
             telemetry: Registry::disabled(),
             tel_scope: Scope::job(job),
+            adaptive: AdaptiveConfig::none(),
+            adapt: None,
+            adapt_fixed_defer: 0.0,
             delivered: std::collections::HashSet::new(),
             started: false,
             spec,
@@ -581,6 +596,38 @@ impl JobEngine {
     pub fn set_telemetry(&mut self, reg: &Registry, strategy_name: &str) {
         self.telemetry = reg.clone();
         self.tel_scope = Scope::job_strategy(self.params.job, strategy_name);
+    }
+
+    /// Enable adaptive JIT control ([`crate::adapt`], PR 10). Off by
+    /// default; both regimes call this identically (the sim platform and
+    /// the live loop), so sim ≡ live bit-identity holds with adaptation
+    /// on as well as off.
+    pub fn set_adaptive(&mut self, cfg: AdaptiveConfig) {
+        self.adapt = if cfg.is_none() {
+            None
+        } else {
+            Some(AdaptivePolicy::new(cfg.clone()))
+        };
+        self.adaptive = cfg;
+    }
+
+    /// §5.5 resume: reload the adaptive-policy state checkpointed at the
+    /// last completed round from the MQ's WAL-framed checkpoint records.
+    /// No-op when adaptation is off or no checkpoint exists (a fresh
+    /// policy warms up from scratch — exactly what the pre-kill run did).
+    pub fn restore_adaptive(&mut self, mq: &MessageQueue) {
+        if self.adaptive.is_none() {
+            return;
+        }
+        if let Some(state) = mq.load_checkpoint(&mq::adapt_slot(self.params.job)) {
+            if let Some(p) = state
+                .acc
+                .as_deref()
+                .and_then(|a| AdaptivePolicy::from_f32s(self.adaptive.clone(), a))
+            {
+                self.adapt = Some(p);
+            }
+        }
     }
 
     /// The Fig 6 lines 6–13 prediction for the upcoming round.
@@ -716,6 +763,16 @@ impl JobEngine {
                 }
             }
         }
+        // adaptive signal (b): restore a FleetFaults-degraded quorum
+        // toward the configured base when the observed arrival rate
+        // supports it — never below the degraded value, never past what
+        // this round can actually deliver
+        if !self.faults.is_none() {
+            if let Some(a) = self.adapt.as_ref() {
+                self.params.quorum =
+                    a.quorum_for(self.params.quorum, self.base_quorum, parties.len());
+            }
+        }
         let params = self.params.clone();
         let mut ctx = Ctx {
             q,
@@ -728,6 +785,23 @@ impl JobEngine {
             self.strategy.on_job_start(&mut ctx);
         }
         self.strategy.on_round_start(&mut ctx, round, &est);
+        // adaptive signal (a): move the fuse deadline to the learned
+        // arrival quantile. The learned defer is floored at the fixed
+        // §5.4 prediction — adaptation only ever defers aggregator
+        // spin-up further, it never advances it below the fixed plan.
+        if self.adapt.is_some() {
+            self.adapt_fixed_defer = est.defer_secs(self.params.jit_margin);
+            let target = match (&self.adapt, self.strategy.armed_deadline()) {
+                (Some(a), Some(_)) => {
+                    let t = a.deadline_defer(self.adapt_fixed_defer);
+                    (t > self.adapt_fixed_defer).then_some(t)
+                }
+                _ => None,
+            };
+            if let Some(t) = target {
+                self.strategy.rearm_deadline(&mut ctx, round, now + secs(t));
+            }
+        }
         if self.telemetry.on() {
             self.telemetry
                 .counter_add("rounds_started_total", &self.tel_scope, 1);
@@ -897,6 +971,13 @@ impl JobEngine {
             );
         }
         let arrived = self.arrived;
+        // adaptive bookkeeping: every delivered current-round update
+        // feeds the arrival-lag sketch — rng-free and identical in both
+        // regimes (the event carries the same arrival time in sim and
+        // live, so the sketches agree bit-for-bit)
+        if let Some(a) = self.adapt.as_mut() {
+            a.observe(to_secs(now - self.round_start));
+        }
         // feed the estimator with the *observed* timing (active parties):
         // train_time ≈ arrival_offset − estimated transfer time (§5.3)
         let p = &self.fleet.parties[party];
@@ -934,6 +1015,25 @@ impl JobEngine {
             params: &params,
         };
         self.strategy.on_update(&mut ctx, round, party, arrived);
+        // adaptive signal (a), mid-round form: when the live estimate
+        // (completed rounds ∪ in-flight arrivals) undercuts the armed
+        // deadline past the re-arm hysteresis, pull the fuse in — the
+        // superseded timer is canceled inside `rearm_deadline`
+        // (`EventQueue::cancel` + re-insert), never left to fire a
+        // spurious fuse. Floored at the fixed §5.4 defer.
+        if self.adapt.is_some() {
+            let rearm = match (&self.adapt, self.strategy.armed_deadline()) {
+                (Some(a), Some(armed)) => {
+                    let armed_defer = to_secs(armed.saturating_sub(self.round_start));
+                    a.rearm_defer(self.adapt_fixed_defer, armed_defer)
+                }
+                _ => None,
+            };
+            if let Some(d) = rearm {
+                self.strategy
+                    .rearm_deadline(&mut ctx, round, self.round_start + secs(d));
+            }
+        }
     }
 
     /// Dispatch a deadline-timer alert to the strategy.
@@ -1013,6 +1113,38 @@ impl JobEngine {
     ) -> bool {
         let now = q.now();
         let round = rec.round;
+        // adaptive roll-over: merge the round's arrival sketch into the
+        // cumulative state, checkpoint it through the existing WAL
+        // checkpoint records (so §5.5 kill/resume reloads it at exactly
+        // this round boundary), and publish the live quantile gauges
+        if let Some(a) = self.adapt.as_mut() {
+            a.end_round();
+            mq.save_checkpoint(
+                &mq::adapt_slot(self.params.job),
+                CheckpointState {
+                    acc: Some(a.to_f32s()),
+                    weight: 0.0,
+                    n_merged: a.rounds_observed() as usize,
+                    consumed_to: round as usize,
+                    saved_at: now,
+                    buckets: Vec::new(),
+                },
+            );
+            if self.telemetry.on() {
+                let (p50, p90, p99) = a.quantiles();
+                self.telemetry
+                    .gauge_set("adaptive_arrival_p50_secs", &self.tel_scope, p50);
+                self.telemetry
+                    .gauge_set("adaptive_arrival_p90_secs", &self.tel_scope, p90);
+                self.telemetry
+                    .gauge_set("adaptive_arrival_p99_secs", &self.tel_scope, p99);
+                self.telemetry.gauge_set(
+                    "adaptive_deadline_secs",
+                    &self.tel_scope,
+                    a.deadline_defer(self.adapt_fixed_defer),
+                );
+            }
+        }
         self.telemetry
             .counter_add("rounds_fused_total", &self.tel_scope, 1);
         self.telemetry.histogram_observe(
@@ -1337,5 +1469,66 @@ mod tests {
         for _ in 0..32 {
             assert_eq!(a.next_u64(), b.next_u64(), "rng streams diverged");
         }
+    }
+
+    #[test]
+    fn adaptive_engine_consumes_no_rng_and_checkpoints_through_the_mq() {
+        let spec = FlJobSpec::new(
+            Workload::cifar100_effnet(),
+            FleetKind::ActiveHomogeneous,
+            5,
+            2,
+        );
+        let mut plain = JobEngine::new(0, spec.clone(), "jit", 99);
+        let mut adaptive = JobEngine::new(0, spec.clone(), "jit", 99);
+        adaptive.set_adaptive(AdaptiveConfig::on());
+        let mut q = EventQueue::new();
+        let mut cluster = Cluster::new(crate::cluster::ClusterConfig::default());
+        let mq = MessageQueue::new();
+        let p0 = plain.start_round(&mut q, &mut cluster, &mq, ArrivalMode::External);
+        let mut q2 = EventQueue::new();
+        let mut c2 = Cluster::new(crate::cluster::ClusterConfig::default());
+        let mq2 = MessageQueue::new();
+        let p1 = adaptive.start_round(&mut q2, &mut c2, &mq2, ArrivalMode::External);
+        assert_eq!(
+            p0.offsets, p1.offsets,
+            "the adaptive policy must consume no rng — same seed, same draw"
+        );
+        // deliver the round and finish it: the sketch observes every
+        // arrival and the adapt slot gets a WAL-framed checkpoint
+        for &party in &p1.parties {
+            adaptive.handle_update(&mut q2, &mut c2, &mq2, 0, party, ArrivalMode::External);
+        }
+        let fused = adaptive.finish_round(
+            &mut q2,
+            &mut c2,
+            &mq2,
+            RoundRecord {
+                round: 0,
+                latency_secs: 0.5,
+                last_arrival_secs: 1.0,
+                complete_secs: 1.5,
+            },
+        );
+        assert!(!fused, "rounds=2: not done yet");
+        let a = adaptive.adapt.as_ref().unwrap();
+        assert_eq!(a.rounds_observed(), 1);
+        let saved = mq2
+            .load_checkpoint(&mq::adapt_slot(0))
+            .expect("finish_round checkpoints the adaptive state");
+        assert_eq!(saved.acc.as_deref(), Some(a.to_f32s().as_slice()));
+        // a restarted engine restores the identical policy state
+        let mut resumed = JobEngine::new(0, spec, "jit", 99);
+        resumed.set_adaptive(AdaptiveConfig::on());
+        resumed.restore_adaptive(&mq2);
+        assert_eq!(
+            resumed.adapt.as_ref().unwrap().to_f32s(),
+            a.to_f32s(),
+            "resume must reload the checkpointed sketch bit-for-bit"
+        );
+        // disabled config stays inert
+        let mut off = JobEngine::new(1, plain.spec.clone(), "jit", 99);
+        off.set_adaptive(AdaptiveConfig::none());
+        assert!(off.adapt.is_none());
     }
 }

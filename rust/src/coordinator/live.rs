@@ -938,6 +938,12 @@ pub(crate) fn session_loop<C: Clock, S: UpdateSource>(
                 resumed_rounds[job] = Some(engine.round);
                 skip_broadcast[job] = Some(engine.round);
             }
+            // learned arrival distribution: reload the adaptive sketch
+            // from its own checkpoint slot (written at each round
+            // completion), so the resumed policy is bit-identical to the
+            // uninterrupted one — the open round's arrivals replay below
+            // and re-observe into the restored round sketch.
+            engine.restore_adaptive(mq);
         }
         dims.push(dim);
         globals.push(Arc::new(global));
@@ -1882,6 +1888,7 @@ mod tests {
         let admission = AdmissionConfig {
             budget: 64,
             max_jobs: 1,
+            autoscale: None,
         };
 
         let mq_full = Arc::new(MessageQueue::new());

@@ -40,6 +40,10 @@ pub struct PlatformConfig {
     /// Fleet fault injection, applied to every admitted job (default:
     /// all knobs off — the bit-compat fast path).
     pub faults: FleetFaults,
+    /// Adaptive JIT control (PR 10, [`crate::adapt`]), applied to every
+    /// admitted job (default: disabled — the bit-compat fast path, same
+    /// contract as `faults`).
+    pub adaptive: crate::adapt::AdaptiveConfig,
 }
 
 impl Default for PlatformConfig {
@@ -54,6 +58,7 @@ impl Default for PlatformConfig {
             jit_margin: None,
             batch_override: None,
             faults: FleetFaults::none(),
+            adaptive: crate::adapt::AdaptiveConfig::none(),
         }
     }
 }
@@ -122,6 +127,7 @@ impl Platform {
         if let Some(b) = self.cfg.batch_override {
             engine.params.batch = b.max(1);
         }
+        engine.set_adaptive(self.cfg.adaptive.clone());
         engine.set_telemetry(&self.telemetry, strategy_name);
         self.jobs.push(engine);
         self.admission_waiting.push(false);

@@ -51,6 +51,7 @@
 //! | [`shards`](Session::shards) | L1 aggregator tree width (bit-identical to the single fold for every n) | §3.2 hierarchy |
 //! | [`kill_shard`](Session::kill_shard) | kill one L1 shard mid-round; it resumes from its own checkpoint | §5.5 |
 //! | [`faults`](Session::faults) | fleet fault injection ([`FleetFaults`]): stragglers, dropout, diurnal waves, weight skew | robustness matrix |
+//! | [`adaptive`](Session::adaptive) | online arrival estimation ([`AdaptiveConfig`](crate::adapt::AdaptiveConfig)): learned fuse deadlines, quorum restore, admission autoscale | adaptive JIT (PR 10) |
 //! | [`events`](Session::events) | stream typed [`SessionEvent`]s while the run executes | §5.5 observability |
 //! | [`telemetry`](Session::telemetry) | attach a [`Registry`](crate::telemetry::Registry): metrics + structured spans from every layer | §5.5 observability |
 //!
@@ -66,6 +67,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::adapt::AdaptiveConfig;
 use crate::broker::admission::{AdmissionConfig, AdmissionController};
 use crate::broker::workload::{JobArrival, JobTrace};
 use crate::broker::{arbitration, SloClass};
@@ -606,6 +608,7 @@ pub struct Session {
     solo_baselines: bool,
     sink: EventSink,
     faults: FleetFaults,
+    adaptive: AdaptiveConfig,
     telemetry: Registry,
 }
 
@@ -633,6 +636,7 @@ impl Session {
             solo_baselines: false,
             sink: EventSink::none(),
             faults: FleetFaults::none(),
+            adaptive: AdaptiveConfig::none(),
             telemetry: Registry::disabled(),
         }
     }
@@ -817,6 +821,22 @@ impl Session {
         self
     }
 
+    /// Adaptive JIT ([`crate::adapt`]): per-job online estimation of the
+    /// update-arrival distribution (mergeable quantile sketches fed from
+    /// the engine's existing arrival bookkeeping) converted into three
+    /// control signals — learned fuse-deadline re-arming, straggler
+    /// quorum restore on fault-degraded rounds, and bounded admission
+    /// budget autoscaling. Applied to every job, identically in `sim`,
+    /// `live` and `wall`; the sketch consumes no rng, so enabled runs
+    /// stay bit-identical per seed across regimes, and the default
+    /// ([`AdaptiveConfig::none`]) is a zero-cost no-op (same contract as
+    /// `faults`). Sketch state checkpoints through the job's MQ slot, so
+    /// killed runs resume with their learned distribution intact.
+    pub fn adaptive(mut self, cfg: AdaptiveConfig) -> Session {
+        self.adaptive = cfg;
+        self
+    }
+
     /// Run against an explicit shared MQ — required for in-process
     /// resume (a fresh private MQ is created otherwise, so nothing
     /// survives the run). For cross-process durability use
@@ -887,6 +907,18 @@ impl Session {
     }
 
     // -- execution ---------------------------------------------------------
+
+    /// The admission config the run will use: the explicit one (or the
+    /// default), with the adaptive autoscale bounds applied when the
+    /// adaptive policy asks for them and the caller did not pin their
+    /// own. Shared by both regimes so sim and live autoscale identically.
+    fn admission_cfg(&self) -> AdmissionConfig {
+        let mut cfg = self.admission.clone().unwrap_or_default();
+        if cfg.autoscale.is_none() {
+            cfg.autoscale = self.adaptive.admission_bounds();
+        }
+        cfg
+    }
 
     fn default_capacity(&self) -> usize {
         if self.arrivals.len() == 1 {
@@ -962,11 +994,12 @@ impl Session {
         let mut pcfg = PlatformConfig {
             seed: self.seed,
             faults: self.faults,
+            adaptive: self.adaptive.clone(),
             ..Default::default()
         };
         pcfg.cluster.capacity = capacity;
         let mut platform = Platform::new(pcfg);
-        let mut ctrl = AdmissionController::new(self.admission.clone().unwrap_or_default());
+        let mut ctrl = AdmissionController::new(self.admission_cfg());
         for arr in &self.arrivals {
             let demand = arr.spec.workload.n_agg(arr.spec.n_parties) as usize;
             let job = platform.submit_at(arr.spec.clone(), &arr.strategy, secs(arr.at_secs));
@@ -1097,6 +1130,7 @@ impl Session {
                 JobEngine::with_faults(job, arr.spec.clone(), &arr.strategy, self.seed, self.faults);
             engine.deferred = true;
             engine.shards = shards;
+            engine.set_adaptive(self.adaptive.clone());
             engine.set_telemetry(&self.telemetry, &arr.strategy);
             weights.push(
                 engine
@@ -1111,7 +1145,7 @@ impl Session {
         let params = live::LoopParams {
             arrivals: &self.arrivals,
             capacity,
-            admission: self.admission.clone().unwrap_or_default(),
+            admission: self.admission_cfg(),
             policy: self.policy.clone(),
             seed: self.seed,
             dim: self.dim.max(1),

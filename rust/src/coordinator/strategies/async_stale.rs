@@ -58,6 +58,14 @@ impl Strategy for AsyncStale {
         self.inner.on_timer(ctx, round);
     }
 
+    fn armed_deadline(&self) -> Option<crate::sim::Time> {
+        self.inner.armed_deadline()
+    }
+
+    fn rearm_deadline(&mut self, ctx: &mut Ctx, round: u32, deadline_abs: crate::sim::Time) {
+        self.inner.rearm_deadline(ctx, round, deadline_abs);
+    }
+
     fn on_linger(&mut self, ctx: &mut Ctx, task: TaskId) {
         self.inner.on_linger(ctx, task);
     }

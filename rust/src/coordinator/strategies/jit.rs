@@ -125,7 +125,7 @@ impl Strategy for Jit {
         self.rr = 0;
 
         // Defer point with safety margin: t_rnd − t_agg·(1+margin).
-        let defer = (est.t_rnd - est.t_agg * (1.0 + ctx.params.jit_margin)).max(0.0);
+        let defer = est.defer_secs(ctx.params.jit_margin);
         let deadline_abs = ctx.q.now() + secs(defer);
         self.last_deadline = deadline_abs;
 
@@ -187,6 +187,34 @@ impl Strategy for Jit {
             ctx.cluster.request_finish(ctx.q, self.tasks[i]);
         }
         self.finish_if_done(ctx);
+    }
+
+    fn armed_deadline(&self) -> Option<Time> {
+        self.timer.map(|_| self.last_deadline)
+    }
+
+    /// Adaptive re-arm (PR 10): cancel the superseded deadline timer and
+    /// insert a fresh one at `deadline_abs` (clamped at `now` — a
+    /// learned deadline already in the past fires immediately, it never
+    /// rewinds the clock). A round that already fused or force-triggered
+    /// keeps its state: there is no timer left worth moving.
+    fn rearm_deadline(&mut self, ctx: &mut Ctx, round: u32, deadline_abs: Time) {
+        if round != self.tracker.round || self.tracker.done || self.triggered {
+            return;
+        }
+        let Some(id) = self.timer.take() else {
+            return;
+        };
+        ctx.q.cancel(id);
+        let at = deadline_abs.max(ctx.q.now());
+        self.last_deadline = at;
+        self.timer = Some(ctx.q.schedule_at(
+            at,
+            EventKind::TimerAlert {
+                job: ctx.params.job,
+                round,
+            },
+        ));
     }
 
     fn on_timer(&mut self, ctx: &mut Ctx, round: u32) {
@@ -447,6 +475,141 @@ mod tests {
             "canceled deadline timer fired anyway (clock at {})",
             to_secs(q.now())
         );
+    }
+
+    /// PR 2's canceled-timer guarantee, extended to PR 10's re-arming:
+    /// when the adaptive policy moves a deadline mid-round, the
+    /// superseded timer must be canceled via `EventQueue::cancel` and
+    /// never fire a spurious fuse — exactly one `TimerAlert` (the
+    /// re-armed one) may ever pop, and the drain must end before the
+    /// original deadline.
+    #[test]
+    fn rearmed_deadline_cancels_superseded_timer_no_spurious_fuse() {
+        let spec = FlJobSpec::new(
+            Workload::cifar100_effnet(),
+            FleetKind::ActiveHomogeneous,
+            3,
+            1,
+        );
+        let params = JobParams::derive(0, &spec);
+        let mut q = EventQueue::new();
+        let mut cluster = Cluster::new(ClusterConfig::default());
+        let mq = MessageQueue::new();
+        let mut s = Jit::default();
+        // fixed estimate arms the fuse at 20 − 2·1.1 = 17.8s
+        let est = RoundEstimate {
+            t_upd: vec![18.0, 19.0, 20.0],
+            t_rnd: 20.0,
+            t_agg: 2.0,
+        };
+        {
+            let mut ctx = Ctx {
+                q: &mut q,
+                cluster: &mut cluster,
+                mq: &mq,
+                params: &params,
+            };
+            s.on_round_start(&mut ctx, 0, &est);
+        }
+        let armed = s.armed_deadline().expect("jit arms a deadline timer");
+        assert!((to_secs(armed) - 17.8).abs() < 0.01);
+        // adaptive shortening: the learned estimate pulls the fuse in to 9s
+        {
+            let mut ctx = Ctx {
+                q: &mut q,
+                cluster: &mut cluster,
+                mq: &mq,
+                params: &params,
+            };
+            s.rearm_deadline(&mut ctx, 0, crate::sim::secs(9.0));
+        }
+        assert_eq!(s.armed_deadline(), Some(crate::sim::secs(9.0)));
+        // arrivals land after the re-armed fuse but before the original
+        // one — only the 9s timer may trigger them into the containers
+        for (i, a) in [12.0, 13.0, 14.0].iter().enumerate() {
+            q.schedule_at(
+                crate::sim::secs(*a),
+                EventKind::UpdateArrival {
+                    job: 0,
+                    round: 0,
+                    party: i,
+                },
+            );
+        }
+        q.schedule_in(cluster.cfg.delta_tick, EventKind::SchedTick);
+        let mut arrived = 0;
+        let mut records = Vec::new();
+        let mut timer_pops = 0;
+        let mut ticks = 0;
+        while let Some((_, ev)) = q.next() {
+            match ev {
+                EventKind::UpdateArrival { party, .. } => {
+                    arrived += 1;
+                    let mut ctx = Ctx {
+                        q: &mut q,
+                        cluster: &mut cluster,
+                        mq: &mq,
+                        params: &params,
+                    };
+                    s.on_update(&mut ctx, 0, party, arrived);
+                }
+                EventKind::TimerAlert { round, .. } => {
+                    timer_pops += 1;
+                    let mut ctx = Ctx {
+                        q: &mut q,
+                        cluster: &mut cluster,
+                        mq: &mq,
+                        params: &params,
+                    };
+                    s.on_timer(&mut ctx, round);
+                }
+                EventKind::ContainerDone { container } => {
+                    if let Some(note) = cluster.advance(&mut q, container) {
+                        let mut ctx = Ctx {
+                            q: &mut q,
+                            cluster: &mut cluster,
+                            mq: &mq,
+                            params: &params,
+                        };
+                        s.on_note(&mut ctx, &note);
+                    }
+                }
+                EventKind::SchedTick => {
+                    cluster.on_tick(&mut q);
+                    ticks += 1;
+                    if ticks < 10_000 && records.is_empty() {
+                        q.schedule_in(cluster.cfg.delta_tick, EventKind::SchedTick);
+                    }
+                }
+                _ => {}
+            }
+            if let Some(r) = s.take_completed() {
+                records.push(r);
+            }
+        }
+        assert_eq!(records.len(), 1, "round completes off the re-armed fuse");
+        assert_eq!(
+            timer_pops, 1,
+            "exactly the re-armed timer fires; the superseded 17.8s one was canceled"
+        );
+        assert!(s.timer.is_none());
+        assert!(q.is_empty(), "no live events may remain after the drain");
+        assert!(
+            to_secs(q.now()) < 17.0,
+            "superseded deadline timer fired anyway (clock at {})",
+            to_secs(q.now())
+        );
+        // re-arming a completed or force-triggered round is a no-op
+        {
+            let mut ctx = Ctx {
+                q: &mut q,
+                cluster: &mut cluster,
+                mq: &mq,
+                params: &params,
+            };
+            s.rearm_deadline(&mut ctx, 0, crate::sim::secs(30.0));
+        }
+        assert!(s.timer.is_none() && q.is_empty(), "no resurrection after done");
     }
 
     #[test]

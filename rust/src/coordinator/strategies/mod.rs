@@ -85,6 +85,22 @@ pub trait Strategy {
     /// JIT deadline timer (Fig 6 TIMER_ALERT). Others ignore it.
     fn on_timer(&mut self, _ctx: &mut Ctx, _round: u32) {}
 
+    /// The absolute time this strategy's live fuse-deadline timer is
+    /// armed at, if it runs one (`jit` / `async-stale`). The engine's
+    /// adaptive policy (PR 10, [`crate::adapt`]) reads this to decide
+    /// whether a learned deadline should supersede the fixed one.
+    /// Default: no deadline timer.
+    fn armed_deadline(&self) -> Option<Time> {
+        None
+    }
+
+    /// Adaptive control: move the live fuse deadline to `deadline_abs`
+    /// — the superseded timer MUST be canceled via `EventQueue::cancel`
+    /// (never left to fire a spurious fuse) and a fresh one inserted.
+    /// Strategies without a deadline timer ignore the signal (default
+    /// no-op).
+    fn rearm_deadline(&mut self, _ctx: &mut Ctx, _round: u32, _deadline_abs: Time) {}
+
     /// Keep-warm linger expired for `task`.
     fn on_linger(&mut self, _ctx: &mut Ctx, _task: TaskId) {}
 

@@ -199,6 +199,15 @@ impl RoundEstimate {
     pub fn start_offset_time(&self) -> Time {
         secs(self.start_offset())
     }
+
+    /// The margin-padded defer point `t_rnd − t_agg·(1+margin)` the JIT
+    /// strategy arms its fuse timer at, clamped at 0. This is the
+    /// *fixed* §5.4-style prediction; the adaptive policy
+    /// ([`crate::adapt`]) treats it as the floor its learned deadline
+    /// may never undercut.
+    pub fn defer_secs(&self, jit_margin: f64) -> f64 {
+        (self.t_rnd - self.t_agg * (1.0 + jit_margin)).max(0.0)
+    }
 }
 
 /// Per-party t_train per Fig 6 line 7.

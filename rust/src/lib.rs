@@ -24,6 +24,7 @@
 //! [`Report`](coordinator::session::Report) and a streaming
 //! [`SessionEvent`](coordinator::session::SessionEvent) channel.
 
+pub mod adapt;
 pub mod bench;
 pub mod broker;
 pub mod cluster;

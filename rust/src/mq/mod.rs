@@ -659,6 +659,14 @@ pub fn shard_slot_for(job: usize, round: u32, shard: usize, shards: usize) -> St
     }
 }
 
+/// Conventional checkpoint slot for a job's adaptive-policy state
+/// (PR 10): the arrival sketch + drift term serialized to `acc`,
+/// written at round completion, reloaded on §5.5 resume. One slot per
+/// job — each write supersedes the last (the sketch is cumulative).
+pub fn adapt_slot(job: usize) -> String {
+    format!("job{job}/adapt")
+}
+
 /// Conventional topic for a job's published (fused) global models — one
 /// message per completed round, so offset == completed-round count. The
 /// live runner treats this log as the job's durable model state: a

@@ -330,6 +330,14 @@ pub struct JobTop {
     pub party_waits: u64,
     pub party_wait_secs_sum: f64,
     pub last_at_secs: f64,
+    /// Learned arrival-lag quantiles from the adaptive policy's gauges
+    /// (`adaptive_arrival_p{50,90,99}_secs`); 0.0 until the job's first
+    /// adaptive round completes (or forever, with adaptation off).
+    pub arrival_p50_secs: f64,
+    pub arrival_p90_secs: f64,
+    pub arrival_p99_secs: f64,
+    /// Current learned fuse-deadline defer (`adaptive_deadline_secs`).
+    pub deadline_secs: f64,
 }
 
 impl JobTop {
@@ -362,6 +370,37 @@ pub fn summarize_jsonl(body: &str) -> Vec<JobTop> {
             continue;
         }
         let Ok(v) = Json::parse(line) else { continue };
+        if v.get("kind").as_str() == Some("gauge") {
+            // adaptive-policy gauges carry the job in their label string
+            // (`job="N",strategy="..."`) rather than a span's job field
+            let (Some(name), Some(labels), Some(value)) = (
+                v.get("name").as_str(),
+                v.get("labels").as_str(),
+                v.get("value").as_f64(),
+            ) else {
+                continue;
+            };
+            let Some(job) = labels
+                .split(',')
+                .find_map(|l| l.strip_prefix("job=\""))
+                .and_then(|rest| rest.strip_suffix('"').or(rest.split('"').next()))
+                .and_then(|n| n.parse::<usize>().ok())
+            else {
+                continue;
+            };
+            let top = tops.entry(job).or_insert_with(|| JobTop {
+                job,
+                ..JobTop::default()
+            });
+            match name {
+                "adaptive_arrival_p50_secs" => top.arrival_p50_secs = value,
+                "adaptive_arrival_p90_secs" => top.arrival_p90_secs = value,
+                "adaptive_arrival_p99_secs" => top.arrival_p99_secs = value,
+                "adaptive_deadline_secs" => top.deadline_secs = value,
+                _ => {}
+            }
+            continue;
+        }
         if v.get("kind").as_str() != Some("span") {
             continue;
         }
@@ -481,6 +520,28 @@ mod tests {
         assert_eq!(tops[0].rounds, 1);
         assert!((tops[0].mean_round_secs() - 2.5).abs() < 1e-9);
         assert_eq!(tops[0].preempts, 1);
+    }
+
+    #[test]
+    fn summarize_picks_up_adaptive_gauges() {
+        let body = [
+            r#"{"kind":"span","span":"fuse","phase":"E","job":2,"round":0,"detail":0,"at_us":5}"#,
+            r#"{"kind":"gauge","name":"adaptive_arrival_p50_secs","labels":"job=\"2\",strategy=\"jit\"","value":1.5}"#,
+            r#"{"kind":"gauge","name":"adaptive_arrival_p90_secs","labels":"job=\"2\",strategy=\"jit\"","value":3.25}"#,
+            r#"{"kind":"gauge","name":"adaptive_arrival_p99_secs","labels":"job=\"2\",strategy=\"jit\"","value":4.0}"#,
+            r#"{"kind":"gauge","name":"adaptive_deadline_secs","labels":"job=\"2\",strategy=\"jit\"","value":2.75}"#,
+            r#"{"kind":"gauge","name":"fusion_pool_threads","labels":"","value":8}"#,
+        ]
+        .join("\n");
+        let tops = summarize_jsonl(&body);
+        assert_eq!(tops.len(), 1, "unscoped gauges must not invent jobs");
+        let t = &tops[0];
+        assert_eq!(t.job, 2);
+        assert_eq!(t.fuses, 1);
+        assert!((t.arrival_p50_secs - 1.5).abs() < 1e-12);
+        assert!((t.arrival_p90_secs - 3.25).abs() < 1e-12);
+        assert!((t.arrival_p99_secs - 4.0).abs() < 1e-12);
+        assert!((t.deadline_secs - 2.75).abs() < 1e-12);
     }
 
     #[test]

@@ -36,6 +36,7 @@ fn run_pair(policy: &str, seed: u64, capacity: usize, budget: usize) -> (Report,
     let admission = AdmissionConfig {
         budget,
         max_jobs: 0,
+        autoscale: None,
     };
     let sim = Session::sim()
         .trace(&t)

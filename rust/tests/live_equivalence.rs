@@ -10,6 +10,7 @@
 //! streams diverge anywhere — times, ordering, estimator feeding, round
 //! completion — these comparisons break bit-for-bit.
 
+use fljit::adapt::AdaptiveConfig;
 use fljit::coordinator::job::FlJobSpec;
 use fljit::coordinator::session::Session;
 use fljit::party::{FleetFaults, FleetKind};
@@ -27,15 +28,43 @@ fn assert_equivalent_under(
     seed: u64,
     faults: FleetFaults,
 ) {
+    assert_equivalent_cfg(
+        strategy,
+        fleet,
+        parties,
+        rounds,
+        seed,
+        faults,
+        AdaptiveConfig::none(),
+    );
+}
+
+#[allow(clippy::too_many_arguments)]
+fn assert_equivalent_cfg(
+    strategy: &str,
+    fleet: FleetKind,
+    parties: usize,
+    rounds: u32,
+    seed: u64,
+    faults: FleetFaults,
+    adaptive: AdaptiveConfig,
+) {
     let workload = Workload::cifar100_effnet();
     let spec = FlJobSpec::new(workload, fleet, parties, rounds);
 
-    let mut s = Session::sim().seed(seed).faults(faults);
+    let mut s = Session::sim()
+        .seed(seed)
+        .faults(faults)
+        .adaptive(adaptive.clone());
     let hs = s.job(spec.clone(), strategy);
     let sim_rep = s.run().unwrap_or_else(|e| panic!("{strategy}/{fleet:?} sim run: {e:#}"));
     let sim = sim_rep.job(hs);
 
-    let mut l = Session::live().seed(seed).dim(64).faults(faults);
+    let mut l = Session::live()
+        .seed(seed)
+        .dim(64)
+        .faults(faults)
+        .adaptive(adaptive);
     let hl = l.job(spec, strategy);
     let live_rep = l
         .run()
@@ -295,6 +324,98 @@ fn kill_resume_under_faults_resumes_bit_identical() {
             a[0].payload.data().unwrap(),
             b[0].payload.data().unwrap(),
             "round {round} model must be bit-identical under faults"
+        );
+    }
+    assert_eq!(resumed.job(hr).final_model, full.job(hf).final_model);
+}
+
+/// PR 10 determinism pin: with the adaptive policy *enabled*, the learned
+/// deadlines / cutoffs are pure functions of the arrival stream — no rng
+/// of their own — so sim and live still agree bit-for-bit, including
+/// under the hostile fleet where the sketch actually moves the deadline
+/// and restores degraded quorums.
+#[test]
+fn adaptive_jit_matches_sim_bit_for_bit_under_a_hostile_fleet() {
+    assert_equivalent_cfg(
+        "jit",
+        FleetKind::ActiveHomogeneous,
+        10,
+        3,
+        0xAD1,
+        hostile_faults(),
+        AdaptiveConfig::on(),
+    );
+    // and on a healthy fleet, where the policy observes but the timer
+    // never wins (rounds fuse on full arrival)
+    assert_equivalent_cfg(
+        "jit",
+        FleetKind::ActiveHeterogeneous,
+        8,
+        3,
+        0xAD2,
+        FleetFaults::none(),
+        AdaptiveConfig::on(),
+    );
+}
+
+/// §5.5 × PR 10: kill the live aggregator mid-run with the adaptive
+/// policy on, resume from the MQ, and the model stream must be
+/// bit-identical to the uninterrupted adaptive run. The learned sketch
+/// checkpoints through its own MQ slot at each round completion; resume
+/// reloads it and the open round's replayed arrivals re-observe, so the
+/// resumed policy re-arms the *same* deadlines as the uninterrupted one.
+#[test]
+fn kill_resume_under_adaptive_resumes_bit_identical() {
+    use fljit::mq::{self, MessageQueue};
+    use std::sync::Arc;
+
+    let faults = hostile_faults();
+    let session = |mq: &Arc<MessageQueue>, kill: Option<u64>, resume: bool| {
+        let mut s = Session::live()
+            .seed(0xAD3)
+            .dim(32)
+            .on(mq)
+            .kill_after_fuses(kill)
+            .resume(resume)
+            .faults(faults)
+            .adaptive(AdaptiveConfig::on());
+        let h = s.job(
+            FlJobSpec::new(
+                Workload::cifar100_effnet(),
+                FleetKind::ActiveHomogeneous,
+                6,
+                3,
+            ),
+            "jit",
+        );
+        (s.run().expect("session run"), h)
+    };
+
+    let mq_full = Arc::new(MessageQueue::new());
+    let (full, hf) = session(&mq_full, None, false);
+    assert!(!full.summary().crashed);
+    let published = mq_full.end_offset(&mq::model_topic(0));
+    assert!(published > 0, "the adaptive run must publish models");
+
+    let mq_kill = Arc::new(MessageQueue::new());
+    let (dead, _) = session(&mq_kill, Some(3), false);
+    assert!(dead.summary().crashed, "fault injection must trip");
+
+    let (resumed, hr) = session(&mq_kill, None, true);
+    assert!(!resumed.summary().crashed);
+    assert_eq!(
+        mq_kill.end_offset(&mq::model_topic(0)),
+        published,
+        "resume must publish the remaining rounds"
+    );
+    for round in 0..published {
+        let a = mq_full.fetch(&mq::model_topic(0), round, 1);
+        let b = mq_kill.fetch(&mq::model_topic(0), round, 1);
+        assert_eq!(
+            a[0].payload.data().unwrap(),
+            b[0].payload.data().unwrap(),
+            "round {round} model must be bit-identical with the adaptive \
+             policy resumed from its sketch checkpoint"
         );
     }
     assert_eq!(resumed.job(hr).final_model, full.job(hf).final_model);

@@ -166,6 +166,7 @@ fn broker_multi_job_determinism_per_policy() {
                 .admission(AdmissionConfig {
                     budget: 16,
                     max_jobs: 0,
+                    autoscale: None,
                 })
                 .capacity(4) // scarce: arbitration decisions actually happen
                 .seed(4242)
